@@ -1,0 +1,66 @@
+//! Quickstart: the five-minute tour of the LEAP library.
+//!
+//! Compiles Llama 3.2-1B for the PIM-NoC, runs the spatial-mapping DSE,
+//! simulates a full inference, and prints the headline numbers alongside
+//! the A100 baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use leap::arch::HwParams;
+use leap::baselines::GpuModel;
+use leap::compiler::Compiler;
+use leap::mapping::explore;
+use leap::model::ModelPreset;
+use leap::sim::AnalyticalSim;
+
+fn main() -> anyhow::Result<()> {
+    println!("== LEAP quickstart ==\n");
+
+    // 1. Hardware: Table I defaults (128×128 crossbars, 64-bit packets,
+    //    16-MAC IRCUs, 1 GHz).
+    let hw = HwParams::default();
+    println!(
+        "hardware: {}×{} crossbars, {}-bit packets, {} MACs/IRCU, {} GHz",
+        hw.xb, hw.xb, hw.packet_bits, hw.ircu_macs, hw.freq_ghz
+    );
+
+    // 2. Compile the model: partition weights, build the Fig. 3(b) DAG,
+    //    pick the spatial mapping.
+    let preset = ModelPreset::Llama1B;
+    let compiled = Compiler { hw: hw.clone(), run_dse: false }.compile(preset)?;
+    println!(
+        "\ncompiled {}: tile {}×{} macros, DAG {} nodes / {} edges",
+        compiled.shape.name,
+        2 * compiled.geom.dc,
+        2 * compiled.geom.dc,
+        compiled.dag.nodes.len(),
+        compiled.dag.edges.len()
+    );
+
+    // 3. Mapping DSE (Fig. 8): the Fig. 4 layout is near-optimal.
+    let dse = explore(compiled.geom.dc, hw.xb, hw.packet_bits);
+    println!(
+        "mapping DSE: {} candidates in {:.2}s — paper layout at p{:.1} of the cost distribution",
+        dse.costs.len(),
+        dse.elapsed_s,
+        dse.paper_percentile()
+    );
+
+    // 4. Simulate a full inference (1024 in + 1024 out).
+    let sim = AnalyticalSim::new(preset, hw);
+    let r = sim.run(1024, 1024);
+    println!("\ninference (1024 in + 1024 out):");
+    println!("  prefill  {:>10.1} tok/s", r.prefill.tokens_per_s);
+    println!("  decode   {:>10.1} tok/s", r.decode.tokens_per_s);
+    println!("  total    {:>10.1} tok/s at {:.2} W → {:.1} tok/J", r.total_tokens_per_s, r.avg_power_w, r.tokens_per_j);
+
+    // 5. Compare with an A100 running the same workload.
+    let a100 = GpuModel::a100().run(&compiled.shape, 1024, 1024);
+    println!("\nvs A100: {:.1} tok/s at {:.0} W → {:.3} tok/J", a100.total_tokens_per_s, a100.power_w, a100.tokens_per_j);
+    println!(
+        "LEAP advantage: {:.2}× throughput, {:.1}× energy efficiency",
+        r.total_tokens_per_s / a100.total_tokens_per_s,
+        r.tokens_per_j / a100.tokens_per_j
+    );
+    Ok(())
+}

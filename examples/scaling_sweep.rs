@@ -1,0 +1,64 @@
+//! Scaling study: models × context windows × architecture knobs.
+//!
+//! Regenerates the Fig. 10 throughput matrix and the Fig. 12 packet-width /
+//! IRCU-parallelism frontier in one run, plus the §VI-D sublinear-scaling
+//! observation (throughput vs model size vs critical-path growth).
+//!
+//! Run: `cargo run --release --example scaling_sweep`
+
+use leap::arch::HwParams;
+use leap::model::ModelPreset;
+use leap::sim::AnalyticalSim;
+
+fn main() {
+    println!("== Fig. 10: throughput across models and context windows ==\n");
+    println!(
+        "{:<14} {:>6} {:>6} {:>13} {:>12} {:>12}",
+        "model", "in", "out", "prefill t/s", "decode t/s", "total t/s"
+    );
+    for preset in [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let sim = AnalyticalSim::new(preset, HwParams::default());
+        for (inp, out) in [(128, 128), (512, 512), (1024, 1024), (2048, 2048)] {
+            let r = sim.run(inp, out);
+            println!(
+                "{:<14} {:>6} {:>6} {:>13.1} {:>12.2} {:>12.2}",
+                preset.shape().name,
+                inp,
+                out,
+                r.prefill.tokens_per_s,
+                r.decode.tokens_per_s,
+                r.total_tokens_per_s
+            );
+        }
+        println!();
+    }
+
+    println!("== §VI-D: sublinear throughput drop vs model growth ==\n");
+    let r1 = AnalyticalSim::new(ModelPreset::Llama1B, HwParams::default()).run(1024, 1024);
+    let r8 = AnalyticalSim::new(ModelPreset::Llama8B, HwParams::default()).run(1024, 1024);
+    let size_ratio = ModelPreset::Llama8B.shape().mapped_params() as f64
+        / ModelPreset::Llama1B.shape().mapped_params() as f64;
+    let thr_ratio = r1.total_tokens_per_s / r8.total_tokens_per_s;
+    println!("1B → 8B: parameters ×{size_ratio:.1}, throughput ÷{thr_ratio:.2} (sublinear ✓)");
+    println!("(critical path scales with s_e·s_l, not s_e·s_h·s_l — row/col partitioning)\n");
+
+    println!("== Fig. 12: packet width × IRCU parallelism (Llama 3.2-1B, 1024+1024) ==\n");
+    print!("{:>10}", "pkt\\MACs");
+    let mac_sweep = [4usize, 8, 16, 32, 64];
+    for m in mac_sweep {
+        print!("{m:>10}");
+    }
+    println!();
+    for packet_bits in [16u32, 32, 64, 128, 256] {
+        print!("{packet_bits:>10}");
+        for macs in mac_sweep {
+            let mut hw = HwParams::default();
+            hw.packet_bits = packet_bits;
+            hw.ircu_macs = macs;
+            let r = AnalyticalSim::new(ModelPreset::Llama1B, hw).run(1024, 1024);
+            print!("{:>10.0}", r.total_tokens_per_s);
+        }
+        println!();
+    }
+    println!("\n(Table I point: 64-bit packets, 16 MACs — near the frontier knee)");
+}

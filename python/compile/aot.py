@@ -1,0 +1,144 @@
+"""AOT export: lower the L2 model (embedding the L1 Pallas kernels) to HLO
+text artifacts that the Rust runtime loads via PJRT.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emitted into --out (default ../artifacts):
+  tiny_prefill.hlo.txt   prefill(tokens[S_PRE], 9 params) -> (logits, K, V)
+  tiny_decode.hlo.txt    decode(token[1], pos, K, V, 9 params) -> (logits, K, V)
+  xbar_demo.hlo.txt      standalone crossbar_matmul (runtime smoke test)
+  weights/<name>.bin     leapbin tensors in model.PARAM_ORDER
+  golden/*.bin           prompt, expected prefill logits, greedy continuation
+  meta.txt               key=value shape metadata consumed by rust/src/runtime
+
+Python runs ONCE at build time (make artifacts); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import leapbin
+from . import model as M
+
+S_PRE = 32     # fixed prefill window of the tiny artifact
+S_MAX = 128    # KV-cache capacity
+GOLDEN_PROMPT = [5, 17, 3, 101, 42, 7, 250, 11]  # len 8, padded to S_PRE
+GOLDEN_STEPS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _prefill_fn(tokens, *params):
+    return M.prefill(tokens, *params, cfg=M.TINY, s_max=S_MAX)
+
+
+def _decode_fn(token, pos, kc, vc, *params):
+    return M.decode_step(token, pos, kc, vc, *params, cfg=M.TINY)
+
+
+def _xbar_demo_fn(x, w_q, scales):
+    from .kernels import crossbar_mvm as cm
+
+    return (cm.crossbar_matmul(x, w_q, scales, cm.DEFAULT_XB),)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    os.makedirs(f"{out}/golden", exist_ok=True)
+
+    cfg = M.TINY
+    w = M.init_weights(cfg, seed=args.seed)
+    params = M.quantize_model(w, cfg)
+    pt = M.params_as_tuple(params)
+
+    # ---- lower the two model entry points --------------------------------
+    tok_spec = jax.ShapeDtypeStruct((S_PRE,), jnp.int32)
+    p_specs = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pt)
+    lowered_pre = jax.jit(_prefill_fn).lower(tok_spec, *p_specs)
+    with open(f"{out}/tiny_prefill.hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered_pre))
+    print("wrote tiny_prefill.hlo.txt")
+
+    tok1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = jax.ShapeDtypeStruct((cfg.n_layers, S_MAX, cfg.d_model), jnp.float32)
+    lowered_dec = jax.jit(_decode_fn).lower(tok1, pos_s, cache, cache, *p_specs)
+    with open(f"{out}/tiny_decode.hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered_dec))
+    print("wrote tiny_decode.hlo.txt")
+
+    # ---- standalone kernel demo (runtime smoke test) ---------------------
+    from .kernels import crossbar_mvm as cm
+
+    xd = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+    wd = jax.ShapeDtypeStruct((256, 256), jnp.int8)
+    sd = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered_xb = jax.jit(_xbar_demo_fn).lower(xd, wd, sd)
+    with open(f"{out}/xbar_demo.hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered_xb))
+    print("wrote xbar_demo.hlo.txt")
+
+    # ---- weights ----------------------------------------------------------
+    for name in M.PARAM_ORDER:
+        leapbin.write(f"{out}/weights/{name}.bin", np.asarray(params[name]))
+    print(f"wrote {len(M.PARAM_ORDER)} weight tensors")
+
+    # ---- golden run (computed with the exact lowered functions) ----------
+    prompt = np.array(GOLDEN_PROMPT, np.int32)
+    plen = len(prompt)
+    toks = np.zeros(S_PRE, np.int32)
+    toks[:plen] = prompt
+    logits, kc, vc = jax.jit(_prefill_fn)(jnp.asarray(toks), *pt)
+    leapbin.write(f"{out}/golden/prompt.bin", prompt)
+    leapbin.write(f"{out}/golden/prefill_logits.bin",
+                  np.asarray(logits[plen - 1]))
+
+    dec = jax.jit(_decode_fn)
+    cur = int(jnp.argmax(logits[plen - 1]))
+    pos = plen
+    gen = [cur]
+    for _ in range(GOLDEN_STEPS - 1):
+        lg, kc, vc = dec(jnp.array([cur], jnp.int32), jnp.int32(pos), kc, vc, *pt)
+        cur = int(jnp.argmax(lg[0]))
+        gen.append(cur)
+        pos += 1
+    leapbin.write(f"{out}/golden/greedy_tokens.bin", np.array(gen, np.int32))
+    print(f"golden greedy continuation: {gen}")
+
+    # ---- metadata ----------------------------------------------------------
+    with open(f"{out}/meta.txt", "w") as f:
+        f.write(f"vocab={cfg.vocab}\nd_model={cfg.d_model}\n")
+        f.write(f"n_layers={cfg.n_layers}\nn_heads={cfg.n_heads}\n")
+        f.write(f"n_kv_heads={cfg.n_kv_heads}\nd_ff={cfg.d_ff}\n")
+        f.write(f"xb={cfg.xb}\nshard={cfg.shard}\n")
+        f.write(f"s_prefill={S_PRE}\ns_max={S_MAX}\n")
+        f.write(f"golden_prompt_len={plen}\ngolden_steps={GOLDEN_STEPS}\n")
+        f.write("param_order=" + ",".join(M.PARAM_ORDER) + "\n")
+    print("wrote meta.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""LEAP L1 Pallas kernels (build-time only; never on the request path)."""
+
+from .crossbar_mvm import (  # noqa: F401
+    DEFAULT_XB,
+    crossbar_linear,
+    crossbar_matmul,
+    quantize_weights,
+)
+from .flash_shard import (  # noqa: F401
+    DEFAULT_SHARD,
+    flash_shard_attention,
+    mha_flash,
+)

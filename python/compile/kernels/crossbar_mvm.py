@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: PIM crossbar DSMM (dynamic activation x static weight).
+
+Models LEAP's PIM processing elements: the static weight matrix is
+partitioned into C x C crossbar tiles (C = 128 in the paper, Table I), each
+tile's weights are quantised to 8-bit cells with a per-tile symmetric scale
+(the analog array computes with integer conductance levels; the ADC output is
+rescaled digitally), and the per-tile partial results are aggregated across
+the K dimension exactly as Reduction 1 aggregates partial sums across an RPU
+group.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): one crossbar tile
+= one BlockSpec block; the grid's k dimension plays the role of the RG
+reduction; the MXU-shaped (C x C) `dot` stands in for the crossbar's analog
+MVM. interpret=True everywhere — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Crossbar array width/height (Table I: "XB size 128x128").
+DEFAULT_XB = 128
+# 8-bit cell -> symmetric int8 levels.
+CELL_LEVELS = 127.0
+
+
+def pad_to_multiple(a: jax.Array, mult: int, axes: tuple[int, ...]) -> jax.Array:
+    """Zero-pad `a` so the given axes are multiples of `mult`."""
+    pads = [(0, 0)] * a.ndim
+    for ax in axes:
+        rem = (-a.shape[ax]) % mult
+        pads[ax] = (0, rem)
+    if all(p == (0, 0) for p in pads):
+        return a
+    return jnp.pad(a, pads)
+
+
+def quantize_weights(w: jax.Array, xb: int = DEFAULT_XB):
+    """Quantise a static weight matrix into 8-bit crossbar tiles.
+
+    Returns (w_q int8 [Kp, Np], scales f32 [Kp//xb, Np//xb]) where Kp/Np are
+    K/N padded up to multiples of the crossbar size. Each xb x xb tile has a
+    symmetric per-tile scale (max-abs / 127), mirroring per-array conductance
+    programming.
+    """
+    assert w.ndim == 2, f"expected 2-D weight, got {w.shape}"
+    w = pad_to_multiple(w.astype(jnp.float32), xb, (0, 1))
+    kp, np_ = w.shape
+    kt, nt = kp // xb, np_ // xb
+    tiles = w.reshape(kt, xb, nt, xb).transpose(0, 2, 1, 3)  # [kt, nt, xb, xb]
+    maxabs = jnp.max(jnp.abs(tiles), axis=(2, 3))
+    scales = jnp.where(maxabs > 0, maxabs / CELL_LEVELS, 1.0)
+    w_q = jnp.round(tiles / scales[:, :, None, None])
+    w_q = jnp.clip(w_q, -CELL_LEVELS, CELL_LEVELS).astype(jnp.int8)
+    w_q = w_q.transpose(0, 2, 1, 3).reshape(kp, np_)
+    return w_q, scales.astype(jnp.float32)
+
+
+def _mvm_kernel(x_ref, w_ref, s_ref, o_ref):
+    """Grid = (n_tile, k_tile). Accumulates one crossbar tile's partial MVM.
+
+    The int8 tile is multiplied in integer-ish domain (cast to f32 for the
+    MXU dot) and the partial product is rescaled by the tile's ADC scale
+    before accumulation — the same partial-sum-then-aggregate order as
+    Reduction 1 across an RPU group.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...]
+    w_blk = w_ref[...].astype(jnp.float32)
+    partial = jnp.dot(x_blk, w_blk, preferred_element_type=jnp.float32)
+    o_ref[...] += partial * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("xb",))
+def crossbar_matmul(x: jax.Array, w_q: jax.Array, scales: jax.Array,
+                    xb: int = DEFAULT_XB) -> jax.Array:
+    """y = x @ dequant(w_q) computed tile-by-tile as the PIM array would.
+
+    x: [M, K] f32 (dynamic activations, fed from the channel's west edge)
+    w_q: [Kp, Np] int8 (static 8-bit cells), scales: [Kp//xb, Np//xb] f32.
+    Returns [M, Np] f32; callers slice off padding columns.
+    """
+    m, k = x.shape
+    kp, np_ = w_q.shape
+    assert kp % xb == 0 and np_ % xb == 0, (kp, np_, xb)
+    x = pad_to_multiple(x, xb, (1,))
+    assert x.shape[1] == kp, f"x K={k} (padded {x.shape[1]}) vs w K={kp}"
+    kt, nt = kp // xb, np_ // xb
+
+    out = pl.pallas_call(
+        _mvm_kernel,
+        grid=(nt, kt),
+        in_specs=[
+            pl.BlockSpec((m, xb), lambda n, k_: (0, k_)),
+            pl.BlockSpec((xb, xb), lambda n, k_: (k_, n)),
+            pl.BlockSpec((1, 1), lambda n, k_: (k_, n)),
+        ],
+        out_specs=pl.BlockSpec((m, xb), lambda n, k_: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
+        interpret=True,
+    )(x, w_q, scales)
+    return out
+
+
+def crossbar_linear(x: jax.Array, w: jax.Array, xb: int = DEFAULT_XB) -> jax.Array:
+    """Convenience: quantise-then-multiply in one call (build/test path only).
+
+    The serving path pre-quantises once (weights are static) and calls
+    crossbar_matmul; this helper exists for oracles and tests.
+    """
+    w_q, scales = quantize_weights(w, xb)
+    y = crossbar_matmul(x, w_q, scales, xb)
+    return y[:, : w.shape[1]]

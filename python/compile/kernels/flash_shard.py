@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: context-window-tiled attention (LEAP Fig. 5).
+
+LEAP adopts FlashAttention's nested-loop structure with three distinctions
+(paper section IV-A):
+
+  (i)  Q/K/V are partitioned into *shards* of C_S rows (C_S = 2*N_r =
+       ceil(D/C)); each shard's rows are distributed across the routers of an
+       RPU group — here a shard is one BlockSpec block and the scratchpad
+       layout of Fig. 5(c) is the HBM->VMEM schedule.
+  (ii) the inner (Q) loop is spatially unrolled across RPUs — here it is the
+       parallel grid dimension;
+  (iii) the outer (K/V) loop is a rotational broadcast across the RG — here
+       it is the sequential fori_loop inside the kernel, which consumes one
+       K/V shard per iteration exactly as one rotation step delivers it.
+
+Online softmax state (running row-max m, normaliser l, accumulator O) is the
+same intermediate set the paper holds in the O-channel scratchpad.
+interpret=True: real-TPU lowering emits Mosaic custom-calls the CPU PJRT
+plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default shard height: C_S = ceil(D/C) = 16 for Llama 3.2-1B (Table I).
+DEFAULT_SHARD = 16
+_NEG_INF = -1e30
+
+
+def _attn_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, *, shard: int,
+                 sm_scale: float, causal: bool):
+    """One Q shard (grid dim 0) against all K/V shards (rotational loop)."""
+    qi = pl.program_id(0)
+    q = q_ref[...]  # [shard, dh]
+    skv = k_ref.shape[0]
+    n_kv = skv // shard
+    offset = off_ref[0]
+
+    # Global row index of each Q row: prefill uses offset=0; decode passes
+    # offset=pos so the single query row attends to cache slots 0..pos.
+    rows = qi * shard + jax.lax.broadcasted_iota(jnp.int32, (shard, 1), 0) + offset
+
+    def body(s, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (pl.ds(s * shard, shard), slice(None)))
+        v_blk = pl.load(v_ref, (pl.ds(s * shard, shard), slice(None)))
+        scores = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        scores = scores * sm_scale
+        cols = s * shard + jax.lax.broadcasted_iota(jnp.int32, (1, shard), 1)
+        if causal:
+            mask = cols <= rows
+            scores = jnp.where(mask, scores, _NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    dh = q_ref.shape[1]
+    m0 = jnp.full((shard, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((shard, 1), jnp.float32)
+    a0 = jnp.zeros((shard, dh), jnp.float32)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    # Rows that saw no unmasked key (padding rows ahead of `offset` in a
+    # padded prefill) keep l == 0 after the exp(-inf) underflow; emit zeros.
+    safe_l = jnp.where(l_f > 0, l_f, 1.0)
+    o_ref[...] = (acc_f / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("shard", "sm_scale", "causal"))
+def flash_shard_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          offset: jax.Array, shard: int = DEFAULT_SHARD,
+                          sm_scale: float | None = None,
+                          causal: bool = True) -> jax.Array:
+    """Single-head tiled attention. q: [Sq, dh]; k, v: [Skv, dh].
+
+    `offset` is a [1] int32 array: global position of q row 0 (0 for prefill;
+    the current decode position for a 1-row q). Sq and Skv must be multiples
+    of `shard` — the model layer pads, matching the paper's requirement that
+    the context window is a whole number of shards per scratchpad column.
+    """
+    sq, dh = q.shape
+    skv = k.shape[0]
+    assert sq % shard == 0 and skv % shard == 0, (sq, skv, shard)
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, shard=shard,
+                               sm_scale=float(sm_scale), causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(sq // shard,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),          # offset scalar
+            pl.BlockSpec((shard, dh), lambda i: (i, 0)),
+            pl.BlockSpec((skv, dh), lambda i: (0, 0)),
+            pl.BlockSpec((skv, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((shard, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, dh), jnp.float32),
+        interpret=True,
+    )(offset, q, k, v)
+
+
+def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, offset: jax.Array,
+              shard: int = DEFAULT_SHARD, causal: bool = True) -> jax.Array:
+    """Multi-head wrapper: q/k/v [H, S, dh] -> [H, Sq, dh] via vmap.
+
+    GQA callers duplicate K/V heads first (the paper: "GQA can degrade to
+    this scheme by matrix duplication").
+    """
+    fn = functools.partial(flash_shard_attention, shard=shard, causal=causal)
+    return jax.vmap(fn, in_axes=(0, 0, 0, None))(q, k, v, offset)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the L1 kernels — the build-time correctness signal.
+
+Every Pallas kernel is asserted allclose against these references by
+python/tests (hypothesis sweeps over shapes/dtypes). No pallas imports here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def ref_dequant(w_q: jax.Array, scales: jax.Array, xb: int) -> jax.Array:
+    """Expand per-tile scales and dequantise the int8 crossbar cells."""
+    kp, np_ = w_q.shape
+    kt, nt = kp // xb, np_ // xb
+    s_full = jnp.repeat(jnp.repeat(scales, xb, axis=0), xb, axis=1)
+    assert s_full.shape == (kp, np_), (s_full.shape, w_q.shape, (kt, nt))
+    return w_q.astype(jnp.float32) * s_full
+
+
+def ref_crossbar_matmul(x: jax.Array, w_q: jax.Array, scales: jax.Array,
+                        xb: int) -> jax.Array:
+    """y = x_padded @ dequant(w_q) — the whole-matrix view of the tile sum."""
+    kp = w_q.shape[0]
+    if x.shape[1] < kp:
+        x = jnp.pad(x, ((0, 0), (0, kp - x.shape[1])))
+    return x @ ref_dequant(w_q, scales, xb)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, offset: int,
+                  sm_scale: float | None = None,
+                  causal: bool = True) -> jax.Array:
+    """Vanilla materialised-S softmax attention (single head).
+
+    q: [Sq, dh], k/v: [Skv, dh]; q row i has global position i + offset.
+    """
+    sq, dh = q.shape
+    skv = k.shape[0]
+    if sm_scale is None:
+        sm_scale = 1.0 / (dh ** 0.5)
+    scores = (q @ k.T) * sm_scale
+    if causal:
+        rows = jnp.arange(sq)[:, None] + offset
+        cols = jnp.arange(skv)[None, :]
+        scores = jnp.where(cols <= rows, scores, _NEG_INF)
+    # Guard fully-masked rows (padding): emit zeros like the kernel.
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    out = (p @ v) / jnp.where(l > 0, l, 1.0)
+    any_valid = (jnp.max(scores, axis=1, keepdims=True) > _NEG_INF / 2)
+    return jnp.where(any_valid, out, 0.0)
+
+
+def ref_mha(q: jax.Array, k: jax.Array, v: jax.Array, offset: int,
+            causal: bool = True) -> jax.Array:
+    return jax.vmap(
+        lambda qq, kk, vv: ref_attention(qq, kk, vv, offset, causal=causal)
+    )(q, k, v)
+
+
+def ref_rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def ref_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [H, S, dh] (dh even), positions: [S] int32."""
+    h, s, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def ref_swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

@@ -1,0 +1,44 @@
+"""`leapbin` — the tiny tensor interchange format between aot.py and Rust.
+
+Layout (little-endian):
+  magic   4 bytes  b"LEAP"
+  version u8       1
+  dtype   u8       0 = f32, 1 = i8, 2 = i32
+  ndim    u8
+  pad     u8       0
+  dims    ndim * u32
+  data    raw array bytes, C order
+
+Mirrored by rust/src/runtime/leapbin.rs — keep in sync.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LEAP"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+_RDTYPES = {0: np.float32, 1: np.int8, 2: np.int32}
+
+
+def write(path: str, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    code = _DTYPES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BBBB", 1, code, arr.ndim, 0))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        blob = f.read()
+    assert blob[:4] == MAGIC, f"bad magic in {path}"
+    ver, code, ndim, _ = struct.unpack("<BBBB", blob[4:8])
+    assert ver == 1
+    dims = struct.unpack(f"<{ndim}I", blob[8 : 8 + 4 * ndim])
+    data = np.frombuffer(blob[8 + 4 * ndim :], dtype=_RDTYPES[code])
+    return data.reshape(dims)

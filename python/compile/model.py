@@ -1,0 +1,256 @@
+"""L2: Llama-style decoder model in JAX, built on the L1 kernels.
+
+Build-time only. `aot.py` lowers `prefill` and `decode_step` once to HLO text;
+the Rust runtime (rust/src/runtime) loads and executes them on the request
+path, so Python never serves a request.
+
+All projection / MLP matmuls go through the PIM crossbar kernel
+(`crossbar_matmul`, int8 cells + per-tile scales — the DSMM path mapped to
+PEs); attention score/context matmuls go through the context-window-tiled
+flash kernel (the DDMM path mapped to IRCUs). This mirrors the paper's
+static-vs-dynamic split exactly.
+
+The tiny config used for the end-to-end artifacts keeps shapes small enough
+that interpret-mode Pallas lowers and compiles in seconds, while exercising
+the same code paths as the Llama presets in rust/src/model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar_mvm as cm
+from .kernels import flash_shard as fs
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape configuration (mirrors rust/src/model/presets.rs)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4          # tiny model is MHA; GQA duplicates K/V
+    d_ff: int = 512
+    xb: int = 128                # crossbar array size (Table I)
+    shard: int = 16              # context-window shard rows C_S
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Weight construction + quantisation (build-time)
+# ---------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Seeded float weights as a dict of stacked per-layer arrays."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    d, h, l, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    scale = d ** -0.5
+    return {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * scale,
+        # Wq, Wk, Wv, Wo stacked: [L, 4, D, D]
+        "attn": jax.random.normal(ks[1], (l, 4, d, d), jnp.float32) * scale,
+        # gate, up: [L, 2, D, H]
+        "gu": jax.random.normal(ks[2], (l, 2, d, h), jnp.float32) * scale,
+        # down: [L, H, D]
+        "down": jax.random.normal(ks[3], (l, h, d), jnp.float32) * (h ** -0.5),
+        # attn-norm, mlp-norm gains: [L, 2, D]
+        "norms": jnp.ones((l, 2, d), jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def quantize_model(w: dict, cfg: ModelConfig):
+    """Quantise every static projection into 8-bit crossbar tiles.
+
+    Returns the runtime parameter dict passed (from Rust) to prefill/decode:
+    int8 cell tensors + f32 per-tile scales, plus the f32 non-PIM params.
+    """
+    xb = cfg.xb
+
+    def qstack(ws):  # ws: [..., K, N] stacked weights
+        flat = ws.reshape((-1,) + ws.shape[-2:])
+        qs, ss = [], []
+        for i in range(flat.shape[0]):
+            q, s = cm.quantize_weights(flat[i], xb)
+            qs.append(q)
+            ss.append(s)
+        q = jnp.stack(qs).reshape(ws.shape[:-2] + qs[0].shape)
+        s = jnp.stack(ss).reshape(ws.shape[:-2] + ss[0].shape)
+        return q, s
+
+    attn_q, attn_s = qstack(w["attn"])
+    gu_q, gu_s = qstack(w["gu"])
+    down_q, down_s = qstack(w["down"])
+    return {
+        "embed": w["embed"],
+        "attn_q": attn_q, "attn_s": attn_s,
+        "gu_q": gu_q, "gu_s": gu_s,
+        "down_q": down_q, "down_s": down_s,
+        "norms": w["norms"], "final_norm": w["final_norm"],
+    }
+
+
+# Ordered parameter list = the Rust runtime's calling convention.
+PARAM_ORDER = ("embed", "attn_q", "attn_s", "gu_q", "gu_s", "down_q",
+               "down_s", "norms", "final_norm")
+
+
+def params_as_tuple(p: dict):
+    return tuple(p[k] for k in PARAM_ORDER)
+
+
+# ---------------------------------------------------------------------------
+# Layer computation
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    s, d = x.shape
+    return x.reshape(s, n_heads, d // n_heads).transpose(1, 0, 2)  # [H, S, dh]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def _proj(x: jax.Array, w_q: jax.Array, s: jax.Array, cfg: ModelConfig,
+          n_out: int) -> jax.Array:
+    """DSMM on the PIM path: x [S, K] -> [S, n_out]."""
+    return cm.crossbar_matmul(x, w_q, s, cfg.xb)[:, :n_out]
+
+
+def attention_block(x, layer_attn_q, layer_attn_s, norm_g, kcache, vcache,
+                    pos0, cfg: ModelConfig, causal_offset):
+    """One attention sub-layer over `x` [S, D] with KV written at pos0..pos0+S.
+
+    Returns (out [S, D], kcache', vcache'). Caches are [S_max, D].
+    """
+    d = cfg.d_model
+    xn = ref.ref_rmsnorm(x, norm_g, cfg.eps)
+    q = _proj(xn, layer_attn_q[0], layer_attn_s[0], cfg, d)
+    k = _proj(xn, layer_attn_q[1], layer_attn_s[1], cfg, d)
+    v = _proj(xn, layer_attn_q[2], layer_attn_s[2], cfg, d)
+
+    s = x.shape[0]
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+    qh = ref.ref_rope(_split_heads(q, cfg.n_heads), positions, cfg.rope_theta)
+    kh = ref.ref_rope(_split_heads(k, cfg.n_heads), positions, cfg.rope_theta)
+    vh = _split_heads(v, cfg.n_heads)
+
+    kcache = jax.lax.dynamic_update_slice(kcache, _merge_heads(kh), (pos0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, _merge_heads(vh), (pos0, 0))
+
+    kall = _split_heads(kcache, cfg.n_heads)  # [H, S_max, dh]
+    vall = _split_heads(vcache, cfg.n_heads)
+    # DDMM on the IRCU path: context-window-tiled attention (Fig. 5 dataflow).
+    # Decode feeds a single Q row; pad it to a whole shard (the idle rows are
+    # exactly the underutilised Q-channel pipeline slots of section IV-C) and
+    # discard the padding after the kernel.
+    s_pad = (-s) % cfg.shard
+    qh_p = jnp.pad(qh, ((0, 0), (0, s_pad), (0, 0))) if s_pad else qh
+    oh = fs.mha_flash(qh_p, kall, vall, causal_offset, shard=cfg.shard)
+    o = _merge_heads(oh[:, :s])
+    out = _proj(o, layer_attn_q[3], layer_attn_s[3], cfg, d)
+    return x + out, kcache, vcache
+
+
+def mlp_block(x, gu_q, gu_s, down_q, down_s, norm_g, cfg: ModelConfig):
+    """SwiGLU MLP, all three matmuls on the PIM path."""
+    xn = ref.ref_rmsnorm(x, norm_g, cfg.eps)
+    gate = _proj(xn, gu_q[0], gu_s[0], cfg, cfg.d_ff)
+    up = _proj(xn, gu_q[1], gu_s[1], cfg, cfg.d_ff)
+    h = jax.nn.silu(gate) * up
+    return x + _proj(h, down_q, down_s, cfg, cfg.d_model)
+
+
+def _forward(tokens, params, kcache, vcache, pos0, cfg: ModelConfig,
+             causal_offset):
+    """Shared prefill/decode body. tokens [S] int32; caches [L, S_max, D]."""
+    (embed, attn_q, attn_s, gu_q, gu_s, down_q, down_s, norms,
+     final_norm) = params
+    x = embed[tokens]  # [S, D]
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        x, kc, vc = attention_block(
+            x, attn_q[layer], attn_s[layer], norms[layer, 0],
+            kcache[layer], vcache[layer], pos0, cfg, causal_offset)
+        x = mlp_block(x, gu_q[layer], gu_s[layer], down_q[layer],
+                      down_s[layer], norms[layer, 1], cfg)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = ref.ref_rmsnorm(x, final_norm, cfg.eps)
+    logits = x @ embed.T  # tied LM head (digital, not PIM: dynamic @ static^T
+    # of the embedding — the paper keeps the sampling head off-chip)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill(tokens, *params, cfg: ModelConfig = TINY, s_max: int = 128):
+    """Prefill S tokens from scratch. Returns (logits [S, V], k/v caches)."""
+    l, d = cfg.n_layers, cfg.d_model
+    kc = jnp.zeros((l, s_max, d), jnp.float32)
+    vc = jnp.zeros((l, s_max, d), jnp.float32)
+    off = jnp.array([0], jnp.int32)
+    return _forward(tokens, params, kc, vc, 0, cfg, off)
+
+
+def decode_step(token, pos, kcache, vcache, *params, cfg: ModelConfig = TINY):
+    """One decode step. token [1] int32, pos [] int32, caches [L, S_max, D].
+
+    Returns (logits [1, V], kcache', vcache').
+    """
+    off = pos.reshape(1).astype(jnp.int32)
+    return _forward(token, params, kcache, vcache, pos, cfg, off)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp golden model (oracle for tests: no pallas, no quantisation split)
+# ---------------------------------------------------------------------------
+
+def ref_forward(tokens, w: dict, cfg: ModelConfig, s_max: int = 128):
+    """Float-weight oracle of prefill (quantisation applied via dequant so the
+    kernel path and the oracle share the same effective weights)."""
+    p = quantize_model(w, cfg)
+
+    def deq(qs, ss, k_logical, n_logical):
+        return ref.ref_dequant(qs, ss, cfg.xb)[:k_logical, :n_logical]
+
+    d, h = cfg.d_model, cfg.d_ff
+    x = p["embed"][tokens]
+    s = tokens.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    for layer in range(cfg.n_layers):
+        xn = ref.ref_rmsnorm(x, p["norms"][layer, 0], cfg.eps)
+        wq = [deq(p["attn_q"][layer, i], p["attn_s"][layer, i], d, d)
+              for i in range(4)]
+        q = ref.ref_rope(_split_heads(xn @ wq[0], cfg.n_heads), positions,
+                         cfg.rope_theta)
+        k = ref.ref_rope(_split_heads(xn @ wq[1], cfg.n_heads), positions,
+                         cfg.rope_theta)
+        v = _split_heads(xn @ wq[2], cfg.n_heads)
+        o = ref.ref_mha(q, k, v, 0)
+        x = x + _merge_heads(o) @ wq[3]
+        xn = ref.ref_rmsnorm(x, p["norms"][layer, 1], cfg.eps)
+        gate = xn @ deq(p["gu_q"][layer, 0], p["gu_s"][layer, 0], d, h)
+        up = xn @ deq(p["gu_q"][layer, 1], p["gu_s"][layer, 1], d, h)
+        x = x + (jax.nn.silu(gate) * up) @ deq(p["down_q"][layer],
+                                               p["down_s"][layer], h, d)
+    x = ref.ref_rmsnorm(x, p["final_norm"], cfg.eps)
+    return x @ p["embed"].T

@@ -1,0 +1,127 @@
+"""Python authoring API for the LEAP NoC instruction set (paper §V-A).
+
+The paper provides "a Python API ... to facilitate programming the LLM
+inference dataflow to the 2D mesh NoC; the compiler then translates the
+user's Python code into a corresponding hex file that can be loaded into the
+NPM". This module is that API; the binary format is pinned against the Rust
+assembler (`rust/src/isa/encode.rs`) by golden-byte tests on both sides.
+
+Wire layout (16 bytes/instruction, little-endian):
+  [0] cmd1 opcode  [1] cmd1 arg  [2] cmd2 opcode  [3] cmd2 arg
+  [4:6] CMD_rep u16  [6] sel kind  [7] reserved
+  [8:16] four u16 sel operands
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import struct
+
+INSTR_BYTES = 16
+
+
+class Op(enum.IntEnum):
+    """Opcodes — keep byte-for-byte in sync with rust isa::Opcode."""
+
+    NOP = 0x00
+    ROUTE_N = 0x01
+    ROUTE_E = 0x02
+    ROUTE_S = 0x03
+    ROUTE_W = 0x04
+    ROUTE_PE = 0x05
+    BCAST_ROW = 0x06
+    BCAST_COL = 0x07
+    REDUCE_E = 0x08
+    REDUCE_S = 0x09
+    MAC = 0x0A
+    ADD = 0x0B
+    MUL = 0x0C
+    EXPMAX = 0x0D
+    SPAD_RD = 0x0E
+    SPAD_WR = 0x0F
+    PE_MVM = 0x10
+    SYNC = 0x11
+    HALT = 0x12
+
+
+# selection kinds
+SEL_ALL, SEL_ROWS, SEL_COLS, SEL_RECT, SEL_SPLIT_ROWS = range(5)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sel:
+    kind: int
+    ops: tuple[int, int, int, int] = (0, 0, 0, 0)
+
+    @staticmethod
+    def all() -> "Sel":
+        return Sel(SEL_ALL)
+
+    @staticmethod
+    def rows(lo: int, hi: int) -> "Sel":
+        return Sel(SEL_ROWS, (lo, hi, 0, 0))
+
+    @staticmethod
+    def cols(lo: int, hi: int) -> "Sel":
+        return Sel(SEL_COLS, (lo, hi, 0, 0))
+
+    @staticmethod
+    def rect(rlo: int, rhi: int, clo: int, chi: int) -> "Sel":
+        return Sel(SEL_RECT, (rlo, rhi, clo, chi))
+
+    @staticmethod
+    def split_rows(lo: int, hi: int, lo2: int, hi2: int) -> "Sel":
+        return Sel(SEL_SPLIT_ROWS, (lo, hi, lo2, hi2))
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    cmd1: tuple[Op, int]
+    cmd2: tuple[Op, int]
+    rep: int
+    sel: Sel
+
+    def encode(self) -> bytes:
+        (o1, a1), (o2, a2) = self.cmd1, self.cmd2
+        head = struct.pack("<BBBBHBB", o1, a1, o2, a2, self.rep, self.sel.kind, 0)
+        return head + struct.pack("<4H", *self.sel.ops)
+
+
+class Program:
+    """Builder for an NPM program."""
+
+    def __init__(self, label: str = "prog"):
+        self.label = label
+        self.instrs: list[Instr] = []
+
+    def uni(self, op: Op, arg: int, rep: int, sel: Sel) -> "Program":
+        self.instrs.append(Instr((op, arg), (Op.NOP, 0), rep, sel))
+        return self
+
+    def dual(self, cmd1: tuple[Op, int], cmd2: tuple[Op, int], rep: int, sel: Sel) -> "Program":
+        self.instrs.append(Instr(cmd1, cmd2, rep, sel))
+        return self
+
+    def sealed(self) -> "Program":
+        if not self.instrs or self.instrs[-1].cmd1[0] != Op.HALT:
+            self.uni(Op.HALT, 0, 1, Sel.all())
+        return self
+
+    def assemble(self) -> str:
+        """Emit the NPM hex file (one 32-hex-char line per instruction)."""
+        lines = [f"; {self.label}"]
+        for i in self.instrs:
+            lines.append(i.encode().hex())
+        return "\n".join(lines) + "\n"
+
+
+def demo_program() -> Program:
+    """The cross-language golden program — byte-identical to the Rust
+    `isa::encode::tests::demo_program()`."""
+    p = Program("demo")
+    p.uni(Op.PE_MVM, 0, 4, Sel.all())
+    p.dual((Op.ROUTE_E, 1), (Op.MAC, 0), 32, Sel.split_rows(0, 2, 2, 4))
+    p.uni(Op.REDUCE_S, 0, 16, Sel.rect(0, 4, 2, 4))
+    p.uni(Op.SPAD_WR, 2, 8, Sel.cols(1, 3))
+    return p.sealed()

@@ -1,0 +1,98 @@
+"""L1 correctness: crossbar_mvm Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-multiples of the crossbar size) and
+asserts allclose; plus directed edge cases for quantisation behaviour.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar_mvm as cm
+from compile.kernels import ref
+
+ATOL = 1e-4
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 9),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    xb=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_oracle(m, k, n, xb, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    w_q, scales = cm.quantize_weights(w, xb)
+    got = cm.crossbar_matmul(x, w_q, scales, xb)
+    want = ref.ref_crossbar_matmul(x, w_q, scales, xb)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 260), n=st.integers(1, 260), seed=st.integers(0, 999))
+def test_quantisation_error_bounded(k, n, seed):
+    """8-bit cells: dequantised product within ~1% of full precision."""
+    x = _rand(seed, (4, k))
+    w = _rand(seed + 7, (k, n))
+    y = cm.crossbar_linear(x, w)
+    yf = x @ w
+    scale = float(jnp.max(jnp.abs(yf))) + 1e-6
+    assert float(jnp.max(jnp.abs(y - yf))) / scale < 0.02
+
+
+def test_quantize_shapes_padded():
+    w = jnp.ones((200, 300))
+    w_q, s = cm.quantize_weights(w, 128)
+    assert w_q.shape == (256, 384)
+    assert s.shape == (2, 3)
+    assert w_q.dtype == jnp.int8
+
+
+def test_quantize_zero_matrix_safe():
+    w = jnp.zeros((128, 128))
+    w_q, s = cm.quantize_weights(w, 128)
+    assert np.all(np.asarray(w_q) == 0)
+    assert np.all(np.asarray(s) == 1.0)  # guard against div-by-zero scales
+    x = jnp.ones((2, 128))
+    y = cm.crossbar_matmul(x, w_q, s, 128)
+    assert np.all(np.asarray(y) == 0)
+
+
+def test_quantize_per_tile_scales_independent():
+    """A huge value in one tile must not destroy precision in another."""
+    w = np.zeros((256, 128), np.float32)
+    w[:128] = 1000.0   # tile (0,0): large magnitude
+    w[128:] = 0.001    # tile (1,0): small magnitude
+    w_q, s = cm.quantize_weights(jnp.asarray(w), 128)
+    s = np.asarray(s)
+    assert s[0, 0] > 1.0 and s[1, 0] < 1.0
+    x = jnp.ones((1, 256))
+    y = np.asarray(cm.crossbar_matmul(x, w_q, s, 128))
+    expect = 128 * 1000.0 + 128 * 0.001
+    assert abs(y[0, 0] - expect) / expect < 0.01
+
+
+def test_identity_roundtrip():
+    w = jnp.eye(128)
+    x = _rand(3, (5, 128))
+    y = cm.crossbar_linear(x, w)
+    np.testing.assert_allclose(y, x, atol=1e-2, rtol=1e-2)
+
+
+@pytest.mark.parametrize("xb", [32, 64, 128])
+def test_xb_sizes(xb):
+    x = _rand(11, (3, xb * 2))
+    w = _rand(12, (xb * 2, xb * 3))
+    w_q, s = cm.quantize_weights(w, xb)
+    got = cm.crossbar_matmul(x, w_q, s, xb)
+    want = ref.ref_crossbar_matmul(x, w_q, s, xb)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)

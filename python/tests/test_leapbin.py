@@ -1,0 +1,48 @@
+"""leapbin round-trip + format stability (mirrored by rust runtime tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import leapbin
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ndim=st.integers(1, 4),
+    dtype=st.sampled_from([np.float32, np.int8, np.int32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip(tmp_path_factory, ndim, dtype, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 6, size=ndim))
+    if dtype == np.float32:
+        arr = rng.standard_normal(shape).astype(dtype)
+    else:
+        arr = rng.integers(-100, 100, size=shape).astype(dtype)
+    path = tmp_path_factory.mktemp("bin") / "t.bin"
+    leapbin.write(str(path), arr)
+    back = leapbin.read(str(path))
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_header_layout(tmp_path):
+    arr = np.arange(6, dtype=np.float32).reshape(2, 3)
+    p = tmp_path / "h.bin"
+    leapbin.write(str(p), arr)
+    blob = p.read_bytes()
+    assert blob[:4] == b"LEAP"
+    assert blob[4] == 1            # version
+    assert blob[5] == 0            # f32
+    assert blob[6] == 2            # ndim
+    assert int.from_bytes(blob[8:12], "little") == 2
+    assert int.from_bytes(blob[12:16], "little") == 3
+    assert len(blob) == 16 + 6 * 4
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"XXXX" + b"\0" * 16)
+    with pytest.raises(AssertionError):
+        leapbin.read(str(p))

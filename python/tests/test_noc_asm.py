@@ -1,0 +1,42 @@
+"""NoC-ISA python assembler: wire-format pinned against the Rust encoder."""
+
+from compile import noc_asm
+from compile.noc_asm import Op, Program, Sel
+
+
+def test_golden_bytes_match_rust():
+    """These constants are asserted identically in
+    rust/src/isa/encode.rs::tests::golden_hex_stable — a change on either
+    side must update both."""
+    hexes = [l for l in noc_asm.demo_program().assemble().splitlines()
+             if not l.startswith(";")]
+    assert hexes[0] == "10000000040000000000000000000000"
+    assert hexes[1] == "02010a00200004000000020002000400"
+    assert len(hexes) == 5  # 4 + HALT
+
+
+def test_instruction_size():
+    p = Program().uni(Op.NOP, 0, 1, Sel.all())
+    assert len(p.instrs[0].encode()) == noc_asm.INSTR_BYTES
+
+
+def test_sealed_idempotent():
+    p = Program().uni(Op.MAC, 0, 3, Sel.rows(0, 2)).sealed().sealed()
+    assert len(p.instrs) == 2
+    assert p.instrs[-1].cmd1[0] == Op.HALT
+
+
+def test_sel_encodings_distinct():
+    encs = set()
+    for sel in [Sel.all(), Sel.rows(0, 1), Sel.cols(0, 1), Sel.rect(0, 1, 0, 1),
+                Sel.split_rows(0, 1, 1, 2)]:
+        p = Program().uni(Op.NOP, 0, 1, sel)
+        encs.add(p.instrs[0].encode())
+    assert len(encs) == 5
+
+
+def test_opcode_values_stable():
+    assert Op.NOP == 0x00
+    assert Op.MAC == 0x0A
+    assert Op.HALT == 0x12
+    assert len(Op) == 19

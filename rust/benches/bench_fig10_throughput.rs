@@ -1,0 +1,52 @@
+//! Fig. 10 regeneration: end-to-end throughput across models and
+//! input/output sequence lengths, with the prefill/decode breakdown.
+//!
+//! Paper claims checked: decode throughput 4–6× below prefill; throughput
+//! drops sublinearly with model size.
+//!
+//! Run: `cargo bench --bench bench_fig10_throughput`
+
+use leap::arch::HwParams;
+use leap::model::ModelPreset;
+use leap::sim::AnalyticalSim;
+
+fn main() {
+    println!("=== Fig. 10: throughput vs models and sequence lengths ===\n");
+    println!(
+        "{:<14} {:>6} {:>6} {:>13} {:>12} {:>12} {:>16}",
+        "model", "in", "out", "prefill t/s", "decode t/s", "total t/s", "prefill/decode*"
+    );
+    let mut per_model_total = Vec::new();
+    for preset in [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let sim = AnalyticalSim::new(preset, HwParams::default());
+        for (inp, out) in [(128, 128), (256, 256), (512, 512), (1024, 1024), (2048, 2048)] {
+            let r = sim.run(inp, out);
+            let ratio = r.prefill.tokens_per_s / r.decode.tokens_per_s;
+            println!(
+                "{:<14} {:>6} {:>6} {:>13.1} {:>12.2} {:>12.2} {:>15.1}×",
+                preset.shape().name,
+                inp,
+                out,
+                r.prefill.tokens_per_s,
+                r.decode.tokens_per_s,
+                r.total_tokens_per_s,
+                ratio
+            );
+            if inp == 1024 {
+                per_model_total.push((preset.shape().name, r.total_tokens_per_s));
+            }
+        }
+        println!();
+    }
+    println!("* per-stage token rate; paper: decode 4–6× below prefill");
+
+    println!("\n=== sublinear scaling check (at 1024+1024) ===");
+    for w in per_model_total.windows(2) {
+        let (n0, t0) = w[0];
+        let (n1, t1) = w[1];
+        println!("{n0} → {n1}: throughput ÷{:.2}", t0 / t1);
+    }
+    let p1 = ModelPreset::Llama1B.shape().mapped_params() as f64;
+    let p8 = ModelPreset::Llama8B.shape().mapped_params() as f64;
+    println!("(parameter growth 1B→8B: ×{:.1} — throughput drop must be smaller)", p8 / p1);
+}

@@ -1,0 +1,107 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf).
+//!
+//! Measures the L3 components that sit on the serving path:
+//!  * analytical simulation of a full inference (dominates `simulate`);
+//!  * phase-plan construction (called per program compile);
+//!  * program lowering + hex assembly (per NPM load);
+//!  * mesh-executor cycle rate (instruction-level sim throughput);
+//!  * serving-engine decode-round rate (coordinator overhead);
+//!  * mapping cost evaluation (DSE inner loop).
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use leap::arch::{Coord, HwParams, TileGeometry};
+use leap::compiler::{lower_phases, Compiler};
+use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use leap::isa::assemble;
+use leap::mapping::{paper_mapping, CostModel};
+use leap::model::ModelPreset;
+use leap::noc::MeshSim;
+use leap::schedule::{decode_phases, prefill_phases};
+use leap::sim::AnalyticalSim;
+use leap::bench_util::bench;
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===\n");
+    let hw = HwParams::default();
+
+    // analytical end-to-end (Fig. 10/Table III inner loop)
+    let sim8 = AnalyticalSim::new(ModelPreset::Llama8B, hw.clone());
+    bench("analytical run 8B (1024+1024)", 3, 30, || sim8.run(1024, 1024).total_tokens_per_s);
+    let sim13 = AnalyticalSim::new(ModelPreset::Llama13B, hw.clone());
+    bench("analytical run 13B (2048+2048)", 3, 30, || sim13.run(2048, 2048).total_tokens_per_s);
+
+    // phase-plan construction
+    let shape = ModelPreset::Llama1B.shape();
+    let geom = TileGeometry::for_model(shape.d_model, &hw);
+    bench("prefill_phases 1B S=1024", 10, 200, || prefill_phases(&shape, &geom, &hw, 1024).total_cycles());
+    bench("decode_phases 1B ctx=2048", 10, 200, || decode_phases(&shape, &geom, &hw, 2048).total_cycles());
+
+    // lowering + assembly
+    let lp = prefill_phases(&shape, &geom, &hw, 1024);
+    bench("lower_phases 1B prefill", 10, 200, || lower_phases("b", &lp, &geom).len());
+    let prog = lower_phases("b", &lp, &geom);
+    bench("assemble program to hex", 10, 200, || assemble(&prog).len());
+
+    // instruction-level executor: simulated cycles per wall second
+    let tshape = ModelPreset::Tiny.shape();
+    let tgeom = TileGeometry::for_model(tshape.d_model, &hw);
+    let tlp = prefill_phases(&tshape, &tgeom, &hw, 32);
+    let tprog = lower_phases("mesh", &tlp, &tgeom);
+    let side = (2 * tgeom.dc) as u16;
+    let stats = bench("mesh executor: tiny prefill program", 2, 20, || {
+        let mut sim = MeshSim::new(side, side, hw.clone());
+        for y in 0..side {
+            for x in 0..side {
+                sim.preload_spad(Coord::new(x, y), 4096);
+            }
+        }
+        sim.run(&tprog).unwrap()
+    });
+    let cycles = {
+        let mut sim = MeshSim::new(side, side, hw.clone());
+        sim.run(&tprog).unwrap()
+    };
+    let rate = cycles as f64 / (stats.mean_ns * 1e-9);
+    println!("    → {:.2} M simulated mesh-cycles/s ({} routers)", rate / 1e6, side as u64 * side as u64);
+
+    // a larger mesh for router-scaling
+    let stats32 = bench("mesh executor: 32×32 mesh, same program", 1, 5, || {
+        let mut sim = MeshSim::new(32, 32, hw.clone());
+        for y in 0..32 {
+            for x in 0..32 {
+                sim.preload_spad(Coord::new(x, y), 4096);
+            }
+        }
+        sim.run(&tprog).unwrap()
+    });
+    let rate32 = cycles as f64 / (stats32.mean_ns * 1e-9);
+    println!("    → {:.2} M simulated mesh-cycles/s (1024 routers)", rate32 / 1e6);
+
+    // coordinator decode rounds (synthetic numerics → pure L3 cost)
+    bench("serving engine: 8 reqs × 16 tokens (1B)", 1, 10, || {
+        let mut e = ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Llama1B,
+            hw: HwParams::default(),
+            policy: BatchPolicy::default(),
+            numerics: Numerics::Synthetic { vocab: 1000 },
+        })
+        .unwrap();
+        for _ in 0..8 {
+            e.submit(vec![1; 64], 16);
+        }
+        e.run_until_idle().unwrap();
+        e.metrics.requests_done
+    });
+
+    // compile cache effectiveness
+    bench("compiler: decode program (cached)", 2, 50, || {
+        let mut cm = Compiler::default().compile(ModelPreset::Llama1B).unwrap();
+        cm.decode_program(1024).len()
+    });
+
+    // mapping DSE inner loop
+    let model = CostModel::new(16, 128, 64);
+    let cand = paper_mapping(16);
+    bench("mapping cost evaluation (dc=16)", 10, 300, || model.evaluate(&cand));
+}

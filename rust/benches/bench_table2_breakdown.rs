@@ -1,0 +1,82 @@
+//! Table II + Fig. 9 regeneration: macro-level power and area breakdown at
+//! the 7 nm-scaled node, and the system-level totals of Table I.
+//!
+//! Run: `cargo bench --bench bench_table2_breakdown`
+
+use leap::arch::HwParams;
+use leap::energy::{table2, AreaBreakdown, MacroArea, RouterDetail, ScratchpadModel};
+
+fn main() {
+    println!("=== Table II: macro-level power and area breakdown (7 nm) ===\n");
+    let m = MacroArea::default();
+    println!(
+        "{:<12} {:>12} {:>10} {:>12} {:>10}",
+        "component", "power (µW)", "share", "area (mm²)", "share"
+    );
+    let rows = [
+        ("PIM PE", m.pe_uw, m.pe_mm2),
+        ("Scratchpad", m.spad_uw, m.spad_mm2),
+        ("Router", m.router_uw, m.router_mm2),
+    ];
+    for (name, uw, mm2) in rows {
+        println!(
+            "{:<12} {:>12.2} {:>9.2}% {:>12.4} {:>9.2}%",
+            name,
+            uw,
+            uw / m.total_uw() * 100.0,
+            mm2,
+            mm2 / table2::MACRO_MM2_PAPER * 100.0
+        );
+    }
+    println!(
+        "{:<12} {:>12.2} {:>10} {:>12.4} {:>10}",
+        "Total", m.total_uw(), "100%", m.total_mm2(), "100%"
+    );
+    println!(
+        "\npaper rows: PE 32.37 µW / 0.0864 mm², spad 37.80 / 0.0125, router 90.48 / 0.021"
+    );
+    println!(
+        "NOTE: the paper's printed area total (0.1181 mm²) is 1.5% below its own\n\
+         component sum (0.1199 mm²) — documented erratum; we report the sum."
+    );
+
+    println!("\n=== Fig. 9 headline: router share ===");
+    let shares = m.shares();
+    println!("router: {:.2}% of power but {:.2}% of area (paper: 56.32% / 17.78%)",
+        shares[2].0, m.router_mm2 / table2::MACRO_MM2_PAPER * 100.0);
+
+    println!("\n=== Fig. 9 (right): router-level sub-block breakdown ===");
+    let rd = RouterDetail::for_hw(&HwParams::default());
+    for blk in &rd.blocks {
+        println!(
+            "{:<24} {:>8.2} µW ({:>5.1}%)   {:>8.5} mm² ({:>5.1}%)",
+            blk.name,
+            blk.power_uw,
+            blk.power_uw / rd.total_power_uw() * 100.0,
+            blk.area_mm2,
+            blk.area_mm2 / rd.total_area_mm2() * 100.0
+        );
+    }
+
+    println!("\n=== Table I system (64 tiles × 1024 macros) ===");
+    let sys = AreaBreakdown::new(64 * 1024);
+    println!("peak power : {:>8.2} W   (Table III 'Ours' power: 10.53 W)", sys.peak_power_w());
+    println!("total area : {:>8.1} mm²", sys.total_area_mm2());
+
+    println!("\n=== CACTI-style scratchpad scaling (energy/access model) ===");
+    println!("{:>10} {:>14} {:>12} {:>14}", "capacity", "power (µW)", "area (mm²)", "pJ/access");
+    for kb in [8usize, 16, 32, 64, 128] {
+        let s = ScratchpadModel::new(kb * 1024, 16);
+        println!(
+            "{:>7} KB {:>14.2} {:>12.4} {:>14.3}",
+            kb,
+            s.active_power_uw(),
+            s.area_mm2(),
+            s.access_pj()
+        );
+    }
+
+    // shares must be scale-invariant (§VI-C)
+    println!("\nscale invariance: shares identical at 1k and 1M macros: {}",
+        AreaBreakdown::new(1024).per_macro.shares() == AreaBreakdown::new(1 << 20).per_macro.shares());
+}

@@ -1,0 +1,79 @@
+//! Table III regeneration: LEAP vs A100 vs H100 on Llama 3-8B and
+//! Llama 2-13B, full 2048-token context window (1024 in + 1024 out).
+//!
+//! Absolute numbers come from our simulator + datasheet rooflines, not the
+//! authors' testbed; the *shape* to check (EXPERIMENTS.md records both):
+//!  * LEAP beats the A100 on throughput by a small multiple (paper ~2.55×);
+//!  * H100 wins raw throughput;
+//!  * LEAP wins energy efficiency by 1–2 orders of magnitude
+//!    (paper ~71.9× vs A100, ~24.2× vs H100) at ~10.5 W.
+//!
+//! Run: `cargo bench --bench bench_table3_gpu`
+
+use leap::arch::HwParams;
+use leap::baselines::GpuModel;
+use leap::model::ModelPreset;
+use leap::sim::AnalyticalSim;
+
+fn main() {
+    let (inp, out) = (1024usize, 1024usize);
+    println!("=== Table III: comparison to GPU platforms ({inp} in + {out} out) ===\n");
+    println!(
+        "{:<14} {:>10} {:>12} {:>12} {:>12}",
+        "", "", "Ours", "A100", "H100"
+    );
+    println!("{:<14} {:>10} {:>12} {:>12} {:>12}", "Frequency", "(GHz)", 1.0, 1.4, 1.7);
+
+    let mut ours_rows = Vec::new();
+    for preset in [ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let shape = preset.shape();
+        let ours = AnalyticalSim::new(preset, HwParams::default()).run(inp, out);
+        let a100 = GpuModel::a100().run(&shape, inp, out);
+        let h100 = GpuModel::h100().run(&shape, inp, out);
+        println!(
+            "{:<14} {:>10} {:>12.2} {:>12.2} {:>12.2}",
+            "Throughput*", shape.name, ours.gen_tokens_per_s, a100.gen_tokens_per_s, h100.gen_tokens_per_s
+        );
+        ours_rows.push((shape.name, ours, a100, h100));
+    }
+    let (o8, a8, h8) = (&ours_rows[0].1, &ours_rows[0].2, &ours_rows[0].3);
+    println!(
+        "{:<14} {:>10} {:>12.2} {:>12} {:>12}",
+        "Power", "(W)", o8.avg_power_w, "~300", "~350"
+    );
+    for (name, ours, a100, h100) in &ours_rows {
+        println!(
+            "{:<14} {:>10} {:>12.2} {:>12.4} {:>12.4}",
+            "Energy eff.", name, ours.tokens_per_j, a100.tokens_per_j, h100.tokens_per_j
+        );
+    }
+    println!("\n* generation throughput (out tokens / total time); paper rows for reference:");
+    println!("  ours 202.25 / 120.62 tok/s; A100 78.36 / 47.86; H100 274.26 / 167.51");
+    println!("  ours 19.21 / 11.45 tok/J;  A100 0.2612 / 0.1628; H100 0.7836 / 0.4786");
+
+    println!("\n=== gain factors (ours vs A100 / H100) ===");
+    for (name, ours, a100, h100) in &ours_rows {
+        println!(
+            "{name:<14} throughput ×{:.2} vs A100 (paper ~2.55×); eff ×{:.1} vs A100 (paper ~71.9×), ×{:.1} vs H100 (paper ~24.2×)",
+            ours.gen_tokens_per_s / a100.gen_tokens_per_s,
+            ours.tokens_per_j / a100.tokens_per_j,
+            ours.tokens_per_j / h100.tokens_per_j
+        );
+    }
+    let _ = (a8, h8);
+
+    println!("\n=== ablation: duplicated-KV (paper) vs GQA-aware streaming ===");
+    for preset in [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let dup = AnalyticalSim::new(preset, HwParams::default()).run(inp, out);
+        let gqa = AnalyticalSim::gqa_aware(preset, HwParams::default()).run(inp, out);
+        println!(
+            "{:<14} duplicated {:>8.2} tok/s  |  GQA-aware {:>8.2} tok/s  (×{:.2})",
+            preset.shape().name,
+            dup.gen_tokens_per_s,
+            gqa.gen_tokens_per_s,
+            gqa.gen_tokens_per_s / dup.gen_tokens_per_s
+        );
+    }
+    println!("(the paper's 8B figure, 202.25 tok/s, falls between the two variants —");
+    println!(" its simulator sits partway between full duplication and GQA-aware reads)");
+}

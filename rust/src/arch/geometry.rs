@@ -1,0 +1,145 @@
+//! Tile/channel/RPU/RG geometry of Fig. 4, derived from the model embedding
+//! dimension D and the crossbar size C.
+//!
+//! For an attention layer: dc = ceil(D/C); the layer maps to a *tile* of
+//! 2dc × 2dc macros; each projection weight (W_Q/W_K/W_V/W_O) occupies a
+//! *channel* of 2dc rows × dc/2 columns; an *RPU* is one channel row
+//! (dc/2 macros, N_r routers); an *RG* is the dc RPUs that hold one
+//! column-wise (Q/K/V) or row-wise (O) partition of the weight; the shard
+//! capacity is C_S = 2·N_r = dc rows.
+
+use super::params::HwParams;
+
+/// Derived geometry for one attention layer's tile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Sub-matrix grid side: dc = ceil(D/C).
+    pub dc: usize,
+    /// Tile side in macros: 2·dc.
+    pub side: usize,
+    /// Channel width in macros: dc/2 (N_r routers per RPU).
+    pub n_r: usize,
+    /// Shard height in rows: C_S = 2·N_r = dc.
+    pub shard_rows: usize,
+    /// Scratchpad depth in words (D_S).
+    pub spad_depth: usize,
+}
+
+impl TileGeometry {
+    /// Geometry for embedding dim `d_model` on hardware `hw`.
+    ///
+    /// Requires dc even (so the channel width dc/2 is integral) — all Llama
+    /// presets satisfy this; tiny configs round dc up to the next even.
+    pub fn for_model(d_model: usize, hw: &HwParams) -> Self {
+        let mut dc = d_model.div_ceil(hw.xb);
+        if dc % 2 == 1 {
+            dc += 1; // keep channel width integral; spare column idles
+        }
+        let n_r = (dc / 2).max(1);
+        Self {
+            dc,
+            side: 2 * dc,
+            n_r,
+            shard_rows: 2 * n_r,
+            spad_depth: hw.scratchpad_words(),
+        }
+    }
+
+    /// Macros per tile.
+    pub fn macros_per_tile(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// Macros per channel (2dc rows × dc/2 cols = dc²).
+    pub fn macros_per_channel(&self) -> usize {
+        self.side * self.n_r
+    }
+
+    /// RPUs (rows) per channel.
+    pub fn rpus_per_channel(&self) -> usize {
+        self.side
+    }
+
+    /// Crossbars needed to store one D×D weight matrix: dc².
+    pub fn xbars_per_weight(&self) -> usize {
+        self.dc * self.dc
+    }
+
+    /// Maximum context-window length a tile supports: D_S · C_S (§IV-A).
+    pub fn max_context(&self) -> usize {
+        self.spad_depth * self.shard_rows
+    }
+
+    /// Number of shards covering a context of `s` tokens.
+    pub fn shards_for(&self, s: usize) -> usize {
+        s.div_ceil(self.shard_rows)
+    }
+
+    /// Check the Table I consistency relations for this geometry.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.side == 2 * self.dc);
+        anyhow::ensure!(self.shard_rows == 2 * self.n_r || self.dc == 1);
+        anyhow::ensure!(self.macros_per_channel() * 4 == self.macros_per_tile());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I cross-check: Llama 3.2-1B (D = 2048, C = 128).
+    #[test]
+    fn llama_1b_matches_table1() {
+        let hw = HwParams::default();
+        let g = TileGeometry::for_model(2048, &hw);
+        assert_eq!(g.dc, 16);
+        assert_eq!(g.side, 32); // tile = 32×32 = 1024 macros
+        assert_eq!(g.macros_per_tile(), 1024);
+        assert_eq!(g.n_r, 8); // Macro # = 8 per RPU
+        assert_eq!(g.rpus_per_channel(), 32); // RPU # = 32 per channel
+        assert_eq!(g.macros_per_channel(), 256);
+        assert_eq!(g.shard_rows, 16); // C_S = ceil(D/C)
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn llama_8b_geometry() {
+        let hw = HwParams::default();
+        let g = TileGeometry::for_model(4096, &hw);
+        assert_eq!(g.dc, 32);
+        assert_eq!(g.side, 64);
+        assert_eq!(g.macros_per_tile(), 4096);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_model_rounds_dc_even() {
+        let hw = HwParams::default();
+        let g = TileGeometry::for_model(256, &hw); // dc = 2
+        assert_eq!(g.dc, 2);
+        assert_eq!(g.n_r, 1);
+        assert_eq!(g.shard_rows, 2);
+        let g3 = TileGeometry::for_model(384, &hw); // ceil = 3 → rounded to 4
+        assert_eq!(g3.dc, 4);
+        g3.validate().unwrap();
+    }
+
+    #[test]
+    fn max_context_is_ds_times_cs() {
+        let hw = HwParams::default();
+        let g = TileGeometry::for_model(2048, &hw);
+        assert_eq!(g.max_context(), 16 * 1024 * 16);
+        assert_eq!(g.shards_for(1024), 64);
+        assert_eq!(g.shards_for(1), 1);
+        assert_eq!(g.shards_for(17), 2);
+    }
+
+    #[test]
+    fn xbars_per_weight_covers_matrix() {
+        let hw = HwParams::default();
+        let g = TileGeometry::for_model(2048, &hw);
+        // 16² crossbars × 128² cells = 2048² weights exactly.
+        assert_eq!(g.xbars_per_weight() * hw.weights_per_xb(), 2048 * 2048);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hardware architecture description: Table I parameters, the 2-D mesh of
+//! macros (router + PIM PE pairs), and the tile/channel/RPU/RG geometry of
+//! Fig. 4.
+
+pub mod geometry;
+pub mod params;
+pub mod topology;
+
+pub use geometry::TileGeometry;
+pub use params::HwParams;
+pub use topology::{ChannelKind, Coord, Dir, Mesh};

@@ -1,0 +1,144 @@
+//! System-level hardware configuration — paper Table I plus the knobs swept
+//! by Fig. 12 (packet bit-width, IRCU parallelism).
+
+/// Macro- and system-level hardware parameters.
+///
+/// Defaults reproduce Table I (the Llama 3.2-1B configuration at 1 GHz).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwParams {
+    /// Crossbar array width/height (cells per side). Table I: 128.
+    pub xb: usize,
+    /// Bits per RRAM cell. Table I: 8.
+    pub cell_bits: u32,
+    /// Scratchpad capacity per router, bytes. Table I: 32 KB.
+    pub scratchpad_bytes: usize,
+    /// Scratchpad word width, bits. Table I: 16.
+    pub scratchpad_width_bits: u32,
+    /// Router input-FIFO capacity, bytes. Table I: 256 B.
+    pub rbuf_bytes: usize,
+    /// Router buffer word width, bits. Table I: 16.
+    pub rbuf_width_bits: u32,
+    /// NoC packet width, bits. Table I: 64 (swept in Fig. 12).
+    pub packet_bits: u32,
+    /// Multiply-accumulate units per IRCU. Table I: 16 (swept in Fig. 12).
+    pub ircu_macs: usize,
+    /// Clock frequency, GHz. Table III: 1 GHz.
+    pub freq_ghz: f64,
+    /// Crossbar read (analog MVM) latency in cycles: one column-parallel
+    /// dot per cycle after DAC settle. Derived from [15]'s macro timing.
+    pub pe_mvm_cycles: u64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        Self {
+            xb: 128,
+            cell_bits: 8,
+            scratchpad_bytes: 32 * 1024,
+            scratchpad_width_bits: 16,
+            rbuf_bytes: 256,
+            rbuf_width_bits: 16,
+            packet_bits: 64,
+            ircu_macs: 16,
+            freq_ghz: 1.0,
+            pe_mvm_cycles: 4,
+        }
+    }
+}
+
+impl HwParams {
+    /// 16-bit elements carried per packet per hop per cycle.
+    pub fn elems_per_packet(&self) -> usize {
+        (self.packet_bits / self.rbuf_width_bits).max(1) as usize
+    }
+
+    /// Cycles to stream a vector of `n` elements across one link.
+    pub fn stream_cycles(&self, n: usize) -> u64 {
+        n.div_ceil(self.elems_per_packet()) as u64
+    }
+
+    /// Scratchpad depth in 16-bit words per router (D_S in §IV-A).
+    pub fn scratchpad_words(&self) -> usize {
+        self.scratchpad_bytes / (self.scratchpad_width_bits as usize / 8)
+    }
+
+    /// Cycles for the IRCU to perform `n` MAC operations.
+    pub fn mac_cycles(&self, n: usize) -> u64 {
+        n.div_ceil(self.ircu_macs) as u64
+    }
+
+    /// Wall-clock seconds for `cycles` at the configured frequency.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Weights stored per crossbar array.
+    pub fn weights_per_xb(&self) -> usize {
+        self.xb * self.xb
+    }
+
+    /// Validate internal consistency (used by config loading).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.xb > 0 && self.xb.is_power_of_two(), "xb must be a power of two");
+        anyhow::ensure!(self.packet_bits >= self.rbuf_width_bits, "packet narrower than a word");
+        anyhow::ensure!(self.ircu_macs > 0, "need at least one MAC");
+        anyhow::ensure!(self.freq_ghz > 0.0, "frequency must be positive");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let p = HwParams::default();
+        assert_eq!(p.xb, 128);
+        assert_eq!(p.cell_bits, 8);
+        assert_eq!(p.scratchpad_bytes, 32 * 1024);
+        assert_eq!(p.packet_bits, 64);
+        assert_eq!(p.ircu_macs, 16);
+        assert_eq!(p.freq_ghz, 1.0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn packet_math() {
+        let p = HwParams::default();
+        assert_eq!(p.elems_per_packet(), 4); // 64-bit packet / 16-bit words
+        assert_eq!(p.stream_cycles(128), 32);
+        assert_eq!(p.stream_cycles(1), 1);
+        assert_eq!(p.stream_cycles(5), 2);
+    }
+
+    #[test]
+    fn scratchpad_depth() {
+        let p = HwParams::default();
+        assert_eq!(p.scratchpad_words(), 16 * 1024); // 32 KB / 2 B
+    }
+
+    #[test]
+    fn mac_cycles_rounds_up() {
+        let p = HwParams::default();
+        assert_eq!(p.mac_cycles(16), 1);
+        assert_eq!(p.mac_cycles(17), 2);
+        assert_eq!(p.mac_cycles(0), 0);
+    }
+
+    #[test]
+    fn seconds_at_1ghz() {
+        let p = HwParams::default();
+        assert!((p.seconds(1_000_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut p = HwParams::default();
+        p.xb = 100;
+        assert!(p.validate().is_err());
+        let mut p = HwParams::default();
+        p.packet_bits = 8;
+        assert!(p.validate().is_err());
+    }
+}

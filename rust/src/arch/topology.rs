@@ -1,0 +1,235 @@
+//! 2-D mesh topology: macro coordinates, port directions, channel kinds,
+//! and X-Y route enumeration (the baseline routing used by the mapping DSE
+//! cost function, §III-B).
+
+use std::fmt;
+
+/// Macro coordinate on the mesh. `x` is the column (east-positive), `y` the
+/// row (south-positive); (0,0) is the north-west corner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl Coord {
+    pub const fn new(x: u16, y: u16) -> Self {
+        Self { x, y }
+    }
+
+    /// Manhattan distance (hop count under X-Y routing).
+    pub fn manhattan(self, other: Coord) -> u32 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u32
+    }
+}
+
+impl fmt::Display for Coord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.x, self.y)
+    }
+}
+
+/// Router port direction (plus the local PE port).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    North,
+    East,
+    South,
+    West,
+    /// The locally attached PIM PE.
+    Pe,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 5] = [Dir::North, Dir::East, Dir::South, Dir::West, Dir::Pe];
+
+    /// Opposite mesh direction (PE has no opposite).
+    pub fn opposite(self) -> Option<Dir> {
+        match self {
+            Dir::North => Some(Dir::South),
+            Dir::South => Some(Dir::North),
+            Dir::East => Some(Dir::West),
+            Dir::West => Some(Dir::East),
+            Dir::Pe => None,
+        }
+    }
+}
+
+/// The four projection channels of an attention tile (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChannelKind {
+    Q,
+    K,
+    V,
+    O,
+}
+
+impl ChannelKind {
+    pub const ALL: [ChannelKind; 4] = [ChannelKind::Q, ChannelKind::K, ChannelKind::V, ChannelKind::O];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChannelKind::Q => "Q",
+            ChannelKind::K => "K",
+            ChannelKind::V => "V",
+            ChannelKind::O => "O",
+        }
+    }
+}
+
+/// A rectangular mesh of `width` × `height` macros.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mesh {
+    pub width: u16,
+    pub height: u16,
+}
+
+impl Mesh {
+    pub fn new(width: u16, height: u16) -> Self {
+        assert!(width > 0 && height > 0);
+        Self { width, height }
+    }
+
+    pub fn len(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x < self.width && c.y < self.height
+    }
+
+    /// Linear index of a coordinate (row-major).
+    pub fn index(&self, c: Coord) -> usize {
+        debug_assert!(self.contains(c));
+        c.y as usize * self.width as usize + c.x as usize
+    }
+
+    pub fn coord(&self, idx: usize) -> Coord {
+        Coord::new((idx % self.width as usize) as u16, (idx / self.width as usize) as u16)
+    }
+
+    /// Neighbour in a mesh direction, if on-mesh.
+    pub fn neighbor(&self, c: Coord, d: Dir) -> Option<Coord> {
+        let (x, y) = (c.x as i32, c.y as i32);
+        let (nx, ny) = match d {
+            Dir::North => (x, y - 1),
+            Dir::South => (x, y + 1),
+            Dir::East => (x + 1, y),
+            Dir::West => (x - 1, y),
+            Dir::Pe => return None,
+        };
+        if nx < 0 || ny < 0 || nx >= self.width as i32 || ny >= self.height as i32 {
+            None
+        } else {
+            Some(Coord::new(nx as u16, ny as u16))
+        }
+    }
+
+    /// The X-Y (dimension-ordered) route from `src` to `dst`, exclusive of
+    /// `src`, inclusive of `dst`. X first, then Y — the naive baseline the
+    /// paper uses for the mapping-DSE cost estimate.
+    pub fn xy_route(&self, src: Coord, dst: Coord) -> Vec<Coord> {
+        debug_assert!(self.contains(src) && self.contains(dst));
+        let mut path = Vec::with_capacity(src.manhattan(dst) as usize);
+        let mut cur = src;
+        while cur.x != dst.x {
+            cur.x = if dst.x > cur.x { cur.x + 1 } else { cur.x - 1 };
+            path.push(cur);
+        }
+        while cur.y != dst.y {
+            cur.y = if dst.y > cur.y { cur.y + 1 } else { cur.y - 1 };
+            path.push(cur);
+        }
+        path
+    }
+
+    /// Per-link traversal direction sequence of the X-Y route.
+    pub fn xy_dirs(&self, src: Coord, dst: Coord) -> Vec<Dir> {
+        let mut dirs = Vec::new();
+        let mut cur = src;
+        while cur.x != dst.x {
+            if dst.x > cur.x {
+                dirs.push(Dir::East);
+                cur.x += 1;
+            } else {
+                dirs.push(Dir::West);
+                cur.x -= 1;
+            }
+        }
+        while cur.y != dst.y {
+            if dst.y > cur.y {
+                dirs.push(Dir::South);
+                cur.y += 1;
+            } else {
+                dirs.push(Dir::North);
+                cur.y -= 1;
+            }
+        }
+        dirs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manhattan_symmetric() {
+        let a = Coord::new(1, 2);
+        let b = Coord::new(4, 0);
+        assert_eq!(a.manhattan(b), 5);
+        assert_eq!(b.manhattan(a), 5);
+        assert_eq!(a.manhattan(a), 0);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let m = Mesh::new(7, 5);
+        for i in 0..m.len() {
+            assert_eq!(m.index(m.coord(i)), i);
+        }
+    }
+
+    #[test]
+    fn neighbors_edges() {
+        let m = Mesh::new(3, 3);
+        let nw = Coord::new(0, 0);
+        assert_eq!(m.neighbor(nw, Dir::North), None);
+        assert_eq!(m.neighbor(nw, Dir::West), None);
+        assert_eq!(m.neighbor(nw, Dir::East), Some(Coord::new(1, 0)));
+        assert_eq!(m.neighbor(nw, Dir::South), Some(Coord::new(0, 1)));
+        assert_eq!(m.neighbor(nw, Dir::Pe), None);
+    }
+
+    #[test]
+    fn xy_route_length_is_manhattan() {
+        let m = Mesh::new(8, 8);
+        let a = Coord::new(1, 6);
+        let b = Coord::new(5, 2);
+        let route = m.xy_route(a, b);
+        assert_eq!(route.len() as u32, a.manhattan(b));
+        assert_eq!(*route.last().unwrap(), b);
+        // x changes first
+        assert_eq!(route[0], Coord::new(2, 6));
+    }
+
+    #[test]
+    fn xy_dirs_match_route() {
+        let m = Mesh::new(8, 8);
+        let a = Coord::new(3, 3);
+        let b = Coord::new(0, 5);
+        let dirs = m.xy_dirs(a, b);
+        assert_eq!(dirs, vec![Dir::West, Dir::West, Dir::West, Dir::South, Dir::South]);
+    }
+
+    #[test]
+    fn opposite_dirs() {
+        assert_eq!(Dir::North.opposite(), Some(Dir::South));
+        assert_eq!(Dir::East.opposite(), Some(Dir::West));
+        assert_eq!(Dir::Pe.opposite(), None);
+    }
+}

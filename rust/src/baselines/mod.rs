@@ -1,0 +1,6 @@
+//! Comparison baselines (paper Table III): analytical roofline models of the
+//! A100 and H100 GPUs running Llama-family inference.
+
+pub mod gpu;
+
+pub use gpu::{GpuKind, GpuModel, GpuReport};

@@ -1,0 +1,135 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` bench binaries use [`bench`] for hot-path timing
+//! (warmup + N samples, mean/p50/p99) and the table printers for the
+//! paper-figure regeneration output.
+
+use std::time::Instant;
+
+/// Timing statistics over a set of samples (nanoseconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<u64>) -> Self {
+        assert!(!ns.is_empty());
+        ns.sort_unstable();
+        let n = ns.len();
+        Self {
+            samples: n,
+            mean_ns: ns.iter().sum::<u64>() as f64 / n as f64,
+            p50_ns: ns[(n - 1) / 2],
+            p99_ns: ns[((n - 1) as f64 * 0.99) as usize],
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    /// Human-readable time with unit scaling.
+    pub fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+/// The closure's return value is black-boxed to prevent dead-code
+/// elimination.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    let s = Stats::from_samples(ns);
+    println!(
+        "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} samples)",
+        Stats::fmt_ns(s.mean_ns),
+        Stats::fmt_ns(s.p50_ns as f64),
+        Stats::fmt_ns(s.p99_ns as f64),
+        s.samples
+    );
+    s
+}
+
+/// Print a markdown-ish table row.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Render a sparkline-style histogram for terminal output (Fig. 8 and
+/// Fig. 10 shapes at a glance).
+pub fn ascii_histogram(bins: &[(f64, usize)], width: usize) -> String {
+    let max = bins.iter().map(|(_, n)| *n).max().unwrap_or(1).max(1);
+    bins.iter()
+        .map(|(center, n)| {
+            let bar = "#".repeat((n * width).div_ceil(max));
+            format!("{center:>12.0} | {bar} {n}")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(vec![10, 20, 30, 40, 100]);
+        assert_eq!(s.samples, 5);
+        assert_eq!(s.p50_ns, 30);
+        assert_eq!(s.min_ns, 10);
+        assert_eq!(s.max_ns, 100);
+        assert!((s.mean_ns - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(Stats::fmt_ns(500.0), "500 ns");
+        assert_eq!(Stats::fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(Stats::fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(Stats::fmt_ns(3.2e9), "3.20 s");
+    }
+
+    #[test]
+    fn bench_runs_and_returns() {
+        let mut count = 0;
+        let s = bench("test", 2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn histogram_renders() {
+        let h = ascii_histogram(&[(100.0, 5), (200.0, 10)], 20);
+        assert!(h.contains('#'));
+        assert_eq!(h.lines().count(), 2);
+    }
+}

@@ -1,0 +1,330 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!   serve         — run the serving coordinator on a synthetic workload
+//!   simulate      — end-to-end throughput/energy for one model+context
+//!   map-explore   — spatial-mapping DSE (Fig. 8)
+//!   compare-gpu   — LEAP vs A100/H100 (Table III)
+//!   throughput    — model × context sweep (Fig. 10)
+//!   breakdown     — per-instruction-class cycles (Fig. 11) + Table II
+//!   sweep         — packet width × IRCU parallelism (Fig. 12)
+//!   isa-demo      — assemble/disassemble a sample NPM program
+
+use std::collections::HashMap;
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::baselines::GpuModel;
+use crate::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use crate::energy::{AreaBreakdown, MacroArea};
+use crate::mapping::explore;
+use crate::model::ModelPreset;
+use crate::sim::{class_breakdown, AnalyticalSim};
+
+/// Parsed command-line arguments: positional subcommand + `--key value`
+/// options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut args = Args::default();
+        let mut it = argv.iter();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().cloned().unwrap_or_else(|| "true".into());
+                args.options.insert(key.to_string(), val);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn model(&self) -> anyhow::Result<ModelPreset> {
+        let name = self.get("model", "1b");
+        ModelPreset::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+    }
+}
+
+pub const USAGE: &str = "\
+leap — LLM inference on a scalable PIM-NoC architecture (paper reproduction)
+
+USAGE: leap <command> [--key value ...]
+
+COMMANDS
+  serve        --model 1b --requests 8 --prompt 64 --gen 32 [--artifacts DIR]
+  simulate     --model 8b --in 1024 --out 1024
+  map-explore  [--dc 16]                         (Fig. 8)
+  compare-gpu  [--in 1024 --out 1024]            (Table III)
+  throughput   [--models 1b,8b,13b]              (Fig. 10)
+  breakdown    --model 1b [--seq 1024]           (Fig. 11 + Table II)
+  sweep        --model 1b [--in 1024 --out 1024] (Fig. 12)
+  trace        [--dc 16]  per-router traffic heat map of the Fig. 4 mapping
+  isa-demo
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run(argv: &[String]) -> anyhow::Result<i32> {
+    let args = Args::parse(argv);
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "map-explore" => cmd_map_explore(&args),
+        "compare-gpu" => cmd_compare_gpu(&args),
+        "throughput" => cmd_throughput(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "sweep" => cmd_sweep(&args),
+        "trace" => cmd_trace(&args),
+        "isa-demo" => cmd_isa_demo(),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    let preset = args.model()?;
+    let n_requests = args.get_usize("requests", 8);
+    let prompt_len = args.get_usize("prompt", 64);
+    let gen = args.get_usize("gen", 32);
+    let numerics = if preset == ModelPreset::Tiny {
+        let dir = args.get("artifacts", "artifacts");
+        Numerics::Pjrt(Box::new(crate::runtime::Engine::load(dir)?))
+    } else {
+        Numerics::Synthetic { vocab: preset.shape().vocab }
+    };
+    let mut engine = ServingEngine::new(EngineConfig {
+        preset,
+        hw: HwParams::default(),
+        policy: BatchPolicy::default(),
+        numerics,
+    })?;
+    for i in 0..n_requests {
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|k| ((i * 31 + k * 7) % preset.shape().vocab) as i32).collect();
+        engine.submit(prompt, gen);
+    }
+    engine.run_until_idle()?;
+    let m = &engine.metrics;
+    let (lp50, lp99) = m.latency_p50_p99();
+    let (tp50, tp99) = m.ttft_p50_p99();
+    println!("model           : {preset}");
+    println!("requests done   : {} (failed {})", m.requests_done, m.requests_failed);
+    println!("prefill tokens  : {}", m.prefill_tokens);
+    println!("decode tokens   : {}", m.decode_tokens);
+    println!("sim time        : {:.3} s", m.sim_time_ns as f64 * 1e-9);
+    println!("throughput      : {:.2} tok/s (decode {:.2})", m.total_tokens_per_s(), m.decode_tokens_per_s());
+    println!("energy          : {:.3} J ({:.2} tok/J)", m.energy_j, m.tokens_per_j());
+    println!("latency p50/p99 : {:.2} / {:.2} ms", lp50 as f64 * 1e-6, lp99 as f64 * 1e-6);
+    println!("ttft    p50/p99 : {:.2} / {:.2} ms", tp50 as f64 * 1e-6, tp99 as f64 * 1e-6);
+    println!("npm swaps       : {}", m.npm_swaps);
+    println!("host overhead   : {:.4}×", m.host_overhead());
+    Ok(0)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
+    let preset = args.model()?;
+    let inp = args.get_usize("in", 1024);
+    let out = args.get_usize("out", 1024);
+    let r = AnalyticalSim::new(preset, HwParams::default()).run(inp, out);
+    println!("model             : {}", r.model);
+    println!("workload          : {} in + {} out tokens", r.in_tokens, r.out_tokens);
+    println!("mapped macros     : {} ({} tiles)", r.mapped_macros, r.mapped_macros / 1024);
+    println!("prefill           : {:.3} s ({:.1} tok/s)", r.prefill.seconds, r.prefill.tokens_per_s);
+    println!("decode            : {:.3} s ({:.1} tok/s)", r.decode.seconds, r.decode.tokens_per_s);
+    println!("total throughput  : {:.2} tok/s (gen {:.2})", r.total_tokens_per_s, r.gen_tokens_per_s);
+    println!("energy            : {:.3} J", r.total_energy_j);
+    println!("energy efficiency : {:.2} tok/J", r.tokens_per_j);
+    println!("avg power         : {:.2} W", r.avg_power_w);
+    Ok(0)
+}
+
+fn cmd_map_explore(args: &Args) -> anyhow::Result<i32> {
+    let dc = args.get_usize("dc", 16);
+    let res = explore(dc, 128, 64);
+    println!("candidates evaluated : {}", res.costs.len());
+    println!("explore time         : {:.2} s (paper budget: 20 s)", res.elapsed_s);
+    println!("best cost            : {:.0}", res.best_cost());
+    println!("paper mapping cost   : {:.0} (p{:.1})", res.paper_cost(), res.paper_percentile());
+    println!("\ncommunication-cost distribution (Fig. 8):");
+    println!("{}", crate::bench_util::ascii_histogram(&res.histogram(24), 48));
+    Ok(0)
+}
+
+fn cmd_compare_gpu(args: &Args) -> anyhow::Result<i32> {
+    let inp = args.get_usize("in", 1024);
+    let out = args.get_usize("out", 1024);
+    println!("Table III — LEAP vs GPUs ({inp} in + {out} out)\n");
+    println!("{:<14} {:>12} {:>12} {:>12} {:>10}", "model", "ours tok/s", "A100 tok/s", "H100 tok/s", "ours W");
+    for preset in [ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let shape = preset.shape();
+        let ours = AnalyticalSim::new(preset, HwParams::default()).run(inp, out);
+        let a100 = GpuModel::a100().run(&shape, inp, out);
+        let h100 = GpuModel::h100().run(&shape, inp, out);
+        println!(
+            "{:<14} {:>12.2} {:>12.2} {:>12.2} {:>10.2}",
+            shape.name, ours.gen_tokens_per_s, a100.gen_tokens_per_s, h100.gen_tokens_per_s, ours.avg_power_w
+        );
+        println!(
+            "{:<14} {:>12.2} {:>12.4} {:>12.4}   (tok/J)",
+            "", ours.tokens_per_j, a100.tokens_per_j, h100.tokens_per_j
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_throughput(args: &Args) -> anyhow::Result<i32> {
+    let models = args.get("models", "1b,8b,13b");
+    println!("Fig. 10 — throughput across models and context windows\n");
+    println!("{:<14} {:>8} {:>8} {:>12} {:>12} {:>12}", "model", "in", "out", "prefill t/s", "decode t/s", "total t/s");
+    for name in models.split(',') {
+        let preset = ModelPreset::parse(name.trim())
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        let sim = AnalyticalSim::new(preset, HwParams::default());
+        for (inp, out) in [(128, 128), (512, 512), (1024, 1024), (2048, 2048)] {
+            let r = sim.run(inp, out);
+            println!(
+                "{:<14} {:>8} {:>8} {:>12.1} {:>12.2} {:>12.2}",
+                preset.shape().name, inp, out, r.prefill.tokens_per_s, r.decode.tokens_per_s, r.total_tokens_per_s
+            );
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_breakdown(args: &Args) -> anyhow::Result<i32> {
+    let preset = args.model()?;
+    let s = args.get_usize("seq", 1024);
+    let hw = HwParams::default();
+    let shape = preset.shape();
+    let geom = TileGeometry::for_model(shape.d_model, &hw);
+    let (pre, dec) = class_breakdown(&shape, &geom, &hw, s);
+    println!("Fig. 11 — cycle breakdown by instruction class ({}, S={s})\n", shape.name);
+    println!("{:<8} {:>14} {:>8} {:>14} {:>8}", "class", "prefill cyc", "%", "decode cyc", "%");
+    for c in ["send", "mul", "add", "spad", "pim", "ctrl"] {
+        println!(
+            "{:<8} {:>14} {:>7.1}% {:>14} {:>7.1}%",
+            c,
+            pre.cycles.get(c).unwrap_or(&0),
+            pre.share(c) * 100.0,
+            dec.cycles.get(c).unwrap_or(&0),
+            dec.share(c) * 100.0
+        );
+    }
+    println!("\nTable II — macro power & area breakdown (7 nm)\n");
+    let m = MacroArea::default();
+    let shares = m.shares();
+    for (i, comp) in ["PIM PE", "Scratchpad", "Router"].iter().enumerate() {
+        println!("{comp:<12} power {:>6.1}%   area {:>6.1}%", shares[i].0, shares[i].1);
+    }
+    let sys = AreaBreakdown::new(64 * 1024);
+    println!("\nTable I system: {:.2} W peak, {:.1} mm² total", sys.peak_power_w(), sys.total_area_mm2());
+    Ok(0)
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<i32> {
+    let preset = args.model()?;
+    let inp = args.get_usize("in", 1024);
+    let out = args.get_usize("out", 1024);
+    println!("Fig. 12 — packet width × IRCU parallelism ({preset})\n");
+    println!("{:>10} {:>8} {:>14}", "packet b", "MACs", "total tok/s");
+    for packet_bits in [16u32, 32, 64, 128, 256] {
+        for macs in [4usize, 8, 16, 32, 64] {
+            let mut hw = HwParams::default();
+            hw.packet_bits = packet_bits;
+            hw.ircu_macs = macs;
+            let r = AnalyticalSim::new(preset, hw).run(inp, out);
+            println!("{packet_bits:>10} {macs:>8} {:>14.2}", r.total_tokens_per_s);
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<i32> {
+    use crate::mapping::paper_mapping;
+    use crate::sim::TrafficMatrix;
+    let dc = args.get_usize("dc", 16);
+    let tm = TrafficMatrix::from_mapping(&paper_mapping(dc), dc);
+    println!("per-router X-Y traffic of the Fig. 4 mapping (dc={dc}; 0-9 heat scale):\n");
+    println!("{}", tm.heatmap());
+    println!("mean load   : {:.1} routes/router", tm.mean());
+    println!("peak load   : {} routes", tm.max());
+    println!("peak/mean   : {:.2} (1.0 = perfectly balanced)", tm.imbalance());
+    println!("coeff. var. : {:.2}", tm.cv());
+    Ok(0)
+}
+
+fn cmd_isa_demo() -> anyhow::Result<i32> {
+    use crate::isa::{assemble, disassemble, Cmd, Instruction, Opcode, Program, SelBits};
+    let mut p = Program::new("demo: one projection + reduce step");
+    p.push(Instruction::uni(Cmd::new(Opcode::PeMvm, 0), 4, SelBits::All));
+    p.push(Instruction::dual(
+        Cmd::new(Opcode::RouteE, 1),
+        Cmd::new(Opcode::Mac, 0),
+        32,
+        SelBits::SplitRows { lo: 0, hi: 16, lo2: 16, hi2: 32 },
+    ));
+    p.push(Instruction::uni(Cmd::new(Opcode::ReduceS, 0), 16, SelBits::Cols { lo: 8, hi: 16 }));
+    let p = p.sealed();
+    let hex = assemble(&p);
+    println!("— program —\n{p}");
+    println!("— NPM hex —\n{hex}");
+    let q = disassemble(&hex)?;
+    println!("— disassembled roundtrip: {} instructions, label '{}' —", q.len(), q.label);
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_options() {
+        let a = Args::parse(&argv("simulate --model 8b --in 512"));
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("model", "1b"), "8b");
+        assert_eq!(a.get_usize("in", 0), 512);
+        assert_eq!(a.get_usize("out", 7), 7);
+        assert_eq!(a.model().unwrap(), ModelPreset::Llama8B);
+    }
+
+    #[test]
+    fn unknown_command_exit_code() {
+        assert_eq!(run(&argv("bogus")).unwrap(), 2);
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+    }
+
+    #[test]
+    fn fast_commands_run() {
+        assert_eq!(run(&argv("breakdown --model 1b --seq 256")).unwrap(), 0);
+        assert_eq!(run(&argv("trace --dc 4")).unwrap(), 0);
+        assert_eq!(run(&argv("isa-demo")).unwrap(), 0);
+        assert_eq!(run(&argv("simulate --model tiny --in 32 --out 8")).unwrap(), 0);
+    }
+
+    #[test]
+    fn bad_model_errors() {
+        assert!(run(&argv("simulate --model 70b")).is_err());
+    }
+}

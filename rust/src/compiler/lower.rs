@@ -1,0 +1,202 @@
+//! Phase → instruction lowering.
+//!
+//! Each [`Phase`] becomes one or more NPM instructions over the tile's
+//! router selection, with CMD pairs chosen so movement and IRCU work
+//! co-issue where the dataflow overlaps them (the Fig. 6 pipelines).
+
+use crate::arch::TileGeometry;
+use crate::isa::{Cmd, Instruction, Opcode, Program, SelBits};
+use crate::schedule::{LayerPhases, Phase, PhaseKind};
+
+/// Clamp a u64 cycle count into the u16 CMD_rep field, splitting into
+/// multiple instructions when necessary.
+fn push_repeated(prog: &mut Program, make: impl Fn(u16) -> Instruction, mut cycles: u64) {
+    const MAX: u64 = u16::MAX as u64;
+    while cycles > 0 {
+        let rep = cycles.min(MAX) as u16;
+        prog.push(make(rep));
+        cycles -= rep as u64;
+    }
+}
+
+/// Lower one phase onto the tile geometry.
+fn lower_phase(prog: &mut Program, p: &Phase, geom: &TileGeometry) {
+    let side = (2 * geom.dc) as u16;
+    let half = geom.n_r as u16;
+    // Channel column extents in the Fig. 4 layout (K, Q, V, O strips).
+    let (k_lo, q_lo, v_lo, o_lo) = (0, half, 2 * half, 3 * half);
+    let all = SelBits::All;
+    let q_chan = SelBits::Cols { lo: q_lo, hi: q_lo + half };
+    let v_chan = SelBits::Cols { lo: v_lo, hi: v_lo + half };
+    let o_chan = SelBits::Cols { lo: o_lo, hi: o_lo + half };
+    let kq_chans = SelBits::Cols { lo: k_lo, hi: q_lo + half };
+    let qkv = SelBits::Cols { lo: 0, hi: 3 * half };
+    let _ = side;
+
+    match p.kind {
+        PhaseKind::InputBroadcast => push_repeated(
+            prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::BcastRow, 4), rep, qkv),
+            p.cycles,
+        ),
+        PhaseKind::Projection => push_repeated(
+            prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::PeMvm, 0), rep, all),
+            p.cycles,
+        ),
+        PhaseKind::ProjReduce => push_repeated(
+            prog,
+            // reduce east in K/Q channels while V reduces south — the two
+            // non-conflicting paths of a CMD pair (§V-A).
+            |rep| {
+                Instruction::dual(
+                    Cmd::new(Opcode::ReduceE, 5),
+                    Cmd::new(Opcode::SpadWr, 5),
+                    rep,
+                    SelBits::SplitRows { lo: 0, hi: side / 2, lo2: side / 2, hi2: side },
+                )
+            },
+            p.cycles,
+        ),
+        PhaseKind::KShardRotate => push_repeated(
+            prog,
+            |rep| {
+                Instruction::dual(
+                    Cmd::new(Opcode::SpadRd, 0),
+                    Cmd::new(Opcode::RouteE, 0),
+                    rep,
+                    kq_chans,
+                )
+            },
+            p.cycles,
+        ),
+        PhaseKind::ScoreDdmm => push_repeated(
+            prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::Mac, 4), rep, q_chan),
+            p.cycles,
+        ),
+        PhaseKind::ScoreReduce => push_repeated(
+            prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::ReduceS, 1), rep, q_chan),
+            p.cycles,
+        ),
+        PhaseKind::Softmax => push_repeated(
+            prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::ExpMax, 0), rep, q_chan),
+            p.cycles,
+        ),
+        PhaseKind::ContextDdmm => push_repeated(
+            prog,
+            |rep| {
+                Instruction::dual(
+                    Cmd::new(Opcode::Mac, 4),
+                    Cmd::new(Opcode::RouteE, 0),
+                    rep,
+                    v_chan,
+                )
+            },
+            p.cycles,
+        ),
+        PhaseKind::OutputReduce => push_repeated(
+            prog,
+            |rep| {
+                Instruction::dual(
+                    Cmd::new(Opcode::BcastRow, 0),
+                    Cmd::new(Opcode::ReduceS, 1),
+                    rep,
+                    SelBits::SplitRows { lo: 0, hi: side / 2, lo2: side / 2, hi2: side },
+                )
+            },
+            p.cycles,
+        ),
+        PhaseKind::Mlp => push_repeated(
+            prog,
+            |rep| {
+                Instruction::dual(
+                    Cmd::new(Opcode::BcastRow, 4),
+                    Cmd::new(Opcode::PeMvm, 0),
+                    rep,
+                    SelBits::SplitRows { lo: 0, hi: side / 2, lo2: side / 2, hi2: side },
+                )
+            },
+            p.cycles,
+        ),
+    }
+    // one SYNC barrier between phases (the controller's phase boundary)
+    prog.push(Instruction::uni(Cmd::new(Opcode::Sync, 0), 1, o_chan));
+}
+
+/// Lower a full phase plan into an NPM program.
+pub fn lower_phases(label: &str, lp: &LayerPhases, geom: &TileGeometry) -> Program {
+    let mut prog = Program::new(label);
+    for p in &lp.phases {
+        lower_phase(&mut prog, p, geom);
+    }
+    prog.sealed()
+}
+
+/// Controller cycles the lowered program will take (Σ rep + issue), used to
+/// cross-check against the analytical phase total.
+pub fn lowered_cycles(lp: &LayerPhases) -> u64 {
+    lp.total_cycles()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwParams;
+    use crate::model::ModelPreset;
+    use crate::schedule::prefill_phases;
+
+    fn plan() -> (LayerPhases, TileGeometry) {
+        let hw = HwParams::default();
+        let shape = ModelPreset::Llama1B.shape();
+        let geom = TileGeometry::for_model(shape.d_model, &hw);
+        (prefill_phases(&shape, &geom, &hw, 256), geom)
+    }
+
+    #[test]
+    fn lowered_program_nonempty_and_sealed() {
+        let (lp, geom) = plan();
+        let p = lower_phases("prefill", &lp, &geom);
+        assert!(p.len() > lp.phases.len());
+        assert_eq!(p.instrs.last().unwrap().cmd1.op, Opcode::Halt);
+    }
+
+    #[test]
+    fn rep_cycles_match_phase_cycles() {
+        // Σ rep over non-sync instructions == Σ phase cycles: this is the
+        // contract that keeps analytical and instruction-level sims aligned.
+        let (lp, geom) = plan();
+        let p = lower_phases("prefill", &lp, &geom);
+        let rep_sum: u64 = p
+            .instrs
+            .iter()
+            .filter(|i| !matches!(i.cmd1.op, Opcode::Sync | Opcode::Halt))
+            .map(|i| i.rep as u64)
+            .sum();
+        assert_eq!(rep_sum, lp.total_cycles());
+    }
+
+    #[test]
+    fn long_phases_split_across_instructions() {
+        let mut prog = Program::new("split");
+        push_repeated(
+            &mut prog,
+            |rep| Instruction::uni(Cmd::new(Opcode::Nop, 0), rep, SelBits::All),
+            200_000,
+        );
+        assert_eq!(prog.len(), 4); // 3×65535 + remainder
+        let total: u64 = prog.instrs.iter().map(|i| i.rep as u64).sum();
+        assert_eq!(total, 200_000);
+    }
+
+    #[test]
+    fn no_conflicting_cmd_pairs() {
+        let (lp, geom) = plan();
+        let p = lower_phases("prefill", &lp, &geom);
+        for i in &p.instrs {
+            assert!(!i.cmd1.conflicts_with(i.cmd2), "{i:?}");
+        }
+    }
+}

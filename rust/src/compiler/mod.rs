@@ -1,0 +1,13 @@
+//! End-to-end compilation pipeline: model preset → partition → spatial
+//! mapping → temporal schedule → NPM instruction programs.
+//!
+//! The compiler lowers each dataflow phase (`schedule::dataflow`) into NPM
+//! instructions whose repeat counts equal the phase's critical-path cycles,
+//! so the instruction-level simulator and the analytical model agree by
+//! construction (cross-checked in `tests/integration_sim.rs`).
+
+pub mod lower;
+pub mod pipeline;
+
+pub use lower::lower_phases;
+pub use pipeline::{ctx_bucket, CompiledModel, Compiler, LayerPrograms};

@@ -1,0 +1,177 @@
+//! The top-level compiler: preset → mapping → per-layer NPM programs,
+//! with a program cache keyed by (phase, context bucket) so serving doesn't
+//! recompile every decode step.
+
+use std::collections::HashMap;
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::isa::Program;
+use crate::mapping::{explore, paper_mapping, Candidate};
+use crate::model::{ModelPreset, ModelShape};
+use crate::partition::AttentionDag;
+use crate::schedule::{decode_phases, prefill_phases};
+
+use super::lower::lower_phases;
+
+/// Programs for one decoder layer (prefill variant + decode variants).
+#[derive(Debug, Clone, Default)]
+pub struct LayerPrograms {
+    pub prefill: Option<Program>,
+    /// Decode programs bucketed by context length (power-of-two buckets).
+    pub decode: HashMap<usize, Program>,
+}
+
+/// A fully compiled model: mapping + geometry + per-layer programs.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub shape: ModelShape,
+    pub geom: TileGeometry,
+    pub hw: HwParams,
+    pub mapping: Candidate,
+    pub dag: AttentionDag,
+    layers: LayerPrograms,
+    /// Compile-cache statistics.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Compiler options.
+#[derive(Debug, Clone)]
+pub struct Compiler {
+    pub hw: HwParams,
+    /// Run the full mapping DSE (`true`) or use the paper's Fig. 4 layout
+    /// directly (`false`, the fast path — it is near-optimal anyway).
+    pub run_dse: bool,
+}
+
+impl Default for Compiler {
+    fn default() -> Self {
+        Self { hw: HwParams::default(), run_dse: false }
+    }
+}
+
+impl Compiler {
+    /// Compile a model preset: partition, map, and prepare program slots.
+    pub fn compile(&self, preset: ModelPreset) -> anyhow::Result<CompiledModel> {
+        let shape = preset.shape();
+        self.hw.validate()?;
+        let geom = TileGeometry::for_model(shape.d_model, &self.hw);
+        geom.validate()?;
+        let mapping = if self.run_dse && geom.dc >= 2 {
+            let res = explore(geom.dc, self.hw.xb, self.hw.packet_bits);
+            res.candidates[res.best].clone()
+        } else {
+            paper_mapping(geom.dc)
+        };
+        let dag = AttentionDag::build(shape.d_model, self.hw.xb);
+        anyhow::ensure!(dag.topo_order().is_some(), "partitioned DAG has a cycle");
+        Ok(CompiledModel {
+            shape,
+            geom,
+            hw: self.hw.clone(),
+            mapping,
+            dag,
+            layers: LayerPrograms::default(),
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+}
+
+/// Bucket a context length to the next power of two (program reuse).
+pub fn ctx_bucket(ctx: usize) -> usize {
+    ctx.max(1).next_power_of_two()
+}
+
+impl CompiledModel {
+    /// The prefill program for `s` tokens (compiled on first use).
+    pub fn prefill_program(&mut self, s: usize) -> &Program {
+        if self.layers.prefill.is_none() {
+            self.cache_misses += 1;
+            let lp = prefill_phases(&self.shape, &self.geom, &self.hw, s);
+            self.layers.prefill = Some(lower_phases(
+                &format!("{}-prefill-s{s}", self.shape.name),
+                &lp,
+                &self.geom,
+            ));
+        } else {
+            self.cache_hits += 1;
+        }
+        self.layers.prefill.as_ref().unwrap()
+    }
+
+    /// The decode program for context length `ctx` (bucketed cache).
+    pub fn decode_program(&mut self, ctx: usize) -> &Program {
+        let bucket = ctx_bucket(ctx);
+        if !self.layers.decode.contains_key(&bucket) {
+            self.cache_misses += 1;
+            let lp = decode_phases(&self.shape, &self.geom, &self.hw, bucket);
+            let prog = lower_phases(
+                &format!("{}-decode-ctx{bucket}", self.shape.name),
+                &lp,
+                &self.geom,
+            );
+            self.layers.decode.insert(bucket, prog);
+        } else {
+            self.cache_hits += 1;
+        }
+        &self.layers.decode[&bucket]
+    }
+
+    /// Number of distinct programs currently cached.
+    pub fn cached_programs(&self) -> usize {
+        self.layers.decode.len() + usize::from(self.layers.prefill.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_all_presets() {
+        for p in ModelPreset::ALL {
+            let cm = Compiler::default().compile(p).unwrap();
+            assert!(cm.dag.nodes.len() > 10, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn ctx_buckets() {
+        assert_eq!(ctx_bucket(1), 1);
+        assert_eq!(ctx_bucket(100), 128);
+        assert_eq!(ctx_bucket(1024), 1024);
+        assert_eq!(ctx_bucket(1025), 2048);
+    }
+
+    #[test]
+    fn program_cache_hits() {
+        let mut cm = Compiler::default().compile(ModelPreset::Llama1B).unwrap();
+        cm.decode_program(100);
+        cm.decode_program(120); // same bucket (128)
+        cm.decode_program(200); // new bucket (256)
+        assert_eq!(cm.cache_misses, 2);
+        assert_eq!(cm.cache_hits, 1);
+        assert_eq!(cm.cached_programs(), 2);
+    }
+
+    #[test]
+    fn prefill_program_compiled_once() {
+        let mut cm = Compiler::default().compile(ModelPreset::Tiny).unwrap();
+        let n1 = cm.prefill_program(32).len();
+        let n2 = cm.prefill_program(32).len();
+        assert_eq!(n1, n2);
+        assert_eq!(cm.cache_misses, 1);
+        assert_eq!(cm.cache_hits, 1);
+    }
+
+    #[test]
+    fn dse_mode_selects_valid_mapping() {
+        let mut c = Compiler::default();
+        c.run_dse = true;
+        let cm = c.compile(ModelPreset::Tiny).unwrap();
+        // mapping regions must tile the square
+        let area: usize = cm.mapping.layouts.iter().map(|l| l.region.area()).sum();
+        assert_eq!(area, cm.geom.macros_per_tile());
+    }
+}

@@ -1,0 +1,165 @@
+//! Continuous batcher: FCFS admission into a bounded running batch at
+//! decode-round boundaries (the scheduling discipline of vLLM-style
+//! serving, adapted to the PIM-NoC system where the batch shares the
+//! per-tile scratchpad capacity).
+
+use std::collections::VecDeque;
+
+use super::request::{Request, RequestId, RequestState};
+
+/// Admission policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum concurrent decoding requests.
+    pub max_batch: usize,
+    /// Maximum total context tokens across the batch (KV capacity guard).
+    pub max_total_ctx: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_total_ctx: 16_384 }
+    }
+}
+
+/// FCFS queue + running set.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    waiting: VecDeque<Request>,
+    running: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    /// Enqueue a new request.
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    /// Total context tokens the running batch will hold after admitting a
+    /// request of `extra` prompt tokens.
+    fn ctx_with(&self, extra: usize) -> usize {
+        self.running.iter().map(|r| r.ctx_len() + r.max_new_tokens - r.output.len()).sum::<usize>()
+            + extra
+    }
+
+    /// Admit waiting requests while capacity allows. Returns ids admitted
+    /// this round (they need prefill).
+    pub fn admit(&mut self) -> Vec<RequestId> {
+        let mut admitted = Vec::new();
+        while let Some(front) = self.waiting.front() {
+            let need = front.prompt.len() + front.max_new_tokens;
+            if self.running.len() >= self.policy.max_batch
+                || self.ctx_with(need) > self.policy.max_total_ctx
+            {
+                break;
+            }
+            let mut req = self.waiting.pop_front().unwrap();
+            req.state = RequestState::Prefilling;
+            admitted.push(req.id);
+            self.running.push(req);
+        }
+        admitted
+    }
+
+    /// Retire finished requests out of the running set.
+    pub fn retire(&mut self) -> Vec<Request> {
+        let mut done = Vec::new();
+        self.running.retain_mut(|r| {
+            if r.is_finished() {
+                done.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        done
+    }
+
+    pub fn running(&self) -> &[Request] {
+        &self.running
+    }
+
+    pub fn running_mut(&mut self) -> &mut [Request] {
+        &mut self.running
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId, prompt: usize, max_new: usize) -> Request {
+        Request::new(id, vec![1; prompt], max_new, 0)
+    }
+
+    #[test]
+    fn fcfs_admission_bounded_by_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_total_ctx: 1000 });
+        for i in 0..4 {
+            b.submit(req(i, 10, 10));
+        }
+        let adm = b.admit();
+        assert_eq!(adm, vec![0, 1]);
+        assert_eq!(b.running().len(), 2);
+        assert_eq!(b.waiting_len(), 2);
+    }
+
+    #[test]
+    fn admission_bounded_by_ctx_budget() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_total_ctx: 50 });
+        b.submit(req(0, 20, 10)); // needs 30
+        b.submit(req(1, 15, 10)); // needs 25 → total 55 > 50
+        let adm = b.admit();
+        assert_eq!(adm, vec![0]);
+        assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn retire_then_admit_backfills() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_total_ctx: 1000 });
+        b.submit(req(0, 5, 5));
+        b.submit(req(1, 5, 5));
+        b.admit();
+        b.running_mut()[0].state = RequestState::Done;
+        let done = b.retire();
+        assert_eq!(done.len(), 1);
+        let adm = b.admit();
+        assert_eq!(adm, vec![1]);
+    }
+
+    #[test]
+    fn fcfs_order_preserved_no_head_of_line_bypass() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_total_ctx: 40 });
+        b.submit(req(0, 38, 1)); // huge: fills the budget
+        b.submit(req(1, 2, 2)); // small, but FCFS must not bypass
+        b.admit();
+        assert_eq!(b.running().len(), 1);
+        assert_eq!(b.running()[0].id, 0);
+        assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn idle_detection() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.is_idle());
+        b.submit(req(0, 1, 1));
+        assert!(!b.is_idle());
+        b.admit();
+        b.running_mut()[0].state = RequestState::Done;
+        b.retire();
+        assert!(b.is_idle());
+    }
+}

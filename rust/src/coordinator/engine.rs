@@ -1,0 +1,359 @@
+//! The serving engine: ties the batcher, KV manager, compiler cache, NPM
+//! double banking, the timing/energy simulator, and (for the tiny model)
+//! the functional PJRT runtime into a single decode-round loop.
+//!
+//! Timing model: the engine advances a *simulated* clock by the cycle cost
+//! of each program it dispatches (analytical model — identical to what the
+//! instruction-level simulator measures, see `tests/integration_sim.rs`).
+//! Numerics: with [`Numerics::Pjrt`], every prefill/decode also executes the
+//! AOT artifacts, so generated tokens are real model outputs.
+
+use std::time::Instant;
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::compiler::{Compiler, CompiledModel};
+use crate::energy::table2;
+use crate::isa::Npm;
+use crate::model::ModelPreset;
+use crate::runtime::Engine as PjrtEngine;
+use crate::sim::analytical::WAVEFRONT_MACROS;
+use crate::sim::AnalyticalSim;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::kv::KvManager;
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, RequestState};
+
+/// Functional-numerics backend.
+pub enum Numerics {
+    /// Execute the AOT artifacts via PJRT (tiny model only).
+    Pjrt(Box<PjrtEngine>),
+    /// Synthetic token generation (big-model simulation-only serving).
+    Synthetic { vocab: usize },
+}
+
+/// Engine construction options.
+pub struct EngineConfig {
+    pub preset: ModelPreset,
+    pub hw: HwParams,
+    pub policy: BatchPolicy,
+    pub numerics: Numerics,
+}
+
+/// Per-request PJRT cache state (tiny-model path).
+struct PjrtState {
+    id: RequestId,
+    kcache: xla::Literal,
+    vcache: xla::Literal,
+    pos: usize,
+    last_token: i32,
+}
+
+/// The serving engine.
+pub struct ServingEngine {
+    pub compiled: CompiledModel,
+    pub sim: AnalyticalSim,
+    pub batcher: Batcher,
+    pub kv: KvManager,
+    pub npm: Npm,
+    pub metrics: Metrics,
+    numerics: Numerics,
+    pjrt_states: Vec<PjrtState>,
+    next_id: RequestId,
+    /// Simulated clock, ns.
+    now_ns: u64,
+    /// Finished requests awaiting pickup (server replies).
+    completed: Vec<Request>,
+}
+
+impl ServingEngine {
+    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+        let compiler = Compiler { hw: cfg.hw.clone(), run_dse: false };
+        let compiled = compiler.compile(cfg.preset)?;
+        let sim = AnalyticalSim::new(cfg.preset, cfg.hw.clone());
+        let geom = TileGeometry::for_model(compiled.shape.d_model, &cfg.hw);
+        let kv = KvManager::new(&geom, compiled.shape.d_head(), compiled.shape.n_layers);
+        Ok(Self {
+            compiled,
+            sim,
+            batcher: Batcher::new(cfg.policy),
+            kv,
+            npm: Npm::new(),
+            metrics: Metrics::default(),
+            numerics: cfg.numerics,
+            pjrt_states: Vec::new(),
+            next_id: 0,
+            now_ns: 0,
+            completed: Vec::new(),
+        })
+    }
+
+    /// Submit a prompt; returns the request id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.submit(Request::new(id, prompt, max_new_tokens, self.now_ns));
+        id
+    }
+
+    /// Simulated time now, ns.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    fn advance(&mut self, cycles: u64) {
+        let ns = (cycles as f64 / self.sim.hw.freq_ghz) as u64;
+        self.now_ns += ns;
+        self.metrics.sim_time_ns += ns;
+        // Energy: active wavefront draw over the elapsed time.
+        let wavefront = self.sim.mapped_macros().min(WAVEFRONT_MACROS);
+        self.metrics.energy_j += wavefront as f64 * table2::MACRO_UW * 1e-6 * ns as f64 * 1e-9;
+    }
+
+    /// Load + swap the NPM with the program for this phase (double-banked).
+    fn dispatch(&mut self, prog: crate::isa::Program) -> anyhow::Result<u64> {
+        let cycles = prog.controller_cycles();
+        self.npm.load(prog)?;
+        self.npm.swap()?;
+        self.metrics.npm_swaps += 1;
+        Ok(cycles)
+    }
+
+    /// One engine iteration: admit, prefill admitted, one decode round.
+    /// Returns false when idle.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        let host_t0 = Instant::now();
+        if self.batcher.is_idle() {
+            return Ok(false);
+        }
+
+        // --- admission + prefill -----------------------------------------
+        let admitted = self.batcher.admit();
+        for id in admitted {
+            let (prompt, max_ctx) = {
+                let r = self.batcher.running().iter().find(|r| r.id == id).unwrap();
+                (r.prompt.clone(), r.ctx_len() + r.max_new_tokens)
+            };
+            if !self.kv.has_room(max_ctx) {
+                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                    r.state = RequestState::Failed;
+                    r.t_done_ns = Some(self.now_ns);
+                }
+                self.metrics.requests_failed += 1;
+                continue;
+            }
+            self.kv.prefill(id, prompt.len())?;
+
+            // timing: one prefill program per layer, layers sequential
+            let layers = self.compiled.shape.n_layers as u64;
+            let prog = self.compiled.prefill_program(prompt.len().max(1)).clone();
+            let per_layer = self.dispatch(prog)?;
+            self.advance(per_layer * layers);
+            self.metrics.prefill_tokens += prompt.len() as u64;
+
+            // numerics
+            let first_token = match &mut self.numerics {
+                Numerics::Pjrt(engine) => {
+                    let out = engine.prefill(&prompt)?;
+                    let tok = engine.argmax_row(&out.logits, prompt.len() - 1) as i32;
+                    self.pjrt_states.push(PjrtState {
+                        id,
+                        kcache: out.kcache,
+                        vcache: out.vcache,
+                        pos: prompt.len(),
+                        last_token: tok,
+                    });
+                    tok
+                }
+                Numerics::Synthetic { vocab } => {
+                    (prompt.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32
+                }
+            };
+
+            let now = self.now_ns;
+            if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                r.state = RequestState::Decoding;
+                r.output.push(first_token);
+                r.t_first_token_ns = Some(now);
+                // single-token generations finish at prefill
+                if r.output.len() >= r.max_new_tokens {
+                    r.state = RequestState::Done;
+                    r.t_done_ns = Some(now);
+                }
+            }
+            self.kv.append(id)?;
+            self.metrics.decode_tokens += 1;
+        }
+
+        // --- one decode round over the running batch ---------------------
+        let round: Vec<(RequestId, usize)> = self
+            .batcher
+            .running()
+            .iter()
+            .filter(|r| r.state == RequestState::Decoding && !r.is_finished())
+            .map(|r| (r.id, r.ctx_len()))
+            .collect();
+
+        for (id, ctx) in round {
+            let layers = self.compiled.shape.n_layers as u64;
+            let prog = self.compiled.decode_program(ctx).clone();
+            let per_layer = self.dispatch(prog)?;
+            self.advance(per_layer * layers);
+
+            let next = match &mut self.numerics {
+                Numerics::Pjrt(engine) => {
+                    let st = self
+                        .pjrt_states
+                        .iter_mut()
+                        .find(|s| s.id == id)
+                        .ok_or_else(|| anyhow::anyhow!("missing pjrt state for {id}"))?;
+                    let out = engine.decode(st.last_token, st.pos as i32, &st.kcache, &st.vcache)?;
+                    st.kcache = out.kcache;
+                    st.vcache = out.vcache;
+                    st.pos += 1;
+                    st.last_token = engine.argmax_row(&out.logits, 0) as i32;
+                    st.last_token
+                }
+                Numerics::Synthetic { vocab } => ((ctx * 2654435761) % *vocab) as i32,
+            };
+
+            if !self.kv.has_room(1) {
+                // out of scratchpad: finish the request early
+                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                    r.state = RequestState::Done;
+                    r.t_done_ns = Some(self.now_ns);
+                }
+                continue;
+            }
+            self.kv.append(id)?;
+            self.metrics.decode_tokens += 1;
+            let now = self.now_ns;
+            if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                r.output.push(next);
+                if r.output.len() >= r.max_new_tokens {
+                    r.state = RequestState::Done;
+                    r.t_done_ns = Some(now);
+                }
+            }
+        }
+
+        // --- retire -------------------------------------------------------
+        for done in self.batcher.retire() {
+            self.kv.release(done.id);
+            self.pjrt_states.retain(|s| s.id != done.id);
+            if done.state == RequestState::Done {
+                self.metrics.requests_done += 1;
+                if let Some(l) = done.latency_ns() {
+                    self.metrics.latencies_ns.push(l);
+                }
+                if let Some(t) = done.ttft_ns() {
+                    self.metrics.ttft_ns.push(t);
+                }
+            }
+            self.completed.push(done);
+        }
+
+        self.metrics.host_time_ns += host_t0.elapsed().as_nanos() as u64;
+        Ok(true)
+    }
+
+    /// Drive until every request completes; returns completed requests.
+    pub fn run_until_idle(&mut self) -> anyhow::Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Finished outputs for a request id (post-retire lookup helper).
+    pub fn kv_imbalance(&self) -> usize {
+        self.kv.max_imbalance()
+    }
+
+    /// Pop a finished request's completion, if it is done.
+    pub fn take_completion(&mut self, id: RequestId) -> Option<super::server::Completion> {
+        let idx = self.completed.iter().position(|r| r.id == id)?;
+        let r = self.completed.swap_remove(idx);
+        Some(super::server::Completion {
+            id: r.id,
+            tokens: r.output.clone(),
+            ttft_ns: r.ttft_ns(),
+            latency_ns: r.latency_ns(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> ServingEngine {
+        ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Llama1B,
+            hw: HwParams::default(),
+            policy: BatchPolicy::default(),
+            numerics: Numerics::Synthetic { vocab: 128_256 },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_synthetic_batch() {
+        let mut e = engine();
+        for i in 0..4 {
+            e.submit(vec![1 + i; 64], 16);
+        }
+        e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.requests_done, 4);
+        assert_eq!(e.metrics.decode_tokens, 4 * 16);
+        assert_eq!(e.metrics.prefill_tokens, 4 * 64);
+        assert!(e.metrics.sim_time_ns > 0);
+        assert!(e.metrics.energy_j > 0.0);
+        assert!(e.metrics.npm_swaps > 0);
+        assert_eq!(e.kv.live_requests(), 0, "all KV released");
+    }
+
+    #[test]
+    fn latency_metrics_recorded() {
+        let mut e = engine();
+        e.submit(vec![5; 32], 8);
+        e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.latencies_ns.len(), 1);
+        assert_eq!(e.metrics.ttft_ns.len(), 1);
+        let (p50, _) = e.metrics.latency_p50_p99();
+        assert!(p50 > 0);
+        // TTFT ≤ total latency
+        assert!(e.metrics.ttft_ns[0] <= e.metrics.latencies_ns[0]);
+    }
+
+    #[test]
+    fn oversized_request_fails_cleanly() {
+        let mut e = engine();
+        e.kv.capacity_tokens = 100;
+        e.batcher.policy.max_total_ctx = 100_000;
+        e.submit(vec![1; 90], 20); // 110 total > 100 capacity
+        e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.requests_failed, 1);
+        assert_eq!(e.metrics.requests_done, 0);
+    }
+
+    #[test]
+    fn decode_slows_with_context_growth() {
+        let mut e = engine();
+        e.submit(vec![1; 16], 4);
+        e.run_until_idle().unwrap();
+        let t_short = e.metrics.sim_time_ns;
+        let mut e2 = engine();
+        e2.submit(vec![1; 2048], 4);
+        e2.run_until_idle().unwrap();
+        assert!(e2.metrics.sim_time_ns > t_short);
+    }
+
+    #[test]
+    fn program_cache_reused_across_requests() {
+        let mut e = engine();
+        for _ in 0..3 {
+            e.submit(vec![1; 64], 8);
+        }
+        e.run_until_idle().unwrap();
+        assert!(e.compiled.cache_hits > e.compiled.cache_misses);
+    }
+}

@@ -1,0 +1,139 @@
+//! KV-cache manager: per-request, per-layer shard placement bookkeeping on
+//! top of `schedule::KvPlacement` (the balanced layout of §IV-C), with
+//! global capacity accounting so admission can reject oversubscription.
+
+use std::collections::HashMap;
+
+use crate::arch::TileGeometry;
+use crate::schedule::{KvPlacement, ShardLayout};
+
+use super::request::RequestId;
+
+/// Manages KV placements for all live requests.
+#[derive(Debug)]
+pub struct KvManager {
+    layout: ShardLayout,
+    /// One placement per request (layers share the pattern; the manager
+    /// tracks token counts once and multiplies by layer count for words).
+    per_request: HashMap<RequestId, KvPlacement>,
+    pub n_layers: usize,
+    /// Aggregate capacity in tokens across the batch (scratchpad budget).
+    pub capacity_tokens: usize,
+}
+
+impl KvManager {
+    pub fn new(geom: &TileGeometry, d_head: usize, n_layers: usize) -> Self {
+        let layout = ShardLayout::new(geom, d_head);
+        let capacity_tokens = layout.capacity_tokens();
+        Self { layout, per_request: HashMap::new(), n_layers, capacity_tokens }
+    }
+
+    /// Tokens currently cached across all requests.
+    pub fn used_tokens(&self) -> usize {
+        self.per_request.values().map(|p| p.len).sum()
+    }
+
+    /// Can we hold `tokens` more?
+    pub fn has_room(&self, tokens: usize) -> bool {
+        self.used_tokens() + tokens <= self.capacity_tokens
+    }
+
+    /// Install a prefill for a request.
+    pub fn prefill(&mut self, id: RequestId, tokens: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.has_room(tokens), "KV capacity exhausted");
+        anyhow::ensure!(!self.per_request.contains_key(&id), "request {id} already placed");
+        let mut p = KvPlacement::new(self.layout.clone());
+        p.fill_prefill(tokens)?;
+        self.per_request.insert(id, p);
+        Ok(())
+    }
+
+    /// Append one decode token for a request.
+    pub fn append(&mut self, id: RequestId) -> anyhow::Result<()> {
+        anyhow::ensure!(self.has_room(1), "KV capacity exhausted");
+        let p = self
+            .per_request
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
+        p.append()?;
+        Ok(())
+    }
+
+    /// Release a finished request's cache.
+    pub fn release(&mut self, id: RequestId) -> usize {
+        self.per_request.remove(&id).map(|p| p.len).unwrap_or(0)
+    }
+
+    /// Worst per-request imbalance (must stay ≤ 2 — the §IV-C invariant).
+    pub fn max_imbalance(&self) -> usize {
+        self.per_request.values().map(|p| p.imbalance()).max().unwrap_or(0)
+    }
+
+    pub fn live_requests(&self) -> usize {
+        self.per_request.len()
+    }
+
+    /// Context length of one request.
+    pub fn ctx_of(&self, id: RequestId) -> Option<usize> {
+        self.per_request.get(&id).map(|p| p.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwParams;
+
+    fn mgr() -> KvManager {
+        let hw = HwParams::default();
+        let geom = TileGeometry::for_model(2048, &hw);
+        KvManager::new(&geom, 64, 16)
+    }
+
+    #[test]
+    fn prefill_append_release_cycle() {
+        let mut m = mgr();
+        m.prefill(1, 100).unwrap();
+        assert_eq!(m.used_tokens(), 100);
+        m.append(1).unwrap();
+        assert_eq!(m.ctx_of(1), Some(101));
+        assert_eq!(m.release(1), 101);
+        assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.live_requests(), 0);
+    }
+
+    #[test]
+    fn capacity_rejection() {
+        let mut m = mgr();
+        m.capacity_tokens = 150;
+        m.prefill(1, 100).unwrap();
+        assert!(m.prefill(2, 100).is_err());
+        assert!(m.has_room(50));
+        assert!(!m.has_room(51));
+    }
+
+    #[test]
+    fn duplicate_prefill_rejected() {
+        let mut m = mgr();
+        m.prefill(1, 10).unwrap();
+        assert!(m.prefill(1, 10).is_err());
+    }
+
+    #[test]
+    fn append_unknown_request_fails() {
+        let mut m = mgr();
+        assert!(m.append(42).is_err());
+    }
+
+    #[test]
+    fn imbalance_invariant_across_many_requests() {
+        let mut m = mgr();
+        for id in 0..5 {
+            m.prefill(id, 97 + id as usize * 13).unwrap();
+            for _ in 0..10 {
+                m.append(id).unwrap();
+            }
+        }
+        assert!(m.max_imbalance() <= 2, "imbalance {}", m.max_imbalance());
+    }
+}

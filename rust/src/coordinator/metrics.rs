@@ -1,0 +1,97 @@
+//! Serving metrics: throughput, latency percentiles, energy, utilisation.
+
+/// Aggregated serving metrics over one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests_done: u64,
+    pub requests_failed: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    /// Simulated time spent, ns.
+    pub sim_time_ns: u64,
+    /// Simulated energy, J.
+    pub energy_j: f64,
+    /// Wall-clock time the coordinator itself consumed, ns (host overhead).
+    pub host_time_ns: u64,
+    /// Per-request end-to-end latencies (simulated ns).
+    pub latencies_ns: Vec<u64>,
+    /// Per-request time-to-first-token (simulated ns).
+    pub ttft_ns: Vec<u64>,
+    /// NPM bank swaps performed.
+    pub npm_swaps: u64,
+}
+
+impl Metrics {
+    /// Generation throughput in tokens per simulated second.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        self.decode_tokens as f64 / (self.sim_time_ns as f64 * 1e-9).max(1e-12)
+    }
+
+    /// Total (prefill + decode) tokens per simulated second.
+    pub fn total_tokens_per_s(&self) -> f64 {
+        (self.prefill_tokens + self.decode_tokens) as f64
+            / (self.sim_time_ns as f64 * 1e-9).max(1e-12)
+    }
+
+    /// Tokens per joule.
+    pub fn tokens_per_j(&self) -> f64 {
+        (self.prefill_tokens + self.decode_tokens) as f64 / self.energy_j.max(1e-12)
+    }
+
+    fn percentile(sorted: &[u64], p: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx]
+    }
+
+    /// (p50, p99) end-to-end latency in simulated ns.
+    pub fn latency_p50_p99(&self) -> (u64, u64) {
+        let mut v = self.latencies_ns.clone();
+        v.sort_unstable();
+        (Self::percentile(&v, 0.5), Self::percentile(&v, 0.99))
+    }
+
+    /// (p50, p99) TTFT in simulated ns.
+    pub fn ttft_p50_p99(&self) -> (u64, u64) {
+        let mut v = self.ttft_ns.clone();
+        v.sort_unstable();
+        (Self::percentile(&v, 0.5), Self::percentile(&v, 0.99))
+    }
+
+    /// Host-overhead fraction: coordinator wall time / simulated time.
+    /// (L3 must not be the bottleneck — tracked for the perf pass.)
+    pub fn host_overhead(&self) -> f64 {
+        self.host_time_ns as f64 / self.sim_time_ns.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics {
+            decode_tokens: 1000,
+            prefill_tokens: 1000,
+            sim_time_ns: 2_000_000_000,
+            energy_j: 4.0,
+            ..Default::default()
+        };
+        assert!((m.decode_tokens_per_s() - 500.0).abs() < 1e-9);
+        assert!((m.total_tokens_per_s() - 1000.0).abs() < 1e-9);
+        assert!((m.tokens_per_j() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics { latencies_ns: vec![50, 10, 30, 20, 40], ..Default::default() };
+        let (p50, p99) = m.latency_p50_p99();
+        assert_eq!(p50, 30);
+        assert_eq!(p99, 50);
+        let empty = Metrics::default();
+        assert_eq!(empty.latency_p50_p99(), (0, 0));
+    }
+}

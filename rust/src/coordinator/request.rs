@@ -1,0 +1,88 @@
+//! Request lifecycle types.
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// Lifecycle state of one inference request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Queued; not yet admitted to the running batch.
+    Waiting,
+    /// Admitted; prefill pending or in flight.
+    Prefilling,
+    /// In the decode batch, generating tokens.
+    Decoding,
+    /// Finished (max tokens or EOS).
+    Done,
+    /// Rejected/aborted (e.g. KV capacity exhausted).
+    Failed,
+}
+
+/// One inference request and its progress.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    /// Generated token ids.
+    pub output: Vec<i32>,
+    /// Simulated clock (ns) when the request arrived / prefilled / finished.
+    pub t_arrive_ns: u64,
+    pub t_first_token_ns: Option<u64>,
+    pub t_done_ns: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize, now_ns: u64) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            state: RequestState::Waiting,
+            output: Vec::new(),
+            t_arrive_ns: now_ns,
+            t_first_token_ns: None,
+            t_done_ns: None,
+        }
+    }
+
+    /// Current context length (prompt + generated).
+    pub fn ctx_len(&self) -> usize {
+        self.prompt.len() + self.output.len()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, RequestState::Done | RequestState::Failed)
+    }
+
+    /// Time-to-first-token in simulated ns.
+    pub fn ttft_ns(&self) -> Option<u64> {
+        self.t_first_token_ns.map(|t| t - self.t_arrive_ns)
+    }
+
+    /// End-to-end latency in simulated ns.
+    pub fn latency_ns(&self) -> Option<u64> {
+        self.t_done_ns.map(|t| t - self.t_arrive_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accessors() {
+        let mut r = Request::new(1, vec![1, 2, 3], 4, 100);
+        assert_eq!(r.ctx_len(), 3);
+        assert!(!r.is_finished());
+        r.output.push(7);
+        assert_eq!(r.ctx_len(), 4);
+        r.t_first_token_ns = Some(150);
+        assert_eq!(r.ttft_ns(), Some(50));
+        r.state = RequestState::Done;
+        r.t_done_ns = Some(400);
+        assert_eq!(r.latency_ns(), Some(300));
+        assert!(r.is_finished());
+    }
+}

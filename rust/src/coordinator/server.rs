@@ -1,0 +1,160 @@
+//! Threaded server wrapper: a worker thread owns the [`ServingEngine`] and
+//! drains an mpsc request channel; clients receive completed outputs over
+//! per-request response channels. (std threads — tokio is unavailable in
+//! this offline environment; the event loop is the engine's decode-round
+//! loop, which is the natural scheduling quantum of this architecture.)
+//!
+//! PJRT handles are not `Send`, so the engine is *constructed inside* the
+//! worker thread from a factory closure, and only the (Send) [`Metrics`]
+//! travel back at shutdown.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::engine::ServingEngine;
+use super::metrics::Metrics;
+use super::request::RequestId;
+
+/// A completed request's outputs.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub ttft_ns: Option<u64>,
+    pub latency_ns: Option<u64>,
+}
+
+enum Msg {
+    Submit { prompt: Vec<i32>, max_new: usize, reply: Sender<Completion> },
+    Shutdown,
+}
+
+/// Handle to the serving thread.
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<anyhow::Result<Metrics>>>,
+}
+
+impl Server {
+    /// Spawn the worker thread; `factory` builds the engine inside it.
+    pub fn spawn<F>(factory: F) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<ServingEngine> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let worker = std::thread::Builder::new()
+            .name("leap-serving".into())
+            .spawn(move || -> anyhow::Result<Metrics> {
+                let mut engine = factory()?;
+                let mut pending: Vec<(RequestId, Sender<Completion>)> = Vec::new();
+                loop {
+                    // drain submissions (block only when idle)
+                    if engine.batcher.is_idle() {
+                        match rx.recv() {
+                            Ok(Msg::Submit { prompt, max_new, reply }) => {
+                                let id = engine.submit(prompt, max_new);
+                                pending.push((id, reply));
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    }
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            Msg::Submit { prompt, max_new, reply } => {
+                                let id = engine.submit(prompt, max_new);
+                                pending.push((id, reply));
+                            }
+                            Msg::Shutdown => {
+                                engine.run_until_idle()?;
+                                Self::flush(&mut engine, &mut pending);
+                                return Ok(engine.metrics.clone());
+                            }
+                        }
+                    }
+                    engine.step()?;
+                    Self::flush(&mut engine, &mut pending);
+                }
+                engine.run_until_idle()?;
+                Self::flush(&mut engine, &mut pending);
+                Ok(engine.metrics.clone())
+            })?;
+        Ok(Self { tx, worker: Some(worker) })
+    }
+
+    fn flush(engine: &mut ServingEngine, pending: &mut Vec<(RequestId, Sender<Completion>)>) {
+        pending.retain(|(id, reply)| {
+            if let Some(c) = engine.take_completion(*id) {
+                let _ = reply.send(c);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Submit a prompt; returns a receiver for the completion.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Completion> {
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Msg::Submit { prompt, max_new, reply });
+        rx
+    }
+
+    /// Shut down and return the final serving metrics.
+    pub fn shutdown(mut self) -> anyhow::Result<Metrics> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let worker = self.worker.take().expect("not yet joined");
+        worker.join().map_err(|_| anyhow::anyhow!("serving thread panicked"))?
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Shutdown);
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwParams;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::engine::{EngineConfig, Numerics};
+    use crate::model::ModelPreset;
+
+    fn factory() -> impl FnOnce() -> anyhow::Result<ServingEngine> + Send + 'static {
+        || {
+            ServingEngine::new(EngineConfig {
+                preset: ModelPreset::Llama1B,
+                hw: HwParams::default(),
+                policy: BatchPolicy::default(),
+                numerics: Numerics::Synthetic { vocab: 1000 },
+            })
+        }
+    }
+
+    #[test]
+    fn threaded_round_trip() {
+        let server = Server::spawn(factory()).unwrap();
+        let rx1 = server.submit(vec![1; 32], 4);
+        let rx2 = server.submit(vec![2; 16], 6);
+        let c1 = rx1.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let c2 = rx2.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c1.tokens.len(), 4);
+        assert_eq!(c2.tokens.len(), 6);
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.requests_done, 2);
+    }
+
+    #[test]
+    fn shutdown_drains_outstanding() {
+        let server = Server::spawn(factory()).unwrap();
+        let rx = server.submit(vec![3; 64], 8);
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.requests_done, 1);
+        let c = rx.try_recv().unwrap();
+        assert_eq!(c.tokens.len(), 8);
+    }
+}

@@ -1,0 +1,108 @@
+//! Macro- and system-level area/power breakdown (Table II, Fig. 9).
+
+use super::table2;
+
+/// Per-component share of a macro.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroArea {
+    pub pe_mm2: f64,
+    pub spad_mm2: f64,
+    pub router_mm2: f64,
+    pub pe_uw: f64,
+    pub spad_uw: f64,
+    pub router_uw: f64,
+}
+
+impl Default for MacroArea {
+    fn default() -> Self {
+        Self {
+            pe_mm2: table2::PE_MM2,
+            spad_mm2: table2::SPAD_MM2,
+            router_mm2: table2::ROUTER_MM2,
+            pe_uw: table2::PE_UW,
+            spad_uw: table2::SPAD_UW,
+            router_uw: table2::ROUTER_UW,
+        }
+    }
+}
+
+impl MacroArea {
+    pub fn total_mm2(&self) -> f64 {
+        self.pe_mm2 + self.spad_mm2 + self.router_mm2
+    }
+
+    pub fn total_uw(&self) -> f64 {
+        self.pe_uw + self.spad_uw + self.router_uw
+    }
+
+    /// (power %, area %) shares per component, in PE/scratchpad/router order.
+    pub fn shares(&self) -> [(f64, f64); 3] {
+        let (tp, ta) = (self.total_uw(), self.total_mm2());
+        [
+            (self.pe_uw / tp * 100.0, self.pe_mm2 / ta * 100.0),
+            (self.spad_uw / tp * 100.0, self.spad_mm2 / ta * 100.0),
+            (self.router_uw / tp * 100.0, self.router_mm2 / ta * 100.0),
+        ]
+    }
+}
+
+/// System-level breakdown for `n_macros` (the "consistent as the system
+/// scales" property of §VI-C — shares are macro-count invariant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub n_macros: usize,
+    pub per_macro: MacroArea,
+}
+
+impl AreaBreakdown {
+    pub fn new(n_macros: usize) -> Self {
+        Self { n_macros, per_macro: MacroArea::default() }
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.per_macro.total_mm2() * self.n_macros as f64
+    }
+
+    /// Peak (all-active) power in watts — the upper bound the paper's
+    /// 10.53 W average sits under because only the critical-path region is
+    /// active at a time.
+    pub fn peak_power_w(&self) -> f64 {
+        self.per_macro.total_uw() * 1e-6 * self.n_macros as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_macro_totals() {
+        let m = MacroArea::default();
+        assert!((m.total_uw() - 160.65).abs() < 0.01);
+        // component sum (the paper's printed 0.1181 total is 1.5% low).
+        assert!((m.total_mm2() - 0.1199).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fig9_router_dominates_power_not_area() {
+        let m = MacroArea::default();
+        let [_pe, _spad, router] = m.shares();
+        assert!(router.0 > 50.0, "router power share {}", router.0);
+        assert!(router.1 < 20.0, "router area share {}", router.1);
+    }
+
+    #[test]
+    fn table1_system_peak_power() {
+        // 64 tiles × 1024 macros × 160.65 µW ≈ 10.53 W — the Table III
+        // power figure corresponds to the whole Table I system active.
+        let b = AreaBreakdown::new(64 * 1024);
+        assert!((b.peak_power_w() - 10.53).abs() < 0.01, "{}", b.peak_power_w());
+    }
+
+    #[test]
+    fn shares_scale_invariant() {
+        let small = AreaBreakdown::new(1024);
+        let large = AreaBreakdown::new(1 << 20);
+        assert_eq!(small.per_macro.shares(), large.per_macro.shares());
+    }
+}

@@ -1,0 +1,91 @@
+//! Energy, power, and area models (paper Table II / Fig. 9).
+//!
+//! Per-macro constants at the 7 nm-scaled node: PIM PE 32.37 µW / 0.0864 mm²
+//! (from [15]), scratchpad 37.80 µW / 0.0125 mm² (CACTI-style model), router
+//! 90.48 µW / 0.021 mm² (synthesised at 45 nm, scaled). The simulator
+//! charges *event* energies derived from these powers at 1 GHz (power ×
+//! 1 ns = energy per active cycle); idle macros are power-gated
+//! (non-volatile RRAM retains state), which is how the system sustains
+//! ~10.5 W while mapping far more macros than are simultaneously active.
+
+pub mod area;
+pub mod events;
+pub mod router_detail;
+pub mod scratchpad;
+
+pub use area::{AreaBreakdown, MacroArea};
+pub use events::{EnergyLedger, EventEnergy, EventKind};
+pub use router_detail::{RouterDetail, SubBlock};
+pub use scratchpad::ScratchpadModel;
+
+/// Table II per-component active power (µW) at the 7 nm-scaled node.
+pub mod table2 {
+    /// PIM PE active power, µW (from [15]).
+    pub const PE_UW: f64 = 32.37;
+    /// Scratchpad active power, µW.
+    pub const SPAD_UW: f64 = 37.80;
+    /// Router (incl. IRCU + crossbar + FIFOs) active power, µW.
+    pub const ROUTER_UW: f64 = 90.48;
+    /// Total macro active power, µW.
+    pub const MACRO_UW: f64 = 160.65;
+
+    /// PIM PE area, mm².
+    pub const PE_MM2: f64 = 0.0864;
+    /// Scratchpad area, mm².
+    pub const SPAD_MM2: f64 = 0.0125;
+    /// Router area, mm².
+    pub const ROUTER_MM2: f64 = 0.021;
+    /// Total macro area, mm². NOTE: the paper prints 0.1181, but its own
+    /// components sum to 0.1199 — Table II is internally inconsistent by
+    /// 1.5%. We keep the component values authoritative and document the
+    /// discrepancy in EXPERIMENTS.md.
+    pub const MACRO_MM2: f64 = PE_MM2 + SPAD_MM2 + ROUTER_MM2;
+    /// The (inconsistent) total the paper prints.
+    pub const MACRO_MM2_PAPER: f64 = 0.1181;
+}
+
+/// Linear-ish technology scaling from 45 nm synthesis results to 7 nm
+/// (Dennard-inspired: area ∝ (7/45)², power via capacitance + voltage).
+/// The paper reports post-scaling numbers; this helper documents the rule
+/// used to regenerate them from raw 45 nm synthesis data.
+pub fn scale_45nm_to_7nm(power_uw_45: f64, area_mm2_45: f64) -> (f64, f64) {
+    let lin = 7.0 / 45.0;
+    // Area scales quadratically; power scales ~linearly with feature size
+    // at iso-frequency (capacitance ↓ linear, V² ↓ modestly at these nodes).
+    (power_uw_45 * lin * 1.45, area_mm2_45 * lin * lin * 2.4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals_consistent() {
+        let p = table2::PE_UW + table2::SPAD_UW + table2::ROUTER_UW;
+        assert!((p - table2::MACRO_UW).abs() < 0.01, "power sum {p}");
+        let a = table2::PE_MM2 + table2::SPAD_MM2 + table2::ROUTER_MM2;
+        assert!((a - table2::MACRO_MM2).abs() < 1e-12, "area sum {a}");
+        // Paper's printed total is 1.5% low — a documented erratum.
+        assert!((a - table2::MACRO_MM2_PAPER).abs() < 2e-3);
+    }
+
+    #[test]
+    fn table2_breakdown_percentages() {
+        // Paper: router = 56.32% of power, 17.78% of area.
+        let rp = table2::ROUTER_UW / table2::MACRO_UW * 100.0;
+        assert!((rp - 56.32).abs() < 0.1, "router power share {rp}");
+        // The paper computed area shares against its (low) printed total of
+        // 0.1181 mm²; reproduce its arithmetic exactly.
+        let ra = table2::ROUTER_MM2 / table2::MACRO_MM2_PAPER * 100.0;
+        assert!((ra - 17.78).abs() < 0.1, "router area share {ra}");
+        let pa = table2::PE_MM2 / table2::MACRO_MM2_PAPER * 100.0;
+        assert!((pa - 73.16).abs() < 0.1, "PE area share {pa}");
+    }
+
+    #[test]
+    fn scaling_direction_sane() {
+        let (p7, a7) = scale_45nm_to_7nm(400.0, 0.5);
+        assert!(p7 < 400.0 && a7 < 0.5);
+        assert!(p7 > 0.0 && a7 > 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Router-level area/power sub-breakdown (the right-hand pie of Fig. 9).
+//!
+//! The paper's router integrates five input FIFOs, the IRCU (16-MAC array +
+//! softmax support), the 4-in/5-out output crossbar, and control. Fig. 9
+//! shows the IRCU dominating router energy (it is the in-router *compute*)
+//! while buffers dominate router area. We derive the sub-block split from
+//! the Table I sizing (FIFO bits, MAC count, crossbar ports) with standard
+//! per-bit/per-port cost ratios, normalised to the Table II router totals,
+//! so the sub-blocks always sum to 90.48 µW / 0.021 mm² exactly.
+
+use crate::arch::HwParams;
+
+use super::table2;
+
+/// One router sub-block's share.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubBlock {
+    pub name: &'static str,
+    pub power_uw: f64,
+    pub area_mm2: f64,
+}
+
+/// Router sub-block breakdown normalised to Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterDetail {
+    pub blocks: Vec<SubBlock>,
+}
+
+impl RouterDetail {
+    /// Derive from the hardware configuration.
+    pub fn for_hw(hw: &HwParams) -> Self {
+        // Relative cost weights (arbitrary units, normalised below):
+        //  - FIFOs: storage-dominated; area ∝ total buffered bits, moderate
+        //    dynamic power (one push/pop per cycle).
+        let fifo_bits = (5 * hw.rbuf_bytes * 8) as f64;
+        let fifo_area_w = fifo_bits * 1.0;
+        let fifo_power_w = fifo_bits * 0.45;
+        //  - IRCU: MAC array dominates dynamic power (switching multipliers
+        //    every cycle), modest area per MAC.
+        let macs = hw.ircu_macs as f64;
+        let ircu_area_w = macs * 220.0;
+        let ircu_power_w = macs * 330.0;
+        //  - Output crossbar: 4×5 ports × packet width; wiring-dominated.
+        let xbar_w = (4.0 * 5.0) * hw.packet_bits as f64;
+        let xbar_area_w = xbar_w * 0.9;
+        let xbar_power_w = xbar_w * 0.8;
+        //  - Control (command registers, repeat counter, decode).
+        let ctrl_area_w = 600.0;
+        let ctrl_power_w = 450.0;
+
+        let area_total = fifo_area_w + ircu_area_w + xbar_area_w + ctrl_area_w;
+        let power_total = fifo_power_w + ircu_power_w + xbar_power_w + ctrl_power_w;
+        let mk = |name, pw: f64, aw: f64| SubBlock {
+            name,
+            power_uw: table2::ROUTER_UW * pw / power_total,
+            area_mm2: table2::ROUTER_MM2 * aw / area_total,
+        };
+        Self {
+            blocks: vec![
+                mk("input FIFOs", fifo_power_w, fifo_area_w),
+                mk("IRCU (MACs + softmax)", ircu_power_w, ircu_area_w),
+                mk("output crossbar", xbar_power_w, xbar_area_w),
+                mk("control", ctrl_power_w, ctrl_area_w),
+            ],
+        }
+    }
+
+    pub fn total_power_uw(&self) -> f64 {
+        self.blocks.iter().map(|b| b.power_uw).sum()
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.blocks.iter().map(|b| b.area_mm2).sum()
+    }
+
+    pub fn block(&self, name: &str) -> Option<&SubBlock> {
+        self.blocks.iter().find(|b| b.name.contains(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_match_table2_router_row() {
+        let d = RouterDetail::for_hw(&HwParams::default());
+        assert!((d.total_power_uw() - table2::ROUTER_UW).abs() < 1e-9);
+        assert!((d.total_area_mm2() - table2::ROUTER_MM2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ircu_dominates_power_fifos_dominate_area() {
+        // The Fig. 9 qualitative shape.
+        let d = RouterDetail::for_hw(&HwParams::default());
+        let ircu = d.block("IRCU").unwrap();
+        let fifo = d.block("FIFO").unwrap();
+        for b in &d.blocks {
+            assert!(ircu.power_uw >= b.power_uw, "IRCU must lead power ({:?})", b.name);
+        }
+        assert!(fifo.area_mm2 > ircu.area_mm2, "buffers out-area the MAC array");
+    }
+
+    #[test]
+    fn more_macs_shift_power_share() {
+        let hw16 = HwParams::default();
+        let mut hw64 = HwParams::default();
+        hw64.ircu_macs = 64;
+        let s16 = RouterDetail::for_hw(&hw16).block("IRCU").unwrap().power_uw;
+        let s64 = RouterDetail::for_hw(&hw64).block("IRCU").unwrap().power_uw;
+        // normalised to the same router total, the IRCU share grows
+        assert!(s64 > s16);
+    }
+
+    #[test]
+    fn four_blocks_positive() {
+        let d = RouterDetail::for_hw(&HwParams::default());
+        assert_eq!(d.blocks.len(), 4);
+        assert!(d.blocks.iter().all(|b| b.power_uw > 0.0 && b.area_mm2 > 0.0));
+    }
+}

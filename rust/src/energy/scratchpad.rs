@@ -1,0 +1,87 @@
+//! CACTI-style analytical scratchpad model.
+//!
+//! The paper estimates scratchpad area/power with CACTI [20]; we fit a
+//! simple capacity/width law anchored at Table II's 32 KB / 16-bit point
+//! (37.80 µW, 0.0125 mm²) so alternative configurations (swept in design
+//! studies) scale plausibly: energy/access grows ~sqrt(capacity), area
+//! grows ~linearly with capacity.
+
+use super::table2;
+
+/// Analytical SRAM scratchpad model anchored at the Table II point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScratchpadModel {
+    pub capacity_bytes: usize,
+    pub word_bits: u32,
+}
+
+/// The Table II anchor configuration.
+const ANCHOR_BYTES: f64 = 32.0 * 1024.0;
+
+impl ScratchpadModel {
+    pub fn new(capacity_bytes: usize, word_bits: u32) -> Self {
+        Self { capacity_bytes, word_bits }
+    }
+
+    /// Table I default: 32 KB, 16-bit words.
+    pub fn table1() -> Self {
+        Self::new(32 * 1024, 16)
+    }
+
+    /// Active power, µW (bitline/wordline energy ∝ sqrt(capacity); word
+    /// width scales the sense-amp count linearly).
+    pub fn active_power_uw(&self) -> f64 {
+        let cap_scale = (self.capacity_bytes as f64 / ANCHOR_BYTES).sqrt();
+        let width_scale = self.word_bits as f64 / 16.0;
+        table2::SPAD_UW * cap_scale * width_scale
+    }
+
+    /// Area, mm² (cell array dominates: ~linear in capacity).
+    pub fn area_mm2(&self) -> f64 {
+        table2::SPAD_MM2 * (self.capacity_bytes as f64 / ANCHOR_BYTES)
+    }
+
+    /// Depth in words.
+    pub fn words(&self) -> usize {
+        self.capacity_bytes / (self.word_bits as usize / 8)
+    }
+
+    /// Energy per word access, pJ (active power over one 1 GHz cycle).
+    pub fn access_pj(&self) -> f64 {
+        self.active_power_uw() * 1e-3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_reproduces_table2() {
+        let m = ScratchpadModel::table1();
+        assert!((m.active_power_uw() - table2::SPAD_UW).abs() < 1e-9);
+        assert!((m.area_mm2() - table2::SPAD_MM2).abs() < 1e-9);
+        assert_eq!(m.words(), 16 * 1024);
+    }
+
+    #[test]
+    fn scaling_monotone() {
+        let small = ScratchpadModel::new(8 * 1024, 16);
+        let big = ScratchpadModel::new(128 * 1024, 16);
+        assert!(small.active_power_uw() < big.active_power_uw());
+        assert!(small.area_mm2() < big.area_mm2());
+        // area linear, power sub-linear in capacity
+        let area_ratio = big.area_mm2() / small.area_mm2();
+        let pow_ratio = big.active_power_uw() / small.active_power_uw();
+        assert!((area_ratio - 16.0).abs() < 1e-9);
+        assert!((pow_ratio - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wider_words_cost_power() {
+        let narrow = ScratchpadModel::new(32 * 1024, 16);
+        let wide = ScratchpadModel::new(32 * 1024, 64);
+        assert!((wide.active_power_uw() / narrow.active_power_uw() - 4.0).abs() < 1e-9);
+        assert_eq!(wide.words(), narrow.words() / 4);
+    }
+}

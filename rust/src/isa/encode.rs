@@ -1,0 +1,163 @@
+//! Binary/hex encoding of the instruction stream — the format the
+//! co-processor writes into the NPM banks (and the "hex file" the paper's
+//! Python API emits; mirrored by `python/compile/noc_asm.py`).
+//!
+//! Wire layout, 16 bytes per instruction, little-endian:
+//!   byte 0     cmd1 opcode        byte 1    cmd1 arg
+//!   byte 2     cmd2 opcode        byte 3    cmd2 arg
+//!   bytes 4-5  CMD_rep (u16)
+//!   byte 6     sel kind (0=All 1=Rows 2=Cols 3=Rect 4=SplitRows)
+//!   byte 7     reserved (0)
+//!   bytes 8-15 four u16 sel operands (unused ones zero)
+
+use anyhow::{bail, Context};
+
+use super::opcodes::{Cmd, Opcode};
+use super::program::{Instruction, Program, SelBits};
+
+/// Bytes per encoded instruction.
+pub const INSTR_BYTES: usize = 16;
+
+fn encode_one(i: &Instruction, out: &mut Vec<u8>) {
+    out.push(i.cmd1.op as u8);
+    out.push(i.cmd1.arg);
+    out.push(i.cmd2.op as u8);
+    out.push(i.cmd2.arg);
+    out.extend_from_slice(&i.rep.to_le_bytes());
+    let (kind, ops): (u8, [u16; 4]) = match i.sel {
+        SelBits::All => (0, [0; 4]),
+        SelBits::Rows { lo, hi } => (1, [lo, hi, 0, 0]),
+        SelBits::Cols { lo, hi } => (2, [lo, hi, 0, 0]),
+        SelBits::Rect { rlo, rhi, clo, chi } => (3, [rlo, rhi, clo, chi]),
+        SelBits::SplitRows { lo, hi, lo2, hi2 } => (4, [lo, hi, lo2, hi2]),
+    };
+    out.push(kind);
+    out.push(0);
+    for o in ops {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+}
+
+fn decode_one(b: &[u8]) -> anyhow::Result<Instruction> {
+    let cmd1 = Cmd::new(
+        Opcode::from_u8(b[0]).with_context(|| format!("bad opcode {:#x}", b[0]))?,
+        b[1],
+    );
+    let cmd2 = Cmd::new(
+        Opcode::from_u8(b[2]).with_context(|| format!("bad opcode {:#x}", b[2]))?,
+        b[3],
+    );
+    let rep = u16::from_le_bytes([b[4], b[5]]);
+    let o = |k: usize| u16::from_le_bytes([b[8 + 2 * k], b[9 + 2 * k]]);
+    let sel = match b[6] {
+        0 => SelBits::All,
+        1 => SelBits::Rows { lo: o(0), hi: o(1) },
+        2 => SelBits::Cols { lo: o(0), hi: o(1) },
+        3 => SelBits::Rect { rlo: o(0), rhi: o(1), clo: o(2), chi: o(3) },
+        4 => SelBits::SplitRows { lo: o(0), hi: o(1), lo2: o(2), hi2: o(3) },
+        k => bail!("bad sel kind {k}"),
+    };
+    Ok(Instruction { cmd1, cmd2, rep, sel })
+}
+
+/// Assemble a program to the NPM hex format: one 32-hex-char line per
+/// instruction (16 bytes), comments allowed with `;`.
+pub fn assemble(p: &Program) -> String {
+    let mut text = format!("; {}\n", p.label);
+    let mut buf = Vec::with_capacity(INSTR_BYTES);
+    for i in &p.instrs {
+        buf.clear();
+        encode_one(i, &mut buf);
+        for b in &buf {
+            text.push_str(&format!("{b:02x}"));
+        }
+        text.push('\n');
+    }
+    text
+}
+
+/// Parse a hex file back into a program.
+pub fn disassemble(text: &str) -> anyhow::Result<Program> {
+    let mut p = Program::new("disassembled");
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.len() != 2 * INSTR_BYTES {
+            bail!("line {}: expected {} hex chars, got {}", lineno + 1, 2 * INSTR_BYTES, line.len());
+        }
+        let bytes: Vec<u8> = (0..INSTR_BYTES)
+            .map(|k| u8::from_str_radix(&line[2 * k..2 * k + 2], 16))
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}: bad hex", lineno + 1))?;
+        p.push(decode_one(&bytes)?);
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_program() -> Program {
+        // Keep in sync with python/compile/noc_asm.py::demo_program().
+        let mut p = Program::new("demo");
+        p.push(Instruction::uni(Cmd::new(Opcode::PeMvm, 0), 4, SelBits::All));
+        p.push(Instruction::dual(
+            Cmd::new(Opcode::RouteE, 1),
+            Cmd::new(Opcode::Mac, 0),
+            32,
+            SelBits::SplitRows { lo: 0, hi: 2, lo2: 2, hi2: 4 },
+        ));
+        p.push(Instruction::uni(
+            Cmd::new(Opcode::ReduceS, 0),
+            16,
+            SelBits::Rect { rlo: 0, rhi: 4, clo: 2, chi: 4 },
+        ));
+        p.push(Instruction::uni(Cmd::new(Opcode::SpadWr, 2), 8, SelBits::Cols { lo: 1, hi: 3 }));
+        p.sealed()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = demo_program();
+        let hex = assemble(&p);
+        let q = disassemble(&hex).unwrap();
+        assert_eq!(p.instrs, q.instrs);
+    }
+
+    #[test]
+    fn golden_hex_stable() {
+        // Pins the wire format; python noc_asm emits identical bytes.
+        let p = demo_program();
+        let hex = assemble(&p);
+        let lines: Vec<&str> = hex.lines().filter(|l| !l.starts_with(';')).collect();
+        assert_eq!(lines[0], "10000000040000000000000000000000");
+        assert_eq!(lines[1], "02010a00200004000000020002000400");
+        assert_eq!(lines.len(), 5); // 4 + HALT
+    }
+
+    #[test]
+    fn rejects_bad_hex() {
+        assert!(disassemble("zz").is_err());
+        assert!(disassemble("ff000000000000000000000000000000").is_err()); // bad opcode
+        let short = "0000";
+        assert!(disassemble(short).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = demo_program();
+        let hex = format!("; header\n\n{}\n; trailer\n", assemble(&p));
+        let q = disassemble(&hex).unwrap();
+        assert_eq!(q.instrs.len(), p.instrs.len());
+    }
+
+    #[test]
+    fn instr_bytes_constant() {
+        let mut buf = Vec::new();
+        encode_one(&Instruction::halt(), &mut buf);
+        assert_eq!(buf.len(), INSTR_BYTES);
+    }
+}

@@ -1,0 +1,17 @@
+//! The NoC instruction set (paper §V-A).
+//!
+//! Each instruction carries a command pair (CMD1, CMD2) that executes
+//! concurrently along two non-conflicting paths, plus a configuration word
+//! encoding the repetition count (CMD_rep) and router-selection bits
+//! (Sel_bits). The NoC program memory (NPM) is double-banked so the
+//! co-processor configures one bank while the controller drains the other.
+
+pub mod encode;
+pub mod npm;
+pub mod opcodes;
+pub mod program;
+
+pub use encode::{assemble, disassemble, INSTR_BYTES};
+pub use npm::{Bank, Npm};
+pub use opcodes::{Cmd, Opcode};
+pub use program::{Instruction, Program, SelBits};

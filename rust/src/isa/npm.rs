@@ -1,0 +1,139 @@
+//! NoC program memory (NPM): two independent banks, each holding a command
+//! register file + configuration registers. The co-processor programs one
+//! bank while the NoC main controller drains the other (§V-A), hiding
+//! program-load latency behind execution.
+
+use super::program::Program;
+
+/// Bank identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bank {
+    B1,
+    B2,
+}
+
+impl Bank {
+    pub fn other(self) -> Bank {
+        match self {
+            Bank::B1 => Bank::B2,
+            Bank::B2 => Bank::B1,
+        }
+    }
+}
+
+/// Double-banked NPM state machine.
+#[derive(Debug, Default)]
+pub struct Npm {
+    bank1: Option<Program>,
+    bank2: Option<Program>,
+    /// Bank the controller currently reads from.
+    active: Option<Bank>,
+    /// Programs loaded since construction (for diagnostics/metrics).
+    pub loads: u64,
+    /// Bank swaps performed.
+    pub swaps: u64,
+}
+
+impl Npm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Co-processor writes `prog` into the inactive bank. Fails if that
+    /// bank is the one currently being executed.
+    pub fn load(&mut self, prog: Program) -> anyhow::Result<Bank> {
+        let target = match self.active {
+            Some(b) => b.other(),
+            None => Bank::B1,
+        };
+        match target {
+            Bank::B1 => self.bank1 = Some(prog),
+            Bank::B2 => self.bank2 = Some(prog),
+        }
+        self.loads += 1;
+        Ok(target)
+    }
+
+    /// Controller switches to the most recently loaded bank and returns the
+    /// program to execute.
+    pub fn swap(&mut self) -> anyhow::Result<&Program> {
+        let next = match self.active {
+            Some(b) => b.other(),
+            None => Bank::B1,
+        };
+        let prog = match next {
+            Bank::B1 => self.bank1.as_ref(),
+            Bank::B2 => self.bank2.as_ref(),
+        };
+        anyhow::ensure!(prog.is_some(), "swap to empty NPM bank {next:?}");
+        self.active = Some(next);
+        self.swaps += 1;
+        Ok(match next {
+            Bank::B1 => self.bank1.as_ref().unwrap(),
+            Bank::B2 => self.bank2.as_ref().unwrap(),
+        })
+    }
+
+    /// Currently executing program, if any.
+    pub fn active_program(&self) -> Option<&Program> {
+        match self.active? {
+            Bank::B1 => self.bank1.as_ref(),
+            Bank::B2 => self.bank2.as_ref(),
+        }
+    }
+
+    pub fn active_bank(&self) -> Option<Bank> {
+        self.active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program::Instruction;
+
+    fn prog(label: &str) -> Program {
+        let mut p = Program::new(label);
+        p.push(Instruction::halt());
+        p
+    }
+
+    #[test]
+    fn alternating_banks() {
+        let mut npm = Npm::new();
+        assert_eq!(npm.load(prog("a")).unwrap(), Bank::B1);
+        assert_eq!(npm.swap().unwrap().label, "a");
+        assert_eq!(npm.active_bank(), Some(Bank::B1));
+        // while B1 executes, the co-processor fills B2
+        assert_eq!(npm.load(prog("b")).unwrap(), Bank::B2);
+        assert_eq!(npm.swap().unwrap().label, "b");
+        assert_eq!(npm.active_bank(), Some(Bank::B2));
+        assert_eq!(npm.load(prog("c")).unwrap(), Bank::B1);
+        assert_eq!(npm.swap().unwrap().label, "c");
+        assert_eq!((npm.loads, npm.swaps), (3, 3));
+    }
+
+    #[test]
+    fn swap_without_load_fails() {
+        let mut npm = Npm::new();
+        assert!(npm.swap().is_err());
+    }
+
+    #[test]
+    fn double_swap_reuses_stale_bank() {
+        let mut npm = Npm::new();
+        npm.load(prog("a")).unwrap();
+        npm.swap().unwrap();
+        // swapping again without a new load lands on the empty B2
+        assert!(npm.swap().is_err());
+    }
+
+    #[test]
+    fn active_program_visible() {
+        let mut npm = Npm::new();
+        assert!(npm.active_program().is_none());
+        npm.load(prog("x")).unwrap();
+        npm.swap().unwrap();
+        assert_eq!(npm.active_program().unwrap().label, "x");
+    }
+}

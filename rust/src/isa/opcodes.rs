@@ -1,0 +1,213 @@
+//! Opcode set supported by the routers' IRCUs and port crossbars.
+//!
+//! The set covers everything the prefill/decode dataflows of §IV need:
+//! directed forwards (the output crossbar), row/column multicast, pipelined
+//! reductions, the IRCU compute ops (MAC for DDMMs, ADD for reductions, MUL
+//! for softmax rescale, EXPMAX for the FlashAttention running max/exp),
+//! scratchpad access, PE triggering, and control.
+
+use std::fmt;
+
+/// Router/IRCU operation codes. The `u8` discriminants are the wire
+/// encoding — keep in sync with `python/compile/noc_asm.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Opcode {
+    /// No operation (an IDLE router slot).
+    Nop = 0x00,
+    /// Forward one packet to the north port.
+    RouteN = 0x01,
+    /// Forward one packet to the east port.
+    RouteE = 0x02,
+    /// Forward one packet to the south port.
+    RouteS = 0x03,
+    /// Forward one packet to the west port.
+    RouteW = 0x04,
+    /// Forward one packet to the locally attached PE.
+    RoutePe = 0x05,
+    /// Multicast a packet to every selected router in the same row.
+    BcastRow = 0x06,
+    /// Multicast a packet to every selected router in the same column.
+    BcastCol = 0x07,
+    /// Pipelined partial-sum reduction toward the east (Reduction 1 in K/Q).
+    ReduceE = 0x08,
+    /// Pipelined partial-sum reduction toward the south (Reduction 1 in V,
+    /// Reductions 2/3).
+    ReduceS = 0x09,
+    /// IRCU multiply-accumulate (DDMM inner product step).
+    Mac = 0x0A,
+    /// IRCU element-wise add (partial-result summation).
+    Add = 0x0B,
+    /// IRCU element-wise multiply (softmax rescale, R-Mul).
+    Mul = 0x0C,
+    /// IRCU running max + exponential (FlashAttention online softmax).
+    ExpMax = 0x0D,
+    /// Read a word burst from the local scratchpad.
+    SpadRd = 0x0E,
+    /// Write a word burst to the local scratchpad.
+    SpadWr = 0x0F,
+    /// Trigger the local PE's in-place crossbar MVM (DSMM).
+    PeMvm = 0x10,
+    /// Barrier: wait until all selected routers reach this instruction.
+    Sync = 0x11,
+    /// End of program.
+    Halt = 0x12,
+}
+
+impl Opcode {
+    pub const ALL: [Opcode; 19] = [
+        Opcode::Nop,
+        Opcode::RouteN,
+        Opcode::RouteE,
+        Opcode::RouteS,
+        Opcode::RouteW,
+        Opcode::RoutePe,
+        Opcode::BcastRow,
+        Opcode::BcastCol,
+        Opcode::ReduceE,
+        Opcode::ReduceS,
+        Opcode::Mac,
+        Opcode::Add,
+        Opcode::Mul,
+        Opcode::ExpMax,
+        Opcode::SpadRd,
+        Opcode::SpadWr,
+        Opcode::PeMvm,
+        Opcode::Sync,
+        Opcode::Halt,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Self::ALL.into_iter().find(|&op| op as u8 == v)
+    }
+
+    /// Does this opcode move data over a mesh link?
+    pub fn is_movement(self) -> bool {
+        matches!(
+            self,
+            Opcode::RouteN
+                | Opcode::RouteE
+                | Opcode::RouteS
+                | Opcode::RouteW
+                | Opcode::RoutePe
+                | Opcode::BcastRow
+                | Opcode::BcastCol
+                | Opcode::ReduceE
+                | Opcode::ReduceS
+        )
+    }
+
+    /// Does this opcode occupy the IRCU datapath?
+    pub fn is_compute(self) -> bool {
+        matches!(self, Opcode::Mac | Opcode::Add | Opcode::Mul | Opcode::ExpMax)
+    }
+
+    /// Does this opcode access the scratchpad?
+    pub fn is_spad(self) -> bool {
+        matches!(self, Opcode::SpadRd | Opcode::SpadWr)
+    }
+
+    /// Instruction class used for the Fig. 11 cycle breakdown.
+    pub fn class(self) -> &'static str {
+        match self {
+            Opcode::Nop | Opcode::Sync | Opcode::Halt => "ctrl",
+            Opcode::Mac => "mul",
+            Opcode::Add | Opcode::ExpMax => "add",
+            Opcode::Mul => "mul",
+            Opcode::SpadRd | Opcode::SpadWr => "spad",
+            Opcode::PeMvm => "pim",
+            _ => "send",
+        }
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// One command: opcode + 8-bit argument (port select, burst length class,
+/// operand bank — opcode-specific).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Cmd {
+    pub op: Opcode,
+    pub arg: u8,
+}
+
+impl Cmd {
+    pub const NOP: Cmd = Cmd { op: Opcode::Nop, arg: 0 };
+
+    pub fn new(op: Opcode, arg: u8) -> Self {
+        Self { op, arg }
+    }
+
+    /// Two commands conflict if they claim the same router resource
+    /// (the paper requires CMD1/CMD2 to use distinct, non-conflicting
+    /// paths; the assembler enforces it).
+    pub fn conflicts_with(self, other: Cmd) -> bool {
+        if self.op == Opcode::Nop || other.op == Opcode::Nop {
+            return false;
+        }
+        (self.op.is_compute() && other.op.is_compute())
+            || (self.op.is_spad() && other.op.is_spad())
+            || (self.op.is_movement() && other.op.is_movement() && self.op == other.op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_opcodes() {
+        for op in Opcode::ALL {
+            assert_eq!(Opcode::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(Opcode::from_u8(0xFF), None);
+    }
+
+    #[test]
+    fn discriminants_dense_and_stable() {
+        // wire format compatibility with python/compile/noc_asm.py
+        assert_eq!(Opcode::Nop as u8, 0x00);
+        assert_eq!(Opcode::Mac as u8, 0x0A);
+        assert_eq!(Opcode::Halt as u8, 0x12);
+        for (i, op) in Opcode::ALL.iter().enumerate() {
+            assert_eq!(*op as u8 as usize, i);
+        }
+    }
+
+    #[test]
+    fn classes_cover_fig11_legend() {
+        let classes: std::collections::HashSet<_> =
+            Opcode::ALL.iter().map(|o| o.class()).collect();
+        for c in ["send", "mul", "add", "spad", "pim", "ctrl"] {
+            assert!(classes.contains(c), "missing class {c}");
+        }
+    }
+
+    #[test]
+    fn conflict_rules() {
+        let mac = Cmd::new(Opcode::Mac, 0);
+        let add = Cmd::new(Opcode::Add, 0);
+        let re = Cmd::new(Opcode::RouteE, 0);
+        let rw = Cmd::new(Opcode::RouteW, 0);
+        assert!(mac.conflicts_with(add), "two IRCU ops conflict");
+        assert!(!re.conflicts_with(rw), "distinct ports don't conflict");
+        assert!(re.conflicts_with(re), "same port conflicts");
+        assert!(!Cmd::NOP.conflicts_with(mac));
+        assert!(!re.conflicts_with(mac), "movement + compute co-issue");
+    }
+
+    #[test]
+    fn predicates_disjoint() {
+        for op in Opcode::ALL {
+            let n = [op.is_movement(), op.is_compute(), op.is_spad()]
+                .iter()
+                .filter(|&&b| b)
+                .count();
+            assert!(n <= 1, "{op:?} claims multiple resource classes");
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Instruction and program representation.
+//!
+//! An [`Instruction`] is a (CMD1, CMD2) pair plus the configuration word:
+//! `CMD_rep` (how many cycles each selected router repeats the commands) and
+//! [`SelBits`] (which routers participate, and which of the two commands
+//! each one executes). The command crossbar is 3-input (CMD1 / CMD2 / IDLE)
+//! × N-output (§V-A).
+
+use std::fmt;
+
+use super::opcodes::{Cmd, Opcode};
+
+/// Router-selection bits of the configuration word.
+///
+/// The hardware uses an N-bit crossbar select; we encode the common cases
+/// the dataflow compiler emits — whole-mesh, row ranges, column ranges, and
+/// an explicit split between CMD1 and CMD2 subscribers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SelBits {
+    /// Every router executes CMD1 (CMD2 unused).
+    All,
+    /// Rows `[lo, hi)` execute CMD1; all other routers idle.
+    Rows { lo: u16, hi: u16 },
+    /// Columns `[lo, hi)` execute CMD1; all other routers idle.
+    Cols { lo: u16, hi: u16 },
+    /// Columns `[lo, hi)` of rows `[rlo, rhi)` execute CMD1.
+    Rect { rlo: u16, rhi: u16, clo: u16, chi: u16 },
+    /// Rows `[lo, hi)` run CMD1 and rows `[lo2, hi2)` run CMD2 concurrently
+    /// (the "two non-conflicting paths" case of §V-A).
+    SplitRows { lo: u16, hi: u16, lo2: u16, hi2: u16 },
+}
+
+impl SelBits {
+    /// Which command (1 or 2) a router at (x, y) executes; `None` = IDLE.
+    pub fn command_for(self, x: u16, y: u16) -> Option<u8> {
+        match self {
+            SelBits::All => Some(1),
+            SelBits::Rows { lo, hi } => (y >= lo && y < hi).then_some(1),
+            SelBits::Cols { lo, hi } => (x >= lo && x < hi).then_some(1),
+            SelBits::Rect { rlo, rhi, clo, chi } => {
+                (y >= rlo && y < rhi && x >= clo && x < chi).then_some(1)
+            }
+            SelBits::SplitRows { lo, hi, lo2, hi2 } => {
+                if y >= lo && y < hi {
+                    Some(1)
+                } else if y >= lo2 && y < hi2 {
+                    Some(2)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Number of routers participating on an `w` × `h` mesh.
+    pub fn active_count(self, w: u16, h: u16) -> usize {
+        let mut n = 0;
+        for y in 0..h {
+            for x in 0..w {
+                if self.command_for(x, y).is_some() {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// One NPM instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instruction {
+    pub cmd1: Cmd,
+    pub cmd2: Cmd,
+    /// Repetition count (cycles the command pair is re-issued).
+    pub rep: u16,
+    pub sel: SelBits,
+}
+
+impl Instruction {
+    /// Single-command instruction over a selection.
+    pub fn uni(cmd: Cmd, rep: u16, sel: SelBits) -> Self {
+        Self { cmd1: cmd, cmd2: Cmd::NOP, rep, sel }
+    }
+
+    /// Dual-command instruction; panics if the commands conflict (the
+    /// compiler must only co-issue non-conflicting paths).
+    pub fn dual(cmd1: Cmd, cmd2: Cmd, rep: u16, sel: SelBits) -> Self {
+        assert!(!cmd1.conflicts_with(cmd2), "conflicting command pair {cmd1:?}/{cmd2:?}");
+        Self { cmd1, cmd2, rep, sel }
+    }
+
+    pub fn halt() -> Self {
+        Self::uni(Cmd::new(Opcode::Halt, 0), 1, SelBits::All)
+    }
+
+    /// Cycles this instruction occupies on the controller (its repeat count;
+    /// issue overhead is one cycle, modelled by the simulator).
+    pub fn cycles(&self) -> u64 {
+        self.rep.max(1) as u64
+    }
+}
+
+/// A NoC program: the instruction stream one NPM bank holds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub instrs: Vec<Instruction>,
+    /// Human-readable provenance (layer / phase), for diagnostics.
+    pub label: String,
+}
+
+impl Program {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { instrs: Vec::new(), label: label.into() }
+    }
+
+    pub fn push(&mut self, i: Instruction) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Total controller cycles: Σ rep + one issue cycle per instruction.
+    pub fn controller_cycles(&self) -> u64 {
+        self.instrs.iter().map(|i| i.cycles() + 1).sum()
+    }
+
+    /// Ensure the program terminates with HALT.
+    pub fn sealed(mut self) -> Self {
+        if !matches!(self.instrs.last(), Some(i) if i.cmd1.op == Opcode::Halt) {
+            self.push(Instruction::halt());
+        }
+        self
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "; program {} ({} instrs)", self.label, self.instrs.len())?;
+        for (pc, i) in self.instrs.iter().enumerate() {
+            writeln!(
+                f,
+                "{pc:04}: {:>8}/{:<8} rep={:<5} sel={:?}",
+                i.cmd1.op.to_string(),
+                i.cmd2.op.to_string(),
+                i.rep,
+                i.sel
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selbits_semantics() {
+        let rows = SelBits::Rows { lo: 2, hi: 4 };
+        assert_eq!(rows.command_for(0, 2), Some(1));
+        assert_eq!(rows.command_for(7, 3), Some(1));
+        assert_eq!(rows.command_for(0, 4), None);
+        let split = SelBits::SplitRows { lo: 0, hi: 1, lo2: 1, hi2: 2 };
+        assert_eq!(split.command_for(5, 0), Some(1));
+        assert_eq!(split.command_for(5, 1), Some(2));
+        assert_eq!(split.command_for(5, 2), None);
+    }
+
+    #[test]
+    fn active_count() {
+        assert_eq!(SelBits::All.active_count(4, 4), 16);
+        assert_eq!(SelBits::Rows { lo: 1, hi: 3 }.active_count(4, 4), 8);
+        assert_eq!(
+            SelBits::Rect { rlo: 0, rhi: 2, clo: 0, chi: 2 }.active_count(4, 4),
+            4
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicting")]
+    fn dual_rejects_conflicts() {
+        Instruction::dual(Cmd::new(Opcode::Mac, 0), Cmd::new(Opcode::Add, 0), 1, SelBits::All);
+    }
+
+    #[test]
+    fn dual_allows_disjoint_paths() {
+        // movement east + IRCU MAC in parallel — Fig. 6's overlapped cycle.
+        let i = Instruction::dual(
+            Cmd::new(Opcode::RouteE, 0),
+            Cmd::new(Opcode::Mac, 0),
+            8,
+            SelBits::All,
+        );
+        assert_eq!(i.cycles(), 8);
+    }
+
+    #[test]
+    fn sealing_appends_halt_once() {
+        let p = Program::new("t").sealed();
+        assert_eq!(p.len(), 1);
+        let p2 = p.sealed();
+        assert_eq!(p2.len(), 1);
+    }
+
+    #[test]
+    fn controller_cycles_counts_issue_overhead() {
+        let mut p = Program::new("t");
+        p.push(Instruction::uni(Cmd::new(Opcode::RouteE, 0), 10, SelBits::All));
+        p.push(Instruction::uni(Cmd::new(Opcode::Mac, 0), 5, SelBits::All));
+        assert_eq!(p.controller_cycles(), 11 + 6);
+    }
+}

@@ -1,0 +1,64 @@
+//! # LEAP — LLM inference on a scalable PIM-NoC architecture
+//!
+//! Reproduction of *"LEAP: LLM Inference on Scalable PIM-NoC Architecture
+//! with Balanced Dataflow and Fine-Grained Parallelism"* (cs.AR 2025).
+//!
+//! This crate is the L3 layer of the three-layer stack (see DESIGN.md):
+//! it owns the compiler (model partitioning → spatial mapping → temporal
+//! scheduling → NoC ISA), the instruction-level PIM-NoC simulator, the
+//! energy/area model, the GPU comparison baselines, the PJRT runtime that
+//! executes the AOT-lowered JAX/Pallas artifacts, and the serving
+//! coordinator. Python never runs on the request path.
+//!
+//! Module map (one module per subsystem; see DESIGN.md §4):
+//!
+//! - [`arch`] — hardware description: Table I parameters, mesh topology,
+//!   tile/channel/RPU/RG geometry.
+//! - [`model`] — Llama-family shape presets and data-stationarity algebra
+//!   (paper Eqs. 1–3).
+//! - [`partition`] — weight/intermediate partitioning and the attention
+//!   DAG of Fig. 3(b).
+//! - [`mapping`] — heuristic spatial-mapping design-space exploration
+//!   (§III-B, Fig. 8).
+//! - [`schedule`] — temporal mapping: context-window tiling (Fig. 5),
+//!   prefill/decode dataflows (Fig. 6), KV-cache placement (§IV-C).
+//! - [`isa`] — the NoC instruction set: CMD pairs + configuration word,
+//!   assembler/disassembler, double-banked program memory (§V-A).
+//! - [`noc`] — router mesh: 5-port routers, FIFOs, IRCUs, output crossbar,
+//!   multicast, X-Y routing (§V-B).
+//! - [`pim`] — crossbar PE timing/energy model (128×128, 8-bit cells).
+//! - [`energy`] — per-event energy + area model seeded from Table II,
+//!   45 nm → 7 nm scaling.
+//! - [`sim`] — instruction-level simulator (cycle accounting, per-opcode
+//!   breakdown for Fig. 11) and the fast analytical mode used for the
+//!   end-to-end throughput studies (Figs. 10/12, Table III).
+//! - [`compiler`] — end-to-end pipeline from a model preset to per-layer
+//!   ISA programs.
+//! - [`baselines`] — A100/H100 roofline comparators (Table III).
+//! - [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt` and
+//!   executes the functional model.
+//! - [`coordinator`] — serving engine: request queue, batcher,
+//!   prefill/decode scheduler, KV-shard manager, metrics.
+//! - [`testutil`] — deterministic PRNG + mini property-testing harness
+//!   (the registry is offline: no proptest/criterion/clap/tokio).
+
+pub mod arch;
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod compiler;
+pub mod coordinator;
+pub mod energy;
+pub mod isa;
+pub mod mapping;
+pub mod model;
+pub mod noc;
+pub mod partition;
+pub mod pim;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod testutil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

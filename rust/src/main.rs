@@ -1,0 +1,15 @@
+//! `leap` — the coordinator/CLI entry point.
+//!
+//! See `leap help` for subcommands; each maps to one of the paper's
+//! experiments (DESIGN.md §5).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match leap::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

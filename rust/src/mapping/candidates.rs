@@ -1,0 +1,319 @@
+//! Candidate enumeration for the spatial-mapping DSE.
+//!
+//! A candidate assigns each of the four projection channels (Q/K/V/O) a
+//! rectangular region tiling the 2dc × 2dc attention tile, plus a
+//! row-major/column-major sub-matrix ordering per channel. Rectangles with
+//! dc² macros that tile the square are: full-height vertical strips
+//! (2dc × dc/2), full-width horizontal strips (dc/2 × 2dc), and dc × dc
+//! squares — enumerated as five tiling families (pure V, pure H, 2×2
+//! squares, squares + vertical strips, squares + horizontal strips).
+
+use crate::arch::{ChannelKind, Coord};
+
+/// Sub-matrix traversal order within a channel region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ordering {
+    RowMajor,
+    ColMajor,
+}
+
+/// A rectangular macro region (inclusive origin, exclusive extent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Region {
+    pub x0: u16,
+    pub y0: u16,
+    pub w: u16,
+    pub h: u16,
+}
+
+impl Region {
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x >= self.x0 && c.x < self.x0 + self.w && c.y >= self.y0 && c.y < self.y0 + self.h
+    }
+
+    pub fn area(&self) -> usize {
+        self.w as usize * self.h as usize
+    }
+
+    /// Coordinate of the n-th slot under `order`.
+    pub fn slot(&self, n: usize, order: Ordering) -> Coord {
+        debug_assert!(n < self.area());
+        let (w, h) = (self.w as usize, self.h as usize);
+        let (dx, dy) = match order {
+            Ordering::RowMajor => (n % w, n / w),
+            Ordering::ColMajor => (n / h, n % h),
+        };
+        Coord::new(self.x0 + dx as u16, self.y0 + dy as u16)
+    }
+}
+
+/// How the four channel rectangles tile the square.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TilingFamily {
+    /// Four full-height vertical strips (the paper's Fig. 4 layout).
+    VStrips,
+    /// Four full-width horizontal strips.
+    HStrips,
+    /// Four dc × dc squares in a 2×2 arrangement.
+    Squares,
+    /// A stacked-squares column plus two vertical strips; `sq_pos` ∈ 0..3
+    /// selects where the square column sits among the three column blocks.
+    SquaresVStrips { sq_pos: u8 },
+    /// A side-by-side-squares row plus two horizontal strips.
+    SquaresHStrips { sq_pos: u8 },
+}
+
+/// Per-channel placement: region + ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelLayout {
+    pub region: Region,
+    pub order: Ordering,
+}
+
+/// A complete spatial-mapping candidate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    pub family: TilingFamily,
+    /// Channel → slot assignment in the family's canonical slot order.
+    pub perm: [ChannelKind; 4],
+    /// Layout per channel, indexed by [`channel_index`].
+    pub layouts: [ChannelLayout; 4],
+}
+
+/// Stable index for per-channel arrays.
+pub fn channel_index(ch: ChannelKind) -> usize {
+    match ch {
+        ChannelKind::Q => 0,
+        ChannelKind::K => 1,
+        ChannelKind::V => 2,
+        ChannelKind::O => 3,
+    }
+}
+
+impl Candidate {
+    pub fn layout(&self, ch: ChannelKind) -> &ChannelLayout {
+        &self.layouts[channel_index(ch)]
+    }
+
+    /// Macro coordinate of sub-matrix (i, j) of `ch`'s weight grid (dc × dc),
+    /// following the channel's ordering. Q/K/V store column-wise partitions
+    /// (column j is slots j·dc .. (j+1)·dc), O stores row-wise; both reduce
+    /// to linearising (i, j) and indexing the region.
+    pub fn submatrix_coord(&self, ch: ChannelKind, i: u16, j: u16, dc: usize) -> Coord {
+        let lay = self.layout(ch);
+        let n = match lay.order {
+            // column-major linearisation: walk column j top-to-bottom
+            Ordering::ColMajor => j as usize * dc + i as usize,
+            // row-major linearisation: walk row i left-to-right
+            Ordering::RowMajor => i as usize * dc + j as usize,
+        };
+        lay.region.slot(n, lay.order)
+    }
+}
+
+/// The four rectangles of a tiling family, in canonical slot order.
+fn family_regions(family: TilingFamily, dc: usize) -> [Region; 4] {
+    let dc = dc as u16;
+    let side = 2 * dc;
+    let half = dc / 2;
+    match family {
+        TilingFamily::VStrips => {
+            core::array::from_fn(|k| Region { x0: k as u16 * half, y0: 0, w: half, h: side })
+        }
+        TilingFamily::HStrips => {
+            core::array::from_fn(|k| Region { x0: 0, y0: k as u16 * half, w: side, h: half })
+        }
+        TilingFamily::Squares => core::array::from_fn(|k| Region {
+            x0: (k as u16 % 2) * dc,
+            y0: (k as u16 / 2) * dc,
+            w: dc,
+            h: dc,
+        }),
+        TilingFamily::SquaresVStrips { sq_pos } => {
+            // Column blocks along x: one dc-wide squares column (two stacked
+            // dc×dc squares) and two half-wide strips; sq_pos picks its slot.
+            let mut regions = Vec::with_capacity(4);
+            let mut x = 0u16;
+            for blk in 0..3u8 {
+                if blk == sq_pos {
+                    regions.push(Region { x0: x, y0: 0, w: dc, h: dc });
+                    regions.push(Region { x0: x, y0: dc, w: dc, h: dc });
+                    x += dc;
+                } else {
+                    regions.push(Region { x0: x, y0: 0, w: half, h: side });
+                    x += half;
+                }
+            }
+            [regions[0], regions[1], regions[2], regions[3]]
+        }
+        TilingFamily::SquaresHStrips { sq_pos } => {
+            let mut regions = Vec::with_capacity(4);
+            let mut y = 0u16;
+            for blk in 0..3u8 {
+                if blk == sq_pos {
+                    regions.push(Region { x0: 0, y0: y, w: dc, h: dc });
+                    regions.push(Region { x0: dc, y0: y, w: dc, h: dc });
+                    y += dc;
+                } else {
+                    regions.push(Region { x0: 0, y0: y, w: side, h: half });
+                    y += half;
+                }
+            }
+            [regions[0], regions[1], regions[2], regions[3]]
+        }
+    }
+}
+
+/// All 4! permutations of the channels.
+fn permutations() -> Vec<[ChannelKind; 4]> {
+    let chans = ChannelKind::ALL;
+    let mut out = Vec::with_capacity(24);
+    for a in 0..4 {
+        for b in 0..4 {
+            if b == a {
+                continue;
+            }
+            for c in 0..4 {
+                if c == a || c == b {
+                    continue;
+                }
+                let d = 6 - a - b - c;
+                out.push([chans[a], chans[b], chans[c], chans[d]]);
+            }
+        }
+    }
+    out
+}
+
+/// Enumerate every candidate in the heuristic-constrained space.
+///
+/// |families| placements × 2⁴ per-channel orderings. For dc ≥ 2 this yields
+/// 216 × 16 = 3456 candidates — same order of magnitude as the paper's
+/// 2,592 evaluated mappings (the paper does not spell out its family set).
+pub fn enumerate(dc: usize) -> Vec<Candidate> {
+    assert!(dc >= 2 && dc % 2 == 0, "dc must be even, got {dc}");
+    let mut families = vec![TilingFamily::VStrips, TilingFamily::HStrips, TilingFamily::Squares];
+    for p in 0..3 {
+        families.push(TilingFamily::SquaresVStrips { sq_pos: p });
+        families.push(TilingFamily::SquaresHStrips { sq_pos: p });
+    }
+    let perms = permutations();
+    let mut out = Vec::new();
+    for &family in &families {
+        let regions = family_regions(family, dc);
+        for perm in &perms {
+            // 2⁴ orderings: bit k chooses ordering of the channel in slot k.
+            for mask in 0u8..16 {
+                let mut layouts = [ChannelLayout {
+                    region: regions[0],
+                    order: Ordering::RowMajor,
+                }; 4];
+                for (slot, &ch) in perm.iter().enumerate() {
+                    let order = if mask & (1 << slot) != 0 {
+                        Ordering::ColMajor
+                    } else {
+                        Ordering::RowMajor
+                    };
+                    layouts[channel_index(ch)] = ChannelLayout { region: regions[slot], order };
+                }
+                out.push(Candidate { family, perm: *perm, layouts });
+            }
+        }
+    }
+    out
+}
+
+/// log10 of the unconstrained mapping count for one weight of n sub-matrices
+/// (nPn = n!), used to verify the paper's ~1e86 reduction claim.
+pub fn log10_unconstrained(n_submatrices: usize) -> f64 {
+    (1..=n_submatrices).map(|k| (k as f64).log10()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumeration_size() {
+        // 9 families × 24 perms × 16 orderings = 3456.
+        let cands = enumerate(16);
+        assert_eq!(cands.len(), 9 * 24 * 16);
+    }
+
+    #[test]
+    fn regions_tile_the_square_exactly() {
+        for dc in [2usize, 4, 16] {
+            for cand in enumerate(dc).iter().step_by(97) {
+                let side = 2 * dc;
+                let mut covered = vec![false; side * side];
+                for lay in &cand.layouts {
+                    assert_eq!(lay.region.area(), dc * dc, "region must hold dc² macros");
+                    for y in lay.region.y0..lay.region.y0 + lay.region.h {
+                        for x in lay.region.x0..lay.region.x0 + lay.region.w {
+                            let idx = y as usize * side + x as usize;
+                            assert!(!covered[idx], "overlap at ({x},{y}) in {:?}", cand.family);
+                            covered[idx] = true;
+                        }
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "hole in tiling {:?}", cand.family);
+            }
+        }
+    }
+
+    #[test]
+    fn submatrix_coords_unique_and_in_region() {
+        let dc = 4;
+        for cand in enumerate(dc).iter().step_by(131) {
+            for ch in ChannelKind::ALL {
+                let mut seen = std::collections::HashSet::new();
+                for i in 0..dc as u16 {
+                    for j in 0..dc as u16 {
+                        let c = cand.submatrix_coord(ch, i, j, dc);
+                        assert!(cand.layout(ch).region.contains(c));
+                        assert!(seen.insert(c), "duplicate coord {c}");
+                    }
+                }
+                assert_eq!(seen.len(), dc * dc);
+            }
+        }
+    }
+
+    #[test]
+    fn colmajor_column_is_contiguous_in_vstrip() {
+        // In the paper's Fig. 4 layout, a column-wise partition (an RG's
+        // worth of sub-matrices) occupies dc consecutive rows of the strip.
+        let dc = 16;
+        let cands = enumerate(dc);
+        let cand = cands
+            .iter()
+            .find(|c| {
+                c.family == TilingFamily::VStrips
+                    && c.layout(ChannelKind::Q).order == Ordering::ColMajor
+            })
+            .unwrap();
+        let ys: Vec<u16> =
+            (0..dc as u16).map(|i| cand.submatrix_coord(ChannelKind::Q, i, 0, dc).y).collect();
+        for w in ys.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "column 0 must be vertically contiguous");
+        }
+    }
+
+    #[test]
+    fn unconstrained_space_matches_paper_claim() {
+        // 64 sub-matrices: 64! ≈ 1.27e89 (paper §III-B).
+        let lg = log10_unconstrained(64);
+        assert!((lg - 89.1).abs() < 0.2, "log10(64!) = {lg}");
+        // Reduction vs 3456 candidates ≈ 1e85.6 — the paper's "~1e86×".
+        let reduction = lg - (3456f64).log10();
+        assert!(reduction > 85.0, "reduction = 1e{reduction:.1}");
+    }
+
+    #[test]
+    fn permutations_all_distinct() {
+        let p = permutations();
+        assert_eq!(p.len(), 24);
+        let set: std::collections::HashSet<_> = p.iter().map(|q| format!("{q:?}")).collect();
+        assert_eq!(set.len(), 24);
+    }
+}

@@ -1,0 +1,247 @@
+//! Communication-cost model for the spatial-mapping DSE.
+//!
+//! The paper defines the DSE cost as total communication time under a naive
+//! X-Y routing baseline (coarse-grained — it deliberately ignores the
+//! fine-grained temporal overlap, which is why the selected mapping is
+//! near-optimal rather than the absolute minimum in Fig. 8).
+//!
+//! We realise each collective of the attention DAG (Fig. 3(b)) as a set of
+//! X-Y routes on the tile mesh, accumulate per-link packet loads, and charge
+//!   cost = total hop·packets  +  λ · max-link load
+//! where the second term penalises unbalanced layouts (Challenge 2).
+
+use crate::arch::{ChannelKind, Coord, Mesh};
+
+use super::candidates::Candidate;
+
+/// Per-collective cost breakdown (cycles under the X-Y baseline).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommCost {
+    pub broadcast1: u64,
+    pub reduction1: u64,
+    pub unicast1: u64,
+    pub reduction2: u64,
+    pub unicast2: u64,
+    pub broadcast2: u64,
+    pub reduction3: u64,
+    /// Peak per-link load (packets) — the balance term.
+    pub max_link_load: u64,
+}
+
+impl CommCost {
+    /// Total communication time: hop-cycles plus the congestion penalty.
+    pub fn total(&self, lambda: f64) -> f64 {
+        let hops = self.broadcast1
+            + self.reduction1
+            + self.unicast1
+            + self.reduction2
+            + self.unicast2
+            + self.broadcast2
+            + self.reduction3;
+        hops as f64 + lambda * self.max_link_load as f64
+    }
+}
+
+/// X-Y cost evaluator for one tile geometry.
+pub struct CostModel {
+    pub dc: usize,
+    pub mesh: Mesh,
+    /// Packets per C-element sub-vector (C·16 bits / packet width).
+    pub packets_per_vec: u64,
+    /// Congestion penalty weight λ.
+    pub lambda: f64,
+}
+
+impl CostModel {
+    pub fn new(dc: usize, xb: usize, packet_bits: u32) -> Self {
+        let side = (2 * dc) as u16;
+        let elems_per_packet = (packet_bits / 16).max(1) as u64;
+        Self {
+            dc,
+            mesh: Mesh::new(side, side),
+            packets_per_vec: (xb as u64).div_ceil(elems_per_packet),
+            lambda: 4.0,
+        }
+    }
+
+    /// Evaluate the total communication cost of `cand`.
+    pub fn evaluate(&self, cand: &Candidate) -> CommCost {
+        let dc = self.dc as u16;
+        let pv = self.packets_per_vec;
+        let mut cost = CommCost::default();
+        // link load keyed by (from,to) linearised — use a flat map.
+        let mut load = LinkLoad::new(&self.mesh);
+
+        // Broadcast 1: the input sub-vector x_i enters at the west edge row
+        // of each target and travels to every Q/K/V sub-matrix (i, j).
+        for ch in [ChannelKind::Q, ChannelKind::K, ChannelKind::V] {
+            for i in 0..dc {
+                for j in 0..dc {
+                    let dst = cand.submatrix_coord(ch, i, j, self.dc);
+                    let src = Coord::new(0, dst.y);
+                    cost.broadcast1 += self.route(&mut load, src, dst, pv);
+                }
+            }
+        }
+
+        // Reduction 1: partial sums of weight-column j (Q/K) or weight-row
+        // chains (V) hop along consecutive sub-matrices to the chain tail.
+        for ch in [ChannelKind::Q, ChannelKind::K, ChannelKind::V] {
+            for j in 0..dc {
+                for i in 1..dc {
+                    let a = cand.submatrix_coord(ch, i - 1, j, self.dc);
+                    let b = cand.submatrix_coord(ch, i, j, self.dc);
+                    cost.reduction1 += self.route(&mut load, a, b, pv);
+                }
+            }
+        }
+
+        // Unicast 1: K-channel chain tails stream shards to the matching
+        // Q-channel positions (same weight column).
+        for j in 0..dc {
+            let k_tail = cand.submatrix_coord(ChannelKind::K, dc - 1, j, self.dc);
+            let q_tail = cand.submatrix_coord(ChannelKind::Q, dc - 1, j, self.dc);
+            cost.unicast1 += self.route(&mut load, k_tail, q_tail, pv * dc as u64);
+        }
+
+        // Reduction 2: partial attention scores reduce across the Q channel's
+        // column tails (vertical reduction across RGs).
+        for j in 1..dc {
+            let a = cand.submatrix_coord(ChannelKind::Q, dc - 1, j - 1, self.dc);
+            let b = cand.submatrix_coord(ChannelKind::Q, dc - 1, j, self.dc);
+            cost.reduction2 += self.route(&mut load, a, b, pv);
+        }
+
+        // Unicast 2: softmaxed score shards flow from the Q-channel reduce
+        // tail through the V-channel columns to the O channel.
+        let q_out = cand.submatrix_coord(ChannelKind::Q, dc - 1, dc - 1, self.dc);
+        for j in 0..dc {
+            let v_head = cand.submatrix_coord(ChannelKind::V, 0, j, self.dc);
+            cost.unicast2 += self.route(&mut load, q_out, v_head, pv);
+            let v_tail = cand.submatrix_coord(ChannelKind::V, dc - 1, j, self.dc);
+            let o_head = cand.submatrix_coord(ChannelKind::O, j, 0, self.dc);
+            cost.unicast2 += self.route(&mut load, v_tail, o_head, pv);
+        }
+
+        // Broadcast 2: each finished O shard is broadcast along its O-channel
+        // row-wise partition (row j of W_O).
+        for j in 0..dc {
+            let head = cand.submatrix_coord(ChannelKind::O, j, 0, self.dc);
+            for col in 1..dc {
+                let dst = cand.submatrix_coord(ChannelKind::O, j, col, self.dc);
+                cost.broadcast2 += self.route(&mut load, head, dst, pv);
+            }
+        }
+
+        // Reduction 3: final vertical reduction across O-channel rows.
+        for j in 1..dc {
+            let a = cand.submatrix_coord(ChannelKind::O, j - 1, dc - 1, self.dc);
+            let b = cand.submatrix_coord(ChannelKind::O, j, dc - 1, self.dc);
+            cost.reduction3 += self.route(&mut load, a, b, pv);
+        }
+
+        cost.max_link_load = load.max();
+        cost
+    }
+
+    /// Add one transfer along the X-Y route; returns hop·packets cycles.
+    fn route(&self, load: &mut LinkLoad, src: Coord, dst: Coord, packets: u64) -> u64 {
+        if src == dst {
+            return 0;
+        }
+        let mut prev = src;
+        for next in self.mesh.xy_route(src, dst) {
+            load.add(&self.mesh, prev, next, packets);
+            prev = next;
+        }
+        src.manhattan(dst) as u64 * packets
+    }
+}
+
+/// Per-directed-link packet counters.
+struct LinkLoad {
+    counts: Vec<u64>,
+    width: usize,
+}
+
+impl LinkLoad {
+    fn new(mesh: &Mesh) -> Self {
+        // 4 directions per node upper-bounds the directed links.
+        Self { counts: vec![0; mesh.len() * 4], width: mesh.width as usize }
+    }
+
+    fn add(&mut self, mesh: &Mesh, from: Coord, to: Coord, packets: u64) {
+        let dir = if to.x > from.x {
+            0
+        } else if to.x < from.x {
+            1
+        } else if to.y > from.y {
+            2
+        } else {
+            3
+        };
+        let idx = mesh.index(from) * 4 + dir;
+        let _ = self.width;
+        self.counts[idx] += packets;
+    }
+
+    fn max(&self) -> u64 {
+        self.counts.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::candidates::enumerate;
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(16, 128, 64)
+    }
+
+    #[test]
+    fn packets_per_vec_table1() {
+        // 128 elements × 16 bit / 64-bit packets = 32 packets.
+        assert_eq!(model().packets_per_vec, 32);
+    }
+
+    #[test]
+    fn costs_vary_across_candidates() {
+        let m = model();
+        let cands = enumerate(16);
+        let costs: Vec<f64> = cands.iter().step_by(37).map(|c| m.evaluate(c).total(m.lambda)).collect();
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 1.5 * min, "DSE must discriminate: min={min} max={max}");
+    }
+
+    #[test]
+    fn cost_components_all_positive() {
+        let m = model();
+        let cands = enumerate(16);
+        let c = m.evaluate(&cands[0]);
+        assert!(c.broadcast1 > 0);
+        assert!(c.reduction1 > 0);
+        assert!(c.unicast1 > 0);
+        assert!(c.unicast2 > 0);
+        assert!(c.broadcast2 > 0);
+        assert!(c.max_link_load > 0);
+    }
+
+    #[test]
+    fn route_charges_manhattan_times_packets() {
+        let m = model();
+        let mut load = LinkLoad::new(&m.mesh);
+        let c = m.route(&mut load, Coord::new(0, 0), Coord::new(3, 2), 10);
+        assert_eq!(c, 50);
+        assert_eq!(load.max(), 10);
+        assert_eq!(m.route(&mut load, Coord::new(1, 1), Coord::new(1, 1), 10), 0);
+    }
+
+    #[test]
+    fn evaluation_deterministic() {
+        let m = model();
+        let cands = enumerate(16);
+        assert_eq!(m.evaluate(&cands[7]), m.evaluate(&cands[7]));
+    }
+}

@@ -1,0 +1,21 @@
+//! Spatial mapping (paper §III-B): assigning partitioned weight sub-matrices
+//! to crossbar arrays under the three heuristic constraints, scoring
+//! candidates by X-Y-routing communication time, and exhaustively searching
+//! the constrained space (Fig. 8).
+//!
+//! Heuristic constraints (verbatim from the paper):
+//!  1. sub-matrices of one weight stay in a spatially proximate region;
+//!  2. the region is rectangular;
+//!  3. sub-matrices are ordered row-major or column-major within it.
+//!
+//! The unconstrained space for a single 1024×1024 weight is 64P64 ≈ 1.3e89;
+//! the constrained space enumerated here is a few thousand candidates and
+//! explores in well under the paper's 20 s budget.
+
+pub mod candidates;
+pub mod cost;
+pub mod search;
+
+pub use candidates::{Candidate, ChannelLayout, Ordering, Region, TilingFamily};
+pub use cost::{CommCost, CostModel};
+pub use search::{explore, paper_mapping, ExploreResult};

@@ -1,0 +1,9 @@
+//! LLM model descriptions: Llama-family shape presets, per-layer operation
+//! shapes, and the static/dynamic data-stationarity algebra of paper
+//! Eqs. (1)–(3).
+
+pub mod presets;
+pub mod stationarity;
+
+pub use presets::{ModelPreset, ModelShape};
+pub use stationarity::Stationarity;

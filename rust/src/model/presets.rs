@@ -1,0 +1,178 @@
+//! Llama-family architecture shape presets (public model cards) plus the
+//! tiny configuration matching the AOT artifacts built by python/compile.
+
+use std::fmt;
+
+/// Model shape parameters relevant to mapping and cycle simulation.
+/// Weight *values* are irrelevant to the simulator — only shapes matter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads (GQA); equals `n_heads` for MHA. The paper degrades GQA to
+    /// the MHA mapping by K/V duplication, which we mirror.
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+}
+
+/// Named presets used throughout the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelPreset {
+    /// Llama 3.2-1B — Table I's reference configuration.
+    Llama1B,
+    /// Llama 3-8B — Table III row 1.
+    Llama8B,
+    /// Llama 2-13B — Table III row 2.
+    Llama13B,
+    /// The tiny model whose artifacts `make artifacts` builds (D=256, L=4).
+    Tiny,
+}
+
+impl ModelPreset {
+    pub const ALL: [ModelPreset; 4] =
+        [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B, ModelPreset::Tiny];
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "1b" | "llama1b" | "llama-3.2-1b" => Some(Self::Llama1B),
+            "8b" | "llama8b" | "llama-3-8b" => Some(Self::Llama8B),
+            "13b" | "llama13b" | "llama-2-13b" => Some(Self::Llama13B),
+            "tiny" => Some(Self::Tiny),
+            _ => None,
+        }
+    }
+
+    pub fn shape(self) -> ModelShape {
+        match self {
+            // Llama 3.2-1B: 16 layers, D=2048, 32 heads / 8 KV, FFN 8192.
+            ModelPreset::Llama1B => ModelShape {
+                name: "Llama 3.2-1B",
+                vocab: 128_256,
+                d_model: 2048,
+                n_layers: 16,
+                n_heads: 32,
+                n_kv_heads: 8,
+                d_ff: 8192,
+            },
+            // Llama 3-8B: 32 layers, D=4096, 32 heads / 8 KV, FFN 14336.
+            ModelPreset::Llama8B => ModelShape {
+                name: "Llama 3-8B",
+                vocab: 128_256,
+                d_model: 4096,
+                n_layers: 32,
+                n_heads: 32,
+                n_kv_heads: 8,
+                d_ff: 14336,
+            },
+            // Llama 2-13B: 40 layers, D=5120, 40 heads MHA, FFN 13824.
+            ModelPreset::Llama13B => ModelShape {
+                name: "Llama 2-13B",
+                vocab: 32_000,
+                d_model: 5120,
+                n_layers: 40,
+                n_heads: 40,
+                n_kv_heads: 40,
+                d_ff: 13824,
+            },
+            // Must match python/compile/model.py::TINY.
+            ModelPreset::Tiny => ModelShape {
+                name: "tiny-llama",
+                vocab: 512,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 4,
+                n_kv_heads: 4,
+                d_ff: 512,
+            },
+        }
+    }
+}
+
+impl fmt::Display for ModelPreset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.shape().name)
+    }
+}
+
+impl ModelShape {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Attention parameters per layer: 4·D² for MHA; GQA shrinks K/V but the
+    /// paper duplicates them back to the MHA mapping, so the *mapped* count
+    /// stays 4·D² (Eq. 1) while the *stored checkpoint* count is smaller.
+    pub fn attn_params_mapped(&self) -> usize {
+        4 * self.d_model * self.d_model
+    }
+
+    /// MLP parameters per layer (SwiGLU: gate + up + down).
+    pub fn mlp_params(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    /// Total mapped parameters (excluding embeddings — kept off-chip).
+    pub fn mapped_params(&self) -> usize {
+        self.n_layers * (self.attn_params_mapped() + self.mlp_params())
+    }
+
+    /// Approximate checkpoint parameter count (with GQA-reduced K/V and
+    /// embedding), used only for reporting.
+    pub fn checkpoint_params(&self) -> usize {
+        let kv = self.d_model * self.d_model * self.n_kv_heads / self.n_heads;
+        let attn = 2 * self.d_model * self.d_model + 2 * kv;
+        self.n_layers * (attn + self.mlp_params()) + self.vocab * self.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ModelPreset::parse("8b"), Some(ModelPreset::Llama8B));
+        assert_eq!(ModelPreset::parse("Llama-2-13b"), Some(ModelPreset::Llama13B));
+        assert_eq!(ModelPreset::parse("TINY"), Some(ModelPreset::Tiny));
+        assert_eq!(ModelPreset::parse("70b"), None);
+    }
+
+    #[test]
+    fn checkpoint_param_counts_plausible() {
+        // ±25% of the nominal sizes is fine — we exclude norms/rope tables.
+        let b1 = ModelPreset::Llama1B.shape().checkpoint_params() as f64;
+        assert!((0.75e9..1.6e9).contains(&b1), "1B params = {b1}");
+        let b8 = ModelPreset::Llama8B.shape().checkpoint_params() as f64;
+        assert!((6e9..9e9).contains(&b8), "8B params = {b8}");
+        let b13 = ModelPreset::Llama13B.shape().checkpoint_params() as f64;
+        assert!((11e9..15e9).contains(&b13), "13B params = {b13}");
+    }
+
+    #[test]
+    fn paper_scaling_example() {
+        // §VI-D: 1B → 8B has s_e = 2, s_h = 1.75, s_l = 2.
+        let a = ModelPreset::Llama1B.shape();
+        let b = ModelPreset::Llama8B.shape();
+        assert_eq!(b.d_model / a.d_model, 2);
+        assert!((b.d_ff as f64 / a.d_ff as f64 - 1.75).abs() < 1e-9);
+        assert_eq!(b.n_layers / a.n_layers, 2);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        let t = ModelPreset::Tiny.shape();
+        assert_eq!((t.vocab, t.d_model, t.n_layers, t.n_heads, t.d_ff), (512, 256, 4, 4, 512));
+    }
+
+    #[test]
+    fn d_head_divides() {
+        for p in ModelPreset::ALL {
+            let s = p.shape();
+            assert_eq!(s.d_head() * s.n_heads, s.d_model, "{}", s.name);
+        }
+    }
+}

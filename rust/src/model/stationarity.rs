@@ -1,0 +1,94 @@
+//! Data-stationarity algebra — paper Eqs. (1)–(3).
+//!
+//! Static data (pre-trained weights) per attention layer: 4·D².
+//! Dynamic data (runtime tensors Q/K/V/S/O + input) per layer: 5·S·D + S².
+//! The static/dynamic ratio collapses as S grows, which is the paper's
+//! motivating Challenge 1 and drives the PIM (DSMM) vs NoC (DDMM) split.
+
+/// Static/dynamic data accounting for one attention layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stationarity {
+    /// Embedding dimension D.
+    pub d_model: usize,
+    /// Sequence length S.
+    pub seq_len: usize,
+}
+
+impl Stationarity {
+    pub fn new(d_model: usize, seq_len: usize) -> Self {
+        Self { d_model, seq_len }
+    }
+
+    /// Eq. (1): DA_static = 4·D².
+    pub fn static_data(&self) -> u64 {
+        4 * (self.d_model as u64) * (self.d_model as u64)
+    }
+
+    /// Eq. (2): DA_dynamic = 5·S·D + S².
+    pub fn dynamic_data(&self) -> u64 {
+        let (s, d) = (self.seq_len as u64, self.d_model as u64);
+        5 * s * d + s * s
+    }
+
+    /// Eq. (3): the static : dynamic ratio.
+    pub fn ratio(&self) -> f64 {
+        self.static_data() as f64 / self.dynamic_data() as f64
+    }
+
+    /// Fraction of attention-layer *multiplications* that are DDMMs
+    /// (QKᵀ + S·V = 2·S²·D of 2·S²·D + 4·S·D² total MACs).
+    pub fn ddmm_fraction(&self) -> f64 {
+        let (s, d) = (self.seq_len as f64, self.d_model as f64);
+        let ddmm = 2.0 * s * s * d;
+        let dsmm = 4.0 * s * d * d;
+        ddmm / (ddmm + dsmm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Eq. (3)'s worked case: S = D gives ratio 4D² / 6D² = 2/3.
+    #[test]
+    fn ratio_at_s_equals_d() {
+        let st = Stationarity::new(1024, 1024);
+        assert!((st.ratio() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_dominates_at_long_context() {
+        let short = Stationarity::new(2048, 128);
+        let long = Stationarity::new(2048, 65_536);
+        assert!(short.ratio() > 1.0);
+        assert!(long.ratio() < 0.1);
+        assert!(long.dynamic_data() > long.static_data());
+    }
+
+    #[test]
+    fn ratio_monotonically_decreasing_in_s() {
+        let mut prev = f64::INFINITY;
+        for s in [64, 256, 1024, 4096, 16_384] {
+            let r = Stationarity::new(2048, s).ratio();
+            assert!(r < prev, "ratio must fall with S");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn ddmm_fraction_grows_with_s() {
+        let a = Stationarity::new(2048, 256).ddmm_fraction();
+        let b = Stationarity::new(2048, 8192).ddmm_fraction();
+        assert!(a < b);
+        // At S = 2D the DDMM share is 2·(2D)²·D / (2·(2D)²·D + 4·2D·D²) = 1/2.
+        let c = Stationarity::new(1024, 2048).ddmm_fraction();
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_small_numbers() {
+        let st = Stationarity::new(2, 3);
+        assert_eq!(st.static_data(), 16);
+        assert_eq!(st.dynamic_data(), 5 * 3 * 2 + 9);
+    }
+}

@@ -1,0 +1,387 @@
+//! Mesh-level instruction executor: runs an NPM [`Program`] on a grid of
+//! [`Router`]s + PIM PEs, cycle by cycle, with the NMC semantics of §V-A
+//! (one instruction at a time, each repeated `CMD_rep` cycles; CMD1/CMD2
+//! dispatched through the command crossbar to the selected routers).
+
+use crate::arch::{Coord, Dir, HwParams, Mesh};
+use crate::energy::{EnergyLedger, EventEnergy, EventKind};
+use crate::isa::{Instruction, Opcode, Program};
+use crate::pim::PimPe;
+
+use super::router::{Router, RouterConfig};
+
+/// Aggregate statistics of one simulated program.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimStats {
+    /// Total elapsed cycles (issue + repeats).
+    pub cycles: u64,
+    /// Cycles attributed per opcode class (Fig. 11 breakdown).
+    pub class_cycles: std::collections::BTreeMap<&'static str, u64>,
+    /// Total packets created / delivered-to-scratchpad or consumed.
+    pub packets_created: u64,
+    pub packets_consumed: u64,
+    /// Total hop events.
+    pub hops: u64,
+    /// Stall events (backpressure).
+    pub stalls: u64,
+}
+
+/// Instruction-level mesh simulator.
+pub struct MeshSim {
+    pub mesh: Mesh,
+    pub hw: HwParams,
+    pub routers: Vec<Router>,
+    pub pes: Vec<PimPe>,
+    /// Pending PE output packets: (router index, remaining packets).
+    pe_out_pending: Vec<u64>,
+    /// Router indices with non-zero PE backlog (drain worklist).
+    pe_drain_list: Vec<usize>,
+    /// Reused per-step delivery buffer (perf: avoids per-cycle allocation).
+    deliveries: Vec<(usize, Dir, u64, u8)>,
+    pub ledger: EnergyLedger,
+    energy: EventEnergy,
+    pub stats: SimStats,
+}
+
+impl MeshSim {
+    pub fn new(width: u16, height: u16, hw: HwParams) -> Self {
+        let mesh = Mesh::new(width, height);
+        let cfg = RouterConfig::from_hw(&hw);
+        let n = mesh.len();
+        let mut pes: Vec<PimPe> = (0..n).map(|_| PimPe::default()).collect();
+        // Crossbars come up programmed (deployment happens before serving).
+        for (i, pe) in pes.iter_mut().enumerate() {
+            pe.program(i as u32);
+        }
+        Self {
+            mesh,
+            hw,
+            routers: (0..n).map(|_| Router::new(cfg)).collect(),
+            pes,
+            pe_out_pending: vec![0; n],
+            pe_drain_list: Vec::new(),
+            deliveries: Vec::new(),
+            ledger: EnergyLedger::new(),
+            energy: EventEnergy::default(),
+            stats: SimStats::default(),
+        }
+    }
+
+    /// Pre-load `words` of scratchpad data into router (x, y) — models
+    /// prior-phase results already resident (e.g. the KV cache).
+    pub fn preload_spad(&mut self, c: Coord, words: usize) {
+        let idx = self.mesh.index(c);
+        let r = &mut self.routers[idx];
+        r.spad_used = (r.spad_used + words).min(r.cfg.spad_words);
+    }
+
+    /// Run a complete program; returns the cycles it took.
+    pub fn run(&mut self, prog: &Program) -> anyhow::Result<u64> {
+        let start_cycles = self.stats.cycles;
+        // Reused scratch for the per-instruction router selection — the
+        // command crossbar configuration is fixed for all CMD_rep repeats,
+        // so it is resolved once per instruction, not per cycle (perf pass
+        // §Perf change 2: ~20× on large meshes).
+        let mut selected: Vec<(usize, crate::isa::Cmd)> = Vec::new();
+        for instr in &prog.instrs {
+            // one issue cycle for fetch/decode through the command crossbar
+            self.stats.cycles += 1;
+            *self.stats.class_cycles.entry("ctrl").or_insert(0) += 1;
+            self.ledger.add(&self.energy, EventKind::CtrlIssue, 1);
+            if instr.cmd1.op == Opcode::Halt {
+                break;
+            }
+            selected.clear();
+            for y in 0..self.mesh.height {
+                for x in 0..self.mesh.width {
+                    match instr.sel.command_for(x, y) {
+                        Some(1) => selected.push((self.mesh.index(Coord::new(x, y)), instr.cmd1)),
+                        Some(2) => selected.push((self.mesh.index(Coord::new(x, y)), instr.cmd2)),
+                        _ => {}
+                    }
+                }
+            }
+            for _ in 0..instr.rep.max(1) {
+                self.step(instr, &selected)?;
+            }
+        }
+        Ok(self.stats.cycles - start_cycles)
+    }
+
+    /// Execute one repeat-cycle of an instruction across the pre-resolved
+    /// selected routers. Two sweep phases (collect sends, then deliver)
+    /// keep the cycle semantics order-independent.
+    fn step(&mut self, instr: &Instruction, selected: &[(usize, crate::isa::Cmd)]) -> anyhow::Result<()> {
+        self.stats.cycles += 1;
+        // Charge the cycle to the dominant (CMD1) class.
+        *self.stats.class_cycles.entry(instr.cmd1.op.class()).or_insert(0) += 1;
+
+        // (router index, destination dir, payload, source arg)
+        let mut deliveries = std::mem::take(&mut self.deliveries);
+        deliveries.clear();
+        // Per-step event tallies, flushed to the ledger once per cycle —
+        // avoids O(selected routers) BTreeMap lookups per cycle (perf pass
+        // §Perf change 4, the dominant mesh-executor cost).
+        let (mut n_hops, mut n_ircu, mut n_sprd, mut n_spwr, mut n_mvm) =
+            (0u64, 0u64, 0u64, 0u64, 0u64);
+
+        {
+            for &(idx, cmd) in selected {
+                match cmd.op {
+                    Opcode::Nop | Opcode::Sync | Opcode::Halt => {}
+                    Opcode::RouteN | Opcode::RouteE | Opcode::RouteS | Opcode::RouteW
+                    | Opcode::RoutePe | Opcode::ReduceE | Opcode::ReduceS | Opcode::BcastRow
+                    | Opcode::BcastCol => {
+                        let dir = match cmd.op {
+                            Opcode::RouteN => Dir::North,
+                            Opcode::RouteE | Opcode::ReduceE | Opcode::BcastRow => Dir::East,
+                            Opcode::RouteS | Opcode::ReduceS | Opcode::BcastCol => Dir::South,
+                            Opcode::RouteW => Dir::West,
+                            _ => Dir::Pe,
+                        };
+                        if let Some(p) = self.routers[idx].pop_source(cmd.arg) {
+                            deliveries.push((idx, dir, p, cmd.arg));
+                        }
+                        if cmd.op == Opcode::ReduceE || cmd.op == Opcode::ReduceS {
+                            // the add half of a pipelined reduction
+                            self.routers[idx].counters.ircu_cycles += 1;
+                            n_ircu += 1;
+                        }
+                        if cmd.op == Opcode::BcastRow || cmd.op == Opcode::BcastCol {
+                            // multicast also deposits a copy locally
+                            self.routers[idx].counters.spad_writes += 1;
+                            n_spwr += 1;
+                        }
+                    }
+                    Opcode::Mac | Opcode::Add | Opcode::Mul | Opcode::ExpMax => {
+                        // only consume a packet if an operand was available
+                        if self.routers[idx].ircu_op(cmd.arg) {
+                            self.stats.packets_consumed += 1;
+                        }
+                        n_ircu += 1;
+                    }
+                    Opcode::SpadRd => {
+                        if self.routers[idx].spad_read() {
+                            n_sprd += 1;
+                            self.stats.packets_created += 1;
+                        }
+                    }
+                    Opcode::SpadWr => {
+                        if self.routers[idx].spad_write(cmd.arg) {
+                            n_spwr += 1;
+                            self.stats.packets_consumed += 1;
+                        }
+                    }
+                    Opcode::PeMvm => {
+                        self.pes[idx].mvm()?;
+                        n_mvm += 1;
+                        // results drain into the PE port over following cycles
+                        if self.pe_out_pending[idx] == 0 {
+                            self.pe_drain_list.push(idx);
+                        }
+                        self.pe_out_pending[idx] +=
+                            (self.hw.xb as u64).div_ceil(self.hw.elems_per_packet() as u64);
+                    }
+                }
+            }
+        }
+
+        // PE output drain: one packet per cycle into the local PE FIFO.
+        // Only routers with a non-zero backlog are visited (perf pass
+        // §Perf change 3 — avoids an O(mesh) scan on every cycle).
+        let mut drain = std::mem::take(&mut self.pe_drain_list);
+        drain.retain(|&idx| {
+            debug_assert!(self.pe_out_pending[idx] > 0);
+            if self.routers[idx].accept(Dir::Pe, 0xBEEF) {
+                self.pe_out_pending[idx] -= 1;
+                self.stats.packets_created += 1;
+            }
+            self.pe_out_pending[idx] > 0
+        });
+        self.pe_drain_list = drain;
+
+        // Delivery phase: move packets to neighbour FIFOs with backpressure.
+        for (idx, dir, payload, src_arg) in deliveries.drain(..) {
+            let from = self.mesh.coord(idx);
+            match dir {
+                Dir::Pe => {
+                    // deliver to the local PE (input staging) — consumed.
+                    self.stats.packets_consumed += 1;
+                    self.stats.hops += 1;
+                    n_hops += 1;
+                }
+                d => {
+                    if let Some(to) = self.mesh.neighbor(from, d) {
+                        let tidx = self.mesh.index(to);
+                        let back = d.opposite().expect("mesh dir");
+                        if self.routers[tidx].accept(back, payload) {
+                            self.stats.hops += 1;
+                            self.routers[idx].counters.hops += 1;
+                            n_hops += 1;
+                        } else {
+                            // backpressure: restore to the source queue
+                            self.routers[idx].unpop_source(src_arg, payload);
+                            self.stats.stalls += 1;
+                        }
+                    } else {
+                        // edge exit: counts as delivered off-tile (to the
+                        // neighbouring tile or the I/O ring)
+                        self.stats.hops += 1;
+                        self.stats.packets_consumed += 1;
+                        n_hops += 1;
+                    }
+                }
+            }
+        }
+        // flush the per-step tallies
+        if n_hops > 0 {
+            self.ledger.add(&self.energy, EventKind::RouterHop, n_hops);
+        }
+        if n_ircu > 0 {
+            self.ledger.add(&self.energy, EventKind::IrcuCycle, n_ircu);
+        }
+        if n_sprd > 0 {
+            self.ledger.add(&self.energy, EventKind::SpadRead, n_sprd);
+        }
+        if n_spwr > 0 {
+            self.ledger.add(&self.energy, EventKind::SpadWrite, n_spwr);
+        }
+        if n_mvm > 0 {
+            self.ledger.add(&self.energy, EventKind::PeMvm, n_mvm);
+        }
+        self.deliveries = deliveries;
+        Ok(())
+    }
+
+    /// Packets currently buffered across the whole mesh. PE output backlog
+    /// (`pe_out_pending`) is *not* included: those results have not been
+    /// materialised into packets yet (creation is counted at FIFO entry).
+    pub fn in_flight(&self) -> u64 {
+        self.routers.iter().map(|r| r.buffered() as u64).sum::<u64>()
+    }
+
+    /// Crossbar results awaiting drain into PE FIFOs.
+    pub fn pe_backlog(&self) -> u64 {
+        self.pe_out_pending.iter().sum()
+    }
+
+    /// Conservation check: created = consumed + in flight (hops move, never
+    /// create or destroy).
+    pub fn conservation_ok(&self) -> bool {
+        self.stats.packets_created == self.stats.packets_consumed + self.in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::router::port_index;
+    use super::*;
+    use crate::isa::{Cmd, SelBits};
+
+    fn sim4() -> MeshSim {
+        MeshSim::new(4, 4, HwParams::default())
+    }
+
+    fn uni(op: Opcode, arg: u8, rep: u16, sel: SelBits) -> Instruction {
+        Instruction::uni(Cmd::new(op, arg), rep, sel)
+    }
+
+    #[test]
+    fn pe_mvm_creates_packets() {
+        let mut sim = sim4();
+        let mut p = Program::new("mvm");
+        p.push(uni(Opcode::PeMvm, 0, 1, SelBits::Rect { rlo: 0, rhi: 1, clo: 0, chi: 1 }));
+        // drain cycles: 128/4 = 32 packets at 1/cycle
+        p.push(uni(Opcode::Nop, 0, 40, SelBits::All));
+        let p = p.sealed();
+        sim.run(&p).unwrap();
+        assert_eq!(sim.stats.packets_created, 32);
+        assert!(sim.conservation_ok());
+    }
+
+    #[test]
+    fn route_east_moves_packet() {
+        let mut sim = sim4();
+        // seed a packet into router (0,0)'s west FIFO
+        sim.routers[0].accept(Dir::West, 42);
+        sim.stats.packets_created += 1;
+        let mut p = Program::new("route");
+        p.push(uni(Opcode::RouteE, 4, 1, SelBits::Rect { rlo: 0, rhi: 1, clo: 0, chi: 1 }));
+        sim.run(&p.sealed()).unwrap();
+        // packet now in router (1,0)'s west FIFO
+        let r1 = &sim.routers[1];
+        assert_eq!(r1.fifos[port_index(Dir::West)].front(), Some(&42));
+        assert_eq!(sim.stats.hops, 1);
+        assert!(sim.conservation_ok());
+    }
+
+    #[test]
+    fn edge_exit_consumes() {
+        let mut sim = sim4();
+        sim.routers[3].accept(Dir::West, 9); // router (3,0), east edge
+        sim.stats.packets_created += 1;
+        let mut p = Program::new("exit");
+        p.push(uni(Opcode::RouteE, 4, 1, SelBits::Rect { rlo: 0, rhi: 1, clo: 3, chi: 4 }));
+        sim.run(&p.sealed()).unwrap();
+        assert_eq!(sim.stats.packets_consumed, 1);
+        assert!(sim.conservation_ok());
+    }
+
+    #[test]
+    fn backpressure_stalls_not_drops() {
+        let mut sim = sim4();
+        // fill router (1,0)'s west FIFO
+        for i in 0..32 {
+            sim.routers[1].accept(Dir::West, i);
+            sim.stats.packets_created += 1;
+        }
+        sim.routers[0].accept(Dir::West, 99);
+        sim.stats.packets_created += 1;
+        let mut p = Program::new("bp");
+        p.push(uni(Opcode::RouteE, 4, 3, SelBits::Rect { rlo: 0, rhi: 1, clo: 0, chi: 1 }));
+        sim.run(&p.sealed()).unwrap();
+        assert!(sim.stats.stalls >= 3, "every attempt must stall");
+        // the packet is still buffered at (0,0)
+        assert_eq!(sim.routers[0].buffered(), 1);
+        assert!(sim.conservation_ok());
+    }
+
+    #[test]
+    fn spad_pipeline_read_route_write() {
+        let mut sim = sim4();
+        sim.preload_spad(Coord::new(0, 0), 100);
+        let mut p = Program::new("pipe");
+        // (0,0): read spad into egress; route east; (1,0): write to spad
+        p.push(uni(Opcode::SpadRd, 0, 8, SelBits::Rect { rlo: 0, rhi: 1, clo: 0, chi: 1 }));
+        p.push(uni(Opcode::RouteE, 0, 8, SelBits::Rect { rlo: 0, rhi: 1, clo: 0, chi: 1 }));
+        p.push(uni(Opcode::SpadWr, 4, 8, SelBits::Rect { rlo: 0, rhi: 1, clo: 1, chi: 2 }));
+        sim.run(&p.sealed()).unwrap();
+        assert_eq!(sim.routers[1].spad_used, 8);
+        assert_eq!(sim.stats.packets_created, 8);
+        assert_eq!(sim.stats.packets_consumed, 8);
+        assert!(sim.conservation_ok());
+    }
+
+    #[test]
+    fn class_cycles_accumulate() {
+        let mut sim = sim4();
+        let mut p = Program::new("cls");
+        p.push(uni(Opcode::Mac, 0, 10, SelBits::All));
+        p.push(uni(Opcode::RouteE, 0, 5, SelBits::All));
+        sim.run(&p.sealed()).unwrap();
+        assert_eq!(sim.stats.class_cycles["mul"], 10);
+        assert_eq!(sim.stats.class_cycles["send"], 5);
+        assert!(sim.stats.class_cycles["ctrl"] >= 3);
+    }
+
+    #[test]
+    fn energy_ledger_populates() {
+        let mut sim = sim4();
+        let mut p = Program::new("energy");
+        p.push(uni(Opcode::PeMvm, 0, 1, SelBits::All));
+        p.push(uni(Opcode::Mac, 0, 4, SelBits::All));
+        sim.run(&p.sealed()).unwrap();
+        assert!(sim.ledger.dynamic_pj > 0.0);
+        assert!(sim.ledger.counts[&EventKind::PeMvm] == 16);
+    }
+}

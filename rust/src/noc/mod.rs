@@ -1,0 +1,15 @@
+//! NoC hardware model (paper §V-B): 5-port routers with per-port input
+//! FIFOs, an in-router compute unit (IRCU) with a MAC array, a 4-input
+//! 5-output crossbar with multicast, and the mesh-level packet simulator
+//! that executes NPM instructions cycle by cycle.
+//!
+//! The simulator is *functional at packet granularity*: payloads are opaque
+//! token counts (the numerics live in the PJRT-executed artifacts), but
+//! movement, buffering, and bandwidth are modelled per cycle, so FIFO
+//! overflow, link contention, and conservation can be property-tested.
+
+pub mod mesh;
+pub mod router;
+
+pub use mesh::{MeshSim, SimStats};
+pub use router::{Router, RouterConfig};

@@ -1,0 +1,227 @@
+//! Single-router model: five input FIFOs (N/E/S/W/PE), a local egress
+//! staging queue fed by scratchpad reads, the IRCU, and event counters.
+
+use std::collections::VecDeque;
+
+use crate::arch::Dir;
+
+/// Static router configuration derived from `HwParams`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterConfig {
+    /// Input FIFO capacity in packets (rbuf_bytes / packet bytes).
+    pub fifo_packets: usize,
+    /// Scratchpad capacity in 16-bit words.
+    pub spad_words: usize,
+    /// MACs in the IRCU.
+    pub macs: usize,
+}
+
+impl RouterConfig {
+    pub fn from_hw(hw: &crate::arch::HwParams) -> Self {
+        Self {
+            fifo_packets: (hw.rbuf_bytes / (hw.packet_bits as usize / 8)).max(1),
+            spad_words: hw.scratchpad_words(),
+            macs: hw.ircu_macs,
+        }
+    }
+}
+
+/// Per-router counters the energy ledger consumes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterCounters {
+    pub hops: u64,
+    pub ircu_cycles: u64,
+    pub spad_reads: u64,
+    pub spad_writes: u64,
+    pub stalls: u64,
+    pub drops: u64,
+}
+
+/// One router's dynamic state. A "packet" is an opaque payload id — the
+/// simulator tracks movement and occupancy, not numerics.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub cfg: RouterConfig,
+    /// Input FIFOs indexed by [`port_index`] (N, E, S, W, PE).
+    pub fifos: [VecDeque<u64>; 5],
+    /// Egress staging queue (fed by SpadRd, drained by Route*/Bcast*).
+    pub egress: VecDeque<u64>,
+    /// Scratchpad occupancy in words (contents abstracted).
+    pub spad_used: usize,
+    pub counters: RouterCounters,
+}
+
+/// FIFO index for a port direction.
+pub fn port_index(d: Dir) -> usize {
+    match d {
+        Dir::North => 0,
+        Dir::East => 1,
+        Dir::South => 2,
+        Dir::West => 3,
+        Dir::Pe => 4,
+    }
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Self {
+            cfg,
+            fifos: Default::default(),
+            egress: VecDeque::new(),
+            spad_used: 0,
+            counters: RouterCounters::default(),
+        }
+    }
+
+    /// Total packets buffered anywhere in this router.
+    pub fn buffered(&self) -> usize {
+        self.fifos.iter().map(|f| f.len()).sum::<usize>() + self.egress.len()
+    }
+
+    /// Try to accept a packet into the `from` input FIFO. Returns false on
+    /// backpressure (FIFO full) — the sender must retry (stall).
+    pub fn accept(&mut self, from: Dir, payload: u64) -> bool {
+        let f = &mut self.fifos[port_index(from)];
+        if f.len() >= self.cfg.fifo_packets {
+            self.counters.stalls += 1;
+            return false;
+        }
+        f.push_back(payload);
+        true
+    }
+
+    /// Pop a packet from the source encoded in a command arg:
+    /// 0 = egress (local), 1..=4 = N/E/S/W input FIFO, 5 = PE FIFO.
+    pub fn pop_source(&mut self, arg: u8) -> Option<u64> {
+        match arg {
+            0 => self.egress.pop_front(),
+            1 => self.fifos[0].pop_front(),
+            2 => self.fifos[1].pop_front(),
+            3 => self.fifos[2].pop_front(),
+            4 => self.fifos[3].pop_front(),
+            5 => self.fifos[4].pop_front(),
+            _ => None,
+        }
+    }
+
+    /// Undo a pop (packet could not be delivered this cycle).
+    pub fn unpop_source(&mut self, arg: u8, payload: u64) {
+        match arg {
+            0 => self.egress.push_front(payload),
+            1 => self.fifos[0].push_front(payload),
+            2 => self.fifos[1].push_front(payload),
+            3 => self.fifos[2].push_front(payload),
+            4 => self.fifos[3].push_front(payload),
+            5 => self.fifos[4].push_front(payload),
+            _ => {}
+        }
+    }
+
+    /// Scratchpad read of one word burst → one packet into egress.
+    /// Returns false if nothing to read or egress is saturated.
+    pub fn spad_read(&mut self) -> bool {
+        if self.spad_used == 0 || self.egress.len() >= self.cfg.fifo_packets * 2 {
+            return false;
+        }
+        self.counters.spad_reads += 1;
+        self.egress.push_back(0xC0FFEE);
+        true
+    }
+
+    /// Scratchpad write of one packet popped from `arg`'s source.
+    pub fn spad_write(&mut self, arg: u8) -> bool {
+        if self.spad_used >= self.cfg.spad_words {
+            self.counters.drops += 1;
+            return false;
+        }
+        if self.pop_source(arg).is_some() {
+            self.counters.spad_writes += 1;
+            self.spad_used += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One IRCU cycle consuming (up to) one operand packet from `arg`.
+    /// Compute results stay local (they surface later via SpadRd).
+    pub fn ircu_op(&mut self, arg: u8) -> bool {
+        self.counters.ircu_cycles += 1;
+        if let Some(_p) = self.pop_source(arg) {
+            // operand consumed into the accumulator file
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwParams;
+
+    fn router() -> Router {
+        Router::new(RouterConfig::from_hw(&HwParams::default()))
+    }
+
+    #[test]
+    fn config_from_table1() {
+        let cfg = RouterConfig::from_hw(&HwParams::default());
+        assert_eq!(cfg.fifo_packets, 32); // 256 B / 8 B packets
+        assert_eq!(cfg.spad_words, 16 * 1024);
+        assert_eq!(cfg.macs, 16);
+    }
+
+    #[test]
+    fn fifo_backpressure() {
+        let mut r = router();
+        for i in 0..32 {
+            assert!(r.accept(Dir::West, i));
+        }
+        assert!(!r.accept(Dir::West, 99), "33rd packet must stall");
+        assert_eq!(r.counters.stalls, 1);
+        assert_eq!(r.buffered(), 32);
+    }
+
+    #[test]
+    fn pop_unpop_roundtrip() {
+        let mut r = router();
+        r.accept(Dir::North, 7);
+        let p = r.pop_source(1).unwrap();
+        assert_eq!(p, 7);
+        r.unpop_source(1, p);
+        assert_eq!(r.fifos[0].front(), Some(&7));
+    }
+
+    #[test]
+    fn spad_write_then_read() {
+        let mut r = router();
+        r.accept(Dir::Pe, 1);
+        assert!(r.spad_write(5));
+        assert_eq!(r.spad_used, 1);
+        assert!(r.spad_read());
+        assert_eq!(r.egress.len(), 1);
+        assert_eq!(r.counters.spad_reads, 1);
+    }
+
+    #[test]
+    fn spad_capacity_enforced() {
+        let mut r = router();
+        r.cfg.spad_words = 2;
+        r.accept(Dir::West, 1);
+        r.accept(Dir::West, 2);
+        r.accept(Dir::West, 3);
+        assert!(r.spad_write(4));
+        assert!(r.spad_write(4));
+        assert!(!r.spad_write(4), "third write exceeds capacity");
+        assert_eq!(r.counters.drops, 1);
+    }
+
+    #[test]
+    fn ircu_counts_even_when_starved() {
+        let mut r = router();
+        assert!(!r.ircu_op(1), "no operand");
+        assert_eq!(r.counters.ircu_cycles, 1);
+    }
+}

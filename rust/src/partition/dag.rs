@@ -1,0 +1,256 @@
+//! The partitioned attention-layer DAG of Fig. 3(b).
+//!
+//! Nodes are operations: PIM DSMMs (projections, orange in the figure),
+//! IRCU DDMMs (QKᵀ and S·V), in-router adds/muls (reductions, softmax
+//! pieces). Edges carry the collective-communication kind the scheduler
+//! must realise: Broadcast 1/2, Reduction 1/2/3, Unicast 1/2.
+
+use std::collections::HashMap;
+
+use crate::arch::ChannelKind;
+
+/// Node identifier (index into [`AttentionDag::nodes`]).
+pub type NodeId = usize;
+
+/// Operation kind a DAG node performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dynamic·static matmul on a PIM crossbar (projection sub-matrix).
+    Dsmm { channel: ChannelKind },
+    /// Dynamic·dynamic matmul on an IRCU (QKᵀ or S·V shard product).
+    Ddmm { score: bool },
+    /// Partial-result addition in a router ("R-Add").
+    RAdd,
+    /// Element-wise multiply in a router ("R-Mul", softmax rescale).
+    RMul,
+    /// Softmax pieces (row-max, exp, normalise) on the IRCU.
+    Softmax,
+    /// Tensor source (input activations, KV cache reads).
+    Source,
+    /// Tensor sink (layer output).
+    Sink,
+}
+
+/// Collective-communication kind annotating an edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    /// Broadcast 1: input activations into Q/K/V channels.
+    Broadcast1,
+    /// Broadcast 2: O shards across the O-channel RG.
+    Broadcast2,
+    /// Reduction 1: DSMM partial sums within an RG.
+    Reduction1,
+    /// Reduction 2: partial attention scores across Q-channel RGs.
+    Reduction2,
+    /// Reduction 3: final output reduction in the O channel.
+    Reduction3,
+    /// Unicast 1: K shards K-channel → Q-channel (same row).
+    Unicast1,
+    /// Unicast 2: V-channel partials → O-channel scratchpad.
+    Unicast2,
+    /// Plain local dependency (same macro, no NoC traffic).
+    Local,
+}
+
+/// A DAG node: operation + the sub-matrix / shard coordinates it touches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DagNode {
+    pub op: OpKind,
+    /// Sub-matrix grid coordinates for DSMMs, shard coordinates for DDMMs.
+    pub coords: (u16, u16),
+    pub label: String,
+}
+
+/// A directed edge with its communication kind and payload element count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagEdge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub comm: CommKind,
+    /// Number of 16-bit elements moved along this edge per shard pass.
+    pub elems: u32,
+}
+
+/// The partitioned attention layer as a DAG (Fig. 3(b)).
+#[derive(Debug, Clone, Default)]
+pub struct AttentionDag {
+    pub nodes: Vec<DagNode>,
+    pub edges: Vec<DagEdge>,
+}
+
+impl AttentionDag {
+    /// Build the DAG for embedding dim `d_model` partitioned on `xb`-sized
+    /// crossbars: dc² DSMM nodes per projection channel, dc DDMM score
+    /// nodes, dc DDMM context nodes, with the seven collective edges.
+    pub fn build(d_model: usize, xb: usize) -> Self {
+        let dc = d_model.div_ceil(xb);
+        let elems_vec = xb as u32; // one sub-vector of C elements
+        let mut dag = AttentionDag::default();
+
+        let input = dag.push(OpKind::Source, (0, 0), "x".into());
+
+        // Projection DSMMs + Reduction 1 per output column of each channel.
+        let mut proj_out: HashMap<(ChannelKind, u16), NodeId> = HashMap::new();
+        for ch in [ChannelKind::Q, ChannelKind::K, ChannelKind::V] {
+            for col in 0..dc as u16 {
+                let red = dag.push(OpKind::RAdd, (0, col), format!("red1-{}{col}", ch.name()));
+                proj_out.insert((ch, col), red);
+                for row in 0..dc as u16 {
+                    let m = dag.push(
+                        OpKind::Dsmm { channel: ch },
+                        (row, col),
+                        format!("{}[{row},{col}]", ch.name()),
+                    );
+                    dag.connect(input, m, CommKind::Broadcast1, elems_vec);
+                    dag.connect(m, red, CommKind::Reduction1, elems_vec);
+                }
+            }
+        }
+
+        // Score DDMMs: Q-channel RPUs consume K shards (Unicast 1), reduce
+        // partial scores across RGs (Reduction 2), then softmax.
+        let mut softmaxed = Vec::with_capacity(dc);
+        for col in 0..dc as u16 {
+            let qk = dag.push(OpKind::Ddmm { score: true }, (0, col), format!("QK[{col}]"));
+            dag.connect(proj_out[&(ChannelKind::Q, col)], qk, CommKind::Local, elems_vec);
+            dag.connect(proj_out[&(ChannelKind::K, col)], qk, CommKind::Unicast1, elems_vec);
+            let red2 = dag.push(OpKind::RAdd, (1, col), format!("red2[{col}]"));
+            dag.connect(qk, red2, CommKind::Reduction2, elems_vec);
+            let sm = dag.push(OpKind::Softmax, (0, col), format!("softmax[{col}]"));
+            dag.connect(red2, sm, CommKind::Local, elems_vec);
+            softmaxed.push(sm);
+        }
+
+        // Context DDMMs: softmaxed scores meet V partials; rescale (R-Mul),
+        // accumulate into the O channel (Unicast 2), broadcast the finished
+        // shard across the O-channel RG (Broadcast 2), reduce (Reduction 3).
+        let sink = dag.push(OpKind::Sink, (0, 0), "out".into());
+        for col in 0..dc as u16 {
+            let sv = dag.push(OpKind::Ddmm { score: false }, (1, col), format!("SV[{col}]"));
+            dag.connect(softmaxed[col as usize], sv, CommKind::Local, elems_vec);
+            dag.connect(proj_out[&(ChannelKind::V, col)], sv, CommKind::Unicast2, elems_vec);
+            let rescale = dag.push(OpKind::RMul, (1, col), format!("rescale[{col}]"));
+            dag.connect(sv, rescale, CommKind::Local, elems_vec);
+            // O projection DSMMs (row-major mapped W_O) + final reduction.
+            let red3 = dag.push(OpKind::RAdd, (2, col), format!("red3[{col}]"));
+            for row in 0..dc as u16 {
+                let m = dag.push(
+                    OpKind::Dsmm { channel: ChannelKind::O },
+                    (row, col),
+                    format!("O[{row},{col}]"),
+                );
+                dag.connect(rescale, m, CommKind::Broadcast2, elems_vec);
+                dag.connect(m, red3, CommKind::Reduction3, elems_vec);
+            }
+            dag.connect(red3, sink, CommKind::Local, elems_vec);
+        }
+        dag
+    }
+
+    fn push(&mut self, op: OpKind, coords: (u16, u16), label: String) -> NodeId {
+        self.nodes.push(DagNode { op, coords, label });
+        self.nodes.len() - 1
+    }
+
+    fn connect(&mut self, src: NodeId, dst: NodeId, comm: CommKind, elems: u32) {
+        self.edges.push(DagEdge { src, dst, comm, elems });
+    }
+
+    /// Nodes of a given operation kind.
+    pub fn count_op(&self, pred: impl Fn(&OpKind) -> bool) -> usize {
+        self.nodes.iter().filter(|n| pred(&n.op)).count()
+    }
+
+    /// Kahn topological order; `None` if a cycle exists (it never should).
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+            adj[e.src].push(e.dst);
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for &v in &adj[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Sum of payload elements per communication kind — the traffic matrix
+    /// the mapper's cost function weighs.
+    pub fn traffic_by_comm(&self) -> HashMap<CommKind, u64> {
+        let mut m = HashMap::new();
+        for e in &self.edges {
+            *m.entry(e.comm).or_insert(0u64) += e.elems as u64;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_counts_match_partitioning() {
+        // D=2048, C=128 → dc=16: 3 input channels × 16² DSMMs + 16² for O.
+        let dag = AttentionDag::build(2048, 128);
+        let dsmm = dag.count_op(|o| matches!(o, OpKind::Dsmm { .. }));
+        assert_eq!(dsmm, 4 * 16 * 16);
+        let ddmm = dag.count_op(|o| matches!(o, OpKind::Ddmm { .. }));
+        assert_eq!(ddmm, 2 * 16);
+        let sm = dag.count_op(|o| matches!(o, OpKind::Softmax));
+        assert_eq!(sm, 16);
+    }
+
+    #[test]
+    fn dag_is_acyclic() {
+        let dag = AttentionDag::build(1024, 128);
+        let order = dag.topo_order().expect("must be a DAG");
+        assert_eq!(order.len(), dag.nodes.len());
+        // every edge goes forward in the order
+        let pos: HashMap<_, _> = order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for e in &dag.edges {
+            assert!(pos[&e.src] < pos[&e.dst], "{} -> {}", e.src, e.dst);
+        }
+    }
+
+    #[test]
+    fn all_seven_collectives_present() {
+        let dag = AttentionDag::build(1024, 128);
+        let traffic = dag.traffic_by_comm();
+        for k in [
+            CommKind::Broadcast1,
+            CommKind::Broadcast2,
+            CommKind::Reduction1,
+            CommKind::Reduction2,
+            CommKind::Reduction3,
+            CommKind::Unicast1,
+            CommKind::Unicast2,
+        ] {
+            assert!(traffic.contains_key(&k), "missing {k:?}");
+        }
+    }
+
+    #[test]
+    fn broadcast1_feeds_every_input_dsmm() {
+        let dag = AttentionDag::build(512, 128);
+        let b1 = dag.edges.iter().filter(|e| e.comm == CommKind::Broadcast1).count();
+        assert_eq!(b1, 3 * 4 * 4); // Q/K/V channels × dc² sub-matrices
+    }
+
+    #[test]
+    fn tiny_model_dag_small_but_complete() {
+        let dag = AttentionDag::build(256, 128); // dc = 2
+        assert!(dag.topo_order().is_some());
+        assert_eq!(dag.count_op(|o| matches!(o, OpKind::Dsmm { .. })), 16);
+    }
+}

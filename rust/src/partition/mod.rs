@@ -1,0 +1,9 @@
+//! Model partitioning (paper §III-A): splitting the static projection
+//! weights into crossbar-sized sub-matrices and building the DAG of
+//! Fig. 3(b) that the mapper and scheduler consume.
+
+pub mod dag;
+pub mod weights;
+
+pub use dag::{AttentionDag, CommKind, DagEdge, DagNode, NodeId, OpKind};
+pub use weights::{SubMatrix, WeightPartition};

@@ -1,0 +1,109 @@
+//! Weight-matrix partitioning along rows and columns to fit the crossbar
+//! arrays (Fig. 3(a)). A D×D projection matrix becomes a ceil(D/C)² grid of
+//! C×C sub-matrices; edge tiles are zero-padded (the spare cells idle).
+
+use crate::arch::HwParams;
+
+/// One crossbar-sized sub-matrix of a partitioned weight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SubMatrix {
+    /// Row index in the sub-matrix grid (input/K dimension).
+    pub row: u16,
+    /// Column index in the sub-matrix grid (output/N dimension).
+    pub col: u16,
+    /// Logical rows actually occupied (≤ C at the bottom edge).
+    pub used_rows: u16,
+    /// Logical cols actually occupied (≤ C at the right edge).
+    pub used_cols: u16,
+}
+
+/// Partitioning of one K×N weight matrix into crossbar tiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightPartition {
+    pub k: usize,
+    pub n: usize,
+    pub xb: usize,
+    /// Grid dimensions: rows = ceil(K/C), cols = ceil(N/C).
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+}
+
+impl WeightPartition {
+    pub fn new(k: usize, n: usize, hw: &HwParams) -> Self {
+        Self {
+            k,
+            n,
+            xb: hw.xb,
+            grid_rows: k.div_ceil(hw.xb),
+            grid_cols: n.div_ceil(hw.xb),
+        }
+    }
+
+    /// Total crossbars required — the paper's ceil(D/C)² for square weights.
+    pub fn num_xbars(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Iterate all sub-matrices with their edge-occupancy.
+    pub fn submatrices(&self) -> impl Iterator<Item = SubMatrix> + '_ {
+        let (gr, gc, xb) = (self.grid_rows, self.grid_cols, self.xb);
+        let (k, n) = (self.k, self.n);
+        (0..gr).flat_map(move |r| {
+            (0..gc).map(move |c| SubMatrix {
+                row: r as u16,
+                col: c as u16,
+                used_rows: (k - r * xb).min(xb) as u16,
+                used_cols: (n - c * xb).min(xb) as u16,
+            })
+        })
+    }
+
+    /// Cell-utilisation: occupied cells / (num_xbars · C²).
+    pub fn utilization(&self) -> f64 {
+        (self.k * self.n) as f64 / (self.num_xbars() * self.xb * self.xb) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_2048_gives_256_xbars() {
+        // Paper §III-B: a 1024×1024 matrix on 128² arrays → 64 sub-matrices;
+        // D=2048 → 16² = 256.
+        let hw = HwParams::default();
+        assert_eq!(WeightPartition::new(1024, 1024, &hw).num_xbars(), 64);
+        assert_eq!(WeightPartition::new(2048, 2048, &hw).num_xbars(), 256);
+    }
+
+    #[test]
+    fn ragged_edges_padded() {
+        let hw = HwParams::default();
+        let p = WeightPartition::new(200, 300, &hw);
+        assert_eq!((p.grid_rows, p.grid_cols), (2, 3));
+        let subs: Vec<_> = p.submatrices().collect();
+        assert_eq!(subs.len(), 6);
+        // bottom-right tile occupancy
+        let br = subs.last().unwrap();
+        assert_eq!((br.used_rows, br.used_cols), (72, 44));
+        assert!(p.utilization() < 1.0);
+    }
+
+    #[test]
+    fn exact_fit_full_utilization() {
+        let hw = HwParams::default();
+        let p = WeightPartition::new(256, 384, &hw);
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+        assert!(p.submatrices().all(|s| s.used_rows == 128 && s.used_cols == 128));
+    }
+
+    #[test]
+    fn submatrix_count_matches_grid() {
+        let hw = HwParams::default();
+        let p = WeightPartition::new(5120, 13824, &hw);
+        assert_eq!(p.submatrices().count(), p.num_xbars());
+        assert_eq!(p.grid_rows, 40);
+        assert_eq!(p.grid_cols, 108);
+    }
+}

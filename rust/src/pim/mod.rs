@@ -1,0 +1,13 @@
+//! PIM processing element model: a 128×128 RRAM crossbar performing
+//! in-place DSMM (dynamic activation × static 8-bit weights).
+//!
+//! Timing/energy constants are adopted from the macro of Peng et al. [15]
+//! as cited in the paper's Table II (32.37 µW, 0.0864 mm² per PE). The
+//! functional path lives in the Pallas `crossbar_mvm` kernel; this module
+//! provides the simulator-facing latency/energy/occupancy model plus weight
+//! programming state tracking (reprogramming RRAM is the expensive
+//! operation that motivates keeping DDMMs out of PIM — Challenge 1).
+
+pub mod pe;
+
+pub use pe::{PeState, PimPe};

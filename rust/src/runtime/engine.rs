@@ -1,0 +1,201 @@
+//! PJRT execution engine: loads the AOT-lowered HLO text artifacts, compiles
+//! them once on the CPU PJRT client, and executes the functional model on
+//! the request path (the numerics half of serving; the simulator provides
+//! the timing/energy half).
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits HloModuleProto
+//! with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context};
+
+use super::leapbin::{self, Tensor};
+
+/// Model metadata parsed from `artifacts/meta.txt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub s_prefill: usize,
+    pub s_max: usize,
+    pub param_order: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> anyhow::Result<usize> {
+            kv.get(k).with_context(|| format!("meta missing {k}"))?.parse().context("parse")
+        };
+        Ok(Self {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            s_prefill: get("s_prefill")?,
+            s_max: get("s_max")?,
+            param_order: kv
+                .get("param_order")
+                .context("meta missing param_order")?
+                .split(',')
+                .map(str::to_string)
+                .collect(),
+        })
+    }
+}
+
+/// The loaded runtime: compiled executables + weight literals.
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in meta.param_order.
+    params: Vec<xla::Literal>,
+    pub artifacts_dir: PathBuf,
+}
+
+/// Result of a prefill or decode execution.
+pub struct StepOutput {
+    /// Logits, row-major [rows, vocab].
+    pub logits: Vec<f32>,
+    pub rows: usize,
+    /// Updated KV caches (opaque literals fed back on the next step).
+    pub kcache: xla::Literal,
+    pub vcache: xla::Literal,
+}
+
+impl Engine {
+    /// Load every artifact from `dir` and compile both entry points.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_text = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("{}/meta.txt (run `make artifacts`)", dir.display()))?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile("tiny_prefill.hlo.txt")?;
+        let decode_exe = compile("tiny_decode.hlo.txt")?;
+
+        let mut params = Vec::with_capacity(meta.param_order.len());
+        for name in &meta.param_order {
+            let t = leapbin::load(dir.join("weights").join(format!("{name}.bin")))?;
+            params.push(t.to_literal()?);
+        }
+        Ok(Self { meta, client, prefill_exe, decode_exe, params, artifacts_dir: dir })
+    }
+
+    /// Run the prefill graph on `tokens` (padded/truncated to s_prefill).
+    pub fn prefill(&self, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        ensure!(!tokens.is_empty(), "empty prompt");
+        let s = self.meta.s_prefill;
+        let mut padded = vec![0i32; s];
+        let n = tokens.len().min(s);
+        padded[..n].copy_from_slice(&tokens[..n]);
+        let tok_lit = xla::Literal::vec1(&padded);
+
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit];
+        args.extend(self.params.iter());
+        let result = self.prefill_exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 3, "expected (logits, K, V), got {}", outs.len());
+        let mut it = outs.into_iter();
+        let logits_lit = it.next().unwrap();
+        let kcache = it.next().unwrap();
+        let vcache = it.next().unwrap();
+        Ok(StepOutput {
+            logits: logits_lit.to_vec::<f32>()?,
+            rows: s,
+            kcache,
+            vcache,
+        })
+    }
+
+    /// Run one decode step.
+    pub fn decode(
+        &self,
+        token: i32,
+        pos: i32,
+        kcache: &xla::Literal,
+        vcache: &xla::Literal,
+    ) -> anyhow::Result<StepOutput> {
+        let tok_lit = xla::Literal::vec1(&[token]);
+        let pos_lit = xla::Literal::scalar(pos);
+        let mut args: Vec<&xla::Literal> = vec![&tok_lit, &pos_lit, kcache, vcache];
+        args.extend(self.params.iter());
+        let result = self.decode_exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 3, "expected (logits, K, V), got {}", outs.len());
+        let mut it = outs.into_iter();
+        let logits_lit = it.next().unwrap();
+        let kcache = it.next().unwrap();
+        let vcache = it.next().unwrap();
+        Ok(StepOutput { logits: logits_lit.to_vec::<f32>()?, rows: 1, kcache, vcache })
+    }
+
+    /// Greedy argmax over a logits row.
+    pub fn argmax_row(&self, logits: &[f32], row: usize) -> usize {
+        let v = self.meta.vocab;
+        let slice = &logits[row * v..(row + 1) * v];
+        slice
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Golden tensors for self-check (prompt, expected logits, greedy ids).
+    pub fn golden(&self) -> anyhow::Result<(Tensor, Tensor, Tensor)> {
+        let g = |n: &str| leapbin::load(self.artifacts_dir.join("golden").join(n));
+        Ok((g("prompt.bin")?, g("prefill_logits.bin")?, g("greedy_tokens.bin")?))
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let text = "vocab=512\nd_model=256\nn_layers=4\nn_heads=4\nn_kv_heads=4\n\
+                    d_ff=512\nxb=128\nshard=16\ns_prefill=32\ns_max=128\n\
+                    golden_prompt_len=8\ngolden_steps=8\nparam_order=a,b,c\n";
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.s_max, 128);
+        assert_eq!(m.param_order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn meta_parse_rejects_missing() {
+        assert!(ArtifactMeta::parse("vocab=1\n").is_err());
+    }
+    // Engine execution itself is covered by tests/integration_runtime.rs
+    // (needs the artifacts directory built by `make artifacts`).
+}

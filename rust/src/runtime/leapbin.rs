@@ -1,0 +1,153 @@
+//! Reader for the `leapbin` tensor format written by
+//! `python/compile/leapbin.py` (see that file for the byte layout).
+//! Keep the two implementations in sync.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+/// Element type of a leapbin tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// A host tensor loaded from a leapbin file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian bytes, C order.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Interpret the payload as f32 values.
+    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+        ensure!(self.dtype == DType::F32, "tensor is {:?}", self.dtype);
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Interpret the payload as i32 values.
+    pub fn as_i32(&self) -> anyhow::Result<Vec<i32>> {
+        ensure!(self.dtype == DType::I32, "tensor is {:?}", self.dtype);
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Build an XLA literal of the right shape/type.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let ty = match self.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &self.dims, &self.data)?)
+    }
+}
+
+/// Load a leapbin file.
+pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Tensor> {
+    let path = path.as_ref();
+    let blob = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&blob).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse a leapbin blob.
+pub fn parse(blob: &[u8]) -> anyhow::Result<Tensor> {
+    ensure!(blob.len() >= 8, "truncated header");
+    ensure!(&blob[..4] == b"LEAP", "bad magic");
+    let (ver, code, ndim) = (blob[4], blob[5], blob[6] as usize);
+    ensure!(ver == 1, "unsupported version {ver}");
+    let dtype = match code {
+        0 => DType::F32,
+        1 => DType::I8,
+        2 => DType::I32,
+        d => bail!("unknown dtype code {d}"),
+    };
+    ensure!(blob.len() >= 8 + 4 * ndim, "truncated dims");
+    let dims: Vec<usize> = (0..ndim)
+        .map(|k| {
+            u32::from_le_bytes([
+                blob[8 + 4 * k],
+                blob[9 + 4 * k],
+                blob[10 + 4 * k],
+                blob[11 + 4 * k],
+            ]) as usize
+        })
+        .collect();
+    let data = blob[8 + 4 * ndim..].to_vec();
+    let expect: usize = dims.iter().product::<usize>() * dtype.bytes();
+    ensure!(data.len() == expect, "payload {} != expected {}", data.len(), expect);
+    Ok(Tensor { dtype, dims, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(dtype_code: u8, dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut b = b"LEAP".to_vec();
+        b.push(1);
+        b.push(dtype_code);
+        b.push(dims.len() as u8);
+        b.push(0);
+        for d in dims {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        b.extend_from_slice(payload);
+        b
+    }
+
+    #[test]
+    fn parse_f32() {
+        let payload: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let t = parse(&mk(0, &[2, 3], &payload)).unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn parse_i8_and_i32() {
+        let t = parse(&mk(1, &[4], &[1, 2, 0xFF, 0x80])).unwrap();
+        assert_eq!(t.dtype, DType::I8);
+        assert_eq!(t.element_count(), 4);
+        let payload: Vec<u8> = [7i32, -9].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let t = parse(&mk(2, &[2], &payload)).unwrap();
+        assert_eq!(t.as_i32().unwrap(), vec![7, -9]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(parse(b"XXXX\x01\x00\x01\x00\x02\x00\x00\x00").is_err()); // magic
+        assert!(parse(&mk(0, &[3], &[0; 8])).is_err()); // size mismatch
+        assert!(parse(&mk(9, &[1], &[0; 4])).is_err()); // dtype
+        let mut v = mk(0, &[1], &[0; 4]);
+        v[4] = 2; // version
+        assert!(parse(&v).is_err());
+    }
+
+    #[test]
+    fn wrong_view_rejected() {
+        let t = parse(&mk(1, &[1], &[5])).unwrap();
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime (the `xla` crate wrapper): loads the AOT-lowered HLO text
+//! artifacts built by `python/compile/aot.py`, compiles them once, and
+//! executes the functional model from the serving hot path. Python is never
+//! invoked here.
+
+pub mod engine;
+pub mod leapbin;
+
+pub use engine::{ArtifactMeta, Engine, StepOutput};
+pub use leapbin::{DType, Tensor};

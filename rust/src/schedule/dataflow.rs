@@ -1,0 +1,553 @@
+//! Prefill/decode dataflow phase plans (paper §IV-B/C, Fig. 6).
+//!
+//! A [`Phase`] is one step of the per-shard pipeline with a closed-form
+//! cycle/activity model derived from the Fig. 6 timing diagrams. The
+//! compiler lowers each phase to NPM instructions whose repeat counts match
+//! these formulas exactly, so the analytical simulator (summing phases) and
+//! the instruction-level simulator (executing the compiled program) agree
+//! by construction — cross-checked in `tests/integration_sim.rs`.
+//!
+//! Pipeline intuition carried over from Fig. 6:
+//!  * streaming a vector of `n` elements over one link costs
+//!    `ceil(n / elems_per_packet)` cycles;
+//!  * a pipelined reduction/broadcast over `k` hops adds `k` drain cycles;
+//!  * a DDMM of an m×d by d×n shard product on an IRCU with `P` MACs costs
+//!    `ceil(m·d·n / P)` MAC cycles, overlapped with the operand stream.
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::model::ModelShape;
+
+/// Phase kinds of one attention + MLP layer pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PhaseKind {
+    /// Broadcast 1: stream input activations into the Q/K/V channels.
+    InputBroadcast,
+    /// PIM DSMM: in-place projections in the crossbars.
+    Projection,
+    /// Reduction 1: aggregate projection partials within each RG.
+    ProjReduce,
+    /// Unicast 1: rotate K shards into the Q channel.
+    KShardRotate,
+    /// DDMM QKᵀ in the Q-channel IRCUs.
+    ScoreDdmm,
+    /// Reduction 2: reduce partial scores across Q-channel RGs.
+    ScoreReduce,
+    /// Online softmax (running max / exp / rescale) on the way to V.
+    Softmax,
+    /// DDMM S·V in the V-channel IRCUs + Unicast 2 into the O channel.
+    ContextDdmm,
+    /// Broadcast 2 + Reduction 3: finalise O shards in the O channel.
+    OutputReduce,
+    /// MLP DSMM passes (gate/up/down) with their broadcasts/reductions.
+    Mlp,
+}
+
+impl PhaseKind {
+    pub const ALL: [PhaseKind; 10] = [
+        PhaseKind::InputBroadcast,
+        PhaseKind::Projection,
+        PhaseKind::ProjReduce,
+        PhaseKind::KShardRotate,
+        PhaseKind::ScoreDdmm,
+        PhaseKind::ScoreReduce,
+        PhaseKind::Softmax,
+        PhaseKind::ContextDdmm,
+        PhaseKind::OutputReduce,
+        PhaseKind::Mlp,
+    ];
+}
+
+/// One dataflow phase with its cycle/activity accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    /// Critical-path cycles of this phase.
+    pub cycles: u64,
+    /// Router-hop events (for the energy ledger).
+    pub hop_events: u64,
+    /// IRCU compute cycles (MAC/add/mul/expmax).
+    pub ircu_events: u64,
+    /// Scratchpad word accesses.
+    pub spad_events: u64,
+    /// Crossbar MVM events.
+    pub pe_events: u64,
+    /// Routers active during the phase (for power accounting).
+    pub active_routers: u64,
+}
+
+/// The complete phase sequence for one decoder layer pass.
+#[derive(Debug, Clone, Default)]
+pub struct LayerPhases {
+    pub phases: Vec<Phase>,
+}
+
+impl LayerPhases {
+    pub fn total_cycles(&self) -> u64 {
+        self.phases.iter().map(|p| p.cycles).sum()
+    }
+
+    pub fn cycles_of(&self, kind: PhaseKind) -> u64 {
+        self.phases.iter().filter(|p| p.kind == kind).map(|p| p.cycles).sum()
+    }
+}
+
+/// Prefill phase plan for one layer processing `s` new tokens.
+///
+/// The inner (Q) loop is spatially unrolled across RPUs and the outer (K/V)
+/// loop is the rotational broadcast, so the shard-pair work is charged once
+/// per K/V shard rotation step with all Q shards in flight (Fig. 5(d)).
+pub fn prefill_phases(shape: &ModelShape, geom: &TileGeometry, hw: &HwParams, s: usize) -> LayerPhases {
+    prefill_phases_opts(shape, geom, hw, s, true)
+}
+
+/// [`prefill_phases`] with the KV-duplication choice explicit.
+///
+/// `kv_duplication = true` follows the paper (GQA degraded to MHA by
+/// duplication — shards stream at full head width); `false` is the
+/// GQA-aware ablation (shards stream at n_kv_heads width), reported in
+/// EXPERIMENTS.md.
+pub fn prefill_phases_opts(
+    shape: &ModelShape,
+    geom: &TileGeometry,
+    hw: &HwParams,
+    s: usize,
+    kv_duplication: bool,
+) -> LayerPhases {
+    let d = shape.d_model;
+    let dh = shape.d_head();
+    let cs = geom.shard_rows;
+    let n_shards = geom.shards_for(s) as u64;
+    let epp = hw.elems_per_packet() as u64;
+    let dc = geom.dc as u64;
+    let nr = geom.n_r as u64;
+    let heads = shape.n_heads as u64;
+    // The paper degrades GQA to the MHA scheme "by matrix duplication";
+    // the duplicated K/V shards stream at full head width. The GQA-aware
+    // ablation streams the physically smaller cache instead.
+    let kv_heads = if kv_duplication { heads } else { shape.n_kv_heads as u64 };
+    let macs = hw.ircu_macs as u64;
+
+    let mut lp = LayerPhases::default();
+    let vec_stream = hw.stream_cycles(d); // cycles to stream one token vector
+
+    // -- Broadcast 1: every token's activation enters the west edge and
+    //    pipelines across the 2dc-wide tile. Tokens stream back-to-back.
+    let tokens = s as u64;
+    let b1_cycles = tokens * vec_stream + 2 * dc; // stream + pipeline drain
+    lp.phases.push(Phase {
+        kind: PhaseKind::InputBroadcast,
+        cycles: b1_cycles,
+        hop_events: tokens * (d as u64).div_ceil(epp) * 2 * dc,
+        ircu_events: 0,
+        spad_events: tokens * d as u64 / nr.max(1),
+        pe_events: 0,
+        active_routers: (geom.side * geom.side) as u64,
+    });
+
+    // -- PIM projections: each token triggers one MVM per crossbar; arrays
+    //    in a channel work in parallel, MVMs pipeline behind the broadcast.
+    let proj_cycles = tokens * hw.pe_mvm_cycles;
+    lp.phases.push(Phase {
+        kind: PhaseKind::Projection,
+        cycles: proj_cycles,
+        hop_events: 0,
+        ircu_events: 0,
+        spad_events: 0,
+        pe_events: tokens * 4 * dc * dc, // Q,K,V,O-channel arrays
+        active_routers: 0,
+    });
+
+    // -- Reduction 1: per token, dc partial vectors (each C wide) reduce
+    //    along the RG chain; pipelined: stream + dc drain hops.
+    let red1_cycles = tokens * hw.stream_cycles(hw.xb) + dc;
+    lp.phases.push(Phase {
+        kind: PhaseKind::ProjReduce,
+        cycles: red1_cycles,
+        hop_events: tokens * 3 * dc * dc * (hw.xb as u64).div_ceil(epp),
+        ircu_events: tokens * 3 * dc * (hw.xb as u64).div_ceil(macs),
+        spad_events: tokens * 3 * d as u64,
+        pe_events: 0,
+        active_routers: (3 * geom.macros_per_channel()) as u64,
+    });
+
+    // Per-shard-rotation phases: the outer loop runs once per K/V shard;
+    // Q-shard RPUs consume the rotating shard in parallel — but the spatial
+    // unroll of the inner loop is capped by the 2dc RPU rows of the Q
+    // channel, so contexts longer than 2dc·C_S tokens serialise in passes.
+    let unroll_passes = (geom.shards_for(s) as u64).div_ceil(2 * dc).max(1);
+    let shard_elems = (cs * dh) as u64; // one head's shard slice
+    let shard_stream = shard_elems.div_ceil(epp);
+
+    // -- Unicast 1 (K rotation): K shard hops from the K channel across to
+    //    the Q channel (≈ dc columns) then rotates vertically RG-to-RG,
+    //    once per unroll pass.
+    let rot_cycles = n_shards * unroll_passes * (shard_stream * kv_heads + nr + dc);
+    lp.phases.push(Phase {
+        kind: PhaseKind::KShardRotate,
+        cycles: rot_cycles,
+        hop_events: n_shards * shard_stream * kv_heads * (dc + nr),
+        ircu_events: 0,
+        spad_events: n_shards * shard_elems * kv_heads * 2,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64 * 2,
+    });
+
+    // -- Score DDMM: per rotation, each resident Q-shard RPU computes a
+    //    CS×CS score block per head: CS·dh·CS MACs on N_r IRCUs of `macs`
+    //    MACs each, serialised over the unroll passes.
+    let score_macs = (cs * dh * cs) as u64 * heads;
+    let score_cycles = n_shards * unroll_passes * score_macs.div_ceil(macs * nr);
+    lp.phases.push(Phase {
+        kind: PhaseKind::ScoreDdmm,
+        cycles: score_cycles,
+        hop_events: 0,
+        ircu_events: n_shards * n_shards * score_macs.div_ceil(macs), // all Q shards × rotations
+        spad_events: n_shards * shard_elems * heads,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // -- Reduction 2: score partials reduce vertically across dc RGs.
+    let score_block = (cs * cs) as u64 * heads;
+    let red2_cycles = n_shards * (score_block.div_ceil(epp) + dc);
+    lp.phases.push(Phase {
+        kind: PhaseKind::ScoreReduce,
+        cycles: red2_cycles,
+        hop_events: n_shards * n_shards * score_block.div_ceil(epp) * dc,
+        ircu_events: n_shards * n_shards * score_block.div_ceil(macs),
+        spad_events: 0,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // -- Softmax: running max/exp over each score row (FlashAttention
+    //    style), one pass over the block per rotation.
+    let sm_cycles = n_shards * score_block.div_ceil(macs);
+    lp.phases.push(Phase {
+        kind: PhaseKind::Softmax,
+        cycles: sm_cycles,
+        hop_events: n_shards * score_block.div_ceil(epp),
+        ircu_events: n_shards * n_shards * 2 * score_block.div_ceil(macs),
+        spad_events: n_shards * score_block,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // -- Context DDMM (S·V) + Unicast 2 into O scratchpads, with the R-Mul
+    //    rescale of previously accumulated O shards.
+    let ctx_macs = (cs * cs * dh) as u64 * heads;
+    let ctx_cycles =
+        n_shards * unroll_passes * (ctx_macs.div_ceil(macs * nr) + shard_stream);
+    lp.phases.push(Phase {
+        kind: PhaseKind::ContextDdmm,
+        cycles: ctx_cycles,
+        hop_events: n_shards * shard_stream * heads * dc,
+        ircu_events: n_shards * n_shards * (ctx_macs.div_ceil(macs) + shard_elems.div_ceil(macs)),
+        spad_events: n_shards * shard_elems * heads * 3,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64 * 2,
+    });
+
+    // -- Output: Broadcast 2 along O rows + Reduction 3 + final O DSMM.
+    let out_cycles = n_shards * (shard_stream * heads + 2 * dc) + tokens * hw.pe_mvm_cycles;
+    lp.phases.push(Phase {
+        kind: PhaseKind::OutputReduce,
+        cycles: out_cycles,
+        hop_events: n_shards * shard_stream * heads * 2 * dc,
+        ircu_events: n_shards * shard_elems.div_ceil(macs) * dc,
+        spad_events: n_shards * shard_elems * heads,
+        pe_events: tokens * dc * dc,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // -- MLP: gate/up (D→F) then down (F→D); DSMM streams like Broadcast1 +
+    //    Reduction1 on the MLP tiles (3 passes of vector stream + reduce).
+    let f = shape.d_ff as u64;
+    let f_stream = f.div_ceil(epp);
+    let mlp_cycles = tokens * (2 * vec_stream + f_stream) + 3 * dc;
+    let dcf = f.div_ceil(hw.xb as u64); // sub-matrix grid cols for D×F
+    lp.phases.push(Phase {
+        kind: PhaseKind::Mlp,
+        cycles: mlp_cycles,
+        hop_events: tokens * (2 * (d as u64).div_ceil(epp) * dcf + f_stream * dc),
+        ircu_events: tokens * (2 * f.div_ceil(macs) + (d as u64).div_ceil(macs)),
+        spad_events: tokens * (2 * f + d as u64),
+        pe_events: tokens * 3 * dc * dcf,
+        active_routers: (3 * geom.macros_per_channel()) as u64,
+    });
+
+    lp
+}
+
+/// Decode phase plan: one new token attending to `ctx_len` cached tokens.
+///
+/// Differences from prefill (§IV-C): a single Q vector (the Q-channel
+/// pipeline is underutilised — only one RPU row of work per rotation), and
+/// K/V shards are read from the scratchpad cache rather than produced.
+pub fn decode_phases(
+    shape: &ModelShape,
+    geom: &TileGeometry,
+    hw: &HwParams,
+    ctx_len: usize,
+) -> LayerPhases {
+    decode_phases_opts(shape, geom, hw, ctx_len, true)
+}
+
+/// [`decode_phases`] with the KV-duplication choice explicit (see
+/// [`prefill_phases_opts`]).
+pub fn decode_phases_opts(
+    shape: &ModelShape,
+    geom: &TileGeometry,
+    hw: &HwParams,
+    ctx_len: usize,
+    kv_duplication: bool,
+) -> LayerPhases {
+    let d = shape.d_model;
+    let dh = shape.d_head();
+    let cs = geom.shard_rows;
+    let n_shards = geom.shards_for(ctx_len.max(1)) as u64;
+    let epp = hw.elems_per_packet() as u64;
+    let dc = geom.dc as u64;
+    let nr = geom.n_r as u64;
+    let heads = shape.n_heads as u64;
+    // Duplicated-KV streaming, matching the paper's GQA→MHA degradation
+    // (see prefill_phases_opts; EXPERIMENTS.md carries the ablation).
+    let kv_heads = if kv_duplication { heads } else { shape.n_kv_heads as u64 };
+    let macs = hw.ircu_macs as u64;
+
+    let mut lp = LayerPhases::default();
+    let vec_stream = hw.stream_cycles(d);
+
+    // One token's broadcast + projection + reduce (same as prefill, s = 1).
+    lp.phases.push(Phase {
+        kind: PhaseKind::InputBroadcast,
+        cycles: vec_stream + 2 * dc,
+        hop_events: (d as u64).div_ceil(epp) * 2 * dc,
+        ircu_events: 0,
+        spad_events: d as u64 / nr.max(1),
+        pe_events: 0,
+        active_routers: (geom.side * geom.side) as u64,
+    });
+    lp.phases.push(Phase {
+        kind: PhaseKind::Projection,
+        cycles: hw.pe_mvm_cycles,
+        hop_events: 0,
+        ircu_events: 0,
+        spad_events: 0,
+        pe_events: 4 * dc * dc,
+        active_routers: 0,
+    });
+    lp.phases.push(Phase {
+        kind: PhaseKind::ProjReduce,
+        cycles: hw.stream_cycles(hw.xb) + dc,
+        hop_events: 3 * dc * dc * (hw.xb as u64).div_ceil(epp),
+        ircu_events: 3 * dc * (hw.xb as u64).div_ceil(macs),
+        spad_events: 3 * d as u64 + 2 * d as u64, // project + KV append
+        pe_events: 0,
+        active_routers: (3 * geom.macros_per_channel()) as u64,
+    });
+
+    // Attention over the cache: rotate every cached K shard past the single
+    // Q row (Fig. 5(d) rotational broadcast — the rotation is serial per
+    // step, which together with the 1-row Q pipeline underutilisation is
+    // the §VI-D decode penalty). Only kv_heads-many slices stream.
+    let shard_elems = (cs * dh) as u64;
+    let shard_stream = shard_elems.div_ceil(epp);
+    let rot_cycles = n_shards * (shard_stream * kv_heads / nr.max(1) + nr + dc);
+    lp.phases.push(Phase {
+        kind: PhaseKind::KShardRotate,
+        cycles: rot_cycles,
+        hop_events: n_shards * shard_stream * kv_heads * (dc + nr) / nr.max(1),
+        ircu_events: 0,
+        spad_events: n_shards * shard_elems * kv_heads,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64 * 2,
+    });
+
+    // Score DDMM: 1×dh · dh×CS per shard per q-head; q-head pairs sharing a
+    // kv group compute on adjacent RPU rows, halving the serial factor.
+    let score_macs = (dh * cs) as u64 * heads;
+    lp.phases.push(Phase {
+        kind: PhaseKind::ScoreDdmm,
+        cycles: n_shards * score_macs.div_ceil(macs * nr * 2),
+        hop_events: 0,
+        ircu_events: n_shards * score_macs.div_ceil(macs),
+        spad_events: n_shards * shard_elems * kv_heads,
+        pe_events: 0,
+        active_routers: geom.n_r as u64 * 2, // two RPU rows — underutilised
+    });
+
+    // Reduction 2 across RGs for the 1×CS score slivers; the dc RG columns
+    // reduce their slices concurrently.
+    let sliver = cs as u64 * heads;
+    lp.phases.push(Phase {
+        kind: PhaseKind::ScoreReduce,
+        cycles: n_shards * (sliver.div_ceil(epp * dc) + dc),
+        hop_events: n_shards * sliver.div_ceil(epp) * dc,
+        ircu_events: n_shards * sliver.div_ceil(macs),
+        spad_events: 0,
+        pe_events: 0,
+        active_routers: geom.n_r as u64 * dc,
+    });
+
+    lp.phases.push(Phase {
+        kind: PhaseKind::Softmax,
+        cycles: n_shards * sliver.div_ceil(macs) * 2,
+        hop_events: n_shards * sliver.div_ceil(epp),
+        ircu_events: n_shards * 2 * sliver.div_ceil(macs),
+        spad_events: n_shards * sliver,
+        pe_events: 0,
+        active_routers: geom.n_r as u64,
+    });
+
+    // Context DDMM: 1×CS · CS×dh per shard per head; V shards stream with
+    // kv_heads width and the O accumulate rescales in-flight.
+    let ctx_macs = (cs * dh) as u64 * heads;
+    lp.phases.push(Phase {
+        kind: PhaseKind::ContextDdmm,
+        cycles: n_shards
+            * (ctx_macs.div_ceil(macs * nr * 2)
+                + shard_stream * kv_heads / (nr.max(1) * 2)
+                + (dh as u64).div_ceil(epp)),
+        hop_events: n_shards * (dh as u64).div_ceil(epp) * kv_heads * dc,
+        ircu_events: n_shards * (ctx_macs.div_ceil(macs) + (dh as u64 * heads).div_ceil(macs)),
+        spad_events: n_shards * (dh as u64) * kv_heads * 3,
+        pe_events: 0,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // Output projection of the single token.
+    lp.phases.push(Phase {
+        kind: PhaseKind::OutputReduce,
+        cycles: vec_stream + 2 * dc + hw.pe_mvm_cycles,
+        hop_events: (d as u64).div_ceil(epp) * 2 * dc,
+        ircu_events: (d as u64).div_ceil(macs) * dc,
+        spad_events: d as u64,
+        pe_events: dc * dc,
+        active_routers: geom.macros_per_channel() as u64,
+    });
+
+    // MLP for one token.
+    let f = shape.d_ff as u64;
+    let f_stream = f.div_ceil(epp);
+    let dcf = f.div_ceil(hw.xb as u64);
+    lp.phases.push(Phase {
+        kind: PhaseKind::Mlp,
+        cycles: 2 * vec_stream + f_stream + 3 * dc,
+        hop_events: 2 * (d as u64).div_ceil(epp) * dcf + f_stream * dc,
+        ircu_events: 2 * f.div_ceil(macs) + (d as u64).div_ceil(macs),
+        spad_events: 2 * f + d as u64,
+        pe_events: 3 * dc * dcf,
+        active_routers: (3 * geom.macros_per_channel()) as u64,
+    });
+
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn setup(preset: ModelPreset) -> (ModelShape, TileGeometry, HwParams) {
+        let hw = HwParams::default();
+        let shape = preset.shape();
+        let geom = TileGeometry::for_model(shape.d_model, &hw);
+        (shape, geom, hw)
+    }
+
+    #[test]
+    fn prefill_covers_all_phases() {
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let lp = prefill_phases(&shape, &geom, &hw, 1024);
+        let kinds: std::collections::HashSet<_> = lp.phases.iter().map(|p| p.kind).collect();
+        assert_eq!(kinds.len(), PhaseKind::ALL.len());
+        assert!(lp.total_cycles() > 0);
+    }
+
+    #[test]
+    fn prefill_scales_with_sequence() {
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let short = prefill_phases(&shape, &geom, &hw, 128).total_cycles();
+        let long = prefill_phases(&shape, &geom, &hw, 1024).total_cycles();
+        assert!(long > 4 * short, "prefill must scale with S: {short} vs {long}");
+    }
+
+    #[test]
+    fn decode_scales_with_context() {
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let early = decode_phases(&shape, &geom, &hw, 64).total_cycles();
+        let late = decode_phases(&shape, &geom, &hw, 2048).total_cycles();
+        assert!(late > early, "decode must slow as the cache grows");
+    }
+
+    #[test]
+    fn decode_per_token_cheaper_than_prefill_batch() {
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let prefill = prefill_phases(&shape, &geom, &hw, 1024).total_cycles();
+        let decode = decode_phases(&shape, &geom, &hw, 1024).total_cycles();
+        assert!(decode < prefill, "one decode step ≪ 1024-token prefill");
+    }
+
+    #[test]
+    fn decode_throughput_well_below_prefill() {
+        // §VI-D direction: per-token decode throughput sits well below
+        // prefill (single-Q pipeline underutilisation + serial rotation).
+        // The paper reports 4–6×; our model measures ~17–30× because our
+        // prefill pipelines tokens more aggressively through the channels —
+        // a documented deviation analysed in EXPERIMENTS.md §Fig10.
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let s = 1024;
+        let prefill_per_tok = prefill_phases(&shape, &geom, &hw, s).total_cycles() as f64 / s as f64;
+        let decode_per_tok = decode_phases(&shape, &geom, &hw, s).total_cycles() as f64;
+        let ratio = decode_per_tok / prefill_per_tok;
+        assert!((3.0..60.0).contains(&ratio), "decode/prefill per-token ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn pim_not_on_critical_path() {
+        // Fig. 11: PIM operations rarely dominate; movement + IRCU do.
+        let (shape, geom, hw) = setup(ModelPreset::Llama1B);
+        let lp = prefill_phases(&shape, &geom, &hw, 1024);
+        let proj = lp.cycles_of(PhaseKind::Projection);
+        assert!(proj * 5 < lp.total_cycles(), "PIM {proj} vs total {}", lp.total_cycles());
+    }
+
+    #[test]
+    fn larger_models_cost_more() {
+        let hw = HwParams::default();
+        let mut prev = 0;
+        for preset in [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B] {
+            let shape = preset.shape();
+            let geom = TileGeometry::for_model(shape.d_model, &hw);
+            let c = prefill_phases(&shape, &geom, &hw, 512).total_cycles();
+            assert!(c > prev, "{preset:?} = {c}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn gqa_aware_ablation_faster_for_gqa_models() {
+        // Llama 1B/8B have 4× fewer KV heads; the GQA-aware dataflow must
+        // beat duplicated streaming on decode, and be identical for MHA.
+        let (shape, geom, hw) = setup(ModelPreset::Llama8B);
+        let dup = decode_phases_opts(&shape, &geom, &hw, 1024, true).total_cycles();
+        let gqa = decode_phases_opts(&shape, &geom, &hw, 1024, false).total_cycles();
+        assert!(gqa < dup, "gqa {gqa} !< dup {dup}");
+        let (mha, mgeom, mhw) = setup(ModelPreset::Llama13B);
+        let a = decode_phases_opts(&mha, &mgeom, &mhw, 1024, true).total_cycles();
+        let b = decode_phases_opts(&mha, &mgeom, &mhw, 1024, false).total_cycles();
+        assert_eq!(a, b, "MHA model unaffected by the flag");
+    }
+
+    #[test]
+    fn event_counts_positive() {
+        let (shape, geom, hw) = setup(ModelPreset::Tiny);
+        for lp in [prefill_phases(&shape, &geom, &hw, 32), decode_phases(&shape, &geom, &hw, 32)] {
+            let hops: u64 = lp.phases.iter().map(|p| p.hop_events).sum();
+            let ircu: u64 = lp.phases.iter().map(|p| p.ircu_events).sum();
+            let pe: u64 = lp.phases.iter().map(|p| p.pe_events).sum();
+            assert!(hops > 0 && ircu > 0 && pe > 0);
+        }
+    }
+}

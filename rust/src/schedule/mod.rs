@@ -1,0 +1,11 @@
+//! Temporal mapping (paper §IV): context-window tiling, scratchpad shard
+//! layout, the prefill/decode dataflow phase plans, and KV-cache placement.
+
+pub mod dataflow;
+pub mod tiling;
+
+pub use dataflow::{
+    decode_phases, decode_phases_opts, prefill_phases, prefill_phases_opts, LayerPhases, Phase,
+    PhaseKind,
+};
+pub use tiling::{KvPlacement, ShardLayout, SlotAddr};

@@ -1,0 +1,192 @@
+//! Context-window tiling and scratchpad layout (Fig. 5).
+//!
+//! Q/K/V are partitioned into shards of C_S = 2·N_r rows; each shard row is
+//! distributed across the N_r routers of an RPU, two rows per router column
+//! (Fig. 5(c)). Newly generated K/V vectors in decode append into the same
+//! layout (§IV-C), which keeps scratchpad occupancy balanced across routers
+//! with no data shifting — the invariant `prop_invariants.rs` checks.
+
+use crate::arch::TileGeometry;
+
+/// Scratchpad slot address for one shard row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotAddr {
+    /// Router index within the RPU (0..N_r).
+    pub router: u16,
+    /// Word-depth offset within that router's scratchpad.
+    pub depth: u32,
+}
+
+/// Shard layout bookkeeping for one RPU's scratchpad bank.
+#[derive(Debug, Clone)]
+pub struct ShardLayout {
+    pub shard_rows: usize,
+    pub n_routers: usize,
+    /// Scratchpad words available per router.
+    pub depth_words: usize,
+    /// Words one shard row occupies in a router (the d_head sub-vector the
+    /// RPU owns, spread across its routers).
+    pub row_words: usize,
+}
+
+impl ShardLayout {
+    pub fn new(geom: &TileGeometry, d_head: usize) -> Self {
+        // Each RPU holds a d_head-wide slice; its N_r routers split the
+        // slice, two shard rows interleaved per router (C_S = 2·N_r).
+        let row_words = d_head.div_ceil(geom.n_r).max(1);
+        Self {
+            shard_rows: geom.shard_rows,
+            n_routers: geom.n_r,
+            depth_words: geom.spad_depth,
+            row_words,
+        }
+    }
+
+    /// Scratchpad slot of global token `t` (Fig. 5(b/c)): token t lives in
+    /// shard t / C_S, at row t mod C_S; rows are dealt round-robin across
+    /// routers, two per router.
+    pub fn slot_for_token(&self, t: usize) -> SlotAddr {
+        let shard = t / self.shard_rows;
+        let row = t % self.shard_rows;
+        let router = (row % self.n_routers) as u16;
+        let pass = row / self.n_routers; // 0 or 1 (two rows per router)
+        let depth = (shard * 2 + pass) * self.row_words;
+        SlotAddr { router, depth: depth as u32 }
+    }
+
+    /// Max context length this layout supports before scratchpads overflow.
+    pub fn capacity_tokens(&self) -> usize {
+        // Each token consumes `row_words` in exactly one router; a router
+        // receives 2 tokens per shard.
+        let shards = self.depth_words / (2 * self.row_words);
+        shards * self.shard_rows
+    }
+
+    /// Per-router token occupancy after `n` tokens (for the balance check).
+    pub fn occupancy(&self, n_tokens: usize) -> Vec<usize> {
+        let mut occ = vec![0usize; self.n_routers];
+        for t in 0..n_tokens {
+            occ[self.slot_for_token(t).router as usize] += 1;
+        }
+        occ
+    }
+}
+
+/// KV-cache placement manager for one attention layer (decode appends).
+#[derive(Debug, Clone)]
+pub struct KvPlacement {
+    pub layout: ShardLayout,
+    /// Tokens currently cached.
+    pub len: usize,
+}
+
+impl KvPlacement {
+    pub fn new(layout: ShardLayout) -> Self {
+        Self { layout, len: 0 }
+    }
+
+    /// Append one newly generated K/V vector; returns its slot.
+    /// Errors when the scratchpads are full (context-window limit).
+    pub fn append(&mut self) -> anyhow::Result<SlotAddr> {
+        anyhow::ensure!(
+            self.len < self.layout.capacity_tokens(),
+            "KV cache full at {} tokens",
+            self.len
+        );
+        let slot = self.layout.slot_for_token(self.len);
+        self.len += 1;
+        Ok(slot)
+    }
+
+    /// Bulk-install a prefill of `n` tokens.
+    pub fn fill_prefill(&mut self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.len == 0, "prefill into a non-empty cache");
+        anyhow::ensure!(n <= self.layout.capacity_tokens(), "prefill exceeds capacity");
+        self.len = n;
+        Ok(())
+    }
+
+    /// Imbalance = max − min per-router token count. The Fig. 5 placement
+    /// guarantees ≤ 2 at every step (one in-fill shard, two rows/router).
+    pub fn imbalance(&self) -> usize {
+        let occ = self.layout.occupancy(self.len);
+        let max = occ.iter().max().copied().unwrap_or(0);
+        let min = occ.iter().min().copied().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwParams;
+
+    fn layout_1b() -> ShardLayout {
+        let hw = HwParams::default();
+        let geom = TileGeometry::for_model(2048, &hw);
+        ShardLayout::new(&geom, 64)
+    }
+
+    #[test]
+    fn slots_cycle_through_routers() {
+        let l = layout_1b(); // C_S = 16, N_r = 8
+        let slots: Vec<_> = (0..16).map(|t| l.slot_for_token(t).router).collect();
+        // rows deal round-robin: 0..7 then 0..7 again (second pass)
+        assert_eq!(&slots[..8], &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(&slots[8..], &[0, 1, 2, 3, 4, 5, 6, 7]);
+        // next shard goes deeper, same router pattern
+        let s16 = l.slot_for_token(16);
+        assert_eq!(s16.router, 0);
+        assert!(s16.depth > l.slot_for_token(0).depth);
+    }
+
+    #[test]
+    fn occupancy_balanced_at_any_length() {
+        let l = layout_1b();
+        for n in [1usize, 7, 16, 100, 1024, 2048] {
+            let occ = l.occupancy(n);
+            let max = occ.iter().max().unwrap();
+            let min = occ.iter().min().unwrap();
+            assert!(max - min <= 2, "imbalance {} at n={n}", max - min);
+        }
+    }
+
+    #[test]
+    fn capacity_matches_geometry() {
+        let l = layout_1b();
+        // depth 16384 words / (2 rows × 8 words/row) = 1024 shards × 16 rows
+        assert_eq!(l.capacity_tokens(), 16384);
+    }
+
+    #[test]
+    fn append_until_full_then_error() {
+        let hw = HwParams::default();
+        let geom = TileGeometry::for_model(256, &hw);
+        let mut l = ShardLayout::new(&geom, 64);
+        l.depth_words = 256; // shrink for the test
+        let cap = l.capacity_tokens();
+        let mut kv = KvPlacement::new(l);
+        for _ in 0..cap {
+            kv.append().unwrap();
+        }
+        assert!(kv.append().is_err());
+    }
+
+    #[test]
+    fn prefill_then_decode_appends_continue_pattern() {
+        let mut kv = KvPlacement::new(layout_1b());
+        kv.fill_prefill(1000).unwrap();
+        let s = kv.append().unwrap();
+        assert_eq!(s, kv.layout.slot_for_token(1000));
+        assert!(kv.imbalance() <= 2);
+    }
+
+    #[test]
+    fn prefill_rejects_refill_and_overflow() {
+        let mut kv = KvPlacement::new(layout_1b());
+        kv.fill_prefill(10).unwrap();
+        assert!(kv.fill_prefill(10).is_err());
+        let mut kv2 = KvPlacement::new(layout_1b());
+        assert!(kv2.fill_prefill(usize::MAX / 2).is_err());
+    }
+}

@@ -1,0 +1,296 @@
+//! Analytical end-to-end inference simulation.
+//!
+//! Sums the per-layer phase plans of `schedule::dataflow` over all layers
+//! and all decode steps, converts cycles to seconds at the configured
+//! frequency, and charges the energy ledger from the phase event counts.
+//! Produces tokens/s and tokens/J — the Table III / Fig. 10 quantities.
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::energy::{EnergyLedger, EventEnergy, EventKind};
+use crate::model::{ModelPreset, ModelShape};
+use crate::schedule::{decode_phases_opts, prefill_phases_opts, LayerPhases};
+
+/// Per-stage (prefill or decode) results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageReport {
+    pub tokens: usize,
+    pub cycles: u64,
+    pub seconds: f64,
+    /// Stage throughput in tokens/s.
+    pub tokens_per_s: f64,
+    pub energy_j: f64,
+}
+
+/// End-to-end inference results for one (model, in, out) workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceReport {
+    pub model: String,
+    pub in_tokens: usize,
+    pub out_tokens: usize,
+    pub prefill: StageReport,
+    pub decode: StageReport,
+    /// Overall throughput: (in + out) tokens / total time — the Table III
+    /// convention (full 2048-token context window processed).
+    pub total_tokens_per_s: f64,
+    /// Generation-only throughput: out / total time.
+    pub gen_tokens_per_s: f64,
+    pub total_energy_j: f64,
+    /// tokens/J over the full window (Table III energy efficiency).
+    pub tokens_per_j: f64,
+    /// Average power draw, W.
+    pub avg_power_w: f64,
+    /// Macros mapped for this model (leakage base).
+    pub mapped_macros: usize,
+}
+
+/// Active-wavefront size: 64 tiles × 1024 macros (Table I system).
+pub const WAVEFRONT_MACROS: usize = 64 * 1024;
+
+/// Analytical simulator for one model on given hardware.
+#[derive(Debug, Clone)]
+pub struct AnalyticalSim {
+    pub shape: ModelShape,
+    pub geom: TileGeometry,
+    pub hw: HwParams,
+    /// Stream duplicated (MHA-degraded) K/V shards, the paper's choice.
+    /// `false` = GQA-aware ablation (EXPERIMENTS.md §Table III).
+    pub kv_duplication: bool,
+    energy: EventEnergy,
+}
+
+impl AnalyticalSim {
+    pub fn new(preset: ModelPreset, hw: HwParams) -> Self {
+        let shape = preset.shape();
+        let geom = TileGeometry::for_model(shape.d_model, &hw);
+        Self { shape, geom, hw, kv_duplication: true, energy: EventEnergy::default() }
+    }
+
+    /// The GQA-aware ablation variant (streams n_kv_heads-wide caches).
+    pub fn gqa_aware(preset: ModelPreset, hw: HwParams) -> Self {
+        let mut s = Self::new(preset, hw);
+        s.kv_duplication = false;
+        s
+    }
+
+    /// Macros required to map the whole model: the attention tile plus the
+    /// MLP tiles, per layer (Table I: 64 tiles for Llama 3.2-1B).
+    pub fn mapped_macros(&self) -> usize {
+        let attn = self.geom.macros_per_tile();
+        // MLP weights: 3·D·F cells → tiles of the same 2dc×2dc size.
+        let mlp_xbars = 3 * self.shape.d_model.div_ceil(self.hw.xb)
+            * self.shape.d_ff.div_ceil(self.hw.xb);
+        let mlp_tiles = mlp_xbars.div_ceil(self.geom.macros_per_tile());
+        self.shape.n_layers * (attn + mlp_tiles * self.geom.macros_per_tile())
+    }
+
+    /// Tiles required (the Table I "Tile #" figure).
+    pub fn mapped_tiles(&self) -> usize {
+        self.mapped_macros() / self.geom.macros_per_tile()
+    }
+
+    fn charge(&self, ledger: &mut EnergyLedger, lp: &LayerPhases) {
+        for p in &lp.phases {
+            ledger.add(&self.energy, EventKind::RouterHop, p.hop_events);
+            ledger.add(&self.energy, EventKind::IrcuCycle, p.ircu_events);
+            ledger.add(&self.energy, EventKind::SpadRead, p.spad_events / 2);
+            ledger.add(&self.energy, EventKind::SpadWrite, p.spad_events.div_ceil(2));
+            ledger.add(&self.energy, EventKind::PeMvm, p.pe_events);
+        }
+    }
+
+    /// Macros in the active execution wavefront. The paper reports a single
+    /// 10.53 W "Ours" power for 8B and 13B alike — exactly 65,536 macros
+    /// (the Table I 64-tile system) at Table II's 160.65 µW. We model the
+    /// same: the pipeline wavefront keeps ~64 tiles un-gated regardless of
+    /// how many tiles the full model maps to; everything else is
+    /// power-gated (non-volatile weights retain state).
+    pub fn wavefront_macros(&self) -> usize {
+        self.mapped_macros().min(WAVEFRONT_MACROS)
+    }
+
+    /// Cycles for one full-model prefill of `s` tokens.
+    pub fn prefill_cycles(&self, s: usize) -> u64 {
+        let lp =
+            prefill_phases_opts(&self.shape, &self.geom, &self.hw, s, self.kv_duplication);
+        lp.total_cycles() * self.shape.n_layers as u64
+    }
+
+    /// Cycles for one decode step at context length `ctx`.
+    pub fn decode_cycles(&self, ctx: usize) -> u64 {
+        let lp =
+            decode_phases_opts(&self.shape, &self.geom, &self.hw, ctx, self.kv_duplication);
+        lp.total_cycles() * self.shape.n_layers as u64
+    }
+
+    /// Simulate a full inference: prefill `in_tokens`, then generate
+    /// `out_tokens` autoregressively (context grows each step).
+    pub fn run(&self, in_tokens: usize, out_tokens: usize) -> InferenceReport {
+        let layers = self.shape.n_layers as u64;
+
+        // Prefill.
+        let mut ledger_p = EnergyLedger::new();
+        let lp =
+            prefill_phases_opts(&self.shape, &self.geom, &self.hw, in_tokens, self.kv_duplication);
+        self.charge(&mut ledger_p, &lp);
+        // per-layer events × layers: merge layers-1 more copies cheaply
+        let prefill_cycles = lp.total_cycles() * layers;
+        scale_ledger(&mut ledger_p, layers);
+        let prefill_s = self.hw.seconds(prefill_cycles);
+        let wavefront_w =
+            self.wavefront_macros() as f64 * crate::energy::table2::MACRO_UW * 1e-6;
+        let prefill_j = ledger_p.total_j(&self.energy, self.mapped_macros(), prefill_s)
+            + wavefront_w * prefill_s;
+
+        // Decode: sample the growing context at a coarse stride for speed,
+        // integrating cycles/energy piecewise (exact at stride 1).
+        let mut decode_cycles = 0u64;
+        let mut ledger_d = EnergyLedger::new();
+        let stride = (out_tokens / 64).max(1);
+        let mut t = 0usize;
+        while t < out_tokens {
+            let span = stride.min(out_tokens - t);
+            let ctx = in_tokens + t + span / 2;
+            let lp =
+                decode_phases_opts(&self.shape, &self.geom, &self.hw, ctx, self.kv_duplication);
+            decode_cycles += lp.total_cycles() * layers * span as u64;
+            let mut one = EnergyLedger::new();
+            self.charge(&mut one, &lp);
+            scale_ledger(&mut one, layers * span as u64);
+            ledger_d.merge(&one);
+            t += span;
+        }
+        let decode_s = self.hw.seconds(decode_cycles);
+        let decode_j = ledger_d.total_j(&self.energy, self.mapped_macros(), decode_s)
+            + wavefront_w * decode_s;
+
+        let total_s = prefill_s + decode_s;
+        let total_j = prefill_j + decode_j;
+        let total_tokens = (in_tokens + out_tokens) as f64;
+
+        InferenceReport {
+            model: self.shape.name.to_string(),
+            in_tokens,
+            out_tokens,
+            prefill: StageReport {
+                tokens: in_tokens,
+                cycles: prefill_cycles,
+                seconds: prefill_s,
+                tokens_per_s: in_tokens as f64 / prefill_s.max(1e-12),
+                energy_j: prefill_j,
+            },
+            decode: StageReport {
+                tokens: out_tokens,
+                cycles: decode_cycles,
+                seconds: decode_s,
+                tokens_per_s: out_tokens as f64 / decode_s.max(1e-12),
+                energy_j: decode_j,
+            },
+            total_tokens_per_s: total_tokens / total_s.max(1e-12),
+            gen_tokens_per_s: out_tokens as f64 / total_s.max(1e-12),
+            total_energy_j: total_j,
+            tokens_per_j: total_tokens / total_j.max(1e-12),
+            avg_power_w: total_j / total_s.max(1e-12),
+            mapped_macros: self.mapped_macros(),
+        }
+    }
+}
+
+fn scale_ledger(l: &mut EnergyLedger, k: u64) {
+    for v in l.counts.values_mut() {
+        *v *= k;
+    }
+    l.dynamic_pj *= k as f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(p: ModelPreset) -> AnalyticalSim {
+        AnalyticalSim::new(p, HwParams::default())
+    }
+
+    #[test]
+    fn table1_tile_count_for_1b() {
+        // Table I: 64 tiles for Llama 3.2-1B (16 layers × (1 attn + 3 MLP)).
+        let s = sim(ModelPreset::Llama1B);
+        assert_eq!(s.geom.macros_per_tile(), 1024);
+        assert_eq!(s.mapped_tiles(), 64);
+        assert_eq!(s.mapped_macros(), 64 * 1024);
+    }
+
+    #[test]
+    fn report_structure_sane() {
+        let r = sim(ModelPreset::Llama1B).run(256, 256);
+        assert!(r.prefill.seconds > 0.0 && r.decode.seconds > 0.0);
+        assert!(r.prefill.tokens_per_s > r.decode.tokens_per_s, "prefill faster per token");
+        assert!(r.total_tokens_per_s > 0.0);
+        assert!(r.tokens_per_j > 0.0);
+        assert!(r.avg_power_w > 0.0);
+    }
+
+    #[test]
+    fn decode_dominates_long_generations() {
+        let r = sim(ModelPreset::Llama1B).run(1024, 1024);
+        assert!(r.decode.seconds > r.prefill.seconds);
+    }
+
+    #[test]
+    fn throughput_drops_sublinearly_with_model_size() {
+        // §VI-D: 1B → 8B is ~8× parameters but throughput drops ≪ 8×.
+        let r1 = sim(ModelPreset::Llama1B).run(1024, 1024);
+        let r8 = sim(ModelPreset::Llama8B).run(1024, 1024);
+        let drop = r1.total_tokens_per_s / r8.total_tokens_per_s;
+        assert!(drop > 1.2, "8B must be slower ({drop:.2}×)");
+        assert!(drop < 8.0, "drop must be sublinear in the 8× size ({drop:.2}×)");
+    }
+
+    #[test]
+    fn throughput_ordering_1b_8b_13b() {
+        let t: Vec<f64> = [ModelPreset::Llama1B, ModelPreset::Llama8B, ModelPreset::Llama13B]
+            .iter()
+            .map(|&p| sim(p).run(512, 512).total_tokens_per_s)
+            .collect();
+        assert!(t[0] > t[1] && t[1] > t[2], "{t:?}");
+    }
+
+    #[test]
+    fn power_in_plausible_envelope() {
+        // The Table III system average is ~10.5 W; accept a broad band
+        // (2–60 W) — EXPERIMENTS.md records the exact measured value.
+        let r = sim(ModelPreset::Llama8B).run(1024, 1024);
+        assert!((2.0..60.0).contains(&r.avg_power_w), "power {}", r.avg_power_w);
+    }
+
+    #[test]
+    fn longer_context_lowers_decode_rate() {
+        let s = sim(ModelPreset::Llama1B);
+        let short = s.run(128, 128);
+        let long = s.run(2048, 2048);
+        assert!(short.decode.tokens_per_s > long.decode.tokens_per_s);
+    }
+
+    #[test]
+    fn gqa_aware_ablation_brackets_paper() {
+        // 8B: duplicated-KV (paper-faithful) is slower, GQA-aware faster;
+        // the two bracket the paper's reported 202 tok/s (EXPERIMENTS.md).
+        let dup = sim(ModelPreset::Llama8B).run(1024, 1024).gen_tokens_per_s;
+        let gqa = AnalyticalSim::gqa_aware(ModelPreset::Llama8B, HwParams::default())
+            .run(1024, 1024)
+            .gen_tokens_per_s;
+        assert!(gqa > dup);
+        assert!(dup < 202.25 && 202.25 < gqa, "bracket failed: {dup} .. {gqa}");
+    }
+
+    #[test]
+    fn stride_sampling_close_to_exact() {
+        // The piecewise integration must track the exact sum closely.
+        let s = sim(ModelPreset::Tiny);
+        let exact: u64 = (0..64u64)
+            .map(|t| s.decode_cycles(32 + t as usize))
+            .sum();
+        let r = s.run(32, 64);
+        let rel = (r.decode.cycles as f64 - exact as f64).abs() / exact as f64;
+        assert!(rel < 0.05, "stride integration error {rel}");
+    }
+}

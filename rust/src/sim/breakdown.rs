@@ -1,0 +1,126 @@
+//! Per-instruction-class critical-path cycle breakdown (Fig. 11).
+//!
+//! Maps the analytical phase plan onto the Fig. 11 legend classes (send /
+//! mul / add / spad / pim / ctrl) for an attention layer and its subsequent
+//! MLP, for both prefill and decode.
+
+use std::collections::BTreeMap;
+
+use crate::arch::{HwParams, TileGeometry};
+use crate::model::ModelShape;
+use crate::schedule::{decode_phases, prefill_phases, LayerPhases, PhaseKind};
+
+/// Cycle share per instruction class.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassBreakdown {
+    pub cycles: BTreeMap<&'static str, u64>,
+}
+
+impl ClassBreakdown {
+    pub fn total(&self) -> u64 {
+        self.cycles.values().sum()
+    }
+
+    pub fn share(&self, class: &str) -> f64 {
+        *self.cycles.get(class).unwrap_or(&0) as f64 / self.total().max(1) as f64
+    }
+}
+
+/// Attribute each phase's critical-path cycles to its dominant class.
+///
+/// The attribution mirrors what the NMC observes: a phase bottlenecked on
+/// streaming charges `send`; DDMM phases charge the IRCU `mul`; reductions
+/// and softmax charge `add`; scratchpad-bound phases charge `spad`; the
+/// in-crossbar projections charge `pim`.
+fn attribute(lp: &LayerPhases) -> ClassBreakdown {
+    let mut b = ClassBreakdown::default();
+    for p in &lp.phases {
+        let class = match p.kind {
+            PhaseKind::InputBroadcast | PhaseKind::KShardRotate => "send",
+            PhaseKind::Projection => "pim",
+            PhaseKind::ProjReduce | PhaseKind::ScoreReduce | PhaseKind::OutputReduce => "add",
+            PhaseKind::ScoreDdmm | PhaseKind::ContextDdmm => "mul",
+            PhaseKind::Softmax => "add",
+            PhaseKind::Mlp => "send", // MLP critical path is the F-wide stream
+        };
+        *b.cycles.entry(class).or_insert(0) += p.cycles;
+        // scratchpad side-channel: charge the access cycles that exceed the
+        // overlap window as spad
+        let spad_extra = p.spad_events.saturating_sub(p.cycles) / 8;
+        if spad_extra > 0 {
+            *b.cycles.entry("spad").or_insert(0) += spad_extra.min(p.cycles / 4);
+        }
+    }
+    *b.cycles.entry("ctrl").or_insert(0) += lp.phases.len() as u64; // issue cycles
+    b
+}
+
+/// Fig. 11 data: (prefill breakdown, decode breakdown) for one layer+MLP.
+pub fn class_breakdown(
+    shape: &ModelShape,
+    geom: &TileGeometry,
+    hw: &HwParams,
+    s: usize,
+) -> (ClassBreakdown, ClassBreakdown) {
+    let pre = attribute(&prefill_phases(shape, geom, hw, s));
+    let dec = attribute(&decode_phases(shape, geom, hw, s));
+    (pre, dec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn setup() -> (ModelShape, TileGeometry, HwParams) {
+        let hw = HwParams::default();
+        let shape = ModelPreset::Llama1B.shape();
+        let geom = TileGeometry::for_model(shape.d_model, &hw);
+        (shape, geom, hw)
+    }
+
+    #[test]
+    fn movement_and_ircu_dominate() {
+        // Fig. 11's headline: latency is bottlenecked by data movement and
+        // IRCU DDMMs, not PIM.
+        let (shape, geom, hw) = setup();
+        let (pre, dec) = class_breakdown(&shape, &geom, &hw, 1024);
+        for b in [&pre, &dec] {
+            let comm_compute = b.share("send") + b.share("mul") + b.share("add");
+            assert!(comm_compute > 0.7, "send+mul+add = {comm_compute}");
+            assert!(b.share("pim") < 0.15, "pim share {}", b.share("pim"));
+        }
+    }
+
+    #[test]
+    fn all_classes_present_in_prefill() {
+        let (shape, geom, hw) = setup();
+        let (pre, _) = class_breakdown(&shape, &geom, &hw, 1024);
+        for c in ["send", "mul", "add", "pim", "ctrl"] {
+            assert!(pre.cycles.contains_key(c), "missing {c}");
+        }
+    }
+
+    #[test]
+    fn totals_match_phase_sums() {
+        let (shape, geom, hw) = setup();
+        let lp = prefill_phases(&shape, &geom, &hw, 512);
+        let b = attribute(&lp);
+        // breakdown ≥ phase cycles (ctrl + spad extras are additive)
+        assert!(b.total() >= lp.total_cycles());
+        assert!(b.total() < lp.total_cycles() * 2);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let (shape, geom, hw) = setup();
+        let (pre, dec) = class_breakdown(&shape, &geom, &hw, 256);
+        for b in [pre, dec] {
+            let sum: f64 = ["send", "mul", "add", "spad", "pim", "ctrl"]
+                .iter()
+                .map(|c| b.share(c))
+                .sum();
+            assert!((sum - 1.0).abs() < 1e-9, "shares sum {sum}");
+        }
+    }
+}

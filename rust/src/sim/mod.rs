@@ -1,0 +1,19 @@
+//! Instruction-level and analytical simulation.
+//!
+//! Two fidelity levels, cross-validated in `tests/integration_sim.rs`:
+//!  * [`analytical`] — closed-form phase sums (from `schedule::dataflow`)
+//!    used for the end-to-end studies (Table III, Figs. 10/12). Fast enough
+//!    to sweep full Llama-13B contexts in microseconds.
+//!  * the detailed mesh executor in [`crate::noc`] — packet-level execution
+//!    of compiled NPM programs, used for small configs and property tests.
+//!
+//! [`breakdown`] produces the per-instruction-class critical-path cycle
+//! split of Fig. 11 from either level.
+
+pub mod analytical;
+pub mod breakdown;
+pub mod trace;
+
+pub use analytical::{AnalyticalSim, InferenceReport, StageReport};
+pub use breakdown::{class_breakdown, ClassBreakdown};
+pub use trace::TrafficMatrix;

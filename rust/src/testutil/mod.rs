@@ -1,0 +1,12 @@
+//! Test utilities: deterministic PRNG and a mini property-testing harness.
+//!
+//! The image's crate registry is offline, so `proptest`/`quickcheck` are
+//! unavailable; this module provides the subset we need: a SplitMix64 PRNG
+//! (stable across platforms), value generators, and a `forall` driver that
+//! reports the failing seed + case for reproduction.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Config};
+pub use rng::SplitMix64;

@@ -1,0 +1,96 @@
+//! Mini property-testing harness (offline stand-in for proptest).
+//!
+//! `forall(cfg, |rng| -> Result<(), String>)` runs the closure over many
+//! deterministically-seeded PRNGs; on failure it reports the seed so the
+//! case can be replayed with `forall_seed`.
+
+use super::rng::SplitMix64;
+
+/// Property-test configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u64,
+    /// Base seed; case i runs with seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, base_seed: 0xD1CE }
+    }
+}
+
+impl Config {
+    pub fn cases(n: u64) -> Self {
+        Self { cases: n, ..Self::default() }
+    }
+}
+
+/// Run `prop` on `cfg.cases` deterministic PRNGs; panic with the failing
+/// seed + message on the first failure.
+pub fn forall<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i);
+        let mut rng = SplitMix64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (seed={seed:#x}, case {i}/{}): {msg}", cfg.cases);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn forall_seed<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (seed={seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::cases(10), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(Config::cases(10), |rng| {
+            if rng.below(4) == 3 {
+                Err("hit".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<u64> = vec![];
+        forall(Config::cases(5), |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        forall(Config::cases(5), |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

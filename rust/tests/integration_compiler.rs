@@ -1,0 +1,67 @@
+//! Integration: compiler pipeline end-to-end — preset → mapping → programs
+//! → hex roundtrip, plus the python/rust assembler contract.
+
+use leap::compiler::{ctx_bucket, Compiler};
+use leap::isa::{assemble, disassemble, Opcode};
+use leap::mapping::explore;
+use leap::model::ModelPreset;
+
+#[test]
+fn compile_and_roundtrip_every_preset() {
+    for preset in ModelPreset::ALL {
+        let mut cm = Compiler::default().compile(preset).unwrap();
+        let prog = cm.prefill_program(64).clone();
+        let hex = assemble(&prog);
+        let back = disassemble(&hex).unwrap();
+        assert_eq!(prog.instrs, back.instrs, "{preset:?} hex roundtrip");
+        assert_eq!(back.instrs.last().unwrap().cmd1.op, Opcode::Halt);
+    }
+}
+
+#[test]
+fn decode_program_scales_with_ctx_bucket() {
+    let mut cm = Compiler::default().compile(ModelPreset::Llama1B).unwrap();
+    let short: u64 = cm.decode_program(64).controller_cycles();
+    let long: u64 = cm.decode_program(4096).controller_cycles();
+    assert!(long > short, "bigger context bucket must cost more cycles");
+}
+
+#[test]
+fn ctx_buckets_bound_program_count() {
+    let mut cm = Compiler::default().compile(ModelPreset::Llama1B).unwrap();
+    for ctx in 1..=2048usize {
+        cm.decode_program(ctx);
+    }
+    // buckets: 1,2,4,...,2048 = 12 programs max
+    assert!(cm.cached_programs() <= 12, "{} programs", cm.cached_programs());
+    assert_eq!(ctx_bucket(2048), 2048);
+}
+
+#[test]
+fn dse_compiler_beats_or_matches_paper_mapping_cost() {
+    // The DSE-selected mapping can only be at least as good as the fixed
+    // Fig. 4 layout under the same cost model.
+    let res = explore(8, 128, 64);
+    assert!(res.best_cost() <= res.paper_cost());
+}
+
+#[test]
+fn full_dse_under_paper_time_budget() {
+    // §III-B: exploration completes within 20 s (we expect ≪ 1 s).
+    let res = explore(16, 128, 64);
+    assert!(res.elapsed_s < 20.0);
+    assert!(res.costs.len() >= 1440, "must cover at least the paper's 1440 configs");
+}
+
+#[test]
+fn programs_use_dual_issue() {
+    // The Fig. 6 overlap (route + MAC in one instruction) must appear.
+    let mut cm = Compiler::default().compile(ModelPreset::Llama1B).unwrap();
+    let prog = cm.prefill_program(512);
+    let dual = prog
+        .instrs
+        .iter()
+        .filter(|i| i.cmd1.op != Opcode::Nop && i.cmd2.op != Opcode::Nop)
+        .count();
+    assert!(dual > 0, "no dual-issue instructions emitted");
+}

@@ -1,0 +1,113 @@
+//! Integration: serving coordinator end-to-end on the synthetic numerics
+//! path (the PJRT path is covered in integration_runtime.rs + e2e_serve).
+
+use leap::arch::HwParams;
+use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, Server, ServingEngine};
+use leap::model::ModelPreset;
+
+fn cfg(preset: ModelPreset) -> EngineConfig {
+    EngineConfig {
+        preset,
+        hw: HwParams::default(),
+        policy: BatchPolicy::default(),
+        numerics: Numerics::Synthetic { vocab: preset.shape().vocab },
+    }
+}
+
+#[test]
+fn mixed_workload_completes() {
+    let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+    let mut expected_decode = 0u64;
+    for i in 0..12 {
+        let plen = 16 + (i * 37) % 200;
+        let gen = 4 + (i * 13) % 24;
+        e.submit(vec![1; plen], gen);
+        expected_decode += gen as u64;
+    }
+    e.run_until_idle().unwrap();
+    assert_eq!(e.metrics.requests_done, 12);
+    assert_eq!(e.metrics.decode_tokens, expected_decode);
+    assert_eq!(e.kv.live_requests(), 0);
+    assert_eq!(e.metrics.latencies_ns.len(), 12);
+}
+
+#[test]
+fn batching_improves_simulated_throughput_vs_serial() {
+    // Continuous batching interleaves decodes; total simulated time for N
+    // requests should not exceed N × single-request time (and the batcher
+    // must at least not make it worse).
+    let single = {
+        let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+        e.submit(vec![1; 64], 16);
+        e.run_until_idle().unwrap();
+        e.metrics.sim_time_ns
+    };
+    let batch4 = {
+        let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+        for _ in 0..4 {
+            e.submit(vec![1; 64], 16);
+        }
+        e.run_until_idle().unwrap();
+        e.metrics.sim_time_ns
+    };
+    assert!(batch4 <= 4 * single + single / 2, "batching regressed: {batch4} vs 4×{single}");
+}
+
+#[test]
+fn npm_swaps_track_dispatches() {
+    let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+    e.submit(vec![1; 32], 8);
+    e.run_until_idle().unwrap();
+    // 1 prefill (yields token 1) + 7 decode rounds (tokens 2..=8)
+    assert_eq!(e.metrics.npm_swaps, 8);
+}
+
+#[test]
+fn kv_balance_invariant_held_throughout() {
+    let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+    for i in 0..6 {
+        e.submit(vec![1; 31 + i * 17], 12);
+    }
+    while e.step().unwrap() {
+        assert!(e.kv_imbalance() <= 2, "imbalance {} mid-serve", e.kv_imbalance());
+    }
+}
+
+#[test]
+fn server_thread_many_clients() {
+    let server = Server::spawn(|| {
+        ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Llama1B,
+            hw: HwParams::default(),
+            policy: BatchPolicy { max_batch: 4, max_total_ctx: 8192 },
+            numerics: Numerics::Synthetic { vocab: 1000 },
+        })
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..10).map(|i| server.submit(vec![i as i32; 24], 6)).collect();
+    for rx in rxs {
+        let c = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens.len(), 6);
+        assert!(c.latency_ns.unwrap() > 0);
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 10);
+    assert!(metrics.host_overhead() < 1.0, "L3 must not dominate simulated time");
+}
+
+#[test]
+fn per_request_isolation_of_outputs() {
+    // Different prompts must produce different synthetic streams, and a
+    // given prompt must be deterministic.
+    let run = |seed: i32| {
+        let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
+        let id = e.submit(vec![seed; 16], 8);
+        e.run_until_idle().unwrap();
+        e.take_completion(id).unwrap().tokens
+    };
+    let a1 = run(1);
+    let a2 = run(1);
+    let b = run(2);
+    assert_eq!(a1, a2, "deterministic");
+    assert_ne!(a1, b, "prompt-dependent");
+}

@@ -1,0 +1,169 @@
+//! Integration: the analytical simulator and the instruction-level mesh
+//! simulator agree on compiled programs (the lowering contract), and the
+//! end-to-end numbers hold the paper's qualitative properties.
+
+use leap::arch::{HwParams, TileGeometry};
+use leap::compiler::{lower_phases, Compiler};
+use leap::isa::Opcode;
+use leap::model::ModelPreset;
+use leap::noc::MeshSim;
+use leap::schedule::{decode_phases, prefill_phases};
+use leap::sim::AnalyticalSim;
+
+/// The compiled program's Σ CMD_rep must equal the analytical phase cycles;
+/// executing it on the mesh must take exactly Σ rep + issue overhead.
+#[test]
+fn analytical_and_instruction_level_agree() {
+    let hw = HwParams::default();
+    let shape = ModelPreset::Tiny.shape();
+    let geom = TileGeometry::for_model(shape.d_model, &hw);
+    let lp = prefill_phases(&shape, &geom, &hw, 32);
+    let prog = lower_phases("xcheck", &lp, &geom);
+
+    let mut sim = MeshSim::new((2 * geom.dc) as u16, (2 * geom.dc) as u16, hw.clone());
+    // preload scratchpads so SpadRd phases have data to stream
+    for y in 0..sim.mesh.height {
+        for x in 0..sim.mesh.width {
+            sim.preload_spad(leap::arch::Coord::new(x, y), 4096);
+        }
+    }
+    let cycles = sim.run(&prog).unwrap();
+
+    let rep_sum: u64 = prog
+        .instrs
+        .iter()
+        .filter(|i| !matches!(i.cmd1.op, Opcode::Halt))
+        .map(|i| i.rep as u64)
+        .sum();
+    let issue = prog.instrs.len() as u64;
+    assert_eq!(
+        cycles,
+        rep_sum + issue,
+        "mesh executor must take Σrep + issue cycles (got {cycles})"
+    );
+    // The analytical total is the non-sync rep sum by the lowering contract.
+    let sync_reps: u64 = prog
+        .instrs
+        .iter()
+        .filter(|i| i.cmd1.op == Opcode::Sync)
+        .map(|i| i.rep as u64)
+        .sum();
+    assert_eq!(rep_sum - sync_reps, lp.total_cycles());
+}
+
+#[test]
+fn decode_program_also_agrees() {
+    let hw = HwParams::default();
+    let shape = ModelPreset::Tiny.shape();
+    let geom = TileGeometry::for_model(shape.d_model, &hw);
+    let lp = decode_phases(&shape, &geom, &hw, 64);
+    let prog = lower_phases("xcheck-dec", &lp, &geom);
+    let mut sim = MeshSim::new((2 * geom.dc) as u16, (2 * geom.dc) as u16, hw);
+    for y in 0..sim.mesh.height {
+        for x in 0..sim.mesh.width {
+            sim.preload_spad(leap::arch::Coord::new(x, y), 4096);
+        }
+    }
+    let cycles = sim.run(&prog).unwrap();
+    let rep_sum: u64 = prog
+        .instrs
+        .iter()
+        .filter(|i| !matches!(i.cmd1.op, Opcode::Halt))
+        .map(|i| i.rep as u64)
+        .sum();
+    assert_eq!(cycles, rep_sum + prog.instrs.len() as u64);
+    assert!(sim.conservation_ok(), "packet conservation violated");
+}
+
+#[test]
+fn mesh_class_breakdown_mirrors_program_mix() {
+    let hw = HwParams::default();
+    let shape = ModelPreset::Tiny.shape();
+    let geom = TileGeometry::for_model(shape.d_model, &hw);
+    let lp = prefill_phases(&shape, &geom, &hw, 32);
+    let prog = lower_phases("mix", &lp, &geom);
+    let mut sim = MeshSim::new(4, 4, hw);
+    sim.run(&prog).unwrap();
+    // every class that appears in the program appears in the stats
+    for i in &prog.instrs {
+        if !matches!(i.cmd1.op, Opcode::Halt) {
+            assert!(
+                sim.stats.class_cycles.contains_key(i.cmd1.op.class()),
+                "missing class {}",
+                i.cmd1.op.class()
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_model_programs_execute_on_mesh() {
+    let mut cm = Compiler::default().compile(ModelPreset::Tiny).unwrap();
+    let side = (2 * cm.geom.dc) as u16;
+    let prog = cm.prefill_program(32).clone();
+    let mut sim = MeshSim::new(side, side, cm.hw.clone());
+    for y in 0..side {
+        for x in 0..side {
+            sim.preload_spad(leap::arch::Coord::new(x, y), 1024);
+        }
+    }
+    let cycles = sim.run(&prog).unwrap();
+    assert!(cycles > 0);
+    assert!(sim.ledger.dynamic_pj > 0.0, "energy must accrue");
+}
+
+/// Table III qualitative shape: LEAP beats the A100 on throughput by a
+/// small factor and on energy efficiency by a large one; H100 wins on raw
+/// throughput.
+#[test]
+fn table3_shape_holds() {
+    use leap::baselines::GpuModel;
+    for preset in [ModelPreset::Llama8B, ModelPreset::Llama13B] {
+        let shape = preset.shape();
+        let ours = AnalyticalSim::new(preset, HwParams::default()).run(1024, 1024);
+        let a100 = GpuModel::a100().run(&shape, 1024, 1024);
+        let h100 = GpuModel::h100().run(&shape, 1024, 1024);
+        let thr_gain = ours.gen_tokens_per_s / a100.gen_tokens_per_s;
+        assert!(
+            (1.2..8.0).contains(&thr_gain),
+            "{preset:?}: ours/A100 throughput {thr_gain:.2} (paper ~2.55×)"
+        );
+        let eff_gain = ours.tokens_per_j / a100.tokens_per_j;
+        assert!(
+            eff_gain > 20.0,
+            "{preset:?}: ours/A100 efficiency {eff_gain:.1} (paper ~71.9×)"
+        );
+        let eff_gain_h = ours.tokens_per_j / h100.tokens_per_j;
+        assert!(
+            eff_gain_h > 5.0,
+            "{preset:?}: ours/H100 efficiency {eff_gain_h:.1} (paper ~24.2×)"
+        );
+        // our power must be a tiny fraction of the GPUs'
+        assert!(ours.avg_power_w < 0.1 * a100.power_w);
+    }
+}
+
+/// Fig. 12 qualitative shape: widening packets and adding MACs both help,
+/// with diminishing returns past the Table I point (64-bit / 16 MACs).
+#[test]
+fn fig12_frontier_shape() {
+    let run = |packet_bits: u32, macs: usize| {
+        let mut hw = HwParams::default();
+        hw.packet_bits = packet_bits;
+        hw.ircu_macs = macs;
+        AnalyticalSim::new(ModelPreset::Llama1B, hw).run(512, 512).total_tokens_per_s
+    };
+    let narrow = run(16, 16);
+    let table1 = run(64, 16);
+    let wide = run(256, 16);
+    assert!(table1 > narrow, "wider packets must help below 64 b");
+    let below_gain = table1 / narrow;
+    let above_gain = wide / table1;
+    assert!(below_gain > above_gain, "diminishing returns past 64 b: {below_gain:.2} vs {above_gain:.2}");
+
+    let few = run(64, 4);
+    let many = run(64, 64);
+    assert!(table1 > few, "more MACs must help below 16");
+    let mac_gain_above = many / table1;
+    assert!(mac_gain_above < below_gain, "MAC scaling saturates: {mac_gain_above:.2}");
+}

@@ -1,0 +1,249 @@
+//! Property-based invariants (SplitMix64 harness — proptest is unavailable
+//! offline). Coordinator invariants: routing, batching, KV state; plus the
+//! NoC packet-conservation and ISA-roundtrip properties under random
+//! programs.
+
+use leap::arch::{Coord, HwParams, Mesh, TileGeometry};
+use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use leap::isa::{assemble, disassemble, Cmd, Instruction, Opcode, Program, SelBits};
+use leap::model::ModelPreset;
+use leap::noc::MeshSim;
+use leap::schedule::{KvPlacement, ShardLayout};
+use leap::testutil::{forall, Config, SplitMix64};
+
+/// X-Y routing: route length = Manhattan distance, stays on-mesh, ends at
+/// the destination — for random endpoints on random mesh sizes.
+#[test]
+fn prop_xy_routing_correct() {
+    forall(Config::cases(200), |rng| {
+        let w = rng.range(1, 40) as u16;
+        let h = rng.range(1, 40) as u16;
+        let mesh = Mesh::new(w, h);
+        let src = Coord::new(rng.range(0, w as usize - 1) as u16, rng.range(0, h as usize - 1) as u16);
+        let dst = Coord::new(rng.range(0, w as usize - 1) as u16, rng.range(0, h as usize - 1) as u16);
+        let route = mesh.xy_route(src, dst);
+        if route.len() as u32 != src.manhattan(dst) {
+            return Err(format!("len {} != manhattan {}", route.len(), src.manhattan(dst)));
+        }
+        for c in &route {
+            if !mesh.contains(*c) {
+                return Err(format!("off-mesh hop {c}"));
+            }
+        }
+        if src != dst && route.last() != Some(&dst) {
+            return Err("route must end at dst".into());
+        }
+        Ok(())
+    });
+}
+
+/// KV placement balance: for any token count, per-router occupancy spread
+/// is ≤ 2 (the §IV-C "inherently balanced" claim).
+#[test]
+fn prop_kv_placement_balanced() {
+    forall(Config::cases(100), |rng| {
+        let d_model = 128 * rng.range(2, 40); // dc 2..40 (rounded even)
+        let hw = HwParams::default();
+        let geom = TileGeometry::for_model(d_model, &hw);
+        let layout = ShardLayout::new(&geom, 64);
+        let n = rng.range(1, 4000);
+        let occ = layout.occupancy(n.min(layout.capacity_tokens()));
+        let max = *occ.iter().max().unwrap();
+        let min = *occ.iter().min().unwrap();
+        if max - min > 2 {
+            return Err(format!("imbalance {} at n={n}, d={d_model}", max - min));
+        }
+        Ok(())
+    });
+}
+
+/// KV appends never relocate existing tokens (no shifting — the paper's
+/// improvement over prior KV management): the slot of token t is a pure
+/// function of t.
+#[test]
+fn prop_kv_append_stable_slots() {
+    forall(Config::cases(60), |rng| {
+        let hw = HwParams::default();
+        let geom = TileGeometry::for_model(2048, &hw);
+        let layout = ShardLayout::new(&geom, 64);
+        let mut kv = KvPlacement::new(layout.clone());
+        let n = rng.range(1, 2000);
+        let mut slots = Vec::new();
+        for _ in 0..n {
+            slots.push(kv.append().map_err(|e| e.to_string())?);
+        }
+        for (t, s) in slots.iter().enumerate() {
+            if *s != layout.slot_for_token(t) {
+                return Err(format!("token {t} relocated"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ISA hex encoding round-trips arbitrary well-formed programs.
+#[test]
+fn prop_isa_roundtrip() {
+    forall(Config::cases(120), |rng| {
+        let mut p = Program::new("prop");
+        let n = rng.range(1, 40);
+        for _ in 0..n {
+            let op = *rng.choose(&Opcode::ALL);
+            let sel = match rng.below(5) {
+                0 => SelBits::All,
+                1 => SelBits::Rows { lo: rng.range(0, 7) as u16, hi: rng.range(8, 31) as u16 },
+                2 => SelBits::Cols { lo: rng.range(0, 7) as u16, hi: rng.range(8, 31) as u16 },
+                3 => SelBits::Rect {
+                    rlo: rng.range(0, 3) as u16,
+                    rhi: rng.range(4, 15) as u16,
+                    clo: rng.range(0, 3) as u16,
+                    chi: rng.range(4, 15) as u16,
+                },
+                _ => SelBits::SplitRows {
+                    lo: 0,
+                    hi: rng.range(1, 8) as u16,
+                    lo2: rng.range(8, 15) as u16,
+                    hi2: rng.range(16, 31) as u16,
+                },
+            };
+            p.push(Instruction::uni(
+                Cmd::new(op, rng.below(6) as u8),
+                rng.range(1, 65_535) as u16,
+                sel,
+            ));
+        }
+        let q = disassemble(&assemble(&p)).map_err(|e| e.to_string())?;
+        if p.instrs != q.instrs {
+            return Err("hex roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// NoC packet conservation under random route/spad programs.
+#[test]
+fn prop_noc_packet_conservation() {
+    forall(Config::cases(40), |rng| {
+        let side = rng.range(2, 8) as u16;
+        let mut sim = MeshSim::new(side, side, HwParams::default());
+        for y in 0..side {
+            for x in 0..side {
+                if rng.below(2) == 0 {
+                    sim.preload_spad(Coord::new(x, y), rng.range(1, 512));
+                }
+            }
+        }
+        let mut p = Program::new("rand");
+        let movement = [
+            Opcode::RouteN,
+            Opcode::RouteE,
+            Opcode::RouteS,
+            Opcode::RouteW,
+            Opcode::SpadRd,
+            Opcode::SpadWr,
+            Opcode::Mac,
+            Opcode::Add,
+            Opcode::PeMvm,
+        ];
+        for _ in 0..rng.range(3, 25) {
+            let op = *rng.choose(&movement);
+            p.push(Instruction::uni(
+                Cmd::new(op, rng.below(6) as u8),
+                rng.range(1, 64) as u16,
+                SelBits::All,
+            ));
+        }
+        sim.run(&p.sealed()).map_err(|e| e.to_string())?;
+        if !sim.conservation_ok() {
+            return Err(format!(
+                "created {} != consumed {} + inflight {}",
+                sim.stats.packets_created,
+                sim.stats.packets_consumed,
+                sim.in_flight()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Batcher/engine state machine: for any random workload, every request
+/// ends Done with exactly max_new tokens (or Failed), KV is fully released,
+/// and token accounting adds up.
+#[test]
+fn prop_engine_accounting() {
+    forall(Config::cases(12), |rng| {
+        let mut e = ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Llama1B,
+            hw: HwParams::default(),
+            policy: BatchPolicy {
+                max_batch: rng.range(1, 6),
+                max_total_ctx: rng.range(2_000, 20_000),
+            },
+            numerics: Numerics::Synthetic { vocab: 1000 },
+        })
+        .map_err(|e| e.to_string())?;
+        let n = rng.range(1, 10);
+        let mut expected = 0u64;
+        for _ in 0..n {
+            let plen = rng.range(1, 300);
+            let gen = rng.range(1, 40);
+            e.submit(vec![1; plen], gen);
+            expected += gen as u64;
+        }
+        e.run_until_idle().map_err(|e| e.to_string())?;
+        let m = &e.metrics;
+        if m.requests_done + m.requests_failed != n as u64 {
+            return Err(format!("lost requests: {} + {} != {n}", m.requests_done, m.requests_failed));
+        }
+        if m.requests_failed == 0 && m.decode_tokens != expected {
+            return Err(format!("decode tokens {} != {expected}", m.decode_tokens));
+        }
+        if e.kv.live_requests() != 0 {
+            return Err("KV not fully released".into());
+        }
+        Ok(())
+    });
+}
+
+/// SelBits semantics: active_count equals a brute-force count for random
+/// selections (guards the command-crossbar dispatch).
+#[test]
+fn prop_selbits_count_consistent() {
+    forall(Config::cases(150), |rng| {
+        let w = rng.range(1, 48) as u16;
+        let h = rng.range(1, 48) as u16;
+        let sel = match rng.below(3) {
+            0 => SelBits::All,
+            1 => SelBits::Rows { lo: rng.range(0, 20) as u16, hi: rng.range(0, 48) as u16 },
+            _ => SelBits::Cols { lo: rng.range(0, 20) as u16, hi: rng.range(0, 48) as u16 },
+        };
+        let mut brute = 0;
+        for y in 0..h {
+            for x in 0..w {
+                if sel.command_for(x, y).is_some() {
+                    brute += 1;
+                }
+            }
+        }
+        if sel.active_count(w, h) != brute {
+            return Err(format!("{sel:?} count mismatch"));
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic PRNG sanity: two harness runs see identical streams.
+#[test]
+fn prop_harness_deterministic() {
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    forall(Config::cases(5), |rng: &mut SplitMix64| {
+        s1.push(rng.next_u64());
+        Ok(())
+    });
+    forall(Config::cases(5), |rng: &mut SplitMix64| {
+        s2.push(rng.next_u64());
+        Ok(())
+    });
+    assert_eq!(s1, s2);
+}
