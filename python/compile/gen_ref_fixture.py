@@ -1,0 +1,92 @@
+"""Generate the checked-in reference-numerics fixture for the Rust tests.
+
+Produces, under --out (default rust/tests/fixtures/tiny_ref):
+  meta.txt               same key=value format as aot.py emits
+  weights/<name>.bin     quantised Tiny weights in model.PARAM_ORDER (leapbin)
+  golden/prompt.bin      the golden prompt token ids (i32)
+  golden/prefill_logits.bin  last-row prefill logits from the jnp float
+                         oracle (model.ref_forward, built on kernels/ref.py)
+  golden/greedy_tokens.bin   greedy continuation of the prompt (i32)
+
+The Rust `runtime::reference` backend loads the same weights and must
+reproduce prefill_logits within 1e-4 and the greedy continuation exactly
+(tests/integration_reference.rs). Unlike aot.py this needs no Pallas
+lowering and no PJRT — it is pure jnp, so it runs anywhere JAX does.
+
+Run from python/:  python -m compile.gen_ref_fixture
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import leapbin
+from . import model as M
+
+GOLDEN_PROMPT = [5, 17, 3, 101, 42, 7, 250, 11]
+GOLDEN_STEPS = 8
+S_PRE = 32
+S_MAX = 128
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../rust/tests/fixtures/tiny_ref")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(f"{out}/weights", exist_ok=True)
+    os.makedirs(f"{out}/golden", exist_ok=True)
+
+    cfg = M.TINY
+    w = M.init_weights(cfg, seed=args.seed)
+    params = M.quantize_model(w, cfg)
+
+    for name in M.PARAM_ORDER:
+        leapbin.write(f"{out}/weights/{name}.bin", np.asarray(params[name]))
+    print(f"wrote {len(M.PARAM_ORDER)} weight tensors")
+
+    # Greedy continuation by full re-forward: for causal attention the last
+    # row of prefill(prompt + generated) equals the incremental decode step,
+    # so the oracle needs no KV cache.
+    prompt = list(GOLDEN_PROMPT)
+    seq = list(prompt)
+    logits = M.ref_forward(jnp.asarray(seq, jnp.int32), w, cfg)
+    leapbin.write(f"{out}/golden/prompt.bin", np.asarray(prompt, np.int32))
+    leapbin.write(f"{out}/golden/prefill_logits.bin",
+                  np.asarray(logits[len(prompt) - 1], np.float32))
+
+    gen = []
+    margins = []
+    for _ in range(GOLDEN_STEPS):
+        row = np.asarray(logits[-1], np.float64)
+        order = np.argsort(row)
+        margins.append(float(row[order[-1]] - row[order[-2]]))
+        nxt = int(order[-1])
+        gen.append(nxt)
+        seq.append(nxt)
+        logits = M.ref_forward(jnp.asarray(seq, jnp.int32), w, cfg)
+    leapbin.write(f"{out}/golden/greedy_tokens.bin", np.asarray(gen, np.int32))
+    print(f"golden greedy continuation: {gen}")
+    print(f"top-2 logit margins per step: {[round(m, 4) for m in margins]}")
+    assert min(margins) > 1e-3, (
+        f"argmax margin {min(margins)} too small for a stable cross-impl "
+        "golden; regenerate with a different --seed")
+
+    with open(f"{out}/meta.txt", "w") as f:
+        f.write(f"vocab={cfg.vocab}\nd_model={cfg.d_model}\n")
+        f.write(f"n_layers={cfg.n_layers}\nn_heads={cfg.n_heads}\n")
+        f.write(f"n_kv_heads={cfg.n_kv_heads}\nd_ff={cfg.d_ff}\n")
+        f.write(f"xb={cfg.xb}\nshard={cfg.shard}\n")
+        f.write(f"s_prefill={S_PRE}\ns_max={S_MAX}\n")
+        f.write(f"golden_prompt_len={len(prompt)}\ngolden_steps={GOLDEN_STEPS}\n")
+        f.write("param_order=" + ",".join(M.PARAM_ORDER) + "\n")
+    print("wrote meta.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,7 +64,10 @@ leap — LLM inference on a scalable PIM-NoC architecture (paper reproduction)
 USAGE: leap <command> [--key value ...]
 
 COMMANDS
-  serve        --model 1b --requests 8 --prompt 64 --gen 32 [--artifacts DIR]
+  serve        --model 1b --requests 8 --prompt 64 --gen 32
+               [--numerics ref|synthetic|xla] [--artifacts DIR]
+               (tiny model defaults to the pure-Rust reference backend;
+                xla requires building with `--features xla`)
   simulate     --model 8b --in 1024 --out 1024
   map-explore  [--dc 16]                         (Fig. 8)
   compare-gpu  [--in 1024 --out 1024]            (Table III)
@@ -104,12 +107,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     let n_requests = args.get_usize("requests", 8);
     let prompt_len = args.get_usize("prompt", 64);
     let gen = args.get_usize("gen", 32);
-    let numerics = if preset == ModelPreset::Tiny {
-        let dir = args.get("artifacts", "artifacts");
-        Numerics::Pjrt(Box::new(crate::runtime::Engine::load(dir)?))
-    } else {
-        Numerics::Synthetic { vocab: preset.shape().vocab }
+    let default_numerics = if preset == ModelPreset::Tiny { "ref" } else { "synthetic" };
+    let which = args.get("numerics", default_numerics);
+    let artifacts = || -> anyhow::Result<std::path::PathBuf> {
+        anyhow::ensure!(
+            preset == ModelPreset::Tiny,
+            "functional numerics only exist for the tiny artifact model (got {preset})"
+        );
+        let explicit = args.options.get("artifacts").map(String::as_str);
+        crate::runtime::default_artifacts_dir(explicit).ok_or_else(|| match explicit {
+            Some(d) => anyhow::anyhow!("--artifacts {d}: no meta.txt there"),
+            None => anyhow::anyhow!("no artifact directory with meta.txt found"),
+        })
     };
+    let numerics = match which.as_str() {
+        "synthetic" => Numerics::synthetic(preset.shape().vocab),
+        "ref" | "reference" => Numerics::reference(artifacts()?)?,
+        #[cfg(feature = "xla")]
+        "xla" | "pjrt" => Numerics::pjrt(artifacts()?)?,
+        #[cfg(not(feature = "xla"))]
+        "xla" | "pjrt" => {
+            anyhow::bail!("this binary was built without the `xla` feature")
+        }
+        other => anyhow::bail!("unknown numerics backend '{other}'"),
+    };
+    println!("numerics backend: {}", numerics.name());
     let mut engine = ServingEngine::new(EngineConfig {
         preset,
         hw: HwParams::default(),

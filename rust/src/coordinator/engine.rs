@@ -1,12 +1,14 @@
 //! The serving engine: ties the batcher, KV manager, compiler cache, NPM
 //! double banking, the timing/energy simulator, and (for the tiny model)
-//! the functional PJRT runtime into a single decode-round loop.
+//! a functional numerics backend into a single decode-round loop.
 //!
 //! Timing model: the engine advances a *simulated* clock by the cycle cost
 //! of each program it dispatches (analytical model — identical to what the
 //! instruction-level simulator measures, see `tests/integration_sim.rs`).
-//! Numerics: with [`Numerics::Pjrt`], every prefill/decode also executes the
-//! AOT artifacts, so generated tokens are real model outputs.
+//! Numerics: with [`Numerics::Backend`], every prefill/decode also runs a
+//! real forward pass through the pluggable [`NumericsBackend`] (pure-Rust
+//! reference f32 by default, PJRT with `--features xla`), so generated
+//! tokens are real model outputs.
 
 use std::time::Instant;
 
@@ -15,7 +17,7 @@ use crate::compiler::{Compiler, CompiledModel};
 use crate::energy::table2;
 use crate::isa::Npm;
 use crate::model::ModelPreset;
-use crate::runtime::Engine as PjrtEngine;
+use crate::runtime::{argmax_row, NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
 use crate::sim::AnalyticalSim;
 
@@ -24,12 +26,38 @@ use super::kv::KvManager;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, RequestState};
 
-/// Functional-numerics backend.
+/// Functional-numerics configuration.
 pub enum Numerics {
-    /// Execute the AOT artifacts via PJRT (tiny model only).
-    Pjrt(Box<PjrtEngine>),
+    /// Run a real forward pass through a pluggable backend (tiny model).
+    Backend(Box<dyn NumericsBackend>),
     /// Synthetic token generation (big-model simulation-only serving).
     Synthetic { vocab: usize },
+}
+
+impl Numerics {
+    /// The pure-Rust reference backend over an artifact/fixture directory.
+    pub fn reference(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Ok(Self::Backend(Box::new(ReferenceBackend::load(dir)?)))
+    }
+
+    /// The PJRT backend over an AOT artifact directory.
+    #[cfg(feature = "xla")]
+    pub fn pjrt(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Ok(Self::Backend(Box::new(crate::runtime::PjrtBackend::load(dir)?)))
+    }
+
+    /// Synthetic numerics for simulation-only serving.
+    pub fn synthetic(vocab: usize) -> Self {
+        Self::Synthetic { vocab }
+    }
+
+    /// Backend name for diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Backend(b) => b.name(),
+            Self::Synthetic { .. } => "synthetic",
+        }
+    }
 }
 
 /// Engine construction options.
@@ -38,15 +66,6 @@ pub struct EngineConfig {
     pub hw: HwParams,
     pub policy: BatchPolicy,
     pub numerics: Numerics,
-}
-
-/// Per-request PJRT cache state (tiny-model path).
-struct PjrtState {
-    id: RequestId,
-    kcache: xla::Literal,
-    vcache: xla::Literal,
-    pos: usize,
-    last_token: i32,
 }
 
 /// The serving engine.
@@ -58,7 +77,6 @@ pub struct ServingEngine {
     pub npm: Npm,
     pub metrics: Metrics,
     numerics: Numerics,
-    pjrt_states: Vec<PjrtState>,
     next_id: RequestId,
     /// Simulated clock, ns.
     now_ns: u64,
@@ -81,7 +99,6 @@ impl ServingEngine {
             npm: Npm::new(),
             metrics: Metrics::default(),
             numerics: cfg.numerics,
-            pjrt_states: Vec::new(),
             next_id: 0,
             now_ns: 0,
             completed: Vec::new(),
@@ -110,6 +127,16 @@ impl ServingEngine {
         self.metrics.energy_j += wavefront as f64 * table2::MACRO_UW * 1e-6 * ns as f64 * 1e-9;
     }
 
+    /// Mark a running request Failed at the current simulated time.
+    fn fail_request(&mut self, id: RequestId) {
+        let now = self.now_ns;
+        if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+            r.state = RequestState::Failed;
+            r.t_done_ns = Some(now);
+        }
+        self.metrics.requests_failed += 1;
+    }
+
     /// Load + swap the NPM with the program for this phase (double-banked).
     fn dispatch(&mut self, prog: crate::isa::Program) -> anyhow::Result<u64> {
         let cycles = prog.controller_cycles();
@@ -135,11 +162,7 @@ impl ServingEngine {
                 (r.prompt.clone(), r.ctx_len() + r.max_new_tokens)
             };
             if !self.kv.has_room(max_ctx) {
-                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
-                    r.state = RequestState::Failed;
-                    r.t_done_ns = Some(self.now_ns);
-                }
-                self.metrics.requests_failed += 1;
+                self.fail_request(id);
                 continue;
             }
             self.kv.prefill(id, prompt.len())?;
@@ -151,23 +174,40 @@ impl ServingEngine {
             self.advance(per_layer * layers);
             self.metrics.prefill_tokens += prompt.len() as u64;
 
-            // numerics
+            // numerics — a backend error (e.g. out-of-vocab prompt) fails
+            // this request only; the engine and its batch keep serving
             let first_token = match &mut self.numerics {
-                Numerics::Pjrt(engine) => {
-                    let out = engine.prefill(&prompt)?;
-                    let tok = engine.argmax_row(&out.logits, prompt.len() - 1) as i32;
-                    self.pjrt_states.push(PjrtState {
-                        id,
-                        kcache: out.kcache,
-                        vcache: out.vcache,
-                        pos: prompt.len(),
-                        last_token: tok,
-                    });
-                    tok
-                }
+                Numerics::Backend(backend) => match backend.prefill(id, &prompt) {
+                    // enforce the trait's no-silent-truncation contract:
+                    // fewer rows than prompt tokens would argmax the wrong
+                    // context, so fail the request instead
+                    Ok(out) if out.rows >= prompt.len() => {
+                        Some(argmax_row(&out.logits, prompt.len() - 1, backend.vocab()) as i32)
+                    }
+                    Ok(out) => {
+                        eprintln!(
+                            "request {id} rejected: backend returned {} logits rows \
+                             for a {}-token prompt",
+                            out.rows,
+                            prompt.len()
+                        );
+                        backend.release(id);
+                        None
+                    }
+                    Err(err) => {
+                        eprintln!("request {id} rejected by numerics prefill: {err:#}");
+                        backend.release(id);
+                        None
+                    }
+                },
                 Numerics::Synthetic { vocab } => {
-                    (prompt.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32
+                    Some((prompt.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32)
                 }
+            };
+            let Some(first_token) = first_token else {
+                self.kv.release(id);
+                self.fail_request(id);
+                continue;
             };
 
             let now = self.now_ns;
@@ -186,35 +226,33 @@ impl ServingEngine {
         }
 
         // --- one decode round over the running batch ---------------------
-        let round: Vec<(RequestId, usize)> = self
+        let round: Vec<(RequestId, usize, i32)> = self
             .batcher
             .running()
             .iter()
             .filter(|r| r.state == RequestState::Decoding && !r.is_finished())
-            .map(|r| (r.id, r.ctx_len()))
+            .map(|r| (r.id, r.ctx_len(), *r.output.last().unwrap_or(&0)))
             .collect();
 
-        for (id, ctx) in round {
+        for (id, ctx, last_token) in round {
             let layers = self.compiled.shape.n_layers as u64;
             let prog = self.compiled.decode_program(ctx).clone();
             let per_layer = self.dispatch(prog)?;
             self.advance(per_layer * layers);
 
             let next = match &mut self.numerics {
-                Numerics::Pjrt(engine) => {
-                    let st = self
-                        .pjrt_states
-                        .iter_mut()
-                        .find(|s| s.id == id)
-                        .ok_or_else(|| anyhow::anyhow!("missing pjrt state for {id}"))?;
-                    let out = engine.decode(st.last_token, st.pos as i32, &st.kcache, &st.vcache)?;
-                    st.kcache = out.kcache;
-                    st.vcache = out.vcache;
-                    st.pos += 1;
-                    st.last_token = engine.argmax_row(&out.logits, 0) as i32;
-                    st.last_token
-                }
-                Numerics::Synthetic { vocab } => ((ctx * 2654435761) % *vocab) as i32,
+                Numerics::Backend(backend) => match backend.decode_step(id, last_token) {
+                    Ok(out) => Some(argmax_row(&out.logits, 0, backend.vocab()) as i32),
+                    Err(err) => {
+                        eprintln!("request {id} failed in numerics decode: {err:#}");
+                        None
+                    }
+                },
+                Numerics::Synthetic { vocab } => Some(((ctx * 2654435761) % *vocab) as i32),
+            };
+            let Some(next) = next else {
+                self.fail_request(id);
+                continue;
             };
 
             if !self.kv.has_room(1) {
@@ -240,7 +278,9 @@ impl ServingEngine {
         // --- retire -------------------------------------------------------
         for done in self.batcher.retire() {
             self.kv.release(done.id);
-            self.pjrt_states.retain(|s| s.id != done.id);
+            if let Numerics::Backend(backend) = &mut self.numerics {
+                backend.release(done.id);
+            }
             if done.state == RequestState::Done {
                 self.metrics.requests_done += 1;
                 if let Some(l) = done.latency_ns() {

@@ -6,9 +6,10 @@
 //! This crate is the L3 layer of the three-layer stack (see DESIGN.md):
 //! it owns the compiler (model partitioning → spatial mapping → temporal
 //! scheduling → NoC ISA), the instruction-level PIM-NoC simulator, the
-//! energy/area model, the GPU comparison baselines, the PJRT runtime that
-//! executes the AOT-lowered JAX/Pallas artifacts, and the serving
-//! coordinator. Python never runs on the request path.
+//! energy/area model, the GPU comparison baselines, the pluggable numerics
+//! runtime (pure-Rust reference f32 by default; PJRT execution of the
+//! AOT-lowered JAX/Pallas artifacts behind `--features xla`), and the
+//! serving coordinator. Python never runs on the request path.
 //!
 //! Module map (one module per subsystem; see DESIGN.md §4):
 //!
@@ -35,8 +36,10 @@
 //! - [`compiler`] — end-to-end pipeline from a model preset to per-layer
 //!   ISA programs.
 //! - [`baselines`] — A100/H100 roofline comparators (Table III).
-//! - [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt` and
-//!   executes the functional model.
+//! - [`runtime`] — pluggable numerics backends behind the
+//!   `NumericsBackend` trait: the pure-Rust reference f32 forward (default)
+//!   and the PJRT client wrapper (`--features xla`) that loads
+//!   `artifacts/*.hlo.txt`.
 //! - [`coordinator`] — serving engine: request queue, batcher,
 //!   prefill/decode scheduler, KV-shard manager, metrics.
 //! - [`testutil`] — deterministic PRNG + mini property-testing harness

@@ -1,0 +1,178 @@
+//! The pluggable numerics-backend seam: everything the serving coordinator
+//! needs from a functional model implementation, independent of *how* the
+//! forward pass is computed.
+//!
+//! Two implementations exist:
+//!
+//! - [`crate::runtime::ReferenceBackend`] — pure-Rust naive f32 transformer
+//!   (mirrors `python/compile/kernels/ref.py`), loads `leapbin` weights,
+//!   zero external dependencies. The default.
+//! - `crate::runtime::PjrtBackend` (`--features xla`) — executes the
+//!   AOT-lowered HLO artifacts through PJRT.
+//!
+//! A backend owns per-request KV-cache state keyed by [`SessionId`]; the
+//! coordinator uses its `RequestId` as the session id, calls
+//! [`NumericsBackend::prefill`] once on admission,
+//! [`NumericsBackend::decode_step`] once per decode round, and
+//! [`NumericsBackend::release`] at retire.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+/// Opaque per-request session key (the coordinator passes its request id).
+pub type SessionId = u64;
+
+/// Logits produced by one prefill or decode execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutput {
+    /// Row-major `[rows, vocab]` logits.
+    pub logits: Vec<f32>,
+    pub rows: usize,
+}
+
+/// A functional numerics implementation behind the serving engine.
+pub trait NumericsBackend {
+    /// Short human-readable backend name (diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Vocabulary size (logits row width).
+    fn vocab(&self) -> usize;
+
+    /// Run the prompt through the model, creating the session's KV cache.
+    /// Returns at least `tokens.len()` logits rows (implementations must
+    /// reject prompts they cannot represent in full — no silent
+    /// truncation); row `tokens.len() - 1` selects the first generated
+    /// token.
+    fn prefill(&mut self, session: SessionId, tokens: &[i32]) -> anyhow::Result<StepOutput>;
+
+    /// Advance the session by one token; returns a single logits row.
+    fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput>;
+
+    /// Drop the session's KV-cache state (idempotent).
+    fn release(&mut self, session: SessionId);
+}
+
+/// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.
+pub fn argmax_row(logits: &[f32], row: usize, vocab: usize) -> usize {
+    let slice = &logits[row * vocab..(row + 1) * vocab];
+    let mut best = 0;
+    for (i, v) in slice.iter().enumerate() {
+        if *v > slice[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Model metadata parsed from an artifact directory's `meta.txt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Crossbar tile size the weights were quantised with.
+    pub xb: usize,
+    pub s_prefill: usize,
+    pub s_max: usize,
+    pub param_order: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> anyhow::Result<usize> {
+            kv.get(k).with_context(|| format!("meta missing {k}"))?.parse().context("parse")
+        };
+        Ok(Self {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            xb: get("xb")?,
+            s_prefill: get("s_prefill")?,
+            s_max: get("s_max")?,
+            param_order: kv
+                .get("param_order")
+                .context("meta missing param_order")?
+                .split(',')
+                .map(str::to_string)
+                .collect(),
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Locate a usable artifact directory (one containing `meta.txt`). An
+/// explicit candidate is authoritative: it is the only directory considered
+/// (`None` if it lacks `meta.txt` — never silently fall back to a different
+/// model's weights). Without one, try the conventional build output
+/// locations, then the checked-in reference fixture.
+pub fn default_artifacts_dir(explicit: Option<&str>) -> Option<PathBuf> {
+    if let Some(dir) = explicit.filter(|d| !d.is_empty()) {
+        let dir = PathBuf::from(dir);
+        return dir.join("meta.txt").is_file().then_some(dir);
+    }
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    candidates.push(PathBuf::from("artifacts"));
+    candidates.push(PathBuf::from("rust/artifacts"));
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    candidates.push(manifest.join("artifacts"));
+    candidates.push(manifest.join("tests/fixtures/tiny_ref"));
+    candidates.into_iter().find(|d| d.join("meta.txt").is_file())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let text = "vocab=512\nd_model=256\nn_layers=4\nn_heads=4\nn_kv_heads=4\n\
+                    d_ff=512\nxb=128\nshard=16\ns_prefill=32\ns_max=128\n\
+                    golden_prompt_len=8\ngolden_steps=8\nparam_order=a,b,c\n";
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.xb, 128);
+        assert_eq!(m.s_max, 128);
+        assert_eq!(m.d_head(), 64);
+        assert_eq!(m.param_order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn meta_parse_rejects_missing() {
+        assert!(ArtifactMeta::parse("vocab=1\n").is_err());
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let logits = [0.1, 0.9, 0.0, 7.0, -1.0, 2.0];
+        assert_eq!(argmax_row(&logits, 0, 3), 1);
+        assert_eq!(argmax_row(&logits, 1, 3), 0);
+    }
+
+    #[test]
+    fn fixture_dir_is_discoverable() {
+        // Without an explicit path, discovery finds the checked-in fixture.
+        let d = default_artifacts_dir(None).unwrap();
+        assert!(d.join("meta.txt").is_file());
+    }
+
+    #[test]
+    fn explicit_artifacts_path_is_authoritative() {
+        // A bad explicit path must NOT fall back to some other model's dir.
+        assert_eq!(default_artifacts_dir(Some("/nonexistent/path")), None);
+    }
+}

@@ -1,60 +1,23 @@
-//! PJRT execution engine: loads the AOT-lowered HLO text artifacts, compiles
-//! them once on the CPU PJRT client, and executes the functional model on
-//! the request path (the numerics half of serving; the simulator provides
-//! the timing/energy half).
+//! PJRT execution engine (`--features xla`): loads the AOT-lowered HLO text
+//! artifacts, compiles them once on the CPU PJRT client, and executes the
+//! functional model on the request path. [`PjrtBackend`] adapts it to the
+//! [`NumericsBackend`] seam so the coordinator is backend-agnostic.
 //!
 //! HLO *text* is the interchange format — jax ≥ 0.5 emits HloModuleProto
 //! with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The default build ships an API-compatible `xla` stub (rust/xla-stub) so
+//! this module always type-checks; executing real artifacts requires
+//! pointing the `xla` path dependency at an actual xla-rs checkout.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context};
 
+use super::backend::{ArtifactMeta, NumericsBackend, SessionId, StepOutput};
 use super::leapbin::{self, Tensor};
-
-/// Model metadata parsed from `artifacts/meta.txt`.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ArtifactMeta {
-    pub vocab: usize,
-    pub d_model: usize,
-    pub n_layers: usize,
-    pub n_heads: usize,
-    pub d_ff: usize,
-    pub s_prefill: usize,
-    pub s_max: usize,
-    pub param_order: Vec<String>,
-}
-
-impl ArtifactMeta {
-    pub fn parse(text: &str) -> anyhow::Result<Self> {
-        let mut kv = HashMap::new();
-        for line in text.lines() {
-            if let Some((k, v)) = line.split_once('=') {
-                kv.insert(k.trim().to_string(), v.trim().to_string());
-            }
-        }
-        let get = |k: &str| -> anyhow::Result<usize> {
-            kv.get(k).with_context(|| format!("meta missing {k}"))?.parse().context("parse")
-        };
-        Ok(Self {
-            vocab: get("vocab")?,
-            d_model: get("d_model")?,
-            n_layers: get("n_layers")?,
-            n_heads: get("n_heads")?,
-            d_ff: get("d_ff")?,
-            s_prefill: get("s_prefill")?,
-            s_max: get("s_max")?,
-            param_order: kv
-                .get("param_order")
-                .context("meta missing param_order")?
-                .split(',')
-                .map(str::to_string)
-                .collect(),
-        })
-    }
-}
 
 /// The loaded runtime: compiled executables + weight literals.
 pub struct Engine {
@@ -68,7 +31,7 @@ pub struct Engine {
 }
 
 /// Result of a prefill or decode execution.
-pub struct StepOutput {
+pub struct PjrtStepOutput {
     /// Logits, row-major [rows, vocab].
     pub logits: Vec<f32>,
     pub rows: usize,
@@ -106,7 +69,7 @@ impl Engine {
     }
 
     /// Run the prefill graph on `tokens` (padded/truncated to s_prefill).
-    pub fn prefill(&self, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+    pub fn prefill(&self, tokens: &[i32]) -> anyhow::Result<PjrtStepOutput> {
         ensure!(!tokens.is_empty(), "empty prompt");
         let s = self.meta.s_prefill;
         let mut padded = vec![0i32; s];
@@ -123,7 +86,7 @@ impl Engine {
         let logits_lit = it.next().unwrap();
         let kcache = it.next().unwrap();
         let vcache = it.next().unwrap();
-        Ok(StepOutput {
+        Ok(PjrtStepOutput {
             logits: logits_lit.to_vec::<f32>()?,
             rows: s,
             kcache,
@@ -138,7 +101,7 @@ impl Engine {
         pos: i32,
         kcache: &xla::Literal,
         vcache: &xla::Literal,
-    ) -> anyhow::Result<StepOutput> {
+    ) -> anyhow::Result<PjrtStepOutput> {
         let tok_lit = xla::Literal::vec1(&[token]);
         let pos_lit = xla::Literal::scalar(pos);
         let mut args: Vec<&xla::Literal> = vec![&tok_lit, &pos_lit, kcache, vcache];
@@ -150,19 +113,12 @@ impl Engine {
         let logits_lit = it.next().unwrap();
         let kcache = it.next().unwrap();
         let vcache = it.next().unwrap();
-        Ok(StepOutput { logits: logits_lit.to_vec::<f32>()?, rows: 1, kcache, vcache })
+        Ok(PjrtStepOutput { logits: logits_lit.to_vec::<f32>()?, rows: 1, kcache, vcache })
     }
 
     /// Greedy argmax over a logits row.
     pub fn argmax_row(&self, logits: &[f32], row: usize) -> usize {
-        let v = self.meta.vocab;
-        let slice = &logits[row * v..(row + 1) * v];
-        slice
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        super::backend::argmax_row(logits, row, self.meta.vocab)
     }
 
     /// Golden tensors for self-check (prompt, expected logits, greedy ids).
@@ -177,25 +133,77 @@ impl Engine {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn meta_parse_roundtrip() {
-        let text = "vocab=512\nd_model=256\nn_layers=4\nn_heads=4\nn_kv_heads=4\n\
-                    d_ff=512\nxb=128\nshard=16\ns_prefill=32\ns_max=128\n\
-                    golden_prompt_len=8\ngolden_steps=8\nparam_order=a,b,c\n";
-        let m = ArtifactMeta::parse(text).unwrap();
-        assert_eq!(m.vocab, 512);
-        assert_eq!(m.s_max, 128);
-        assert_eq!(m.param_order, vec!["a", "b", "c"]);
-    }
-
-    #[test]
-    fn meta_parse_rejects_missing() {
-        assert!(ArtifactMeta::parse("vocab=1\n").is_err());
-    }
-    // Engine execution itself is covered by tests/integration_runtime.rs
-    // (needs the artifacts directory built by `make artifacts`).
+/// Per-session PJRT decode state.
+struct PjrtSession {
+    kcache: xla::Literal,
+    vcache: xla::Literal,
+    pos: usize,
 }
+
+/// [`NumericsBackend`] adapter over the PJRT [`Engine`]: owns the opaque
+/// per-session KV-cache literals the executables thread through each step.
+pub struct PjrtBackend {
+    engine: Engine,
+    sessions: HashMap<SessionId, PjrtSession>,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Ok(Self { engine: Engine::load(dir)?, sessions: HashMap::new() })
+    }
+
+    pub fn new(engine: Engine) -> Self {
+        Self { engine, sessions: HashMap::new() }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl NumericsBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-xla"
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.meta.vocab
+    }
+
+    fn prefill(&mut self, session: SessionId, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        // The AOT prefill graph has a fixed window; silently truncating
+        // would continue from the wrong context, so reject instead.
+        ensure!(
+            tokens.len() <= self.engine.meta.s_prefill,
+            "prompt of {} tokens exceeds the artifact prefill window {}",
+            tokens.len(),
+            self.engine.meta.s_prefill
+        );
+        let out = self.engine.prefill(tokens)?;
+        self.sessions.insert(
+            session,
+            PjrtSession { kcache: out.kcache, vcache: out.vcache, pos: tokens.len() },
+        );
+        Ok(StepOutput { logits: out.logits, rows: out.rows })
+    }
+
+    fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
+        let st = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
+        let out = self.engine.decode(token, st.pos as i32, &st.kcache, &st.vcache)?;
+        st.kcache = out.kcache;
+        st.vcache = out.vcache;
+        st.pos += 1;
+        Ok(StepOutput { logits: out.logits, rows: out.rows })
+    }
+
+    fn release(&mut self, session: SessionId) {
+        self.sessions.remove(&session);
+    }
+}
+
+// ArtifactMeta parsing is covered in runtime/backend.rs; engine execution
+// itself is covered by tests/integration_runtime.rs (feature `xla` + the
+// artifacts directory built by `make artifacts`).

@@ -50,7 +50,8 @@ impl Tensor {
         Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
-    /// Build an XLA literal of the right shape/type.
+    /// Build an XLA literal of the right shape/type (PJRT path only).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let ty = match self.dtype {
             DType::F32 => xla::ElementType::F32,

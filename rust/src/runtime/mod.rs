@@ -1,10 +1,26 @@
-//! PJRT runtime (the `xla` crate wrapper): loads the AOT-lowered HLO text
-//! artifacts built by `python/compile/aot.py`, compiles them once, and
-//! executes the functional model from the serving hot path. Python is never
-//! invoked here.
+//! Functional runtime: the pluggable numerics backends executed from the
+//! serving hot path (the simulator provides the timing/energy half).
+//!
+//! - [`backend`] — the [`NumericsBackend`] trait the coordinator talks to,
+//!   plus artifact metadata and helpers.
+//! - [`reference`] — pure-Rust naive f32 transformer (default backend,
+//!   zero non-std dependencies; mirrors `python/compile/kernels/ref.py`).
+//! - [`engine`] (`--features xla`) — PJRT wrapper that loads the
+//!   AOT-lowered HLO text artifacts built by `python/compile/aot.py`.
+//! - [`leapbin`] — the tensor interchange format shared with python.
+//!
+//! Python never runs on the request path in any configuration.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod leapbin;
+pub mod reference;
 
-pub use engine::{ArtifactMeta, Engine, StepOutput};
+pub use backend::{
+    argmax_row, default_artifacts_dir, ArtifactMeta, NumericsBackend, SessionId, StepOutput,
+};
+#[cfg(feature = "xla")]
+pub use engine::{Engine, PjrtBackend};
 pub use leapbin::{DType, Tensor};
+pub use reference::{ReferenceBackend, ReferenceModel};

@@ -1,0 +1,391 @@
+//! Pure-Rust reference numerics backend: a naive f32 Llama-style forward
+//! pass (embed → per-layer RMSNorm/attention/SwiGLU with KV cache → tied
+//! LM head) mirroring the jnp oracles in `python/compile/kernels/ref.py`
+//! and `model.ref_forward`.
+//!
+//! It loads the same quantised `leapbin` weight artifacts as the PJRT path
+//! (int8 crossbar cells + per-tile scales, dequantised once at load), so
+//! generated tokens are real model outputs with zero non-std dependencies —
+//! the default functional backend of the serving engine. Golden parity with
+//! the python oracle is pinned by `tests/integration_reference.rs` against
+//! the checked-in fixture (`tests/fixtures/tiny_ref`, regenerate with
+//! `python -m compile.gen_ref_fixture`).
+//!
+//! Prefill is computed token-by-token (each prompt token is one causal
+//! decode step), which makes prefill-vs-decode consistency exact by
+//! construction — the property `tests/prop_backend.rs` checks.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use super::backend::{ArtifactMeta, NumericsBackend, SessionId, StepOutput};
+use super::leapbin::{self, DType, Tensor};
+
+/// Dequantised weights for one decoder layer (row-major `[K, N]`).
+struct LayerWeights {
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    w_gate: Vec<f32>,
+    w_up: Vec<f32>,
+    w_down: Vec<f32>,
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+}
+
+/// The loaded model: metadata plus dequantised f32 weights.
+pub struct ReferenceModel {
+    pub meta: ArtifactMeta,
+    /// Token embeddings, row-major `[vocab, d_model]` (also the tied head).
+    embed: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    final_norm: Vec<f32>,
+}
+
+/// Per-request decode state: per-layer KV rows, row-major `[pos, d_model]`.
+struct RefSession {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    pos: usize,
+}
+
+/// The reference backend: a [`ReferenceModel`] plus per-session KV caches.
+pub struct ReferenceBackend {
+    model: ReferenceModel,
+    sessions: HashMap<SessionId, RefSession>,
+}
+
+const EPS: f32 = 1e-5;
+const ROPE_THETA: f64 = 10000.0;
+
+/// Dequantise one `[kp, np]` int8 tile matrix with `[kt, nt]` per-tile
+/// scales into a dense f32 matrix (`w[k][n] = q[k][n] * s[k/xb][n/xb]`).
+fn dequant(q: &[u8], s: &[f32], kp: usize, np: usize, nt: usize, xb: usize) -> Vec<f32> {
+    let mut w = vec![0f32; kp * np];
+    for k in 0..kp {
+        let srow = &s[(k / xb) * nt..(k / xb) * nt + nt];
+        for n in 0..np {
+            w[k * np + n] = (q[k * np + n] as i8) as f32 * srow[n / xb];
+        }
+    }
+    w
+}
+
+/// `y = x @ W` for one activation row: `x: [k]`, `w: [k, n]` row-major.
+fn matvec(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut y = vec![0f32; n];
+    for (ki, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w[ki * n..(ki + 1) * n];
+        for (yv, &wv) in y.iter_mut().zip(row) {
+            *yv += xv * wv;
+        }
+    }
+    y
+}
+
+fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let mut sq = 0f32;
+    for &v in x {
+        sq += v * v;
+    }
+    let inv = 1.0 / (sq / x.len() as f32 + EPS).sqrt();
+    x.iter().zip(g).map(|(&v, &gv)| v * inv * gv).collect()
+}
+
+/// In-place rotary embedding at `pos` over merged heads (half-split
+/// rotation per head, matching `ref.ref_rope`).
+fn rope(x: &mut [f32], pos: usize, n_heads: usize, d_head: usize) {
+    let half = d_head / 2;
+    for h in 0..n_heads {
+        let base = h * d_head;
+        for j in 0..half {
+            let freq = (1.0 / ROPE_THETA.powf(j as f64 / half as f64)) as f32;
+            let ang = pos as f32 * freq;
+            let (sin, cos) = (ang.sin(), ang.cos());
+            let (x1, x2) = (x[base + j], x[base + half + j]);
+            x[base + j] = x1 * cos - x2 * sin;
+            x[base + half + j] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+impl ReferenceModel {
+    /// Load `meta.txt` + `weights/*.bin` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref();
+        let meta_text = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("{}/meta.txt (no artifacts built?)", dir.display()))?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+        let tensor = |name: &str| -> anyhow::Result<Tensor> {
+            ensure!(
+                meta.param_order.iter().any(|p| p == name),
+                "param_order lacks required tensor '{name}'"
+            );
+            leapbin::load(dir.join("weights").join(format!("{name}.bin")))
+        };
+
+        let (l, d, ff, v, xb) = (meta.n_layers, meta.d_model, meta.d_ff, meta.vocab, meta.xb);
+        ensure!(xb > 0 && d % xb == 0 && ff % xb == 0, "dims must be multiples of xb={xb}");
+
+        let embed_t = tensor("embed")?;
+        ensure!(embed_t.dtype == DType::F32 && embed_t.dims == [v, d], "embed shape");
+        let embed = embed_t.as_f32()?;
+
+        let attn_q = tensor("attn_q")?;
+        let attn_s = tensor("attn_s")?;
+        let gu_q = tensor("gu_q")?;
+        let gu_s = tensor("gu_s")?;
+        let down_q = tensor("down_q")?;
+        let down_s = tensor("down_s")?;
+        let norms_t = tensor("norms")?;
+        let final_t = tensor("final_norm")?;
+        for (name, t) in [("attn_q", &attn_q), ("gu_q", &gu_q), ("down_q", &down_q)] {
+            ensure!(t.dtype == DType::I8, "{name} must be int8 cells, got {:?}", t.dtype);
+        }
+        ensure!(attn_q.dims == [l, 4, d, d], "attn_q dims {:?}", attn_q.dims);
+        ensure!(attn_s.dims == [l, 4, d / xb, d / xb], "attn_s dims {:?}", attn_s.dims);
+        ensure!(gu_q.dims == [l, 2, d, ff], "gu_q dims {:?}", gu_q.dims);
+        ensure!(gu_s.dims == [l, 2, d / xb, ff / xb], "gu_s dims {:?}", gu_s.dims);
+        ensure!(down_q.dims == [l, ff, d], "down_q dims {:?}", down_q.dims);
+        ensure!(down_s.dims == [l, ff / xb, d / xb], "down_s dims {:?}", down_s.dims);
+        ensure!(norms_t.dims == [l, 2, d], "norms dims {:?}", norms_t.dims);
+        ensure!(final_t.dims == [d], "final_norm dims {:?}", final_t.dims);
+        let attn_sv = attn_s.as_f32()?;
+        let gu_sv = gu_s.as_f32()?;
+        let down_sv = down_s.as_f32()?;
+        let norms = norms_t.as_f32()?;
+        let final_norm = final_t.as_f32()?;
+
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let aq = |i: usize| -> Vec<f32> {
+                let qo = (li * 4 + i) * d * d;
+                let so = (li * 4 + i) * (d / xb) * (d / xb);
+                dequant(&attn_q.data[qo..qo + d * d], &attn_sv[so..], d, d, d / xb, xb)
+            };
+            let gq = |i: usize| -> Vec<f32> {
+                let qo = (li * 2 + i) * d * ff;
+                let so = (li * 2 + i) * (d / xb) * (ff / xb);
+                dequant(&gu_q.data[qo..qo + d * ff], &gu_sv[so..], d, ff, ff / xb, xb)
+            };
+            let dqo = li * ff * d;
+            let dso = li * (ff / xb) * (d / xb);
+            layers.push(LayerWeights {
+                wq: aq(0),
+                wk: aq(1),
+                wv: aq(2),
+                wo: aq(3),
+                w_gate: gq(0),
+                w_up: gq(1),
+                w_down: dequant(&down_q.data[dqo..dqo + ff * d], &down_sv[dso..], ff, d, d / xb, xb),
+                attn_norm: norms[(li * 2) * d..(li * 2 + 1) * d].to_vec(),
+                mlp_norm: norms[(li * 2 + 1) * d..(li * 2 + 2) * d].to_vec(),
+            });
+        }
+        Ok(Self { meta, embed, layers, final_norm })
+    }
+
+    /// One causal step: append `token` at `sess.pos`, return its logits row.
+    fn step_one(&self, sess: &mut RefSession, token: i32) -> anyhow::Result<Vec<f32>> {
+        let m = &self.meta;
+        let (d, ff, heads) = (m.d_model, m.d_ff, m.n_heads);
+        let dh = m.d_head();
+        ensure!(
+            (0..m.vocab as i32).contains(&token),
+            "token {token} outside vocab 0..{}",
+            m.vocab
+        );
+        let pos = sess.pos;
+        let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            // -- attention sub-layer ---------------------------------------
+            let xn = rmsnorm(&x, &lw.attn_norm);
+            let mut q = matvec(&xn, &lw.wq, d, d);
+            let mut k = matvec(&xn, &lw.wk, d, d);
+            let v = matvec(&xn, &lw.wv, d, d);
+            rope(&mut q, pos, heads, dh);
+            rope(&mut k, pos, heads, dh);
+            sess.k[li].extend_from_slice(&k);
+            sess.v[li].extend_from_slice(&v);
+
+            let ctx = pos + 1;
+            let kcache = &sess.k[li];
+            let vcache = &sess.v[li];
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut o = vec![0f32; d];
+            let mut scores = vec![0f32; ctx];
+            for h in 0..heads {
+                let base = h * dh;
+                let qh = &q[base..base + dh];
+                let mut max = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let krow = &kcache[j * d + base..j * d + base + dh];
+                    let mut dot = 0f32;
+                    for (a, b) in qh.iter().zip(krow) {
+                        dot += a * b;
+                    }
+                    *sc = dot * scale;
+                    max = max.max(*sc);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                let oh = &mut o[base..base + dh];
+                for (j, &p) in scores.iter().enumerate() {
+                    let vrow = &vcache[j * d + base..j * d + base + dh];
+                    for (ov, &vv) in oh.iter_mut().zip(vrow) {
+                        *ov += p * vv;
+                    }
+                }
+                for ov in oh.iter_mut() {
+                    *ov /= denom;
+                }
+            }
+            let attn_out = matvec(&o, &lw.wo, d, d);
+            for (xv, av) in x.iter_mut().zip(&attn_out) {
+                *xv += av;
+            }
+
+            // -- SwiGLU MLP sub-layer --------------------------------------
+            let xn = rmsnorm(&x, &lw.mlp_norm);
+            let gate = matvec(&xn, &lw.w_gate, d, ff);
+            let up = matvec(&xn, &lw.w_up, d, ff);
+            let h: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(&g, &u)| g / (1.0 + (-g).exp()) * u)
+                .collect();
+            let down = matvec(&h, &lw.w_down, ff, d);
+            for (xv, dv) in x.iter_mut().zip(&down) {
+                *xv += dv;
+            }
+        }
+
+        let xf = rmsnorm(&x, &self.final_norm);
+        let mut logits = vec![0f32; m.vocab];
+        for (t, lv) in logits.iter_mut().enumerate() {
+            let erow = &self.embed[t * d..(t + 1) * d];
+            let mut dot = 0f32;
+            for (a, b) in xf.iter().zip(erow) {
+                dot += a * b;
+            }
+            *lv = dot;
+        }
+        sess.pos += 1;
+        Ok(logits)
+    }
+}
+
+impl ReferenceBackend {
+    /// Load the model from an artifact/fixture directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Ok(Self { model: ReferenceModel::load(dir)?, sessions: HashMap::new() })
+    }
+
+    pub fn model(&self) -> &ReferenceModel {
+        &self.model
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.model.meta
+    }
+
+    /// Live session count (tests: release bookkeeping).
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+impl NumericsBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference-f32"
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.meta.vocab
+    }
+
+    fn prefill(&mut self, session: SessionId, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        ensure!(!tokens.is_empty(), "empty prompt");
+        let l = self.model.meta.n_layers;
+        let mut sess = RefSession { k: vec![Vec::new(); l], v: vec![Vec::new(); l], pos: 0 };
+        let mut logits = Vec::with_capacity(tokens.len() * self.model.meta.vocab);
+        for &t in tokens {
+            logits.extend(self.model.step_one(&mut sess, t)?);
+        }
+        // A resubmitted session id restarts from scratch.
+        self.sessions.insert(session, sess);
+        Ok(StepOutput { logits, rows: tokens.len() })
+    }
+
+    fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
+        let sess = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
+        let logits = self.model.step_one(sess, token)?;
+        Ok(StepOutput { logits, rows: 1 })
+    }
+
+    fn release(&mut self, session: SessionId) {
+        self.sessions.remove(&session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dequant_per_tile_scales() {
+        // 2×2 tiles of xb=1: w[k][n] = q[k][n] * s[k][n]
+        let q: Vec<u8> = vec![1, 2, 3u8, 0x80]; // 0x80 = -128
+        let s = vec![1.0f32, 10.0, 100.0, 0.5];
+        let w = dequant(&q, &s, 2, 2, 2, 1);
+        assert_eq!(w, vec![1.0, 20.0, 300.0, -64.0]);
+    }
+
+    #[test]
+    fn matvec_row_major() {
+        // x [2] @ w [2,3]
+        let w = vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0];
+        assert_eq!(matvec(&[1.0, 2.0], &w, 2, 3), vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let y = rmsnorm(&[3.0, 4.0], &[1.0, 1.0]);
+        // rms = sqrt(12.5); y ≈ x / rms
+        let rms = 12.5f32.sqrt();
+        assert!((y[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((y[1] - 4.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_at_pos_zero_is_identity() {
+        let orig = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut x = orig.clone();
+        rope(&mut x, 0, 1, 4);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rope_rotates_pairs() {
+        // one head, d_head=2: (x1, x2) rotated by ang = pos * 1.0
+        let mut x = vec![1.0f32, 0.0];
+        rope(&mut x, 1, 1, 2);
+        assert!((x[0] - 1f32.cos()).abs() < 1e-6);
+        assert!((x[1] - 1f32.sin()).abs() < 1e-6);
+    }
+}

@@ -1,8 +1,12 @@
 //! Integration: the PJRT runtime executes the AOT artifacts and reproduces
 //! the python-side golden outputs exactly (same HLO, same weights).
 //!
-//! Requires `make artifacts` to have run (skips gracefully otherwise so
-//! `cargo test` works on a fresh checkout).
+//! Gated on `--features xla` (the default build has no PJRT) and requires
+//! `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test --features xla` works on a fresh checkout). The default
+//! build covers the same contract through tests/integration_reference.rs.
+
+#![cfg(feature = "xla")]
 
 use leap::runtime::Engine;
 

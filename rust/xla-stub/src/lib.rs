@@ -1,0 +1,178 @@
+//! API-compatible stub of the `xla` (xla-rs) surface used by
+//! `leap::runtime::engine`, so the `--features xla` configuration always
+//! type-checks in the offline build environment.
+//!
+//! Every runtime entry point returns [`Error::Unavailable`]; nothing here
+//! executes HLO. To run the real PJRT path, replace the `xla` path
+//! dependency in `rust/Cargo.toml` with an actual xla-rs checkout — the
+//! method signatures below mirror it, so no `leap` code changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: always "xla unavailable".
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the bundled xla API stub; point the `xla` \
+                 path dependency at a real xla-rs checkout to execute PJRT artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types of XLA literals (subset LEAP uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+/// Native Rust element types storable in a [`Literal`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A host tensor handle (stub: carries no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal::default()
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug, Clone, Default)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug, Clone, Default)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation::default()
+    }
+}
+
+/// A device buffer returned by an execution (stub).
+#[derive(Debug, Clone, Default)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable (stub).
+#[derive(Debug, Clone, Default)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A PJRT client (stub).
+#[derive(Debug, Clone, Default)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let lit = Literal::vec1(&[1f32, 2.0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.reshape(&[2]).is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
