@@ -1,28 +1,160 @@
 //! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf).
 //!
-//! Measures the L3 components that sit on the serving path:
-//!  * analytical simulation of a full inference (dominates `simulate`);
-//!  * phase-plan construction (called per program compile);
-//!  * program lowering + hex assembly (per NPM load);
-//!  * mesh-executor cycle rate (instruction-level sim throughput);
-//!  * serving-engine decode-round rate (coordinator overhead);
-//!  * mapping cost evaluation (DSE inner loop).
+//! Two halves:
+//!
+//! 1. **Decode throughput** (always runs) — tokens/sec and ns/token of the
+//!    reference backend on the `tiny_ref` fixture, fast kernels vs the
+//!    retained pre-optimisation naive path, plus the batched
+//!    weight-stationary decode cost for 1 vs 8 sessions. Results are
+//!    written to `BENCH_hotpath.json` (machine-readable; override the path
+//!    with `BENCH_HOTPATH_JSON`) so CI tracks the perf trajectory.
+//! 2. **L3 component microbenches** (skipped in smoke mode) — analytical
+//!    simulation, phase-plan construction, lowering/assembly, the mesh
+//!    executor, the serving coordinator, and the mapping cost model.
 //!
 //! Run: `cargo bench --bench bench_hotpath`
+//! Smoke (CI): `BENCH_SMOKE=1 cargo bench --bench bench_hotpath`
+
+use std::time::Instant;
 
 use leap::arch::{Coord, HwParams, TileGeometry};
+use leap::bench_util::{bench, Stats};
 use leap::compiler::{lower_phases, Compiler};
 use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
 use leap::isa::assemble;
 use leap::mapping::{paper_mapping, CostModel};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
+use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend};
 use leap::schedule::{decode_phases, prefill_phases};
 use leap::sim::AnalyticalSim;
-use leap::bench_util::bench;
+
+fn fixture_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+fn fixture_prompt(session: u64) -> Vec<i32> {
+    (0..8).map(|i| ((session as i32 * 97) + i * 37 + 11) % 512).collect()
+}
+
+/// Best-of-`samples` single-session decode cost in ns/token.
+fn decode_ns_per_token(mode: KernelMode, tokens: usize, samples: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let mut b = ReferenceBackend::load_with_mode(fixture_dir(), mode).expect("fixture loads");
+        b.prefill(1, &fixture_prompt(1)).expect("prefill");
+        let mut tok = 3i32;
+        let t0 = Instant::now();
+        for _ in 0..tokens {
+            let out = b.decode_step(1, tok).expect("decode");
+            tok = argmax_row(&out.logits, 0, b.vocab()) as i32;
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / tokens as f64);
+    }
+    best
+}
+
+/// Best-of-`samples` cost of one `decode_batch` round over `nsessions`
+/// live sessions, in ns/round.
+fn batch_ns_per_round(nsessions: usize, rounds: usize, samples: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let mut b = ReferenceBackend::load_with_mode(fixture_dir(), KernelMode::Fast)
+            .expect("fixture loads");
+        for s in 0..nsessions as u64 {
+            b.prefill(s, &fixture_prompt(s)).expect("prefill");
+        }
+        let mut toks = vec![3i32; nsessions];
+        let vocab = b.vocab();
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            let steps: Vec<(u64, i32)> =
+                toks.iter().enumerate().map(|(s, &t)| (s as u64, t)).collect();
+            let outs = b.decode_batch(&steps).expect("decode_batch");
+            for (s, res) in outs.into_iter().enumerate() {
+                toks[s] = argmax_row(&res.expect("step ok").logits, 0, vocab) as i32;
+            }
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / rounds as f64);
+    }
+    best
+}
+
+/// Decode-throughput mode: fast vs naive kernels, batched vs sequential,
+/// machine-readable JSON out.
+fn decode_throughput_report(smoke: bool) {
+    println!("=== reference-backend decode throughput (tiny_ref) ===\n");
+    let (tokens, rounds, samples) = if smoke { (24, 16, 2) } else { (96, 64, 5) };
+
+    let naive_ns = decode_ns_per_token(KernelMode::Naive, tokens, samples);
+    let fast_ns = decode_ns_per_token(KernelMode::Fast, tokens, samples);
+    let speedup = naive_ns / fast_ns;
+    println!(
+        "single-session decode   naive {:>10}/tok ({:>9.0} tok/s)",
+        Stats::fmt_ns(naive_ns),
+        1e9 / naive_ns
+    );
+    println!(
+        "single-session decode   fast  {:>10}/tok ({:>9.0} tok/s)   speedup {speedup:.2}x",
+        Stats::fmt_ns(fast_ns),
+        1e9 / fast_ns
+    );
+
+    let b1_ns = batch_ns_per_round(1, rounds, samples);
+    let b8_ns = batch_ns_per_round(8, rounds, samples);
+    let sublin = b8_ns / b1_ns;
+    println!(
+        "batched decode round    B=1   {:>10}/round        B=8 {:>10}/round",
+        Stats::fmt_ns(b1_ns),
+        Stats::fmt_ns(b8_ns)
+    );
+    println!(
+        "                        8-session round costs {sublin:.2}x a 1-session round \
+         ({:.0} tok/s aggregate)\n",
+        8.0 * 1e9 / b8_ns
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath_decode\",\n  \"fixture\": \"tiny_ref\",\n  \
+         \"smoke\": {smoke},\n  \"decode_tokens\": {tokens},\n  \"samples\": {samples},\n  \
+         \"naive_ns_per_token\": {naive_ns:.1},\n  \"naive_tokens_per_s\": {:.1},\n  \
+         \"fast_ns_per_token\": {fast_ns:.1},\n  \"fast_tokens_per_s\": {:.1},\n  \
+         \"speedup_fast_over_naive\": {speedup:.3},\n  \
+         \"batch1_ns_per_round\": {b1_ns:.1},\n  \"batch8_ns_per_round\": {b8_ns:.1},\n  \
+         \"batch8_over_batch1\": {sublin:.3},\n  \"batch8_tokens_per_s\": {:.1}\n}}\n",
+        1e9 / naive_ns,
+        1e9 / fast_ns,
+        8.0 * 1e9 / b8_ns,
+    );
+    let override_path = std::env::var("BENCH_HOTPATH_JSON").ok();
+    let path = override_path.clone().unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(err) => eprintln!("could not write {path}: {err}"),
+    }
+    // Default destination only: also mirror to the workspace root (the
+    // bench's CWD is the crate dir, but perf tooling typically looks from
+    // the repo root). An explicit BENCH_HOTPATH_JSON is authoritative.
+    if override_path.is_none() {
+        let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        if let Some(root) = manifest.parent() {
+            if root.join("Cargo.toml").is_file() {
+                let _ = std::fs::write(root.join("BENCH_hotpath.json"), &json);
+            }
+        }
+    }
+}
 
 fn main() {
-    println!("=== L3 hot-path microbenchmarks ===\n");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+
+    decode_throughput_report(smoke);
+    if smoke {
+        println!("(BENCH_SMOKE set: skipping L3 component microbenches)");
+        return;
+    }
+
+    println!("\n=== L3 hot-path microbenchmarks ===\n");
     let hw = HwParams::default();
 
     // analytical end-to-end (Fig. 10/Table III inner loop)

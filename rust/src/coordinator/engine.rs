@@ -234,22 +234,53 @@ impl ServingEngine {
             .map(|r| (r.id, r.ctx_len(), *r.output.last().unwrap_or(&0)))
             .collect();
 
-        for (id, ctx, last_token) in round {
+        // timing: one decode program per request per layer (unchanged —
+        // the simulated hardware serves requests round-robin). Each
+        // request's token lands at the simulated instant its own dispatch
+        // completed, same as the pre-batching engine.
+        let mut done_at: Vec<u64> = Vec::with_capacity(round.len());
+        for &(_, ctx, _) in &round {
             let layers = self.compiled.shape.n_layers as u64;
             let prog = self.compiled.decode_program(ctx).clone();
             let per_layer = self.dispatch(prog)?;
             self.advance(per_layer * layers);
+            done_at.push(self.now_ns);
+        }
 
-            let next = match &mut self.numerics {
-                Numerics::Backend(backend) => match backend.decode_step(id, last_token) {
-                    Ok(out) => Some(argmax_row(&out.logits, 0, backend.vocab()) as i32),
-                    Err(err) => {
-                        eprintln!("request {id} failed in numerics decode: {err:#}");
-                        None
-                    }
-                },
-                Numerics::Synthetic { vocab } => Some(((ctx * 2654435761) % *vocab) as i32),
-            };
+        // numerics: ONE batched call for the whole round — a weight-
+        // stationary backend streams each weight matrix once for every
+        // live session (LEAP's dataflow, in software). A per-session error
+        // fails that request only.
+        let next_tokens: Vec<(RequestId, Option<i32>)> = match &mut self.numerics {
+            Numerics::Backend(backend) => {
+                let steps: Vec<(u64, i32)> = round.iter().map(|&(id, _, t)| (id, t)).collect();
+                let outs = backend.decode_batch(&steps)?;
+                anyhow::ensure!(
+                    outs.len() == steps.len(),
+                    "backend decode_batch returned {} results for {} steps",
+                    outs.len(),
+                    steps.len()
+                );
+                let vocab = backend.vocab();
+                round
+                    .iter()
+                    .zip(outs)
+                    .map(|(&(id, _, _), res)| match res {
+                        Ok(out) => (id, Some(argmax_row(&out.logits, 0, vocab) as i32)),
+                        Err(err) => {
+                            eprintln!("request {id} failed in numerics decode: {err:#}");
+                            (id, None)
+                        }
+                    })
+                    .collect()
+            }
+            Numerics::Synthetic { vocab } => round
+                .iter()
+                .map(|&(id, ctx, _)| (id, Some(((ctx * 2654435761) % *vocab) as i32)))
+                .collect(),
+        };
+
+        for ((id, next), now) in next_tokens.into_iter().zip(done_at) {
             let Some(next) = next else {
                 self.fail_request(id);
                 continue;
@@ -259,13 +290,12 @@ impl ServingEngine {
                 // out of scratchpad: finish the request early
                 if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                     r.state = RequestState::Done;
-                    r.t_done_ns = Some(self.now_ns);
+                    r.t_done_ns = Some(now);
                 }
                 continue;
             }
             self.kv.append(id)?;
             self.metrics.decode_tokens += 1;
-            let now = self.now_ns;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 r.output.push(next);
                 if r.output.len() >= r.max_new_tokens {

@@ -13,13 +13,14 @@
 //! A backend owns per-request KV-cache state keyed by [`SessionId`]; the
 //! coordinator uses its `RequestId` as the session id, calls
 //! [`NumericsBackend::prefill`] once on admission,
-//! [`NumericsBackend::decode_step`] once per decode round, and
-//! [`NumericsBackend::release`] at retire.
+//! [`NumericsBackend::decode_batch`] once per decode round (one entry per
+//! live session, so a batching backend can stream each weight matrix once
+//! for the whole round), and [`NumericsBackend::release`] at retire.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::Context;
+use anyhow::{ensure, Context};
 
 /// Opaque per-request session key (the coordinator passes its request id).
 pub type SessionId = u64;
@@ -31,6 +32,9 @@ pub struct StepOutput {
     pub logits: Vec<f32>,
     pub rows: usize,
 }
+
+/// Per-step results of a batched decode round, in step order.
+pub type BatchResults = Vec<anyhow::Result<StepOutput>>;
 
 /// A functional numerics implementation behind the serving engine.
 pub trait NumericsBackend {
@@ -50,17 +54,39 @@ pub trait NumericsBackend {
     /// Advance the session by one token; returns a single logits row.
     fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput>;
 
+    /// Advance many sessions by one token each — the weight-stationary
+    /// entry point: one pass over each weight matrix can serve every step
+    /// in the slice. Returns one result per step, in order; a per-session
+    /// failure (unknown session, bad token, exhausted context window)
+    /// occupies its slot as an `Err` without failing the whole round. The
+    /// outer `Err` is reserved for whole-backend failures.
+    ///
+    /// Implementations must be observably equivalent to calling
+    /// [`Self::decode_step`] sequentially in slice order (the reference
+    /// backend's batched path is bitwise-identical; see
+    /// `tests/prop_backend.rs`). The default does exactly that.
+    fn decode_batch(&mut self, steps: &[(SessionId, i32)]) -> anyhow::Result<BatchResults> {
+        Ok(steps.iter().map(|&(session, token)| self.decode_step(session, token)).collect())
+    }
+
     /// Drop the session's KV-cache state (idempotent).
     fn release(&mut self, session: SessionId);
 }
 
 /// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.
+///
+/// NaN-safe: `NaN` entries never win (a comparison against the running
+/// best is always `false` for `NaN`), so a partly-poisoned row still
+/// selects its largest real logit. Ties break to the **lowest index**.
+/// An all-`NaN` (or empty-range) row returns index 0.
 pub fn argmax_row(logits: &[f32], row: usize, vocab: usize) -> usize {
     let slice = &logits[row * vocab..(row + 1) * vocab];
     let mut best = 0;
-    for (i, v) in slice.iter().enumerate() {
-        if *v > slice[best] {
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in slice.iter().enumerate() {
+        if v > best_v {
             best = i;
+            best_v = v;
         }
     }
     best
@@ -113,6 +139,25 @@ impl ArtifactMeta {
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
     }
+
+    /// Validate one decode step against this model: the token must be in
+    /// vocab and the session must have a free position in the context
+    /// window. The single source of the boundary error messages, shared by
+    /// every sequential-step path (fast, naive, batched validation), so
+    /// batched and sequential decode fail identically.
+    pub fn check_step(&self, pos: usize, token: i32) -> anyhow::Result<()> {
+        ensure!(
+            (0..self.vocab as i32).contains(&token),
+            "token {token} outside vocab 0..{}",
+            self.vocab
+        );
+        ensure!(
+            pos < self.s_max,
+            "session context {pos} has exhausted the model window s_max={}",
+            self.s_max
+        );
+        Ok(())
+    }
 }
 
 /// Locate a usable artifact directory (one containing `meta.txt`). An
@@ -161,6 +206,23 @@ mod tests {
         let logits = [0.1, 0.9, 0.0, 7.0, -1.0, 2.0];
         assert_eq!(argmax_row(&logits, 0, 3), 1);
         assert_eq!(argmax_row(&logits, 1, 3), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nans() {
+        // a leading NaN must not shadow the real maximum
+        assert_eq!(argmax_row(&[f32::NAN, 0.5, 0.9], 0, 3), 2);
+        // NaN in the middle is skipped too
+        assert_eq!(argmax_row(&[0.5, f32::NAN, 0.1], 0, 3), 0);
+        // an all-NaN row falls back to index 0
+        assert_eq!(argmax_row(&[f32::NAN, f32::NAN], 0, 2), 0);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_lowest_index() {
+        assert_eq!(argmax_row(&[3.0, 7.0, 7.0, 7.0], 0, 4), 1);
+        // -inf everywhere: lowest index wins
+        assert_eq!(argmax_row(&[f32::NEG_INFINITY; 3], 0, 3), 0);
     }
 
     #[test]

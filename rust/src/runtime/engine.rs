@@ -192,6 +192,15 @@ impl NumericsBackend for PjrtBackend {
             .sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
+        // Same boundary contract as the reference backend: decoding past
+        // the artifact's KV window would overwrite live cache slots, so
+        // reject instead of silently wrapping.
+        ensure!(
+            st.pos < self.engine.meta.s_max,
+            "session context {} has exhausted the model window s_max={}",
+            st.pos,
+            self.engine.meta.s_max
+        );
         let out = self.engine.decode(token, st.pos as i32, &st.kcache, &st.vcache)?;
         st.kcache = out.kcache;
         st.vcache = out.vcache;

@@ -1,0 +1,762 @@
+//! Fast CPU kernels for the reference backend's hot path.
+//!
+//! The software analogue of LEAP's weight-stationary PIM dataflow: every
+//! matmul here streams each weight row through the core exactly once and
+//! amortises it over as many activation rows as the caller can batch
+//! (whole-prompt prefill, multi-session decode). Design points:
+//!
+//! - **Transposed weight layout.** Weights are stored `[n, k]` (one
+//!   contiguous row per *output* column), so `y[n] = dot(x, wt[n])` is a
+//!   pure streaming read with no read-modify-write of `y` — the crossbar
+//!   column-read access pattern, and the layout auto-vectorisers like.
+//! - **Fixed-order lane accumulation.** [`dot`] accumulates into 8
+//!   independent lanes and reduces them in index order, so every call with
+//!   the same inputs produces the same bits on every code path — the
+//!   bitwise `decode_batch` ≡ sequential `decode_step` contract rests on
+//!   this.
+//! - **Weight-stationary multi-row GEMM.** [`gemm_t`] iterates weight rows
+//!   in the *outer* loop: one pass over `W` serves every activation row,
+//!   which is what makes batched decode sublinear in batch size.
+//! - **`std::thread::scope` parallelism, zero deps.** Large matvecs split
+//!   the output columns, large GEMMs split the activation rows, and large
+//!   attention contexts split the heads — all gated behind a work
+//!   threshold so tiny models never pay a spawn.
+//! - **No per-token tensor allocation.** [`Scratch`] owns every
+//!   intermediate tensor buffer and only ever grows; [`RopeTable`]
+//!   precomputes the rotary sin/cos so the steady-state decode loop does
+//!   no trig.
+//!
+//! The [`naive`] submodule retains the pre-optimisation scalar kernels
+//! verbatim. They are the parity oracle for the fast path
+//! (`tests/integration_kernels.rs`) and the baseline the decode-throughput
+//! bench (`benches/bench_hotpath.rs`) measures speedups against.
+
+/// RMSNorm epsilon (matches `python/compile/kernels/ref.py`).
+pub const RMS_EPS: f32 = 1e-5;
+/// Rotary embedding base (matches the python oracle).
+pub const ROPE_THETA: f64 = 10000.0;
+
+/// Minimum multiply-accumulate count before a kernel spawns threads; below
+/// this, scoped-thread setup costs more than it saves (a tiny-model decode
+/// matvec is ~131K MACs and must stay on one core).
+const PAR_MIN_WORK: usize = 1 << 21;
+/// Upper bound on worker threads per kernel call.
+const MAX_THREADS: usize = 8;
+
+/// Worker-thread count for a kernel invocation of `work` multiply-adds:
+/// 1 under the threshold, else enough threads to give each at least
+/// `PAR_MIN_WORK`, capped by the machine and [`MAX_THREADS`].
+fn threads_for(work: usize) -> usize {
+    if work < 2 * PAR_MIN_WORK {
+        return 1;
+    }
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    avail.min(MAX_THREADS).min(work / PAR_MIN_WORK).max(1)
+}
+
+/// Dot product with 8 fixed accumulator lanes reduced in index order.
+///
+/// The lane structure gives the auto-vectoriser independent dependency
+/// chains; the fixed reduction order makes the result a pure function of
+/// the inputs (same bits from `matvec_t`, `gemm_t`, serial or threaded).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((lane, &x), &y) in lanes.iter_mut().zip(av).zip(bv) {
+            *lane += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+/// `y = x @ W` for one activation row against a *transposed* weight matrix
+/// `wt: [n, k]` (row `n` of `wt` is output column `n`). Splits the output
+/// columns across scoped threads when the work is large; each column's
+/// arithmetic is identical either way.
+pub fn matvec_t(x: &[f32], wt: &[f32], k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(wt.len(), k * n);
+    debug_assert_eq!(y.len(), n);
+    let t = threads_for(k * n);
+    if t <= 1 {
+        for (yv, wrow) in y.iter_mut().zip(wt.chunks_exact(k)) {
+            *yv = dot(x, wrow);
+        }
+        return;
+    }
+    let band = n.div_ceil(t);
+    std::thread::scope(|s| {
+        for (yb, wb) in y.chunks_mut(band).zip(wt.chunks(band * k)) {
+            s.spawn(move || {
+                for (yv, wrow) in yb.iter_mut().zip(wb.chunks_exact(k)) {
+                    *yv = dot(x, wrow);
+                }
+            });
+        }
+    });
+}
+
+/// Weight-stationary multi-row GEMM: `y[rows, n] = x[rows, k] @ W` with
+/// `wt: [n, k]` transposed. The weight row is the **outer** loop, so one
+/// pass over `W` serves every activation row — batching activation rows
+/// (prompt tokens, decode sessions) amortises the whole weight stream.
+///
+/// Row `r` of the result is bit-identical to `matvec_t` on row `r` alone:
+/// each output element is one [`dot`] call either way. Large calls split
+/// the activation rows across scoped threads (each worker keeps the
+/// weight-stationary inner structure over its row band).
+pub fn gemm_t(x: &[f32], wt: &[f32], rows: usize, k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(wt.len(), k * n);
+    debug_assert_eq!(y.len(), rows * n);
+    if rows == 1 {
+        return matvec_t(x, wt, k, n, y);
+    }
+    let t = threads_for(rows * k * n).min(rows);
+    if t <= 1 {
+        for (nn, wrow) in wt.chunks_exact(k).enumerate() {
+            for (r, xrow) in x.chunks_exact(k).enumerate() {
+                y[r * n + nn] = dot(xrow, wrow);
+            }
+        }
+        return;
+    }
+    let band = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (yb, xb) in y.chunks_mut(band * n).zip(x.chunks(band * k)) {
+            s.spawn(move || {
+                for (nn, wrow) in wt.chunks_exact(k).enumerate() {
+                    for (r, xrow) in xb.chunks_exact(k).enumerate() {
+                        yb[r * n + nn] = dot(xrow, wrow);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// A quantised matrix in fast-kernel layout: the int8 crossbar cells,
+/// transposed `[n, k]`, plus the per-tile scales in their original
+/// `[k/xb, n/xb]` orientation. The q8 kernels stream the cells directly —
+/// 4× less weight traffic than dequantised f32, which is what decode
+/// throughput is bound by — and fold the scale in per k-tile:
+/// `y[n] = Σ_kt s[kt, n/xb] · Σ_{k∈kt} x[k]·q[k, n]`.
+pub struct QMat {
+    /// int8 cells, transposed row-major `[n, k]`.
+    pub q: Vec<i8>,
+    /// per-tile scales, row-major `[k/xb, n/xb]`.
+    pub s: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+    /// crossbar tile edge (tiles are `xb × xb`).
+    pub xb: usize,
+}
+
+impl QMat {
+    /// Build from a row-major `[k, n]` cell blob (raw bytes reinterpreted
+    /// as i8, the artifact encoding) and its scale slice.
+    pub fn from_cells(cells: &[u8], scales: &[f32], k: usize, n: usize, xb: usize) -> Self {
+        // Hard preconditions (not debug-only): the q8 kernels tile both
+        // axes by `xb`, so a ragged edge would index scales out of bounds.
+        assert!(xb > 0 && k % xb == 0 && n % xb == 0, "k={k}, n={n} must be multiples of xb={xb}");
+        assert_eq!(cells.len(), k * n);
+        assert_eq!(scales.len(), (k / xb) * (n / xb));
+        let mut q = vec![0i8; k * n];
+        for (ki, row) in cells.chunks_exact(n).enumerate() {
+            for (ni, &c) in row.iter().enumerate() {
+                q[ni * k + ki] = c as i8;
+            }
+        }
+        Self { q, s: scales.to_vec(), k, n, xb }
+    }
+
+    /// Dense dequantised f32 in the original `[k, n]` layout
+    /// (`w[k][n] = q[k][n] * s[k/xb][n/xb]`) — the naive path's view of
+    /// this matrix; used by the parity tests.
+    pub fn dequant_dense(&self) -> Vec<f32> {
+        let nt = self.n / self.xb;
+        let mut w = vec![0f32; self.k * self.n];
+        for k in 0..self.k {
+            for n in 0..self.n {
+                let s = self.s[(k / self.xb) * nt + n / self.xb];
+                w[k * self.n + n] = self.q[n * self.k + k] as f32 * s;
+            }
+        }
+        w
+    }
+}
+
+/// Dot product of an f32 activation tile against int8 cells, with the
+/// same 8-lane fixed-order accumulation as [`dot`] (the cells are
+/// sign-extended to f32 in-register; no dequantised copy ever exists).
+#[inline]
+pub fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((lane, &x), &qv) in lanes.iter_mut().zip(av).zip(bv) {
+            *lane += x * qv as f32;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &qv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * qv as f32;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+/// One output band of [`matvec_q8`]: columns `n0 .. n0 + y.len()`.
+fn matvec_q8_band(x: &[f32], m: &QMat, n0: usize, y: &mut [f32]) {
+    let (k, xb) = (m.k, m.xb);
+    let nt = m.n / xb;
+    for (i, yv) in y.iter_mut().enumerate() {
+        let n = n0 + i;
+        let wrow = &m.q[n * k..(n + 1) * k];
+        let mut acc = 0f32;
+        for (kt, xtile) in x.chunks(xb).enumerate() {
+            let partial = dot_q8(xtile, &wrow[kt * xb..kt * xb + xtile.len()]);
+            acc += m.s[kt * nt + n / xb] * partial;
+        }
+        *yv = acc;
+    }
+}
+
+/// `y = x @ W` for one activation row against a quantised matrix,
+/// streaming the int8 cells directly. Column-band threaded like
+/// [`matvec_t`]; per-column arithmetic is identical on every path.
+pub fn matvec_q8(x: &[f32], m: &QMat, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m.k);
+    debug_assert_eq!(y.len(), m.n);
+    let t = threads_for(m.k * m.n);
+    if t <= 1 {
+        return matvec_q8_band(x, m, 0, y);
+    }
+    let band = m.n.div_ceil(t);
+    std::thread::scope(|s| {
+        for (bi, yb) in y.chunks_mut(band).enumerate() {
+            s.spawn(move || matvec_q8_band(x, m, bi * band, yb));
+        }
+    });
+}
+
+/// One row band of [`gemm_q8`]: all columns for the rows in `xs`/`yb`.
+/// Weight-stationary — the column (weight row + scale column) is the
+/// outer loop, so the int8 stream is paid once for every activation row.
+fn gemm_q8_rows(xs: &[f32], m: &QMat, yb: &mut [f32]) {
+    let (k, n, xb) = (m.k, m.n, m.xb);
+    let nt = n / xb;
+    for nn in 0..n {
+        let wrow = &m.q[nn * k..(nn + 1) * k];
+        let scol = nn / xb;
+        for (r, xrow) in xs.chunks_exact(k).enumerate() {
+            let mut acc = 0f32;
+            for (kt, xtile) in xrow.chunks(xb).enumerate() {
+                let partial = dot_q8(xtile, &wrow[kt * xb..kt * xb + xtile.len()]);
+                acc += m.s[kt * nt + scol] * partial;
+            }
+            yb[r * n + nn] = acc;
+        }
+    }
+}
+
+/// Weight-stationary multi-row GEMM over a quantised matrix:
+/// `y[rows, n] = x[rows, k] @ W`. Row `r` is bit-identical to
+/// [`matvec_q8`] on row `r` alone (same per-element tile order). Large
+/// calls split the activation rows across scoped threads.
+pub fn gemm_q8(x: &[f32], m: &QMat, rows: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * m.k);
+    debug_assert_eq!(y.len(), rows * m.n);
+    if rows == 1 {
+        return matvec_q8(x, m, y);
+    }
+    let t = threads_for(rows * m.k * m.n).min(rows);
+    if t <= 1 {
+        return gemm_q8_rows(x, m, y);
+    }
+    let band = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (yb, xb_rows) in y.chunks_mut(band * m.n).zip(x.chunks(band * m.k)) {
+            s.spawn(move || gemm_q8_rows(xb_rows, m, yb));
+        }
+    });
+}
+
+/// Transpose a row-major `[k, n]` matrix into `[n, k]` (the layout the
+/// fast kernels want; done once at weight-load time).
+pub fn transpose(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), k * n);
+    let mut t = vec![0f32; w.len()];
+    for (ki, row) in w.chunks_exact(n).enumerate() {
+        for (ni, &v) in row.iter().enumerate() {
+            t[ni * k + ki] = v;
+        }
+    }
+    t
+}
+
+/// RMSNorm into a caller-provided buffer (no allocation on the hot path).
+/// Same accumulation order as [`naive::rmsnorm`], so the value is
+/// bit-identical.
+pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    let mut sq = 0f32;
+    for &v in x {
+        sq += v * v;
+    }
+    let inv = 1.0 / (sq / x.len() as f32 + RMS_EPS).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = v * inv * gv;
+    }
+}
+
+/// SwiGLU combine in place: `gate[i] = silu(gate[i]) * up[i]` (same
+/// expression as the naive path, so bit-identical).
+pub fn silu_mul(gate: &mut [f32], up: &[f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    for (g, &u) in gate.iter_mut().zip(up) {
+        let gv = *g;
+        *g = gv / (1.0 + (-gv).exp()) * u;
+    }
+}
+
+/// Precomputed rotary-embedding tables: `sin/cos[pos * half + j]` for every
+/// position below `s_max`, computed with exactly the naive path's
+/// arithmetic (f64 `powf`, f32 angle) so table lookups reproduce its bits
+/// while eliminating all steady-state trig.
+pub struct RopeTable {
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+    half: usize,
+}
+
+impl RopeTable {
+    pub fn new(s_max: usize, d_head: usize, theta: f64) -> Self {
+        let half = d_head / 2;
+        let mut sin = vec![0f32; s_max * half];
+        let mut cos = vec![0f32; s_max * half];
+        for pos in 0..s_max {
+            for j in 0..half {
+                let freq = (1.0 / theta.powf(j as f64 / half as f64)) as f32;
+                let ang = pos as f32 * freq;
+                sin[pos * half + j] = ang.sin();
+                cos[pos * half + j] = ang.cos();
+            }
+        }
+        Self { sin, cos, half }
+    }
+
+    /// Positions this table covers (`s_max` at construction).
+    pub fn positions(&self) -> usize {
+        if self.half == 0 {
+            0
+        } else {
+            self.sin.len() / self.half
+        }
+    }
+
+    /// In-place rotary embedding at `pos` over merged heads (half-split
+    /// rotation per head, matching [`naive::rope`] bit for bit).
+    pub fn apply(&self, x: &mut [f32], pos: usize, n_heads: usize, d_head: usize) {
+        debug_assert_eq!(d_head / 2, self.half);
+        debug_assert!(pos < self.positions(), "rope table too small for pos {pos}");
+        let half = self.half;
+        let sin = &self.sin[pos * half..(pos + 1) * half];
+        let cos = &self.cos[pos * half..(pos + 1) * half];
+        for h in 0..n_heads {
+            let base = h * d_head;
+            for j in 0..half {
+                let (s, c) = (sin[j], cos[j]);
+                let (x1, x2) = (x[base + j], x[base + half + j]);
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// Causal attention for one query row against a `[ctx, d]` KV cache slice
+/// (merged-head layout, `d = n_heads * d_head`). `scores` is a scratch
+/// buffer of at least `ctx` entries; `o` receives the `[d]` output.
+///
+/// Per-head arithmetic matches the naive path's structure (max-subtracted
+/// exp, deferred denominator divide); large contexts split the heads
+/// across scoped threads with per-thread score buffers — each head's math
+/// is identical either way.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_row(
+    q: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    ctx: usize,
+    n_heads: usize,
+    d_head: usize,
+    d: usize,
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(o.len(), d);
+    debug_assert!(kcache.len() >= ctx * d && vcache.len() >= ctx * d);
+    debug_assert!(scores.len() >= ctx);
+    let t = threads_for(n_heads * ctx * d_head).min(n_heads);
+    if t <= 1 {
+        for (h, oh) in o.chunks_exact_mut(d_head).enumerate() {
+            head_attention(q, kcache, vcache, ctx, h, d_head, d, &mut scores[..ctx], oh);
+        }
+        return;
+    }
+    let band = n_heads.div_ceil(t);
+    std::thread::scope(|s| {
+        for (hb, ob) in o.chunks_mut(band * d_head).enumerate() {
+            s.spawn(move || {
+                let mut local = vec![0f32; ctx];
+                for (hi, oh) in ob.chunks_exact_mut(d_head).enumerate() {
+                    let h = hb * band + hi;
+                    head_attention(q, kcache, vcache, ctx, h, d_head, d, &mut local, oh);
+                }
+            });
+        }
+    });
+}
+
+/// One head of [`attention_row`] (softmax(q·Kᵀ)·V over `ctx` positions).
+#[allow(clippy::too_many_arguments)]
+fn head_attention(
+    q: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    ctx: usize,
+    h: usize,
+    d_head: usize,
+    d: usize,
+    scores: &mut [f32],
+    oh: &mut [f32],
+) {
+    let base = h * d_head;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let qh = &q[base..base + d_head];
+    let mut max = f32::NEG_INFINITY;
+    for (j, sc) in scores[..ctx].iter_mut().enumerate() {
+        let krow = &kcache[j * d + base..j * d + base + d_head];
+        *sc = dot(qh, krow) * scale;
+        max = max.max(*sc);
+    }
+    let mut denom = 0f32;
+    for sc in scores[..ctx].iter_mut() {
+        *sc = (*sc - max).exp();
+        denom += *sc;
+    }
+    oh.fill(0.0);
+    for (j, &p) in scores[..ctx].iter().enumerate() {
+        let vrow = &vcache[j * d + base..j * d + base + d_head];
+        for (ov, &vv) in oh.iter_mut().zip(vrow) {
+            *ov += p * vv;
+        }
+    }
+    for ov in oh.iter_mut() {
+        *ov /= denom;
+    }
+}
+
+/// Grow-only scratch arena for the forward pass: one allocation family at
+/// the first call of each batch width, no tensor allocations in the
+/// steady state. Buffers are sized for `rows` activation rows of a
+/// `(d_model, d_ff)` model with an `s_max` context window.
+#[derive(Default)]
+pub struct Scratch {
+    /// Residual stream `[rows, d]`.
+    pub x: Vec<f32>,
+    /// Normed activations `[rows, d]`.
+    pub xn: Vec<f32>,
+    /// Attention projections `[rows, d]` each.
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Attention output `[rows, d]`.
+    pub o: Vec<f32>,
+    /// Output-projection / MLP-down result `[rows, d]`.
+    pub proj: Vec<f32>,
+    /// SwiGLU gate and up `[rows, ff]` each.
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    /// Attention score buffer `[s_max]`.
+    pub scores: Vec<f32>,
+    /// Per-row cache position assigned this step `[rows]`.
+    pub pos: Vec<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure capacity for `rows` activation rows (grow-only).
+    pub fn ensure(&mut self, rows: usize, d: usize, ff: usize, s_max: usize) {
+        let grow = |buf: &mut Vec<f32>, len: usize| {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+        };
+        grow(&mut self.x, rows * d);
+        grow(&mut self.xn, rows * d);
+        grow(&mut self.q, rows * d);
+        grow(&mut self.k, rows * d);
+        grow(&mut self.v, rows * d);
+        grow(&mut self.o, rows * d);
+        grow(&mut self.proj, rows * d);
+        grow(&mut self.gate, rows * ff);
+        grow(&mut self.up, rows * ff);
+        grow(&mut self.scores, s_max);
+        if self.pos.len() < rows {
+            self.pos.resize(rows, 0);
+        }
+    }
+}
+
+/// The pre-optimisation scalar kernels, retained verbatim: the parity
+/// oracle for the fast path and the baseline for the decode-throughput
+/// bench. These allocate per call, branch on zero activations, and do trig
+/// per token — exactly what the kernel layer exists to remove.
+pub mod naive {
+    use super::{RMS_EPS, ROPE_THETA};
+
+    /// `y = x @ W` for one activation row: `x: [k]`, `w: [k, n]` row-major
+    /// (NOT transposed — the original axpy walk).
+    pub fn matvec(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(w.len(), k * n);
+        let mut y = vec![0f32; n];
+        for (ki, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[ki * n..(ki + 1) * n];
+            for (yv, &wv) in y.iter_mut().zip(row) {
+                *yv += xv * wv;
+            }
+        }
+        y
+    }
+
+    pub fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+        let mut sq = 0f32;
+        for &v in x {
+            sq += v * v;
+        }
+        let inv = 1.0 / (sq / x.len() as f32 + RMS_EPS).sqrt();
+        x.iter().zip(g).map(|(&v, &gv)| v * inv * gv).collect()
+    }
+
+    /// In-place rotary embedding at `pos` over merged heads (half-split
+    /// rotation per head, matching `ref.ref_rope`).
+    pub fn rope(x: &mut [f32], pos: usize, n_heads: usize, d_head: usize) {
+        let half = d_head / 2;
+        for h in 0..n_heads {
+            let base = h * d_head;
+            for j in 0..half {
+                let freq = (1.0 / ROPE_THETA.powf(j as f64 / half as f64)) as f32;
+                let ang = pos as f32 * freq;
+                let (sin, cos) = (ang.sin(), ang.cos());
+                let (x1, x2) = (x[base + j], x[base + half + j]);
+                x[base + j] = x1 * cos - x2 * sin;
+                x[base + half + j] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 17) as f32 - 8.0) * scale).collect()
+    }
+
+    #[test]
+    fn dot_matches_sequential_sum() {
+        for len in [0, 1, 7, 8, 9, 31, 64, 100] {
+            let a = seq(len, 0.25);
+            let b = seq(len, -0.5);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - want).abs() <= 1e-5 * (1.0 + want.abs()), "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_naive_matvec() {
+        // same matrix in both layouts: w [k,n] row-major, wt = transpose
+        let (k, n) = (13, 9);
+        let w = seq(k * n, 0.1);
+        let wt = transpose(&w, k, n);
+        let x = seq(k, 0.3);
+        let want = naive::matvec(&x, &w, k, n);
+        let mut got = vec![0f32; n];
+        matvec_t(&x, &wt, k, n, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_rows_bitwise_equal_to_matvec() {
+        let (rows, k, n) = (4, 24, 10);
+        let x = seq(rows * k, 0.2);
+        let wt = seq(n * k, -0.15);
+        let mut y = vec![0f32; rows * n];
+        gemm_t(&x, &wt, rows, k, n, &mut y);
+        for r in 0..rows {
+            let mut solo = vec![0f32; n];
+            matvec_t(&x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
+            assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r} must be bit-identical");
+        }
+    }
+
+    /// Deterministic pseudo-random i8 cells + scales for a [k, n] matrix.
+    fn qmat(k: usize, n: usize, xb: usize) -> QMat {
+        let cells: Vec<u8> = (0..k * n).map(|i| (i * 31 + 7) as u8).collect();
+        let nt = (k / xb) * (n / xb);
+        let scales: Vec<f32> = (0..nt).map(|i| 0.01 + 0.003 * (i % 5) as f32).collect();
+        QMat::from_cells(&cells, &scales, k, n, xb)
+    }
+
+    #[test]
+    fn dot_q8_matches_sequential_sum() {
+        for len in [1, 7, 8, 9, 31, 64] {
+            let a = seq(len, 0.25);
+            let b: Vec<i8> = (0..len).map(|i| (i as i8).wrapping_mul(13)).collect();
+            let want: f32 = a.iter().zip(&b).map(|(&x, &q)| x * q as f32).sum();
+            let got = dot_q8(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn qmat_transposes_cells() {
+        // cells [k=2, n=2] row-major: [1, 2, 3, 0x80]; xb=1 scales per cell
+        let m = QMat::from_cells(&[1, 2, 3, 0x80], &[1.0, 10.0, 100.0, 0.5], 2, 2, 1);
+        // q is [n, k]: column n=0 holds cells (k=0,n=0)=1 and (k=1,n=0)=3
+        assert_eq!(m.q, vec![1, 3, 2, -128]);
+        assert_eq!(m.dequant_dense(), vec![1.0, 20.0, 300.0, -64.0]);
+    }
+
+    #[test]
+    fn matvec_q8_matches_dense_naive_path() {
+        let (k, n, xb) = (8, 12, 4);
+        let m = qmat(k, n, xb);
+        let dense = m.dequant_dense();
+        let x = seq(k, 0.3);
+        let want = naive::matvec(&x, &dense, k, n);
+        let mut got = vec![0f32; n];
+        matvec_q8(&x, &m, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_q8_rows_bitwise_equal_to_matvec_q8() {
+        let (rows, k, n, xb) = (3, 8, 8, 4);
+        let m = qmat(k, n, xb);
+        let x = seq(rows * k, 0.2);
+        let mut y = vec![0f32; rows * n];
+        gemm_q8(&x, &m, rows, &mut y);
+        for r in 0..rows {
+            let mut solo = vec![0f32; n];
+            matvec_q8(&x[r * k..(r + 1) * k], &m, &mut solo);
+            assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let (k, n) = (5, 7);
+        let w = seq(k * n, 1.0);
+        let wt = transpose(&w, k, n);
+        assert_eq!(transpose(&wt, n, k), w);
+        // spot-check one element: w[2][3] == wt[3][2]
+        assert_eq!(w[2 * n + 3], wt[3 * k + 2]);
+    }
+
+    #[test]
+    fn rmsnorm_into_bitwise_matches_naive() {
+        let x = seq(32, 0.7);
+        let g = seq(32, 0.4);
+        let want = naive::rmsnorm(&x, &g);
+        let mut got = vec![0f32; 32];
+        rmsnorm_into(&x, &g, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rope_table_bitwise_matches_naive_rope() {
+        let (heads, dh, s_max) = (3, 8, 16);
+        let table = RopeTable::new(s_max, dh, ROPE_THETA);
+        assert_eq!(table.positions(), s_max);
+        for pos in [0usize, 1, 7, 15] {
+            let mut a = seq(heads * dh, 0.9);
+            let mut b = a.clone();
+            table.apply(&mut a, pos, heads, dh);
+            naive::rope(&mut b, pos, heads, dh);
+            assert_eq!(a, b, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn silu_mul_matches_naive_expression() {
+        let gate = seq(20, 0.6);
+        let up = seq(20, -0.3);
+        let want: Vec<f32> =
+            gate.iter().zip(&up).map(|(&g, &u)| g / (1.0 + (-g).exp()) * u).collect();
+        let mut got = gate.clone();
+        silu_mul(&mut got, &up);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scratch_grows_and_never_shrinks() {
+        let mut s = Scratch::new();
+        s.ensure(4, 16, 32, 64);
+        assert!(s.x.len() >= 64 && s.gate.len() >= 128 && s.scores.len() >= 64);
+        let cap = s.gate.len();
+        s.ensure(2, 16, 32, 64);
+        assert_eq!(s.gate.len(), cap, "ensure with fewer rows must not shrink");
+        s.ensure(8, 16, 32, 64);
+        assert!(s.gate.len() >= 8 * 32);
+    }
+
+    #[test]
+    fn attention_row_uniform_values() {
+        // uniform K/V: softmax is uniform, output equals the common V row
+        let (heads, dh, ctx) = (2, 4, 3);
+        let d = heads * dh;
+        let q = seq(d, 0.5);
+        let kcache = vec![1.0f32; ctx * d];
+        let vcache: Vec<f32> = (0..ctx * d).map(|i| (i % d) as f32).collect();
+        let mut scores = vec![0f32; ctx];
+        let mut o = vec![0f32; d];
+        attention_row(&q, &kcache, &vcache, ctx, heads, dh, d, &mut scores, &mut o);
+        for (i, &ov) in o.iter().enumerate() {
+            assert!((ov - i as f32).abs() < 1e-5, "o[{i}] = {ov}");
+        }
+    }
+
+    #[test]
+    fn threads_for_respects_threshold() {
+        assert_eq!(threads_for(0), 1);
+        assert_eq!(threads_for(PAR_MIN_WORK), 1);
+        assert!(threads_for(16 * PAR_MIN_WORK) >= 1);
+    }
+}

@@ -3,8 +3,12 @@
 //!
 //! - [`backend`] — the [`NumericsBackend`] trait the coordinator talks to,
 //!   plus artifact metadata and helpers.
-//! - [`reference`] — pure-Rust naive f32 transformer (default backend,
-//!   zero non-std dependencies; mirrors `python/compile/kernels/ref.py`).
+//! - [`kernels`] — the fast CPU kernel layer (weight-stationary GEMM,
+//!   rope tables, scratch arena, scoped-thread parallelism) plus the
+//!   retained naive scalar kernels it is parity-tested against.
+//! - [`reference`] — pure-Rust f32 transformer over [`kernels`] (default
+//!   backend, zero non-std dependencies; mirrors
+//!   `python/compile/kernels/ref.py`).
 //! - [`engine`] (`--features xla`) — PJRT wrapper that loads the
 //!   AOT-lowered HLO text artifacts built by `python/compile/aot.py`.
 //! - [`leapbin`] — the tensor interchange format shared with python.
@@ -14,13 +18,15 @@
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod kernels;
 pub mod leapbin;
 pub mod reference;
 
 pub use backend::{
-    argmax_row, default_artifacts_dir, ArtifactMeta, NumericsBackend, SessionId, StepOutput,
+    argmax_row, default_artifacts_dir, ArtifactMeta, BatchResults, NumericsBackend, SessionId,
+    StepOutput,
 };
 #[cfg(feature = "xla")]
 pub use engine::{Engine, PjrtBackend};
 pub use leapbin::{DType, Tensor};
-pub use reference::{ReferenceBackend, ReferenceModel};
+pub use reference::{KernelMode, ReferenceBackend, ReferenceModel};

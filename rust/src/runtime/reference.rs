@@ -1,7 +1,7 @@
-//! Pure-Rust reference numerics backend: a naive f32 Llama-style forward
-//! pass (embed → per-layer RMSNorm/attention/SwiGLU with KV cache → tied
-//! LM head) mirroring the jnp oracles in `python/compile/kernels/ref.py`
-//! and `model.ref_forward`.
+//! Pure-Rust reference numerics backend: an f32 Llama-style forward pass
+//! (embed → per-layer RMSNorm/attention/SwiGLU with KV cache → tied LM
+//! head) mirroring the jnp oracles in `python/compile/kernels/ref.py` and
+//! `model.ref_forward`.
 //!
 //! It loads the same quantised `leapbin` weight artifacts as the PJRT path
 //! (int8 crossbar cells + per-tile scales, dequantised once at load), so
@@ -11,20 +11,68 @@
 //! the checked-in fixture (`tests/fixtures/tiny_ref`, regenerate with
 //! `python -m compile.gen_ref_fixture`).
 //!
-//! Prefill is computed token-by-token (each prompt token is one causal
-//! decode step), which makes prefill-vs-decode consistency exact by
-//! construction — the property `tests/prop_backend.rs` checks.
+//! The hot path runs through [`super::kernels`]: prefill processes the
+//! whole prompt as an `[s, d]` activation matrix, and
+//! [`NumericsBackend::decode_batch`] stacks one row per live session so a
+//! single weight-stationary pass over each matrix serves every session —
+//! the software analogue of LEAP's PIM dataflow. Both are the *same*
+//! multi-row forward ([`ReferenceModel::forward_rows`]); a single
+//! `decode_step` is a batch of one, which is what makes batched and
+//! sequential decode bit-identical (property-tested in
+//! `tests/prop_backend.rs`). Per-session KV caches are flat preallocated
+//! `[s_max, d]` buffers and all tensor intermediates live in a grow-only
+//! [`Scratch`] arena, so the steady-state decode loop performs no
+//! per-token tensor allocations — only the returned logits buffer and a
+//! few words of per-round bookkeeping.
+//!
+//! [`KernelMode::Naive`] retains the pre-optimisation scalar path
+//! (token-at-a-time prefill, per-call allocations, per-token trig) as the
+//! parity oracle and the bench baseline.
 
 use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::Path;
 
 use anyhow::{ensure, Context};
 
-use super::backend::{ArtifactMeta, NumericsBackend, SessionId, StepOutput};
+use super::backend::{ArtifactMeta, BatchResults, NumericsBackend, SessionId, StepOutput};
+use super::kernels::{
+    self, attention_row, gemm_q8, gemm_t, rmsnorm_into, silu_mul, QMat, RopeTable, Scratch,
+};
 use super::leapbin::{self, DType, Tensor};
 
-/// Dequantised weights for one decoder layer (row-major `[K, N]`).
-struct LayerWeights {
+/// Which kernel path the backend runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The `runtime::kernels` fast path (default).
+    #[default]
+    Fast,
+    /// The retained pre-optimisation scalar path: parity oracle and the
+    /// baseline for `benches/bench_hotpath.rs`.
+    Naive,
+}
+
+/// Fast-path weights for one decoder layer: the int8 crossbar cells in
+/// transposed [`QMat`] form — streamed directly by `kernels::gemm_q8`
+/// with the per-tile scale folded in, so a decode step moves 4× fewer
+/// weight bytes than a dequantised-f32 walk would.
+struct QLayer {
+    wq: QMat,
+    wk: QMat,
+    wv: QMat,
+    wo: QMat,
+    w_gate: QMat,
+    w_up: QMat,
+    w_down: QMat,
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+}
+
+/// Naive-path weights for one decoder layer: dense dequantised f32 in the
+/// original row-major `[k, n]` layout (what `kernels::naive::matvec`
+/// walks — the pre-optimisation representation, retained for parity tests
+/// and the bench baseline).
+struct DenseLayer {
     wq: Vec<f32>,
     wk: Vec<f32>,
     wv: Vec<f32>,
@@ -36,30 +84,43 @@ struct LayerWeights {
     mlp_norm: Vec<f32>,
 }
 
-/// The loaded model: metadata plus dequantised f32 weights.
+/// The loaded model: metadata plus per-mode weights (exactly one of
+/// `qlayers` / `dlayers` is populated).
 pub struct ReferenceModel {
     pub meta: ArtifactMeta,
-    /// Token embeddings, row-major `[vocab, d_model]` (also the tied head).
+    mode: KernelMode,
+    /// Token embeddings, row-major `[vocab, d_model]` (also the tied head;
+    /// this layout is simultaneously the transposed head matrix).
     embed: Vec<f32>,
-    layers: Vec<LayerWeights>,
+    qlayers: Vec<QLayer>,
+    dlayers: Vec<DenseLayer>,
     final_norm: Vec<f32>,
+    rope: RopeTable,
 }
 
-/// Per-request decode state: per-layer KV rows, row-major `[pos, d_model]`.
+/// Per-request decode state: flat preallocated KV caches, one
+/// `[s_max, d_model]` row-major block per layer (layer `l` starts at
+/// `l * s_max * d_model`), filled through `pos`.
 struct RefSession {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    k: Vec<f32>,
+    v: Vec<f32>,
     pos: usize,
 }
 
-/// The reference backend: a [`ReferenceModel`] plus per-session KV caches.
+impl RefSession {
+    fn new(n_layers: usize, s_max: usize, d: usize) -> Self {
+        Self { k: vec![0f32; n_layers * s_max * d], v: vec![0f32; n_layers * s_max * d], pos: 0 }
+    }
+}
+
+/// The reference backend: a [`ReferenceModel`], per-session KV caches, and
+/// the shared scratch arena (sessions are stepped one batch at a time, so
+/// one arena serves them all).
 pub struct ReferenceBackend {
     model: ReferenceModel,
     sessions: HashMap<SessionId, RefSession>,
+    scratch: Scratch,
 }
-
-const EPS: f32 = 1e-5;
-const ROPE_THETA: f64 = 10000.0;
 
 /// Dequantise one `[kp, np]` int8 tile matrix with `[kt, nt]` per-tile
 /// scales into a dense f32 matrix (`w[k][n] = q[k][n] * s[k/xb][n/xb]`).
@@ -74,52 +135,16 @@ fn dequant(q: &[u8], s: &[f32], kp: usize, np: usize, nt: usize, xb: usize) -> V
     w
 }
 
-/// `y = x @ W` for one activation row: `x: [k]`, `w: [k, n]` row-major.
-fn matvec(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), k);
-    debug_assert_eq!(w.len(), k * n);
-    let mut y = vec![0f32; n];
-    for (ki, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let row = &w[ki * n..(ki + 1) * n];
-        for (yv, &wv) in y.iter_mut().zip(row) {
-            *yv += xv * wv;
-        }
-    }
-    y
-}
-
-fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
-    let mut sq = 0f32;
-    for &v in x {
-        sq += v * v;
-    }
-    let inv = 1.0 / (sq / x.len() as f32 + EPS).sqrt();
-    x.iter().zip(g).map(|(&v, &gv)| v * inv * gv).collect()
-}
-
-/// In-place rotary embedding at `pos` over merged heads (half-split
-/// rotation per head, matching `ref.ref_rope`).
-fn rope(x: &mut [f32], pos: usize, n_heads: usize, d_head: usize) {
-    let half = d_head / 2;
-    for h in 0..n_heads {
-        let base = h * d_head;
-        for j in 0..half {
-            let freq = (1.0 / ROPE_THETA.powf(j as f64 / half as f64)) as f32;
-            let ang = pos as f32 * freq;
-            let (sin, cos) = (ang.sin(), ang.cos());
-            let (x1, x2) = (x[base + j], x[base + half + j]);
-            x[base + j] = x1 * cos - x2 * sin;
-            x[base + half + j] = x1 * sin + x2 * cos;
-        }
-    }
-}
-
 impl ReferenceModel {
-    /// Load `meta.txt` + `weights/*.bin` from an artifact directory.
+    /// Load `meta.txt` + `weights/*.bin` from an artifact directory
+    /// (fast-kernel layout).
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::load_with_mode(dir, KernelMode::Fast)
+    }
+
+    /// Load with an explicit kernel mode (`Naive` retains the
+    /// pre-optimisation scalar path for parity tests and benchmarks).
+    pub fn load_with_mode(dir: impl AsRef<Path>, mode: KernelMode) -> anyhow::Result<Self> {
         let dir = dir.as_ref();
         let meta_text = std::fs::read_to_string(dir.join("meta.txt"))
             .with_context(|| format!("{}/meta.txt (no artifacts built?)", dir.display()))?;
@@ -134,6 +159,7 @@ impl ReferenceModel {
 
         let (l, d, ff, v, xb) = (meta.n_layers, meta.d_model, meta.d_ff, meta.vocab, meta.xb);
         ensure!(xb > 0 && d % xb == 0 && ff % xb == 0, "dims must be multiples of xb={xb}");
+        ensure!(meta.s_max > 0, "meta s_max must be positive");
 
         let embed_t = tensor("embed")?;
         ensure!(embed_t.dtype == DType::F32 && embed_t.dims == [v, d], "embed shape");
@@ -164,62 +190,256 @@ impl ReferenceModel {
         let norms = norms_t.as_f32()?;
         let final_norm = final_t.as_f32()?;
 
-        let mut layers = Vec::with_capacity(l);
+        let mut qlayers = Vec::new();
+        let mut dlayers = Vec::new();
         for li in 0..l {
-            let aq = |i: usize| -> Vec<f32> {
-                let qo = (li * 4 + i) * d * d;
-                let so = (li * 4 + i) * (d / xb) * (d / xb);
-                dequant(&attn_q.data[qo..qo + d * d], &attn_sv[so..], d, d, d / xb, xb)
-            };
-            let gq = |i: usize| -> Vec<f32> {
-                let qo = (li * 2 + i) * d * ff;
-                let so = (li * 2 + i) * (d / xb) * (ff / xb);
-                dequant(&gu_q.data[qo..qo + d * ff], &gu_sv[so..], d, ff, ff / xb, xb)
-            };
+            let attn_norm = norms[(li * 2) * d..(li * 2 + 1) * d].to_vec();
+            let mlp_norm = norms[(li * 2 + 1) * d..(li * 2 + 2) * d].to_vec();
+            let aqo = |i: usize| (li * 4 + i) * d * d;
+            let aso = |i: usize| (li * 4 + i) * (d / xb) * (d / xb);
+            let gqo = |i: usize| (li * 2 + i) * d * ff;
+            let gso = |i: usize| (li * 2 + i) * (d / xb) * (ff / xb);
             let dqo = li * ff * d;
             let dso = li * (ff / xb) * (d / xb);
-            layers.push(LayerWeights {
-                wq: aq(0),
-                wk: aq(1),
-                wv: aq(2),
-                wo: aq(3),
-                w_gate: gq(0),
-                w_up: gq(1),
-                w_down: dequant(&down_q.data[dqo..dqo + ff * d], &down_sv[dso..], ff, d, d / xb, xb),
-                attn_norm: norms[(li * 2) * d..(li * 2 + 1) * d].to_vec(),
-                mlp_norm: norms[(li * 2 + 1) * d..(li * 2 + 2) * d].to_vec(),
-            });
+            match mode {
+                KernelMode::Fast => {
+                    // No dequantised copy: the kernels stream the int8
+                    // cells (transposed) with the scales folded in.
+                    let aq = |i: usize| {
+                        QMat::from_cells(
+                            &attn_q.data[aqo(i)..aqo(i) + d * d],
+                            &attn_sv[aso(i)..aso(i) + (d / xb) * (d / xb)],
+                            d,
+                            d,
+                            xb,
+                        )
+                    };
+                    let gq = |i: usize| {
+                        QMat::from_cells(
+                            &gu_q.data[gqo(i)..gqo(i) + d * ff],
+                            &gu_sv[gso(i)..gso(i) + (d / xb) * (ff / xb)],
+                            d,
+                            ff,
+                            xb,
+                        )
+                    };
+                    qlayers.push(QLayer {
+                        wq: aq(0),
+                        wk: aq(1),
+                        wv: aq(2),
+                        wo: aq(3),
+                        w_gate: gq(0),
+                        w_up: gq(1),
+                        w_down: QMat::from_cells(
+                            &down_q.data[dqo..dqo + ff * d],
+                            &down_sv[dso..dso + (ff / xb) * (d / xb)],
+                            ff,
+                            d,
+                            xb,
+                        ),
+                        attn_norm,
+                        mlp_norm,
+                    });
+                }
+                KernelMode::Naive => {
+                    let aq = |i: usize| {
+                        let cells = &attn_q.data[aqo(i)..aqo(i) + d * d];
+                        dequant(cells, &attn_sv[aso(i)..], d, d, d / xb, xb)
+                    };
+                    let gq = |i: usize| {
+                        let cells = &gu_q.data[gqo(i)..gqo(i) + d * ff];
+                        dequant(cells, &gu_sv[gso(i)..], d, ff, ff / xb, xb)
+                    };
+                    dlayers.push(DenseLayer {
+                        wq: aq(0),
+                        wk: aq(1),
+                        wv: aq(2),
+                        wo: aq(3),
+                        w_gate: gq(0),
+                        w_up: gq(1),
+                        w_down: dequant(
+                            &down_q.data[dqo..dqo + ff * d],
+                            &down_sv[dso..],
+                            ff,
+                            d,
+                            d / xb,
+                            xb,
+                        ),
+                        attn_norm,
+                        mlp_norm,
+                    });
+                }
+            }
         }
-        Ok(Self { meta, embed, layers, final_norm })
+        let rope = RopeTable::new(meta.s_max, meta.d_head(), kernels::ROPE_THETA);
+        Ok(Self { meta, mode, embed, qlayers, dlayers, final_norm, rope })
     }
 
-    /// One causal step: append `token` at `sess.pos`, return its logits row.
-    fn step_one(&self, sess: &mut RefSession, token: i32) -> anyhow::Result<Vec<f32>> {
+    /// The kernel path this model was loaded for.
+    pub fn mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// Multi-row forward through the fast kernels: each entry of `rows` is
+    /// `(session index, token)`; row `i` appends one KV position to
+    /// `sessions[rows[i].0]`. A prefill is `s` rows of one session; a
+    /// batched decode is one row each of `B` sessions — either way each
+    /// weight matrix is streamed once for the whole batch.
+    ///
+    /// Returns row-major `[rows.len(), vocab]` logits. Row `i` is
+    /// bit-identical to what a batch containing only row `i` (with the
+    /// same per-session cache state) would produce: every per-row op —
+    /// norm, projection dot, rope, attention, residual — touches only that
+    /// row's data in a fixed order.
+    ///
+    /// Validates every token and session capacity *before* mutating any
+    /// session, so an error leaves all sessions untouched.
+    fn forward_rows(
+        &self,
+        sessions: &mut [RefSession],
+        rows: &[(usize, i32)],
+        scratch: &mut Scratch,
+    ) -> anyhow::Result<Vec<f32>> {
+        // Hard error, not debug-only: on a Naive-mode model the fast layer
+        // stack is empty and the loop would silently skip every layer.
+        ensure!(self.mode == KernelMode::Fast, "forward_rows requires a Fast-mode model");
         let m = &self.meta;
-        let (d, ff, heads) = (m.d_model, m.d_ff, m.n_heads);
+        let (d, ff, heads, s_max) = (m.d_model, m.d_ff, m.n_heads, m.s_max);
         let dh = m.d_head();
-        ensure!(
-            (0..m.vocab as i32).contains(&token),
-            "token {token} outside vocab 0..{}",
-            m.vocab
-        );
+        let r = rows.len();
+        ensure!(r > 0, "empty row batch");
+
+        // -- validate everything up front ---------------------------------
+        let mut extra = vec![0usize; sessions.len()];
+        for &(si, token) in rows {
+            ensure!(si < sessions.len(), "row references session index {si} out of range");
+            ensure!(
+                (0..m.vocab as i32).contains(&token),
+                "token {token} outside vocab 0..{}",
+                m.vocab
+            );
+            extra[si] += 1;
+        }
+        for (si, (sess, &n)) in sessions.iter().zip(&extra).enumerate() {
+            ensure!(
+                sess.pos + n <= s_max,
+                "session slot {si}: context {} + {n} new tokens exceeds the \
+                 model window s_max={s_max}",
+                sess.pos
+            );
+        }
+
+        // -- assign cache positions and gather embeddings -----------------
+        scratch.ensure(r, d, ff, s_max);
+        for (i, &(si, token)) in rows.iter().enumerate() {
+            scratch.pos[i] = sessions[si].pos;
+            sessions[si].pos += 1;
+            let erow = &self.embed[token as usize * d..(token as usize + 1) * d];
+            scratch.x[i * d..(i + 1) * d].copy_from_slice(erow);
+        }
+
+        for (li, lw) in self.qlayers.iter().enumerate() {
+            let koff = li * s_max * d;
+
+            // -- attention sub-layer --------------------------------------
+            for (xrow, xnrow) in
+                scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
+            {
+                rmsnorm_into(xrow, &lw.attn_norm, xnrow);
+            }
+            gemm_q8(&scratch.xn[..r * d], &lw.wq, r, &mut scratch.q[..r * d]);
+            gemm_q8(&scratch.xn[..r * d], &lw.wk, r, &mut scratch.k[..r * d]);
+            gemm_q8(&scratch.xn[..r * d], &lw.wv, r, &mut scratch.v[..r * d]);
+
+            for (i, &(si, _)) in rows.iter().enumerate() {
+                let pos = scratch.pos[i];
+                self.rope.apply(&mut scratch.q[i * d..(i + 1) * d], pos, heads, dh);
+                self.rope.apply(&mut scratch.k[i * d..(i + 1) * d], pos, heads, dh);
+                let sess = &mut sessions[si];
+                sess.k[koff + pos * d..koff + (pos + 1) * d]
+                    .copy_from_slice(&scratch.k[i * d..(i + 1) * d]);
+                sess.v[koff + pos * d..koff + (pos + 1) * d]
+                    .copy_from_slice(&scratch.v[i * d..(i + 1) * d]);
+            }
+
+            // Causal attention per row: the KV rows for every position of
+            // this step are already written, and row i only reads
+            // positions 0..=pos[i] of its own session.
+            for (i, &(si, _)) in rows.iter().enumerate() {
+                let ctx = scratch.pos[i] + 1;
+                let sess = &sessions[si];
+                attention_row(
+                    &scratch.q[i * d..(i + 1) * d],
+                    &sess.k[koff..koff + ctx * d],
+                    &sess.v[koff..koff + ctx * d],
+                    ctx,
+                    heads,
+                    dh,
+                    d,
+                    &mut scratch.scores,
+                    &mut scratch.o[i * d..(i + 1) * d],
+                );
+            }
+            gemm_q8(&scratch.o[..r * d], &lw.wo, r, &mut scratch.proj[..r * d]);
+            for (xv, &pv) in scratch.x[..r * d].iter_mut().zip(&scratch.proj[..r * d]) {
+                *xv += pv;
+            }
+
+            // -- SwiGLU MLP sub-layer -------------------------------------
+            for (xrow, xnrow) in
+                scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
+            {
+                rmsnorm_into(xrow, &lw.mlp_norm, xnrow);
+            }
+            gemm_q8(&scratch.xn[..r * d], &lw.w_gate, r, &mut scratch.gate[..r * ff]);
+            gemm_q8(&scratch.xn[..r * d], &lw.w_up, r, &mut scratch.up[..r * ff]);
+            silu_mul(&mut scratch.gate[..r * ff], &scratch.up[..r * ff]);
+            gemm_q8(&scratch.gate[..r * ff], &lw.w_down, r, &mut scratch.proj[..r * d]);
+            for (xv, &pv) in scratch.x[..r * d].iter_mut().zip(&scratch.proj[..r * d]) {
+                *xv += pv;
+            }
+        }
+
+        // -- tied LM head -------------------------------------------------
+        for (xrow, xnrow) in
+            scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
+        {
+            rmsnorm_into(xrow, &self.final_norm, xnrow);
+        }
+        let mut logits = vec![0f32; r * m.vocab];
+        gemm_t(&scratch.xn[..r * d], &self.embed, r, d, m.vocab, &mut logits);
+        Ok(logits)
+    }
+
+    /// One causal step through the retained naive scalar path (the exact
+    /// pre-optimisation algorithm: per-call `Vec`s, zero-skip axpy matvec
+    /// over `[k, n]` weights, per-token trig). Parity oracle + bench
+    /// baseline; only valid on a `KernelMode::Naive` model.
+    fn step_one_naive(&self, sess: &mut RefSession, token: i32) -> anyhow::Result<Vec<f32>> {
+        use kernels::naive::{matvec, rmsnorm, rope};
+        ensure!(self.mode == KernelMode::Naive, "step_one_naive requires a Naive-mode model");
+        let m = &self.meta;
+        let (d, ff, heads, s_max) = (m.d_model, m.d_ff, m.n_heads, m.s_max);
+        let dh = m.d_head();
+        m.check_step(sess.pos, token)?;
         let pos = sess.pos;
         let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
 
-        for (li, lw) in self.layers.iter().enumerate() {
-            // -- attention sub-layer ---------------------------------------
+        for (li, lw) in self.dlayers.iter().enumerate() {
+            let koff = li * s_max * d;
+            // -- attention sub-layer --------------------------------------
             let xn = rmsnorm(&x, &lw.attn_norm);
             let mut q = matvec(&xn, &lw.wq, d, d);
             let mut k = matvec(&xn, &lw.wk, d, d);
             let v = matvec(&xn, &lw.wv, d, d);
             rope(&mut q, pos, heads, dh);
             rope(&mut k, pos, heads, dh);
-            sess.k[li].extend_from_slice(&k);
-            sess.v[li].extend_from_slice(&v);
+            sess.k[koff + pos * d..koff + (pos + 1) * d].copy_from_slice(&k);
+            sess.v[koff + pos * d..koff + (pos + 1) * d].copy_from_slice(&v);
 
             let ctx = pos + 1;
-            let kcache = &sess.k[li];
-            let vcache = &sess.v[li];
+            let kcache = &sess.k[koff..koff + ctx * d];
+            let vcache = &sess.v[koff..koff + ctx * d];
             let scale = 1.0 / (dh as f32).sqrt();
             let mut o = vec![0f32; d];
             let mut scores = vec![0f32; ctx];
@@ -257,15 +477,12 @@ impl ReferenceModel {
                 *xv += av;
             }
 
-            // -- SwiGLU MLP sub-layer --------------------------------------
+            // -- SwiGLU MLP sub-layer -------------------------------------
             let xn = rmsnorm(&x, &lw.mlp_norm);
             let gate = matvec(&xn, &lw.w_gate, d, ff);
             let up = matvec(&xn, &lw.w_up, d, ff);
-            let h: Vec<f32> = gate
-                .iter()
-                .zip(&up)
-                .map(|(&g, &u)| g / (1.0 + (-g).exp()) * u)
-                .collect();
+            let h: Vec<f32> =
+                gate.iter().zip(&up).map(|(&g, &u)| g / (1.0 + (-g).exp()) * u).collect();
             let down = matvec(&h, &lw.w_down, ff, d);
             for (xv, dv) in x.iter_mut().zip(&down) {
                 *xv += dv;
@@ -288,9 +505,20 @@ impl ReferenceModel {
 }
 
 impl ReferenceBackend {
-    /// Load the model from an artifact/fixture directory.
+    /// Load the model from an artifact/fixture directory (fast kernels).
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
-        Ok(Self { model: ReferenceModel::load(dir)?, sessions: HashMap::new() })
+        Self::load_with_mode(dir, KernelMode::Fast)
+    }
+
+    /// Load with an explicit kernel mode ([`KernelMode::Naive`] retains the
+    /// pre-optimisation scalar path for parity tests and the bench
+    /// baseline).
+    pub fn load_with_mode(dir: impl AsRef<Path>, mode: KernelMode) -> anyhow::Result<Self> {
+        Ok(Self {
+            model: ReferenceModel::load_with_mode(dir, mode)?,
+            sessions: HashMap::new(),
+            scratch: Scratch::new(),
+        })
     }
 
     pub fn model(&self) -> &ReferenceModel {
@@ -309,7 +537,10 @@ impl ReferenceBackend {
 
 impl NumericsBackend for ReferenceBackend {
     fn name(&self) -> &'static str {
-        "reference-f32"
+        match self.model.mode {
+            KernelMode::Fast => "reference-f32",
+            KernelMode::Naive => "reference-f32-naive",
+        }
     }
 
     fn vocab(&self) -> usize {
@@ -318,24 +549,111 @@ impl NumericsBackend for ReferenceBackend {
 
     fn prefill(&mut self, session: SessionId, tokens: &[i32]) -> anyhow::Result<StepOutput> {
         ensure!(!tokens.is_empty(), "empty prompt");
-        let l = self.model.meta.n_layers;
-        let mut sess = RefSession { k: vec![Vec::new(); l], v: vec![Vec::new(); l], pos: 0 };
-        let mut logits = Vec::with_capacity(tokens.len() * self.model.meta.vocab);
-        for &t in tokens {
-            logits.extend(self.model.step_one(&mut sess, t)?);
-        }
+        let m = &self.model.meta;
+        // No silent truncation (same contract as the PJRT backend): a
+        // prompt the KV window cannot hold in full is rejected.
+        ensure!(
+            tokens.len() <= m.s_max,
+            "prompt of {} tokens exceeds the model window s_max={}",
+            tokens.len(),
+            m.s_max
+        );
+        let (l, s_max, d) = (m.n_layers, m.s_max, m.d_model);
+        let Self { model, sessions, scratch } = self;
+        let mut sess = RefSession::new(l, s_max, d);
+        let logits = match model.mode {
+            KernelMode::Fast => {
+                let rows: Vec<(usize, i32)> = tokens.iter().map(|&t| (0usize, t)).collect();
+                model.forward_rows(std::slice::from_mut(&mut sess), &rows, scratch)?
+            }
+            KernelMode::Naive => {
+                let mut logits = Vec::with_capacity(tokens.len() * model.meta.vocab);
+                for &t in tokens {
+                    logits.extend(model.step_one_naive(&mut sess, t)?);
+                }
+                logits
+            }
+        };
         // A resubmitted session id restarts from scratch.
-        self.sessions.insert(session, sess);
+        sessions.insert(session, sess);
         Ok(StepOutput { logits, rows: tokens.len() })
     }
 
     fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
-        let sess = self
-            .sessions
+        let Self { model, sessions, scratch } = self;
+        let sess = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
-        let logits = self.model.step_one(sess, token)?;
+        model.meta.check_step(sess.pos, token)?;
+        let logits = match model.mode {
+            KernelMode::Fast => {
+                model.forward_rows(std::slice::from_mut(sess), &[(0, token)], scratch)?
+            }
+            KernelMode::Naive => model.step_one_naive(sess, token)?,
+        };
         Ok(StepOutput { logits, rows: 1 })
+    }
+
+    /// Weight-stationary batched decode: every valid step becomes one
+    /// activation row of a single [`ReferenceModel::forward_rows`] batch,
+    /// so each weight matrix is streamed once per round instead of once
+    /// per session. Bit-identical to sequential [`Self::decode_step`]
+    /// calls in the same order (each row's arithmetic touches only its own
+    /// data); a per-session failure (unknown session, bad token, exhausted
+    /// window) occupies its slot as an `Err` without disturbing the rest
+    /// of the round.
+    fn decode_batch(&mut self, steps: &[(SessionId, i32)]) -> anyhow::Result<BatchResults> {
+        // The naive path has no batched kernel; duplicate session ids need
+        // earlier steps visible to later ones. Both fall back to the
+        // sequential loop (= the trait's default behaviour).
+        let mut seen = HashSet::new();
+        let has_dup = steps.iter().any(|&(sid, _)| !seen.insert(sid));
+        if self.model.mode == KernelMode::Naive || has_dup {
+            return Ok(steps.iter().map(|&(sid, t)| self.decode_step(sid, t)).collect());
+        }
+
+        let vocab = self.model.meta.vocab;
+        let mut results: Vec<Option<anyhow::Result<StepOutput>>> =
+            steps.iter().map(|_| None).collect();
+        // Move each valid session out of the map for the batch (restored
+        // below); invalid steps record their error and stay put. The
+        // checks (and error text) are exactly decode_step's, so batched
+        // and sequential rounds fail identically.
+        let mut batch_sessions: Vec<RefSession> = Vec::with_capacity(steps.len());
+        let mut batch_slots: Vec<(usize, SessionId)> = Vec::with_capacity(steps.len());
+        let mut rows: Vec<(usize, i32)> = Vec::with_capacity(steps.len());
+        for (i, &(sid, token)) in steps.iter().enumerate() {
+            let Some(sess) = self.sessions.remove(&sid) else {
+                results[i] = Some(Err(anyhow::anyhow!("unknown session {sid} (prefill first)")));
+                continue;
+            };
+            if let Err(err) = self.model.meta.check_step(sess.pos, token) {
+                results[i] = Some(Err(err));
+                self.sessions.insert(sid, sess);
+                continue;
+            }
+            rows.push((batch_sessions.len(), token));
+            batch_sessions.push(sess);
+            batch_slots.push((i, sid));
+        }
+
+        if !rows.is_empty() {
+            let Self { model, sessions, scratch } = self;
+            let forward = model.forward_rows(&mut batch_sessions, &rows, scratch);
+            // Restore sessions whatever happened (validation precedes any
+            // mutation inside forward_rows, so an error leaves them
+            // unchanged).
+            for ((_, sid), sess) in batch_slots.iter().zip(batch_sessions) {
+                sessions.insert(*sid, sess);
+            }
+            let logits = forward?;
+            for (bi, &(slot, _)) in batch_slots.iter().enumerate() {
+                let row = logits[bi * vocab..(bi + 1) * vocab].to_vec();
+                results[slot] = Some(Ok(StepOutput { logits: row, rows: 1 }));
+            }
+        }
+
+        Ok(results.into_iter().map(|r| r.expect("every step slot filled")).collect())
     }
 
     fn release(&mut self, session: SessionId) {
@@ -357,35 +675,15 @@ mod tests {
     }
 
     #[test]
-    fn matvec_row_major() {
-        // x [2] @ w [2,3]
-        let w = vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0];
-        assert_eq!(matvec(&[1.0, 2.0], &w, 2, 3), vec![21.0, 42.0, 63.0]);
+    fn session_layout_flat_per_layer() {
+        let sess = RefSession::new(3, 8, 4);
+        assert_eq!(sess.k.len(), 3 * 8 * 4);
+        assert_eq!(sess.v.len(), 3 * 8 * 4);
+        assert_eq!(sess.pos, 0);
     }
 
     #[test]
-    fn rmsnorm_unit_gain() {
-        let y = rmsnorm(&[3.0, 4.0], &[1.0, 1.0]);
-        // rms = sqrt(12.5); y ≈ x / rms
-        let rms = 12.5f32.sqrt();
-        assert!((y[0] - 3.0 / rms).abs() < 1e-4);
-        assert!((y[1] - 4.0 / rms).abs() < 1e-4);
-    }
-
-    #[test]
-    fn rope_at_pos_zero_is_identity() {
-        let orig = vec![1.0f32, 2.0, 3.0, 4.0];
-        let mut x = orig.clone();
-        rope(&mut x, 0, 1, 4);
-        assert_eq!(x, orig);
-    }
-
-    #[test]
-    fn rope_rotates_pairs() {
-        // one head, d_head=2: (x1, x2) rotated by ang = pos * 1.0
-        let mut x = vec![1.0f32, 0.0];
-        rope(&mut x, 1, 1, 2);
-        assert!((x[0] - 1f32.cos()).abs() < 1e-6);
-        assert!((x[1] - 1f32.sin()).abs() < 1e-6);
+    fn kernel_mode_default_is_fast() {
+        assert_eq!(KernelMode::default(), KernelMode::Fast);
     }
 }

@@ -1,0 +1,180 @@
+//! Kernel-layer parity (ISSUE 2 satellite): the optimized kernels in
+//! `runtime::kernels` match the retained naive scalar path within 1e-5 on
+//! random shapes, multi-row GEMMs are bitwise identical to their
+//! single-row kernels (the foundation of the `decode_batch` ≡ sequential
+//! `decode_step` contract), and the threaded code paths produce the same
+//! bits as the serial ones.
+
+use leap::runtime::kernels::{
+    dot, dot_q8, gemm_q8, gemm_t, matvec_q8, matvec_t, naive, rmsnorm_into, transpose, QMat,
+    RopeTable, ROPE_THETA,
+};
+use leap::testutil::{forall, Config, SplitMix64};
+
+/// |a - b| within `tol` relative to b's magnitude (floor 1.0).
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
+
+fn rand_qmat(rng: &mut SplitMix64, k: usize, n: usize, xb: usize) -> QMat {
+    let cells: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+    let scales: Vec<f32> = (0..(k / xb) * (n / xb))
+        .map(|_| 0.002 + 0.01 * rng.f64() as f32)
+        .collect();
+    QMat::from_cells(&cells, &scales, k, n, xb)
+}
+
+#[test]
+fn prop_matvec_t_matches_naive_on_random_shapes() {
+    forall(Config::cases(50), |rng| {
+        let k = rng.range(1, 96);
+        let n = rng.range(1, 96);
+        let w = rng.normal_vec(k * n);
+        let wt = transpose(&w, k, n);
+        let x = rng.normal_vec(k);
+        let want = naive::matvec(&x, &w, k, n);
+        let mut got = vec![0f32; n];
+        matvec_t(&x, &wt, k, n, &mut got);
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            if !close(a, b, 1e-5) {
+                return Err(format!("k={k} n={n} col {i}: fast {a} vs naive {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matvec_q8_matches_dequant_naive_on_random_shapes() {
+    forall(Config::cases(50), |rng| {
+        // shapes are multiples of the tile edge, like real artifacts
+        let xb = *rng.choose(&[1usize, 2, 4, 8]);
+        let k = xb * rng.range(1, 12);
+        let n = xb * rng.range(1, 12);
+        let m = rand_qmat(rng, k, n, xb);
+        let dense = m.dequant_dense();
+        let x = rng.normal_vec(k);
+        let want = naive::matvec(&x, &dense, k, n);
+        let mut got = vec![0f32; n];
+        matvec_q8(&x, &m, &mut got);
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            if !close(a, b, 1e-5) {
+                return Err(format!("xb={xb} k={k} n={n} col {i}: q8 {a} vs naive {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_rows_bitwise_equal_single_row_kernels() {
+    // The per-row bitwise contract batched decode rests on: a row of a
+    // multi-row GEMM == the single-row kernel on that row, exactly.
+    forall(Config::cases(30), |rng| {
+        let rows = rng.range(2, 9);
+        let k = rng.range(1, 48);
+        let n = rng.range(1, 48);
+        let x = rng.normal_vec(rows * k);
+        let wt = rng.normal_vec(n * k);
+        let mut y = vec![0f32; rows * n];
+        gemm_t(&x, &wt, rows, k, n, &mut y);
+        for r in 0..rows {
+            let mut solo = vec![0f32; n];
+            matvec_t(&x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
+            if y[r * n..(r + 1) * n] != solo[..] {
+                return Err(format!("gemm_t row {r} not bitwise equal (rows={rows} k={k} n={n})"));
+            }
+        }
+
+        let xb = *rng.choose(&[1usize, 2, 4]);
+        let qk = xb * rng.range(1, 10);
+        let qn = xb * rng.range(1, 10);
+        let m = rand_qmat(rng, qk, qn, xb);
+        let qx = rng.normal_vec(rows * qk);
+        let mut qy = vec![0f32; rows * qn];
+        gemm_q8(&qx, &m, rows, &mut qy);
+        for r in 0..rows {
+            let mut solo = vec![0f32; qn];
+            matvec_q8(&qx[r * qk..(r + 1) * qk], &m, &mut solo);
+            if qy[r * qn..(r + 1) * qn] != solo[..] {
+                return Err(format!("gemm_q8 row {r} not bitwise equal (rows={rows})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_matvec_bitwise_equals_serial_dots() {
+    // Big enough to cross the parallel threshold: every column must still
+    // be exactly one `dot` of the same slices (same bits as serial).
+    let (k, n) = (256, 32 * 1024);
+    let mut rng = SplitMix64::new(0xBEEF);
+    let x = rng.normal_vec(k);
+    let wt = rng.normal_vec(n * k);
+    let mut y = vec![0f32; n];
+    matvec_t(&x, &wt, k, n, &mut y);
+    for (i, &yv) in y.iter().enumerate() {
+        let want = dot(&x, &wt[i * k..(i + 1) * k]);
+        assert!(yv == want, "col {i}: threaded {yv} != serial {want}");
+    }
+}
+
+#[test]
+fn threaded_gemm_q8_bitwise_equals_serial() {
+    // rows * k * n crosses the threshold → the row-band threaded path
+    // runs; every row must match the single-row kernel bitwise.
+    let (rows, k, n, xb) = (64, 128, 1024, 64);
+    let mut rng = SplitMix64::new(0xCAFE);
+    let m = rand_qmat(&mut rng, k, n, xb);
+    let x = rng.normal_vec(rows * k);
+    let mut y = vec![0f32; rows * n];
+    gemm_q8(&x, &m, rows, &mut y);
+    for r in 0..rows {
+        let mut solo = vec![0f32; n];
+        matvec_q8(&x[r * k..(r + 1) * k], &m, &mut solo);
+        assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r}");
+    }
+}
+
+#[test]
+fn prop_rope_table_and_rmsnorm_bitwise_match_naive() {
+    forall(Config::cases(30), |rng| {
+        let d_head = 2 * rng.range(1, 16);
+        let heads = rng.range(1, 5);
+        let s_max = rng.range(1, 64);
+        let table = RopeTable::new(s_max, d_head, ROPE_THETA);
+        let pos = rng.range(0, s_max - 1);
+        let mut a = rng.normal_vec(heads * d_head);
+        let mut b = a.clone();
+        table.apply(&mut a, pos, heads, d_head);
+        naive::rope(&mut b, pos, heads, d_head);
+        if a != b {
+            return Err(format!("rope diverges at pos {pos} (dh={d_head} h={heads})"));
+        }
+
+        let d = rng.range(1, 128);
+        let x = rng.normal_vec(d);
+        let g = rng.normal_vec(d);
+        let want = naive::rmsnorm(&x, &g);
+        let mut got = vec![0f32; d];
+        rmsnorm_into(&x, &g, &mut got);
+        if got != want {
+            return Err(format!("rmsnorm diverges (d={d})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dot_q8_matches_f32_dot_on_converted_cells() {
+    let mut rng = SplitMix64::new(7);
+    for len in [1usize, 7, 8, 9, 64, 200] {
+        let x = rng.normal_vec(len);
+        let q: Vec<i8> = (0..len).map(|_| rng.below(256) as u8 as i8).collect();
+        let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let want = dot(&x, &qf);
+        let got = dot_q8(&x, &q);
+        assert!(close(got, want, 1e-6), "len {len}: {got} vs {want}");
+    }
+}

@@ -95,6 +95,31 @@ fn decode_is_causal_wrt_cache_position() {
 }
 
 #[test]
+fn pjrt_backend_agrees_on_window_boundaries() {
+    // Same no-silent-overflow contract as the reference backend
+    // (tests/integration_reference.rs::s_max_window_enforced_on_both_kernel_paths):
+    // prompts past the prefill window and decodes past s_max are rejected,
+    // never truncated or wrapped.
+    use leap::runtime::{NumericsBackend, PjrtBackend};
+    let dir = require_artifacts!();
+    let mut b = PjrtBackend::load(&dir).expect("backend load");
+    let s_prefill = b.engine().meta.s_prefill;
+    let s_max = b.engine().meta.s_max;
+
+    let over: Vec<i32> = (0..=s_prefill as i32).map(|i| i % 512).collect();
+    let err = b.prefill(1, &over).expect_err("prompt past the prefill window must fail");
+    assert!(err.to_string().contains("prefill window"), "unhelpful error: {err}");
+
+    let ok: Vec<i32> = (0..8).collect();
+    b.prefill(2, &ok).unwrap();
+    for _ in ok.len()..s_max {
+        b.decode_step(2, 3).unwrap();
+    }
+    let err = b.decode_step(2, 3).expect_err("decode past s_max must fail");
+    assert!(err.to_string().contains("s_max"), "unhelpful error: {err}");
+}
+
+#[test]
 fn xbar_demo_artifact_compiles_and_runs() {
     let dir = require_artifacts!();
     let client = xla::PjRtClient::cpu().unwrap();

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use leap::arch::{HwParams, TileGeometry};
 use leap::coordinator::{BatchPolicy, EngineConfig, KvManager, Numerics, ServingEngine};
 use leap::model::ModelPreset;
-use leap::runtime::{NumericsBackend, ReferenceBackend};
+use leap::runtime::{NumericsBackend, ReferenceBackend, SessionId, StepOutput};
 use leap::testutil::{forall, Config};
 
 fn fixture_dir() -> std::path::PathBuf {
@@ -169,6 +169,157 @@ fn prop_batcher_invariants_reference() {
         let (done, failed) = check_batch_invariants(e, "reference")?;
         if done + failed != n as u64 {
             return Err(format!("{done} done + {failed} failed != {n} submitted"));
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 2 satellite: `decode_batch` over N live sessions is bitwise
+/// identical to N sequential `decode_step` calls, for any interleaving
+/// order of sessions across rounds (random subsets, random order, random
+/// tokens, errors included).
+#[test]
+fn prop_decode_batch_bitwise_equals_sequential_any_interleaving() {
+    forall(Config::cases(6), |rng| {
+        let mut batched = ReferenceBackend::load(fixture_dir()).map_err(|e| e.to_string())?;
+        let mut sequential = ReferenceBackend::load(fixture_dir()).map_err(|e| e.to_string())?;
+        let vocab = batched.vocab() as u64;
+
+        let n_sessions = rng.range(1, 4) as u64;
+        for sid in 0..n_sessions {
+            let plen = rng.range(1, 5);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            let a = batched.prefill(sid, &prompt).map_err(|e| e.to_string())?;
+            let b = sequential.prefill(sid, &prompt).map_err(|e| e.to_string())?;
+            if a.logits != b.logits {
+                return Err(format!("prefill of session {sid} not deterministic"));
+            }
+        }
+
+        for round in 0..rng.range(2, 5) {
+            // a random subset of sessions, in random order; occasionally an
+            // unknown session id or an out-of-vocab token to exercise the
+            // per-slot error path
+            let mut ids: Vec<u64> = (0..n_sessions).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(rng.range(1, n_sessions as usize));
+            let steps: Vec<(u64, i32)> = ids
+                .iter()
+                .map(|&sid| {
+                    let sid = if rng.below(8) == 0 { sid + 100 } else { sid };
+                    let tok = if rng.below(8) == 0 {
+                        vocab as i32 + 17
+                    } else {
+                        rng.below(vocab) as i32
+                    };
+                    (sid, tok)
+                })
+                .collect();
+
+            let outs = batched.decode_batch(&steps).map_err(|e| e.to_string())?;
+            if outs.len() != steps.len() {
+                return Err(format!(
+                    "round {round}: {} results for {} steps",
+                    outs.len(),
+                    steps.len()
+                ));
+            }
+            for ((&(sid, tok), batch_res), slot) in steps.iter().zip(outs).zip(0..) {
+                let seq_res = sequential.decode_step(sid, tok);
+                match (batch_res, seq_res) {
+                    (Ok(a), Ok(b)) => {
+                        if a.logits != b.logits {
+                            return Err(format!(
+                                "round {round} slot {slot} (session {sid}): batched logits \
+                                 differ from sequential"
+                            ));
+                        }
+                    }
+                    (Err(_), Err(_)) => {}
+                    (a, b) => {
+                        return Err(format!(
+                            "round {round} slot {slot}: batched {:?} vs sequential {:?}",
+                            a.map(|o| o.rows),
+                            b.map(|o| o.rows)
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A synthetic in-memory backend that relies on the trait's *default*
+/// `decode_batch`: state-dependent fake logits make any ordering mistake
+/// in the default sequential fallback visible.
+struct SynthBackend {
+    vocab: usize,
+    pos: BTreeMap<SessionId, u32>,
+}
+
+impl NumericsBackend for SynthBackend {
+    fn name(&self) -> &'static str {
+        "synthetic-test"
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill(&mut self, session: SessionId, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        self.pos.insert(session, tokens.len() as u32);
+        Ok(StepOutput { logits: vec![0.0; self.vocab * tokens.len()], rows: tokens.len() })
+    }
+
+    fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
+        let pos = self
+            .pos
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        *pos += 1;
+        let seed = *pos as i64 * 31 + token as i64 * 7 + session as i64;
+        let logits = (0..self.vocab).map(|i| ((seed + i as i64) % 97) as f32).collect();
+        Ok(StepOutput { logits, rows: 1 })
+    }
+
+    fn release(&mut self, session: SessionId) {
+        self.pos.remove(&session);
+    }
+}
+
+/// The trait's default `decode_batch` must equal sequential `decode_step`
+/// calls on a synthetic (non-overriding) backend too — state advancing in
+/// slice order.
+#[test]
+fn prop_default_decode_batch_is_sequential_on_synthetic_backend() {
+    forall(Config::cases(20), |rng| {
+        let mk = || SynthBackend { vocab: 64, pos: BTreeMap::new() };
+        let (mut a, mut b) = (mk(), mk());
+        let n = rng.range(1, 5) as u64;
+        for sid in 0..n {
+            a.prefill(sid, &[1, 2]).map_err(|e| e.to_string())?;
+            b.prefill(sid, &[1, 2]).map_err(|e| e.to_string())?;
+        }
+        for _ in 0..rng.range(1, 4) {
+            // duplicates allowed here: the default impl must thread state
+            // through repeated steps of the same session in order
+            let steps: Vec<(u64, i32)> = (0..rng.range(1, 6))
+                .map(|_| (rng.below(n + 1), rng.below(64) as i32))
+                .collect();
+            let outs = a.decode_batch(&steps).map_err(|e| e.to_string())?;
+            for (&(sid, tok), batch_res) in steps.iter().zip(outs) {
+                let seq_res = b.decode_step(sid, tok);
+                match (batch_res, seq_res) {
+                    (Ok(x), Ok(y)) => {
+                        if x.logits != y.logits {
+                            return Err("default decode_batch diverges from sequential".into());
+                        }
+                    }
+                    (Err(_), Err(_)) => {}
+                    _ => return Err("default decode_batch error slots diverge".into()),
+                }
+            }
         }
         Ok(())
     });
