@@ -19,8 +19,9 @@
 
 use leap::arch::HwParams;
 use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use leap::kvcache::KvCacheConfig;
 use leap::model::ModelPreset;
-use leap::runtime::{leapbin, ReferenceBackend};
+use leap::runtime::{leapbin, KernelMode, ReferenceBackend};
 
 fn main() -> anyhow::Result<()> {
     // Pin the checked-in fixture: its golden comes from gen_ref_fixture.py,
@@ -53,11 +54,11 @@ fn main() -> anyhow::Result<()> {
     })?;
 
     // request 0: the golden prompt (checked); requests 1..4: variations
-    let golden_id = engine.submit(golden_prompt.clone(), golden_tokens.len());
+    let golden_id = engine.submit(golden_prompt.clone(), golden_tokens.len())?;
     let mut other_ids = Vec::new();
     for i in 1..4 {
         let prompt: Vec<i32> = golden_prompt.iter().map(|&t| (t + i) % 512).collect();
-        other_ids.push(engine.submit(prompt, 8));
+        other_ids.push(engine.submit(prompt, 8)?);
     }
     engine.run_until_idle()?;
     let wall = wall0.elapsed();
@@ -91,6 +92,73 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- host (L3) overhead --");
     println!("wall time       : {:.1} ms (includes the f32 forward passes)", wall.as_secs_f64() * 1e3);
     println!("host/sim ratio  : {:.2}", m.host_overhead());
+
+    high_concurrency_scenario()?;
+
     println!("\nAll layers composed: leapbin weights → reference numerics → coordinator ✓");
+    Ok(())
+}
+
+/// ISSUE 4 satellite: more concurrent requests than flat per-session KV
+/// could ever hold, served through the paged pool — a shared system-prompt
+/// prefix maps every session onto the same physical blocks, and when
+/// decode growth still outruns the pool the engine preempts + re-prefills
+/// instead of failing.
+fn high_concurrency_scenario() -> anyhow::Result<()> {
+    println!("\n== high concurrency through the paged KV pool ==\n");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref");
+
+    // 16 blocks × 4 tokens = 64 KV positions. Flat per-session KV would
+    // fit 64 / 17 = 3 concurrent requests; we serve 12 at once.
+    const BLOCKS: usize = 16;
+    const BS: usize = 4;
+    const REQUESTS: usize = 12;
+    const GEN: usize = 6;
+    let cfg = KvCacheConfig { block_size: BS, n_blocks: BLOCKS, prefix_sharing: true };
+    let backend = ReferenceBackend::load_with_opts(&dir, KernelMode::Fast, Some(cfg))?;
+
+    let mut engine = ServingEngine::new(EngineConfig {
+        preset: ModelPreset::Tiny,
+        hw: HwParams::default(),
+        policy: BatchPolicy { max_batch: REQUESTS, max_total_ctx: 100_000 },
+        numerics: Numerics::Backend(Box::new(backend)),
+    })?;
+
+    // shared 8-token system prompt + 4 distinct user tokens per request
+    let system: Vec<i32> = (0..8).map(|i| (i * 29 + 3) % 512).collect();
+    let mut ids = Vec::new();
+    for r in 0..REQUESTS as i32 {
+        let mut prompt = system.clone();
+        prompt.extend((0..4).map(|k| (r * 67 + k * 13 + 40) % 512));
+        ids.push(engine.submit(prompt, GEN)?);
+    }
+    engine.run_until_idle()?;
+
+    let m = &engine.metrics;
+    let ctx = 12 + GEN - 1; // cached positions per request
+    let private_blocks = REQUESTS * ctx.div_ceil(BS);
+    println!("pool            : {BLOCKS} blocks × {BS} tokens (flat KV fits 3 sessions)");
+    println!("requests        : {REQUESTS} submitted, {} done, {} failed", m.requests_done, m.requests_failed);
+    println!("peak occupancy  : {}/{BLOCKS} blocks (private copies would need {private_blocks})", m.kv_peak_blocks_used);
+    println!(
+        "prefix sharing  : {:.1}% hit rate ({}/{} probes), {} CoW copies",
+        100.0 * m.kv_prefix_hit_rate(),
+        m.kv_prefix_hits,
+        m.kv_prefix_lookups,
+        m.kv_cow_copies
+    );
+    println!("preemptions     : {} (release → requeue → re-prefill)", m.preemptions);
+
+    anyhow::ensure!(m.requests_done == REQUESTS as u64, "every request must complete");
+    anyhow::ensure!(m.kv_prefix_hits > 0, "the shared system prompt must hit the prefix cache");
+    anyhow::ensure!(
+        m.kv_peak_blocks_used <= BLOCKS,
+        "peak occupancy exceeded the pool"
+    );
+    for id in ids {
+        let c = engine.take_completion(id).expect("request done");
+        anyhow::ensure!(c.tokens.len() == GEN, "request {} truncated", c.id);
+    }
+    println!("✓ {REQUESTS} concurrent sessions served through {BLOCKS} pooled blocks");
     Ok(())
 }

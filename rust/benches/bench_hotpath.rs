@@ -20,8 +20,9 @@ use std::time::Instant;
 use leap::arch::{Coord, HwParams, TileGeometry};
 use leap::bench_util::{bench, Stats};
 use leap::compiler::{lower_phases, Compiler};
-use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use leap::coordinator::{BatchPolicy, EngineConfig, Metrics, Numerics, ServingEngine};
 use leap::isa::assemble;
+use leap::kvcache::KvCacheConfig;
 use leap::mapping::{paper_mapping, CostModel};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
@@ -80,6 +81,52 @@ fn batch_ns_per_round(nsessions: usize, rounds: usize, samples: usize) -> f64 {
     best
 }
 
+/// Serve a shared-prefix workload through a deliberately tight KV pool and
+/// report the pool gauges (ISSUE 4 satellite): blocks used/free at peak,
+/// prefix-share hit rate, CoW copies, and the preemption count. Returns
+/// the engine metrics for the JSON record.
+fn kv_pool_pressure_report(smoke: bool) -> Metrics {
+    let (requests, gen) = if smoke { (6, 4) } else { (10, 8) };
+    let cfg = KvCacheConfig { block_size: 4, n_blocks: 14, prefix_sharing: true };
+    let (bs, n_blocks) = (cfg.block_size, cfg.n_blocks);
+    let backend = ReferenceBackend::load_with_opts(fixture_dir(), KernelMode::Fast, Some(cfg))
+        .expect("fixture loads");
+    let mut e = ServingEngine::new(EngineConfig {
+        preset: ModelPreset::Tiny,
+        hw: HwParams::default(),
+        policy: BatchPolicy { max_batch: 16, max_total_ctx: 100_000 },
+        numerics: Numerics::Backend(Box::new(backend)),
+    })
+    .expect("engine");
+    for s in 0..requests as i32 {
+        // shared 8-token system prefix + 2 distinct user tokens
+        let mut p: Vec<i32> = (0..8).map(|i| (i * 29 + 3) % 512).collect();
+        p.extend([(s * 67 + 40) % 512, (s * 31 + 77) % 512]);
+        e.submit(p, gen).expect("submit");
+    }
+    e.run_until_idle().expect("serve");
+    let m = e.metrics.clone();
+    println!(
+        "=== paged KV pool under pressure ({requests} reqs, {n_blocks} blocks × {bs} tok) ===\n"
+    );
+    println!(
+        "requests                {} done / {} failed   preemptions {}",
+        m.requests_done, m.requests_failed, m.preemptions
+    );
+    println!(
+        "pool occupancy          peak {}/{} blocks   shared-at-last-obs {}",
+        m.kv_peak_blocks_used, m.kv_blocks_total, m.kv_shared_blocks
+    );
+    println!(
+        "prefix sharing          {:.1}% hit rate ({}/{} probes)   CoW copies {}\n",
+        100.0 * m.kv_prefix_hit_rate(),
+        m.kv_prefix_hits,
+        m.kv_prefix_lookups,
+        m.kv_cow_copies
+    );
+    m
+}
+
 /// Decode-throughput mode: fast vs naive kernels, batched vs sequential,
 /// machine-readable JSON out.
 fn decode_throughput_report(smoke: bool) {
@@ -114,17 +161,32 @@ fn decode_throughput_report(smoke: bool) {
         8.0 * 1e9 / b8_ns
     );
 
+    let kv = kv_pool_pressure_report(smoke);
     let json = format!(
         "{{\n  \"bench\": \"hotpath_decode\",\n  \"fixture\": \"tiny_ref\",\n  \
          \"smoke\": {smoke},\n  \"decode_tokens\": {tokens},\n  \"samples\": {samples},\n  \
+         \"naive_baseline\": \"paged-kv gather (semantics changed with the pool PR; \
+         not comparable to pre-pool records)\",\n  \
          \"naive_ns_per_token\": {naive_ns:.1},\n  \"naive_tokens_per_s\": {:.1},\n  \
          \"fast_ns_per_token\": {fast_ns:.1},\n  \"fast_tokens_per_s\": {:.1},\n  \
          \"speedup_fast_over_naive\": {speedup:.3},\n  \
          \"batch1_ns_per_round\": {b1_ns:.1},\n  \"batch8_ns_per_round\": {b8_ns:.1},\n  \
-         \"batch8_over_batch1\": {sublin:.3},\n  \"batch8_tokens_per_s\": {:.1}\n}}\n",
+         \"batch8_over_batch1\": {sublin:.3},\n  \"batch8_tokens_per_s\": {:.1},\n  \
+         \"kv_block_size\": {},\n  \"kv_blocks_total\": {},\n  \
+         \"kv_peak_blocks_used\": {},\n  \"kv_prefix_hit_rate\": {:.3},\n  \
+         \"kv_prefix_lookups\": {},\n  \"kv_prefix_hits\": {},\n  \
+         \"kv_cow_copies\": {},\n  \"kv_preemptions\": {}\n}}\n",
         1e9 / naive_ns,
         1e9 / fast_ns,
         8.0 * 1e9 / b8_ns,
+        kv.kv_block_size,
+        kv.kv_blocks_total,
+        kv.kv_peak_blocks_used,
+        kv.kv_prefix_hit_rate(),
+        kv.kv_prefix_lookups,
+        kv.kv_prefix_hits,
+        kv.kv_cow_copies,
+        kv.preemptions,
     );
     let override_path = std::env::var("BENCH_HOTPATH_JSON").ok();
     let path = override_path.clone().unwrap_or_else(|| "BENCH_hotpath.json".to_string());
@@ -220,7 +282,7 @@ fn main() {
         })
         .unwrap();
         for _ in 0..8 {
-            e.submit(vec![1; 64], 16);
+            e.submit(vec![1; 64], 16).expect("submit");
         }
         e.run_until_idle().unwrap();
         e.metrics.requests_done

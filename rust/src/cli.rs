@@ -141,14 +141,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     for i in 0..n_requests {
         let prompt: Vec<i32> =
             (0..prompt_len).map(|k| ((i * 31 + k * 7) % preset.shape().vocab) as i32).collect();
-        engine.submit(prompt, gen);
+        // a typed rejection drops this request only; the run keeps serving
+        // (the engine counts it in the `rejected` summary line)
+        if let Err(err) = engine.submit(prompt, gen) {
+            eprintln!("request {i} rejected: {err}");
+        }
     }
     engine.run_until_idle()?;
     let m = &engine.metrics;
     let (lp50, lp99) = m.latency_p50_p99();
     let (tp50, tp99) = m.ttft_p50_p99();
     println!("model           : {preset}");
-    println!("requests done   : {} (failed {})", m.requests_done, m.requests_failed);
+    println!(
+        "requests done   : {} (failed {}, rejected {})",
+        m.requests_done, m.requests_failed, m.requests_rejected
+    );
     println!("prefill tokens  : {}", m.prefill_tokens);
     println!("decode tokens   : {}", m.decode_tokens);
     println!("sim time        : {:.3} s", m.sim_time_ns as f64 * 1e-9);
@@ -158,6 +165,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     println!("ttft    p50/p99 : {:.2} / {:.2} ms", tp50 as f64 * 1e-6, tp99 as f64 * 1e-6);
     println!("npm swaps       : {}", m.npm_swaps);
     println!("host overhead   : {:.4}×", m.host_overhead());
+    if m.kv_blocks_total > 0 {
+        println!(
+            "kv pool         : {} blocks × {} tokens, peak {} used ({:.1}%)",
+            m.kv_blocks_total,
+            m.kv_block_size,
+            m.kv_peak_blocks_used,
+            100.0 * m.kv_peak_blocks_used as f64 / m.kv_blocks_total as f64
+        );
+        println!(
+            "kv sharing      : prefix hit {:.1}% ({}/{} probes), {} CoW copies, \
+             {} preemptions",
+            100.0 * m.kv_prefix_hit_rate(),
+            m.kv_prefix_hits,
+            m.kv_prefix_lookups,
+            m.kv_cow_copies,
+            m.preemptions
+        );
+    }
     Ok(0)
 }
 

@@ -2,8 +2,17 @@
 //! decode-round boundaries (the scheduling discipline of vLLM-style
 //! serving, adapted to the PIM-NoC system where the batch shares the
 //! per-tile scratchpad capacity).
+//!
+//! Admission is two-stage: the batcher enforces its own caps (batch size,
+//! aggregate context budget), then defers to a caller-supplied
+//! [`AdmissionDecision`] — the engine's block-pool arithmetic — via
+//! [`Batcher::admit_with`]. Preempted requests re-enter at the *head* of
+//! the wait queue ([`Batcher::preempt`]), preserving FCFS order across
+//! preemption cycles.
 
 use std::collections::VecDeque;
+
+use crate::kvcache::AdmissionDecision;
 
 use super::request::{Request, RequestId, RequestState};
 
@@ -50,20 +59,60 @@ impl Batcher {
     /// Admit waiting requests while capacity allows. Returns ids admitted
     /// this round (they need prefill).
     pub fn admit(&mut self) -> Vec<RequestId> {
+        self.admit_with(|_| AdmissionDecision::Admit).0
+    }
+
+    /// FCFS admission with an external per-request decision (the engine's
+    /// pool-backed [`crate::kvcache::AdmissionPolicy`]). The batcher's own
+    /// caps apply first; then `decide` rules on the head of the queue:
+    /// `Admit` pops it into the running batch (a preempted request resumes
+    /// with its generated tokens intact), `Queue` stops this round
+    /// head-of-line (no FCFS bypass), and `Reject` removes it for the
+    /// caller to fail. Returns `(admitted ids, rejected requests)`.
+    pub fn admit_with(
+        &mut self,
+        mut decide: impl FnMut(&Request) -> AdmissionDecision,
+    ) -> (Vec<RequestId>, Vec<Request>) {
         let mut admitted = Vec::new();
+        let mut rejected = Vec::new();
         while let Some(front) = self.waiting.front() {
-            let need = front.prompt.len() + front.max_new_tokens;
+            // remaining budget: current context + tokens still to generate
+            let need = front.ctx_len() + front.max_new_tokens - front.output.len();
             if self.running.len() >= self.policy.max_batch
                 || self.ctx_with(need) > self.policy.max_total_ctx
             {
                 break;
             }
-            let mut req = self.waiting.pop_front().unwrap();
-            req.state = RequestState::Prefilling;
-            admitted.push(req.id);
-            self.running.push(req);
+            match decide(front) {
+                AdmissionDecision::Admit => {
+                    let mut req = self.waiting.pop_front().unwrap();
+                    req.state = RequestState::Prefilling;
+                    admitted.push(req.id);
+                    self.running.push(req);
+                }
+                AdmissionDecision::Queue => break,
+                AdmissionDecision::Reject => {
+                    let mut req = self.waiting.pop_front().unwrap();
+                    req.state = RequestState::Failed;
+                    rejected.push(req);
+                }
+            }
         }
-        admitted
+        (admitted, rejected)
+    }
+
+    /// Pull a running request out of the batch back to the **head** of the
+    /// wait queue (pool preemption). Generated tokens are kept; the engine
+    /// re-prefills `prompt ++ output` on readmission. Preempting youngest
+    /// first and pushing to the front restores arrival order in the queue.
+    pub fn preempt(&mut self, id: RequestId) -> bool {
+        let Some(i) = self.running.iter().position(|r| r.id == id) else {
+            return false;
+        };
+        let mut req = self.running.remove(i);
+        req.state = RequestState::Waiting;
+        self.waiting.push_front(req);
+        true
     }
 
     /// Retire finished requests out of the running set.
@@ -149,6 +198,48 @@ mod tests {
         assert_eq!(b.running().len(), 1);
         assert_eq!(b.running()[0].id, 0);
         assert_eq!(b.waiting_len(), 1);
+    }
+
+    #[test]
+    fn admit_with_queue_is_head_of_line() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit(req(0, 10, 4));
+        b.submit(req(1, 10, 4));
+        // queue the head → nothing admitted, FCFS preserved
+        let (adm, rej) = b.admit_with(|_| AdmissionDecision::Queue);
+        assert!(adm.is_empty() && rej.is_empty());
+        assert_eq!(b.waiting_len(), 2);
+        // reject the head, admit the next
+        let (adm, rej) = b.admit_with(|r| {
+            if r.id == 0 {
+                AdmissionDecision::Reject
+            } else {
+                AdmissionDecision::Admit
+            }
+        });
+        assert_eq!(adm, vec![1]);
+        assert_eq!(rej.len(), 1);
+        assert_eq!(rej[0].id, 0);
+        assert_eq!(rej[0].state, RequestState::Failed);
+    }
+
+    #[test]
+    fn preempt_requeues_at_head_with_output_kept() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit(req(0, 4, 8));
+        b.submit(req(1, 4, 8));
+        b.admit();
+        b.running_mut()[1].output.push(42);
+        assert!(b.preempt(1));
+        assert!(!b.preempt(1), "already preempted");
+        assert_eq!(b.running().len(), 1);
+        assert_eq!(b.waiting_len(), 1);
+        // readmission resumes the same request, generated tokens intact
+        let (adm, _) = b.admit_with(|r| {
+            assert_eq!(r.output, vec![42]);
+            AdmissionDecision::Admit
+        });
+        assert_eq!(adm, vec![1]);
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! real forward pass through the pluggable [`NumericsBackend`] (pure-Rust
 //! reference f32 by default, PJRT with `--features xla`), so generated
 //! tokens are real model outputs.
+//!
+//! Admission is **block-pool backed**: requests are admitted against the
+//! actual free KV blocks of the backend pool and the simulated scratchpad
+//! ledger, not session slots ([`crate::kvcache::AdmissionPolicy`]). When
+//! decode growth outruns the pool, the youngest sessions are *preempted* —
+//! their blocks are released and they re-enter the head of the wait queue;
+//! on readmission their prompt plus already-generated tokens are
+//! re-prefilled (the vLLM recompute discipline), which greedy decode makes
+//! token-equivalent to never having been preempted.
 
 use std::time::Instant;
 
@@ -16,6 +25,7 @@ use crate::arch::{HwParams, TileGeometry};
 use crate::compiler::{Compiler, CompiledModel};
 use crate::energy::table2;
 use crate::isa::Npm;
+use crate::kvcache::{AdmissionDecision, AdmissionPolicy};
 use crate::model::ModelPreset;
 use crate::runtime::{argmax_row, NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
@@ -68,6 +78,45 @@ pub struct EngineConfig {
     pub numerics: Numerics,
 }
 
+/// Typed rejection returned by [`ServingEngine::submit`]: the request can
+/// never run, and is refused *before* it queues — not deep inside the
+/// backend mid-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    EmptyPrompt,
+    ZeroMaxNewTokens,
+    /// The prompt alone exceeds the model context window.
+    PromptTooLong { len: usize, s_max: usize },
+    /// Prompt + requested generation exceeds the model context window
+    /// (`need` counts cached positions: the last token is never fed back).
+    ContextTooLong { need: usize, s_max: usize },
+    /// The full context needs more KV blocks than the pool contains.
+    KvNeverFits { need_blocks: usize, total_blocks: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::EmptyPrompt => write!(f, "empty prompt"),
+            Self::ZeroMaxNewTokens => write!(f, "max_new_tokens must be at least 1"),
+            Self::PromptTooLong { len, s_max } => {
+                write!(f, "prompt of {len} tokens exceeds the model window s_max={s_max}")
+            }
+            Self::ContextTooLong { need, s_max } => write!(
+                f,
+                "prompt + max_new_tokens needs {need} KV positions but the model \
+                 window is s_max={s_max}"
+            ),
+            Self::KvNeverFits { need_blocks, total_blocks } => write!(
+                f,
+                "request needs {need_blocks} KV blocks but the pool only has {total_blocks}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// The serving engine.
 pub struct ServingEngine {
     pub compiled: CompiledModel,
@@ -76,6 +125,8 @@ pub struct ServingEngine {
     pub kv: KvManager,
     pub npm: Npm,
     pub metrics: Metrics,
+    /// Block-granular admission knobs (watermark, output reservation).
+    pub admission: AdmissionPolicy,
     numerics: Numerics,
     next_id: RequestId,
     /// Simulated clock, ns.
@@ -98,6 +149,7 @@ impl ServingEngine {
             kv,
             npm: Npm::new(),
             metrics: Metrics::default(),
+            admission: AdmissionPolicy::default(),
             numerics: cfg.numerics,
             next_id: 0,
             now_ns: 0,
@@ -105,12 +157,66 @@ impl ServingEngine {
         })
     }
 
-    /// Submit a prompt; returns the request id.
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> RequestId {
+    /// Submit a prompt for up to `max_new_tokens` of generation; returns
+    /// the request id, or a typed [`SubmitError`] when the request can
+    /// never run (bad shape, context window, pool too small). Rejected
+    /// requests are counted but never queued.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<RequestId, SubmitError> {
+        if let Err(err) = self.validate_submit(&prompt, max_new_tokens) {
+            self.metrics.requests_rejected += 1;
+            return Err(err);
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.batcher.submit(Request::new(id, prompt, max_new_tokens, self.now_ns));
-        id
+        Ok(id)
+    }
+
+    fn validate_submit(&self, prompt: &[i32], max_new: usize) -> Result<(), SubmitError> {
+        if prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
+        if max_new == 0 {
+            return Err(SubmitError::ZeroMaxNewTokens);
+        }
+        // Cached positions over the request's life: the prompt plus every
+        // generated token except the last (which is never fed back).
+        let full_ctx = prompt.len() + max_new - 1;
+        if let Numerics::Backend(backend) = &self.numerics {
+            if let Some(s_max) = backend.context_window() {
+                if prompt.len() > s_max {
+                    return Err(SubmitError::PromptTooLong { len: prompt.len(), s_max });
+                }
+                if full_ctx > s_max {
+                    return Err(SubmitError::ContextTooLong { need: full_ctx, s_max });
+                }
+            }
+            if let (Some(need), Some(stats)) =
+                (backend.kv_admit_demand(full_ctx), backend.kv_pool_stats())
+            {
+                if need > stats.blocks_total {
+                    return Err(SubmitError::KvNeverFits {
+                        need_blocks: need,
+                        total_blocks: stats.blocks_total,
+                    });
+                }
+            }
+        }
+        // Simulated scratchpad ledger: a context that can never fit
+        // on-chip (the ledger tracks every generated token, so full usage
+        // is prompt + max_new positions).
+        let need = self.kv.blocks_for(prompt.len() + max_new);
+        if need > self.kv.total_blocks() {
+            return Err(SubmitError::KvNeverFits {
+                need_blocks: need,
+                total_blocks: self.kv.total_blocks(),
+            });
+        }
+        Ok(())
     }
 
     /// Simulated time now, ns.
@@ -154,42 +260,102 @@ impl ServingEngine {
             return Ok(false);
         }
 
-        // --- admission + prefill -----------------------------------------
-        let admitted = self.batcher.admit();
+        // --- admission (block-pool backed) -------------------------------
+        // The batcher's caps apply first; then each head-of-queue request
+        // is judged against the actual free blocks of the simulated
+        // scratchpad ledger and (when the backend pools KV) the functional
+        // pool, with running tallies so one round's admissions don't
+        // double-spend blocks none of them has claimed yet.
+        let (admitted, rejected) = {
+            let admission = self.admission;
+            let Self { batcher, kv, numerics, .. } = self;
+            let mut sim_pending = 0usize;
+            let mut pool_pending = 0usize;
+            batcher.admit_with(|req| {
+                let resume_ctx = req.ctx_len(); // prompt + generated (resume)
+                let remaining = req.max_new_tokens - req.output.len();
+                // simulated scratchpad: reject what can never fit (the
+                // ledger tracks every generated token, so full usage is
+                // ctx + remaining), queue until the (re-)prefill AND its
+                // immediate first-token append both fit now — the append
+                // claims an extra block at a group boundary, and an
+                // unreserved claim here would starve a later admission's
+                // prefill mid-round
+                if kv.blocks_for(resume_ctx + remaining) > kv.total_blocks() {
+                    return AdmissionDecision::Reject;
+                }
+                let now_need = kv.blocks_for(resume_ctx + 1);
+                if now_need + sim_pending > kv.free_blocks() {
+                    return AdmissionDecision::Queue;
+                }
+                // functional pool: the policy rules on worst-case demand
+                // (ignoring prefix sharing — sharing only makes it cheaper)
+                if let Numerics::Backend(backend) = numerics {
+                    if let (Some(need), Some(stats)) = (
+                        backend.kv_admit_demand(admission.reserve_tokens(resume_ctx, remaining)),
+                        backend.kv_pool_stats(),
+                    ) {
+                        let free = stats.blocks_free.saturating_sub(pool_pending);
+                        match admission.decide(need, free, stats.blocks_total) {
+                            AdmissionDecision::Admit => pool_pending += need,
+                            other => return other,
+                        }
+                    }
+                }
+                sim_pending += now_need;
+                AdmissionDecision::Admit
+            })
+        };
+        let now = self.now_ns;
+        for mut req in rejected {
+            req.t_done_ns = Some(now);
+            self.metrics.requests_failed += 1;
+            self.completed.push(req);
+        }
+
+        // --- prefill the admitted ----------------------------------------
+        // A preempted request resumes here: its prompt ++ generated tokens
+        // re-prefill in one batch (recompute), which greedy decode makes
+        // bit-equivalent to never having been preempted.
         for id in admitted {
-            let (prompt, max_ctx) = {
+            let tokens = {
                 let r = self.batcher.running().iter().find(|r| r.id == id).unwrap();
-                (r.prompt.clone(), r.ctx_len() + r.max_new_tokens)
+                let mut t = r.prompt.clone();
+                t.extend_from_slice(&r.output);
+                t
             };
-            if !self.kv.has_room(max_ctx) {
+            // admission reserved these blocks (prefill + first append);
+            // a ledger refusal is a per-request failure, never an engine
+            // crash
+            if let Err(err) = self.kv.prefill(id, tokens.len()) {
+                eprintln!("request {id} rejected by the scratchpad ledger: {err:#}");
                 self.fail_request(id);
                 continue;
             }
-            self.kv.prefill(id, prompt.len())?;
 
             // timing: one prefill program per layer, layers sequential
             let layers = self.compiled.shape.n_layers as u64;
-            let prog = self.compiled.prefill_program(prompt.len().max(1)).clone();
+            let prog = self.compiled.prefill_program(tokens.len().max(1)).clone();
             let per_layer = self.dispatch(prog)?;
             self.advance(per_layer * layers);
-            self.metrics.prefill_tokens += prompt.len() as u64;
+            self.metrics.prefill_tokens += tokens.len() as u64;
 
             // numerics — a backend error (e.g. out-of-vocab prompt) fails
             // this request only; the engine and its batch keep serving
-            let first_token = match &mut self.numerics {
-                Numerics::Backend(backend) => match backend.prefill(id, &prompt) {
+            let next_token = match &mut self.numerics {
+                Numerics::Backend(backend) => match backend.prefill(id, &tokens) {
                     // enforce the trait's no-silent-truncation contract:
                     // fewer rows than prompt tokens would argmax the wrong
                     // context, so fail the request instead
-                    Ok(out) if out.rows >= prompt.len() => {
-                        Some(argmax_row(&out.logits, prompt.len() - 1, backend.vocab()) as i32)
+                    Ok(out) if out.rows >= tokens.len() => {
+                        Some(argmax_row(&out.logits, tokens.len() - 1, backend.vocab()) as i32)
                     }
                     Ok(out) => {
                         eprintln!(
                             "request {id} rejected: backend returned {} logits rows \
                              for a {}-token prompt",
                             out.rows,
-                            prompt.len()
+                            tokens.len()
                         );
                         backend.release(id);
                         None
@@ -201,10 +367,10 @@ impl ServingEngine {
                     }
                 },
                 Numerics::Synthetic { vocab } => {
-                    Some((prompt.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32)
+                    Some((tokens.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32)
                 }
             };
-            let Some(first_token) = first_token else {
+            let Some(next_token) = next_token else {
                 self.kv.release(id);
                 self.fail_request(id);
                 continue;
@@ -213,16 +379,76 @@ impl ServingEngine {
             let now = self.now_ns;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 r.state = RequestState::Decoding;
-                r.output.push(first_token);
-                r.t_first_token_ns = Some(now);
-                // single-token generations finish at prefill
+                r.output.push(next_token);
+                // keep the first-token timestamp across preemption cycles
+                if r.t_first_token_ns.is_none() {
+                    r.t_first_token_ns = Some(now);
+                }
                 if r.output.len() >= r.max_new_tokens {
                     r.state = RequestState::Done;
                     r.t_done_ns = Some(now);
                 }
             }
-            self.kv.append(id)?;
+            if self.kv.can_append(id) {
+                self.kv.append(id)?;
+            } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                // no scratchpad block for the next position: finish here
+                if r.state != RequestState::Done {
+                    r.state = RequestState::Done;
+                    r.t_done_ns = Some(now);
+                }
+            }
             self.metrics.decode_tokens += 1;
+        }
+
+        // --- pool-pressure preemption ------------------------------------
+        // Worst case, the coming decode round claims `kv_append_demand`
+        // blocks per session (a boundary block plus a possible CoW of a
+        // shared tail). When the pool cannot cover the sum, the youngest
+        // decoding sessions release their blocks and re-enter the head of
+        // the wait queue. The demand sum is conservative — two sharers of
+        // one tail block each count a CoW — so this preempts a round
+        // early at worst, never a round late.
+        {
+            let Self { batcher, kv, numerics, metrics, .. } = self;
+            if let Numerics::Backend(backend) = numerics {
+                if backend.kv_pool_stats().is_some() {
+                    loop {
+                        let decoding: Vec<RequestId> = batcher
+                            .running()
+                            .iter()
+                            .filter(|r| r.state == RequestState::Decoding)
+                            .map(|r| r.id)
+                            .collect();
+                        let free = backend.kv_pool_stats().map_or(0, |s| s.blocks_free);
+                        let demand: usize =
+                            decoding.iter().map(|&id| backend.kv_append_demand(id)).sum();
+                        if demand <= free {
+                            break;
+                        }
+                        // Preempting even a sole session is lossless: its
+                        // prompt ++ output re-prefills once the pool
+                        // drains (submit validated the full context
+                        // against the pool, and each readmission gains at
+                        // least one token), so a transient shortfall
+                        // never truncates a generation. Victim = youngest
+                        // by ARRIVAL (ids are monotonic), not by
+                        // running-batch position — a readmitted old
+                        // request sits at the batch tail and must not
+                        // become the perpetual victim.
+                        let Some(&victim) = decoding.iter().max() else {
+                            break;
+                        };
+                        backend.release(victim);
+                        kv.release(victim);
+                        batcher.preempt(victim);
+                        metrics.preemptions += 1;
+                        if decoding.len() <= 1 {
+                            break; // nothing left in the round
+                        }
+                    }
+                }
+            }
         }
 
         // --- one decode round over the running batch ---------------------
@@ -286,19 +512,23 @@ impl ServingEngine {
                 continue;
             };
 
-            if !self.kv.has_room(1) {
-                // out of scratchpad: finish the request early
-                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
-                    r.state = RequestState::Done;
-                    r.t_done_ns = Some(now);
-                }
-                continue;
-            }
-            self.kv.append(id)?;
+            // The token is already computed (and cached by the backend) —
+            // keep it, then reserve the *next* position; exhaustion
+            // finishes the request early without dropping this token
+            // (same order as the prefill path).
             self.metrics.decode_tokens += 1;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 r.output.push(next);
                 if r.output.len() >= r.max_new_tokens {
+                    r.state = RequestState::Done;
+                    r.t_done_ns = Some(now);
+                }
+            }
+            if self.kv.can_append(id) {
+                self.kv.append(id)?;
+            } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                // out of scratchpad blocks: finish at this token
+                if r.state != RequestState::Done {
                     r.state = RequestState::Done;
                     r.t_done_ns = Some(now);
                 }
@@ -321,6 +551,13 @@ impl ServingEngine {
                 }
             }
             self.completed.push(done);
+        }
+
+        // --- pool gauges --------------------------------------------------
+        if let Numerics::Backend(backend) = &self.numerics {
+            if let Some(stats) = backend.kv_pool_stats() {
+                self.metrics.observe_kv_pool(&stats);
+            }
         }
 
         self.metrics.host_time_ns += host_t0.elapsed().as_nanos() as u64;
@@ -347,6 +584,7 @@ impl ServingEngine {
             tokens: r.output.clone(),
             ttft_ns: r.ttft_ns(),
             latency_ns: r.latency_ns(),
+            rejected: None,
         })
     }
 }
@@ -369,7 +607,7 @@ mod tests {
     fn serve_synthetic_batch() {
         let mut e = engine();
         for i in 0..4 {
-            e.submit(vec![1 + i; 64], 16);
+            e.submit(vec![1 + i; 64], 16).expect("submit");
         }
         e.run_until_idle().unwrap();
         assert_eq!(e.metrics.requests_done, 4);
@@ -384,7 +622,7 @@ mod tests {
     #[test]
     fn latency_metrics_recorded() {
         let mut e = engine();
-        e.submit(vec![5; 32], 8);
+        e.submit(vec![5; 32], 8).expect("submit");
         e.run_until_idle().unwrap();
         assert_eq!(e.metrics.latencies_ns.len(), 1);
         assert_eq!(e.metrics.ttft_ns.len(), 1);
@@ -395,24 +633,55 @@ mod tests {
     }
 
     #[test]
-    fn oversized_request_fails_cleanly() {
+    fn oversized_request_rejected_at_submit_typed() {
         let mut e = engine();
-        e.kv.capacity_tokens = 100;
+        e.kv.set_capacity_tokens(100); // 6 blocks of 16 tokens
         e.batcher.policy.max_total_ctx = 100_000;
-        e.submit(vec![1; 90], 20); // 110 total > 100 capacity
+        // 90 + 20 = 110 ledger positions = 7 blocks > 6: typed reject
+        let err = e.submit(vec![1; 90], 20).unwrap_err();
+        assert!(matches!(err, SubmitError::KvNeverFits { .. }), "got {err}");
+        assert_eq!(e.metrics.requests_rejected, 1);
+        assert!(e.batcher.is_idle(), "rejected requests never queue");
+        // a request that fits is still served normally afterwards
+        e.submit(vec![1; 40], 2).expect("fits in 3 blocks");
         e.run_until_idle().unwrap();
-        assert_eq!(e.metrics.requests_failed, 1);
-        assert_eq!(e.metrics.requests_done, 0);
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.requests_failed, 0);
+    }
+
+    #[test]
+    fn submit_rejections_are_typed() {
+        let mut e = engine();
+        assert_eq!(e.submit(vec![], 4), Err(SubmitError::EmptyPrompt));
+        assert_eq!(e.submit(vec![1], 0), Err(SubmitError::ZeroMaxNewTokens));
+        assert_eq!(e.metrics.requests_rejected, 2);
+
+        // window-typed rejections need a backend that knows its s_max
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref");
+        let mut e = ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Tiny,
+            hw: HwParams::default(),
+            policy: BatchPolicy::default(),
+            numerics: Numerics::reference(&dir).unwrap(),
+        })
+        .unwrap();
+        let err = e.submit(vec![1; 129], 1).unwrap_err(); // s_max = 128
+        assert!(matches!(err, SubmitError::PromptTooLong { s_max: 128, .. }), "got {err}");
+        let err = e.submit(vec![1; 100], 40).unwrap_err(); // 100 + 39 > 128
+        assert!(matches!(err, SubmitError::ContextTooLong { .. }), "got {err}");
+        assert!(err.to_string().contains("s_max"), "unhelpful rendering: {err}");
+        // the boundary itself is accepted
+        e.submit(vec![1; 100], 29).expect("100 + 28 = 128 fits exactly");
     }
 
     #[test]
     fn decode_slows_with_context_growth() {
         let mut e = engine();
-        e.submit(vec![1; 16], 4);
+        e.submit(vec![1; 16], 4).expect("submit");
         e.run_until_idle().unwrap();
         let t_short = e.metrics.sim_time_ns;
         let mut e2 = engine();
-        e2.submit(vec![1; 2048], 4);
+        e2.submit(vec![1; 2048], 4).expect("submit");
         e2.run_until_idle().unwrap();
         assert!(e2.metrics.sim_time_ns > t_short);
     }
@@ -421,7 +690,7 @@ mod tests {
     fn program_cache_reused_across_requests() {
         let mut e = engine();
         for _ in 0..3 {
-            e.submit(vec![1; 64], 8);
+            e.submit(vec![1; 64], 8).expect("submit");
         }
         e.run_until_idle().unwrap();
         assert!(e.compiled.cache_hits > e.compiled.cache_misses);

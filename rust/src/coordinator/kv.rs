@@ -1,31 +1,83 @@
 //! KV-cache manager: per-request, per-layer shard placement bookkeeping on
-//! top of `schedule::KvPlacement` (the balanced layout of §IV-C), with
-//! global capacity accounting so admission can reject oversubscription.
+//! top of `schedule::KvPlacement` (the balanced layout of §IV-C), with the
+//! simulated scratchpad capacity now accounted in **pool blocks** through a
+//! storage-free [`BlockLedger`] — the same allocator that backs the
+//! functional [`crate::kvcache::KvStore`]. A block is one tile row group
+//! (`TileGeometry::shard_rows` tokens), so the coordinator's admission
+//! arithmetic matches the backend pool's granularity exactly: a request
+//! holds `ceil(ctx / block_size)` blocks, appends claim a new block only at
+//! a group boundary, and release returns every block to the shared pool.
 
 use std::collections::HashMap;
 
 use crate::arch::TileGeometry;
+use crate::kvcache::{BlockId, BlockLedger};
 use crate::schedule::{KvPlacement, ShardLayout};
 
 use super::request::RequestId;
 
-/// Manages KV placements for all live requests.
+/// Manages KV placements + block-granular capacity for all live requests.
 #[derive(Debug)]
 pub struct KvManager {
     layout: ShardLayout,
     /// One placement per request (layers share the pattern; the manager
     /// tracks token counts once and multiplies by layer count for words).
     per_request: HashMap<RequestId, KvPlacement>,
+    /// Simulated-scratchpad blocks held per request (no storage — ids into
+    /// `ledger`).
+    blocks: HashMap<RequestId, Vec<BlockId>>,
+    ledger: BlockLedger,
+    /// Tokens per block: one tile row group.
+    block_size: usize,
     pub n_layers: usize,
-    /// Aggregate capacity in tokens across the batch (scratchpad budget).
-    pub capacity_tokens: usize,
 }
 
 impl KvManager {
     pub fn new(geom: &TileGeometry, d_head: usize, n_layers: usize) -> Self {
         let layout = ShardLayout::new(geom, d_head);
-        let capacity_tokens = layout.capacity_tokens();
-        Self { layout, per_request: HashMap::new(), n_layers, capacity_tokens }
+        let block_size = geom.shard_rows.max(1);
+        let n_blocks = layout.capacity_tokens() / block_size;
+        Self {
+            layout,
+            per_request: HashMap::new(),
+            blocks: HashMap::new(),
+            ledger: BlockLedger::new(n_blocks),
+            block_size,
+            n_layers,
+        }
+    }
+
+    /// Tokens per block (one tile row group).
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks a context of `tokens` occupies.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.ledger.total()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.ledger.free_blocks()
+    }
+
+    /// Aggregate token capacity (block-granular).
+    pub fn capacity_tokens(&self) -> usize {
+        self.ledger.total() * self.block_size
+    }
+
+    /// Shrink/grow the simulated capacity (tests, experiments). Only valid
+    /// while no request holds blocks.
+    pub fn set_capacity_tokens(&mut self, tokens: usize) {
+        assert!(
+            self.per_request.is_empty(),
+            "cannot resize the KV pool while requests hold blocks"
+        );
+        self.ledger = BlockLedger::new(tokens / self.block_size);
     }
 
     /// Tokens currently cached across all requests.
@@ -33,34 +85,63 @@ impl KvManager {
         self.per_request.values().map(|p| p.len).sum()
     }
 
-    /// Can we hold `tokens` more?
-    pub fn has_room(&self, tokens: usize) -> bool {
-        self.used_tokens() + tokens <= self.capacity_tokens
+    /// Can a new request of `tokens` context be placed right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.ledger.free_blocks()
     }
 
-    /// Install a prefill for a request.
+    /// Can request `id` append one token (tail-block room or a free block)?
+    pub fn can_append(&self, id: RequestId) -> bool {
+        match self.per_request.get(&id) {
+            Some(p) => p.len % self.block_size != 0 || self.ledger.free_blocks() > 0,
+            None => false,
+        }
+    }
+
+    /// Install a prefill for a request, claiming its blocks.
     pub fn prefill(&mut self, id: RequestId, tokens: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(self.has_room(tokens), "KV capacity exhausted");
         anyhow::ensure!(!self.per_request.contains_key(&id), "request {id} already placed");
+        let need = self.blocks_for(tokens);
+        let mut held = Vec::with_capacity(need);
+        for _ in 0..need {
+            match self.ledger.alloc() {
+                Some(b) => held.push(b),
+                None => {
+                    for b in held {
+                        self.ledger.release(b);
+                    }
+                    anyhow::bail!("KV capacity exhausted");
+                }
+            }
+        }
         let mut p = KvPlacement::new(self.layout.clone());
         p.fill_prefill(tokens)?;
         self.per_request.insert(id, p);
+        self.blocks.insert(id, held);
         Ok(())
     }
 
-    /// Append one decode token for a request.
+    /// Append one decode token for a request (claims a block at group
+    /// boundaries).
     pub fn append(&mut self, id: RequestId) -> anyhow::Result<()> {
-        anyhow::ensure!(self.has_room(1), "KV capacity exhausted");
         let p = self
             .per_request
             .get_mut(&id)
             .ok_or_else(|| anyhow::anyhow!("unknown request {id}"))?;
+        let held = self.blocks.get_mut(&id).expect("blocks tracked for every placement");
+        if p.len % self.block_size == 0 {
+            let b = self.ledger.alloc().ok_or_else(|| anyhow::anyhow!("KV capacity exhausted"))?;
+            held.push(b);
+        }
         p.append()?;
         Ok(())
     }
 
-    /// Release a finished request's cache.
+    /// Release a finished request's cache; returns the token count freed.
     pub fn release(&mut self, id: RequestId) -> usize {
+        for b in self.blocks.remove(&id).unwrap_or_default() {
+            self.ledger.release(b);
+        }
         self.per_request.remove(&id).map(|p| p.len).unwrap_or(0)
     }
 
@@ -93,23 +174,52 @@ mod tests {
     #[test]
     fn prefill_append_release_cycle() {
         let mut m = mgr();
+        assert_eq!(m.block_size(), 16);
         m.prefill(1, 100).unwrap();
         assert_eq!(m.used_tokens(), 100);
+        assert_eq!(m.total_blocks() - m.free_blocks(), 7, "ceil(100/16) blocks held");
         m.append(1).unwrap();
         assert_eq!(m.ctx_of(1), Some(101));
         assert_eq!(m.release(1), 101);
         assert_eq!(m.used_tokens(), 0);
         assert_eq!(m.live_requests(), 0);
+        assert_eq!(m.free_blocks(), m.total_blocks(), "all blocks returned");
     }
 
     #[test]
-    fn capacity_rejection() {
+    fn capacity_rejection_is_block_granular() {
         let mut m = mgr();
-        m.capacity_tokens = 150;
-        m.prefill(1, 100).unwrap();
-        assert!(m.prefill(2, 100).is_err());
-        assert!(m.has_room(50));
-        assert!(!m.has_room(51));
+        m.set_capacity_tokens(160); // 10 blocks of 16
+        m.prefill(1, 100).unwrap(); // 7 blocks
+        assert!(m.prefill(2, 100).is_err(), "7 more blocks don't fit in 3");
+        assert_eq!(m.free_blocks(), 3, "failed prefill must roll back fully");
+        assert!(m.can_admit(48));
+        assert!(!m.can_admit(49), "49 tokens need a 4th block");
+    }
+
+    #[test]
+    fn append_claims_blocks_at_group_boundaries() {
+        let mut m = mgr();
+        m.set_capacity_tokens(64); // 4 blocks
+        m.prefill(1, 16).unwrap(); // exactly 1 full block
+        let free_after_prefill = m.free_blocks();
+        assert!(m.can_append(1));
+        m.append(1).unwrap(); // token 17 opens block 2
+        assert_eq!(m.free_blocks(), free_after_prefill - 1);
+        for _ in 0..15 {
+            m.append(1).unwrap(); // fills block 2, no new claims
+        }
+        assert_eq!(m.free_blocks(), free_after_prefill - 1);
+    }
+
+    #[test]
+    fn append_exhaustion_reported() {
+        let mut m = mgr();
+        m.set_capacity_tokens(32); // 2 blocks
+        m.prefill(1, 32).unwrap();
+        assert!(!m.can_append(1));
+        assert!(m.append(1).is_err());
+        assert!(!m.can_append(42), "unknown request can't append");
     }
 
     #[test]

@@ -19,6 +19,30 @@ pub struct Metrics {
     pub ttft_ns: Vec<u64>,
     /// NPM bank swaps performed.
     pub npm_swaps: u64,
+    /// Requests rejected with a typed error at submit (never queued).
+    pub requests_rejected: u64,
+    /// Pool preemptions: a running request released its KV blocks and
+    /// re-entered the wait queue.
+    pub preemptions: u64,
+
+    // --- paged-KV pool gauges (zero when the backend does not pool) -----
+    /// Tokens per physical KV block.
+    pub kv_block_size: usize,
+    /// Physical blocks in the backend pool.
+    pub kv_blocks_total: usize,
+    /// Blocks in use at the last observation.
+    pub kv_blocks_used: usize,
+    /// High-water mark of blocks in use.
+    pub kv_peak_blocks_used: usize,
+    /// Blocks currently referenced by more than one session (prefix
+    /// sharing) at the last observation.
+    pub kv_shared_blocks: usize,
+    /// Prefix-cache probes (one per prompt chunk walked at prefill).
+    pub kv_prefix_lookups: u64,
+    /// Prefix-cache hits (chunks resolved to an already-resident block).
+    pub kv_prefix_hits: u64,
+    /// Copy-on-write block copies performed.
+    pub kv_cow_copies: u64,
 }
 
 impl Metrics {
@@ -65,6 +89,31 @@ impl Metrics {
     pub fn host_overhead(&self) -> f64 {
         self.host_time_ns as f64 / self.sim_time_ns.max(1) as f64
     }
+
+    /// Fold one backend pool snapshot into the gauges (counters are
+    /// cumulative in the pool, so overwrite; the peak is kept monotone).
+    pub fn observe_kv_pool(&mut self, s: &crate::kvcache::PoolStats) {
+        self.kv_block_size = s.block_size;
+        self.kv_blocks_total = s.blocks_total;
+        self.kv_blocks_used = s.blocks_used;
+        self.kv_peak_blocks_used = self.kv_peak_blocks_used.max(s.peak_blocks_used);
+        self.kv_shared_blocks = s.shared_blocks;
+        self.kv_prefix_lookups = s.prefix_lookups;
+        self.kv_prefix_hits = s.prefix_hits;
+        self.kv_cow_copies = s.cow_copies;
+    }
+
+    /// Fraction of prefix-cache probes that hit (0 when never probed).
+    /// Delegates to [`crate::kvcache::PoolStats::prefix_hit_rate`] so the
+    /// convention lives in one place.
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        crate::kvcache::PoolStats {
+            prefix_lookups: self.kv_prefix_lookups,
+            prefix_hits: self.kv_prefix_hits,
+            ..Default::default()
+        }
+        .prefix_hit_rate()
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +132,40 @@ mod tests {
         assert!((m.decode_tokens_per_s() - 500.0).abs() < 1e-9);
         assert!((m.total_tokens_per_s() - 1000.0).abs() < 1e-9);
         assert!((m.tokens_per_j() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_pool_gauges_fold_snapshots() {
+        use crate::kvcache::PoolStats;
+        let mut m = Metrics::default();
+        assert_eq!(m.kv_prefix_hit_rate(), 0.0);
+        m.observe_kv_pool(&PoolStats {
+            block_size: 4,
+            blocks_total: 32,
+            blocks_free: 20,
+            blocks_used: 12,
+            peak_blocks_used: 14,
+            shared_blocks: 3,
+            prefix_lookups: 8,
+            prefix_hits: 6,
+            cow_copies: 1,
+        });
+        // a later, quieter snapshot must not lower the peak
+        m.observe_kv_pool(&PoolStats {
+            block_size: 4,
+            blocks_total: 32,
+            blocks_free: 30,
+            blocks_used: 2,
+            peak_blocks_used: 14,
+            shared_blocks: 0,
+            prefix_lookups: 10,
+            prefix_hits: 7,
+            cow_copies: 2,
+        });
+        assert_eq!(m.kv_blocks_used, 2);
+        assert_eq!(m.kv_peak_blocks_used, 14);
+        assert_eq!(m.kv_cow_copies, 2);
+        assert!((m.kv_prefix_hit_rate() - 0.7).abs() < 1e-12);
     }
 
     #[test]

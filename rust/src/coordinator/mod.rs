@@ -2,11 +2,13 @@
 //!
 //! A vLLM-router-style front end scaled to this architecture: requests enter
 //! a FCFS queue, a continuous batcher admits them into the running batch at
-//! decode-round boundaries, the KV manager tracks per-request shard
-//! placement (the balanced layout of §IV-C), and the engine drives both the
-//! functional PJRT runtime (numerics, tiny model) and the instruction-level
-//! /analytical simulators (timing + energy) for every step. The NPM double
-//! banking of §V-A is exercised on every program swap.
+//! decode-round boundaries against the *actual free KV blocks* of the
+//! paged pool (typed rejections at submit, preemption + re-prefill when
+//! decode growth outruns the pool), the KV manager tracks per-request shard
+//! placement (the balanced layout of §IV-C) over a block ledger, and the
+//! engine drives both the functional numerics runtime (tiny model) and the
+//! instruction-level/analytical simulators (timing + energy) for every
+//! step. The NPM double banking of §V-A is exercised on every program swap.
 
 pub mod batcher;
 pub mod engine;
@@ -16,7 +18,7 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{EngineConfig, Numerics, ServingEngine};
+pub use engine::{EngineConfig, Numerics, ServingEngine, SubmitError};
 pub use kv::KvManager;
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, RequestState};

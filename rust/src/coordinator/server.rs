@@ -15,13 +15,16 @@ use super::engine::ServingEngine;
 use super::metrics::Metrics;
 use super::request::RequestId;
 
-/// A completed request's outputs.
+/// A completed request's outputs. A request refused at submit with a typed
+/// [`crate::coordinator::SubmitError`] completes immediately with empty
+/// `tokens` and the rendered error in `rejected`.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: RequestId,
     pub tokens: Vec<i32>,
     pub ttft_ns: Option<u64>,
     pub latency_ns: Option<u64>,
+    pub rejected: Option<String>,
 }
 
 enum Msg {
@@ -52,8 +55,13 @@ impl Server {
                     if engine.batcher.is_idle() {
                         match rx.recv() {
                             Ok(Msg::Submit { prompt, max_new, reply }) => {
-                                let id = engine.submit(prompt, max_new);
-                                pending.push((id, reply));
+                                Self::submit_or_reject(
+                                    &mut engine,
+                                    prompt,
+                                    max_new,
+                                    reply,
+                                    &mut pending,
+                                );
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
@@ -61,8 +69,13 @@ impl Server {
                     while let Ok(msg) = rx.try_recv() {
                         match msg {
                             Msg::Submit { prompt, max_new, reply } => {
-                                let id = engine.submit(prompt, max_new);
-                                pending.push((id, reply));
+                                Self::submit_or_reject(
+                                    &mut engine,
+                                    prompt,
+                                    max_new,
+                                    reply,
+                                    &mut pending,
+                                );
                             }
                             Msg::Shutdown => {
                                 engine.run_until_idle()?;
@@ -79,6 +92,29 @@ impl Server {
                 Ok(engine.metrics.clone())
             })?;
         Ok(Self { tx, worker: Some(worker) })
+    }
+
+    /// Submit into the engine, or answer a typed rejection immediately —
+    /// a refused request never queues, so its client must not wait on it.
+    fn submit_or_reject(
+        engine: &mut ServingEngine,
+        prompt: Vec<i32>,
+        max_new: usize,
+        reply: Sender<Completion>,
+        pending: &mut Vec<(RequestId, Sender<Completion>)>,
+    ) {
+        match engine.submit(prompt, max_new) {
+            Ok(id) => pending.push((id, reply)),
+            Err(err) => {
+                let _ = reply.send(Completion {
+                    id: RequestId::MAX,
+                    tokens: Vec::new(),
+                    ttft_ns: None,
+                    latency_ns: None,
+                    rejected: Some(err.to_string()),
+                });
+            }
+        }
     }
 
     fn flush(engine: &mut ServingEngine, pending: &mut Vec<(RequestId, Sender<Completion>)>) {
@@ -146,6 +182,21 @@ mod tests {
         assert_eq!(c2.tokens.len(), 6);
         let metrics = server.shutdown().unwrap();
         assert_eq!(metrics.requests_done, 2);
+    }
+
+    #[test]
+    fn typed_rejection_completes_immediately() {
+        let server = Server::spawn(factory()).unwrap();
+        let rx = server.submit(vec![], 4); // empty prompt: typed reject
+        let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(c.tokens.is_empty());
+        assert_eq!(c.rejected.as_deref(), Some("empty prompt"));
+        // the server stays serviceable
+        let ok = server.submit(vec![1; 8], 2);
+        assert_eq!(ok.recv_timeout(std::time::Duration::from_secs(30)).unwrap().tokens.len(), 2);
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.requests_rejected, 1);
+        assert_eq!(metrics.requests_done, 1);
     }
 
     #[test]

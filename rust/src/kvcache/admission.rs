@@ -1,0 +1,96 @@
+//! Preemption-aware admission policy: admit/queue/reject against actual
+//! free blocks (not session slots). The serving engine combines this with
+//! a preemption loop — an admitted request that later starves the pool is
+//! preempted (blocks released, re-queued) and re-prefilled on readmission.
+
+/// What to do with the request at the head of the wait queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Enough free blocks right now: admit and prefill.
+    Admit,
+    /// Not now — wait for running requests to finish or be preempted.
+    Queue,
+    /// Can never run in this pool (needs more blocks than exist).
+    Reject,
+}
+
+/// Block-granular admission knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Judge admission against the full `prompt + max_new` context
+    /// (conservative: far fewer preemptions, lower occupancy). The
+    /// reservation is evaluated at the admission *decision* only — blocks
+    /// are physically claimed as the context grows, so concurrent
+    /// admissions across later rounds can still oversubscribe the pool
+    /// and preempt; it is a strong bias, not a hard guarantee. The
+    /// default judges the prefill only and relies on preemption when
+    /// decode growth outruns the pool — higher occupancy, the vLLM
+    /// discipline.
+    pub reserve_output: bool,
+    /// Keep at least this many blocks free after admitting (headroom so
+    /// one decode round of boundary crossings doesn't immediately preempt).
+    pub watermark_blocks: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self { reserve_output: false, watermark_blocks: 1 }
+    }
+}
+
+impl AdmissionPolicy {
+    /// KV positions to reserve at admission for a request that will
+    /// prefill `prefill_tokens` and may generate `max_new` more. (The last
+    /// generated token never enters the cache, hence `max_new - 1`.)
+    pub fn reserve_tokens(&self, prefill_tokens: usize, max_new: usize) -> usize {
+        if self.reserve_output {
+            prefill_tokens + max_new.saturating_sub(1)
+        } else {
+            prefill_tokens
+        }
+    }
+
+    /// Decide for a request needing `need_blocks` (worst case, ignoring
+    /// prefix sharing) against a pool of `total` blocks with `free` free.
+    ///
+    /// The watermark is headroom against immediate re-preemption, so a
+    /// fully idle pool (`free == total`) admits even a request that needs
+    /// every block — otherwise a request sized at exactly the pool could
+    /// queue forever behind its own watermark.
+    pub fn decide(&self, need_blocks: usize, free: usize, total: usize) -> AdmissionDecision {
+        if need_blocks > total {
+            AdmissionDecision::Reject
+        } else if need_blocks + self.watermark_blocks <= free
+            || (free == total && need_blocks <= free)
+        {
+            AdmissionDecision::Admit
+        } else {
+            AdmissionDecision::Queue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_three_ways() {
+        let p = AdmissionPolicy { reserve_output: false, watermark_blocks: 1 };
+        assert_eq!(p.decide(4, 8, 16), AdmissionDecision::Admit);
+        assert_eq!(p.decide(8, 8, 16), AdmissionDecision::Queue); // watermark
+        assert_eq!(p.decide(17, 16, 16), AdmissionDecision::Reject);
+        // an idle pool admits a pool-sized request despite the watermark
+        assert_eq!(p.decide(16, 16, 16), AdmissionDecision::Admit);
+        assert_eq!(p.decide(16, 15, 16), AdmissionDecision::Queue);
+    }
+
+    #[test]
+    fn reserve_modes() {
+        let optimistic = AdmissionPolicy::default();
+        assert_eq!(optimistic.reserve_tokens(10, 5), 10);
+        let conservative = AdmissionPolicy { reserve_output: true, watermark_blocks: 0 };
+        assert_eq!(conservative.reserve_tokens(10, 5), 14);
+        assert_eq!(conservative.reserve_tokens(10, 0), 10);
+    }
+}

@@ -1,0 +1,370 @@
+//! Refcounted block accounting: the allocator half of the paged KV cache.
+//!
+//! A [`BlockLedger`] owns no tensor storage — it tracks which fixed-size
+//! blocks are free, how many holders reference each live block, and an
+//! exact-match prefix cache (chain key → block) that lets identical prompt
+//! prefixes map to the same physical block. The same type backs both the
+//! functional pool in [`crate::kvcache::KvStore`] (real f32 storage) and
+//! the coordinator's simulated-scratchpad capacity accounting
+//! ([`crate::coordinator::KvManager`]).
+//!
+//! Prefix-cache keys are *exact*: a key is the parent block id plus the
+//! owned token chunk, so a cache hit proves the chunk chain matches
+//! bit-for-bit — there is no hash-collision soundness hazard. When a block
+//! is freed, its own key and any child keys chained off it are purged, so
+//! a recycled block id can never satisfy a stale lookup.
+
+use std::collections::HashMap;
+
+/// Physical block identifier within one pool.
+pub type BlockId = u32;
+
+/// Exact prefix-cache key: the parent block in the chain (`None` for the
+/// first chunk of a prompt) plus the token chunk this block holds.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PrefixKey {
+    pub parent: Option<BlockId>,
+    pub tokens: Vec<i32>,
+}
+
+/// Snapshot of pool occupancy and sharing counters. `block_size` is filled
+/// in by the pool that owns the ledger (the ledger itself is size-blind).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Tokens per block.
+    pub block_size: usize,
+    pub blocks_total: usize,
+    pub blocks_free: usize,
+    pub blocks_used: usize,
+    /// High-water mark of `blocks_used` over the ledger's lifetime.
+    pub peak_blocks_used: usize,
+    /// Live blocks currently referenced by more than one holder.
+    pub shared_blocks: usize,
+    /// Prefix-cache probes (one per prompt chunk walked).
+    pub prefix_lookups: u64,
+    /// Prefix-cache hits (chunks resolved to an existing block).
+    pub prefix_hits: u64,
+    /// Copy-on-write block copies performed.
+    pub cow_copies: u64,
+}
+
+impl PoolStats {
+    /// Fraction of prefix-cache probes that hit (0 when never probed).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+}
+
+/// Refcounted fixed-population block allocator with an exact prefix cache.
+#[derive(Debug)]
+pub struct BlockLedger {
+    /// Holder count per block; 0 = free.
+    refcount: Vec<u32>,
+    /// Free-list stack (top = next allocation).
+    free: Vec<BlockId>,
+    /// The prefix-cache key a block was sealed with, if any.
+    sealed: Vec<Option<PrefixKey>>,
+    by_key: HashMap<PrefixKey, BlockId>,
+    /// Live cache entries whose key's parent is this block. Lets
+    /// [`Self::release`] skip the orphan scan for the common case (a
+    /// freed block that parents nothing), keeping frees O(1).
+    child_entries: Vec<u32>,
+    peak_used: usize,
+    prefix_lookups: u64,
+    prefix_hits: u64,
+    cow_copies: u64,
+}
+
+impl BlockLedger {
+    pub fn new(n_blocks: usize) -> Self {
+        Self {
+            refcount: vec![0; n_blocks],
+            // Pop order is ascending ids — deterministic, test-friendly.
+            free: (0..n_blocks as BlockId).rev().collect(),
+            sealed: vec![None; n_blocks],
+            by_key: HashMap::new(),
+            child_entries: vec![0; n_blocks],
+            peak_used: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total() - self.free.len()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcount[b as usize]
+    }
+
+    /// Is this live block held by more than one holder? (A shared block
+    /// must never be written; writers copy-on-write first.)
+    pub fn is_shared(&self, b: BlockId) -> bool {
+        self.refcount[b as usize] > 1
+    }
+
+    pub fn is_sealed(&self, b: BlockId) -> bool {
+        self.sealed[b as usize].is_some()
+    }
+
+    /// Blocks currently registered in the prefix cache.
+    pub fn cached_prefix_blocks(&self) -> usize {
+        self.by_key.len()
+    }
+
+    /// Claim a free block (refcount 1). `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        debug_assert!(self.sealed[b as usize].is_none());
+        self.refcount[b as usize] = 1;
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(b)
+    }
+
+    /// Add one holder to a live block.
+    pub fn retain(&mut self, b: BlockId) {
+        debug_assert!(self.refcount[b as usize] > 0, "retain of a free block");
+        self.refcount[b as usize] += 1;
+    }
+
+    /// Remove one cache entry, keeping the parent's child count in sync.
+    fn drop_key(&mut self, key: PrefixKey) {
+        let parent = key.parent;
+        self.by_key.remove(&key);
+        if let Some(p) = parent {
+            self.child_entries[p as usize] -= 1;
+        }
+    }
+
+    /// Drop one holder; returns `true` when this freed the block. Freeing
+    /// purges the block's own prefix-cache key and every child key chained
+    /// off it (a recycled id must never satisfy a stale lookup). Purged
+    /// children also drop their `sealed` back-pointer — leaving it would
+    /// let the child's own later release evict an unrelated entry that
+    /// re-used the recycled parent id. The orphan scan only runs when the
+    /// freed block actually parents cache entries, so common frees
+    /// (decode tails, unshared blocks) stay O(1).
+    pub fn release(&mut self, b: BlockId) -> bool {
+        let rc = &mut self.refcount[b as usize];
+        debug_assert!(*rc > 0, "release of a free block");
+        *rc -= 1;
+        if *rc > 0 {
+            return false;
+        }
+        if let Some(key) = self.sealed[b as usize].take() {
+            self.drop_key(key);
+        }
+        if self.child_entries[b as usize] > 0 {
+            let orphans: Vec<BlockId> = self
+                .by_key
+                .iter()
+                .filter(|(k, _)| k.parent == Some(b))
+                .map(|(_, &child)| child)
+                .collect();
+            for child in orphans {
+                if let Some(key) = self.sealed[child as usize].take() {
+                    self.drop_key(key);
+                }
+            }
+            debug_assert_eq!(self.child_entries[b as usize], 0, "orphan purge must drain");
+        }
+        self.free.push(b);
+        true
+    }
+
+    /// Register a freshly filled block in the prefix cache. First writer
+    /// wins: if an identical chain entry already exists the block is left
+    /// unsealed (future prompts will share the existing one).
+    pub fn seal(&mut self, b: BlockId, key: PrefixKey) {
+        debug_assert!(self.refcount[b as usize] > 0, "seal of a free block");
+        if self.by_key.contains_key(&key) || self.sealed[b as usize].is_some() {
+            return;
+        }
+        if let Some(p) = key.parent {
+            self.child_entries[p as usize] += 1;
+        }
+        self.by_key.insert(key.clone(), b);
+        self.sealed[b as usize] = Some(key);
+    }
+
+    /// Remove a block's prefix-cache entry (its content is about to
+    /// diverge from the sealed chunk — e.g. a sole owner appending into a
+    /// sealed partial block).
+    pub fn unseal(&mut self, b: BlockId) {
+        if let Some(key) = self.sealed[b as usize].take() {
+            self.drop_key(key);
+        }
+    }
+
+    /// Probe the prefix cache; on a hit the block gains a holder and is
+    /// returned. Counts lookups/hits for the hit-rate gauge.
+    pub fn lookup_retain(&mut self, key: &PrefixKey) -> Option<BlockId> {
+        self.prefix_lookups += 1;
+        let b = *self.by_key.get(key)?;
+        self.prefix_hits += 1;
+        self.retain(b);
+        Some(b)
+    }
+
+    /// Count one copy-on-write block copy (performed by the storage owner).
+    pub fn note_cow(&mut self) {
+        self.cow_copies += 1;
+    }
+
+    /// Occupancy/sharing snapshot (`block_size` left 0 — the owning pool
+    /// fills it in).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            block_size: 0,
+            blocks_total: self.total(),
+            blocks_free: self.free_blocks(),
+            blocks_used: self.used_blocks(),
+            peak_blocks_used: self.peak_used,
+            shared_blocks: self.refcount.iter().filter(|&&rc| rc > 1).count(),
+            prefix_lookups: self.prefix_lookups,
+            prefix_hits: self.prefix_hits,
+            cow_copies: self.cow_copies,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(parent: Option<BlockId>, toks: &[i32]) -> PrefixKey {
+        PrefixKey { parent, tokens: toks.to_vec() }
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut l = BlockLedger::new(3);
+        assert_eq!(l.free_blocks(), 3);
+        let a = l.alloc().unwrap();
+        let b = l.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(l.used_blocks(), 2);
+        assert!(l.release(a));
+        assert_eq!(l.free_blocks(), 2);
+        assert!(l.release(b));
+        assert_eq!(l.free_blocks(), 3);
+        assert_eq!(l.peak_used(), 2);
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        let mut l = BlockLedger::new(1);
+        let a = l.alloc().unwrap();
+        assert_eq!(l.alloc(), None);
+        l.release(a);
+        assert!(l.alloc().is_some());
+    }
+
+    #[test]
+    fn refcounts_free_exactly_at_zero() {
+        let mut l = BlockLedger::new(2);
+        let a = l.alloc().unwrap();
+        l.retain(a);
+        l.retain(a);
+        assert_eq!(l.refcount(a), 3);
+        assert!(l.is_shared(a));
+        assert!(!l.release(a));
+        assert!(!l.release(a));
+        assert!(!l.is_shared(a));
+        assert_eq!(l.used_blocks(), 1);
+        assert!(l.release(a));
+        assert_eq!(l.used_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_hits_and_misses() {
+        let mut l = BlockLedger::new(4);
+        let a = l.alloc().unwrap();
+        l.seal(a, key(None, &[1, 2]));
+        assert_eq!(l.lookup_retain(&key(None, &[1, 2])), Some(a));
+        assert_eq!(l.refcount(a), 2);
+        assert_eq!(l.lookup_retain(&key(None, &[9, 9])), None);
+        let s = l.stats();
+        assert_eq!((s.prefix_lookups, s.prefix_hits), (2, 1));
+        assert!((s.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_purges_own_and_child_keys() {
+        let mut l = BlockLedger::new(4);
+        let a = l.alloc().unwrap();
+        let b = l.alloc().unwrap();
+        l.seal(a, key(None, &[1]));
+        l.seal(b, key(Some(a), &[2]));
+        // free `a` (sole holder): its key AND the child key through it die
+        assert!(l.release(a));
+        assert_eq!(l.lookup_retain(&key(None, &[1])), None);
+        assert_eq!(l.lookup_retain(&key(Some(a), &[2])), None);
+        assert_eq!(l.cached_prefix_blocks(), 0);
+        // b itself is still live, just no longer reachable via the cache —
+        // and its sealed back-pointer is gone with its entry
+        assert_eq!(l.refcount(b), 1);
+        assert!(!l.is_sealed(b), "purged child must not keep a dangling seal");
+    }
+
+    #[test]
+    fn purged_child_release_cannot_evict_recycled_key() {
+        let mut l = BlockLedger::new(4);
+        let a = l.alloc().unwrap();
+        let b = l.alloc().unwrap();
+        l.seal(a, key(None, &[1]));
+        l.seal(b, key(Some(a), &[2]));
+        l.release(a); // purges b's entry AND its back-pointer
+        // recycle a's id for a fresh chain that re-uses the same key shape
+        let a2 = l.alloc().unwrap();
+        assert_eq!(a2, a, "free-list must hand the id back for this test");
+        let c = l.alloc().unwrap();
+        l.seal(a2, key(None, &[9]));
+        l.seal(c, key(Some(a2), &[2]));
+        // b's release must NOT evict c's legitimate {parent: a2, [2]} entry
+        assert!(l.release(b));
+        assert_eq!(l.lookup_retain(&key(Some(a2), &[2])), Some(c));
+    }
+
+    #[test]
+    fn unseal_removes_cache_entry_only() {
+        let mut l = BlockLedger::new(2);
+        let a = l.alloc().unwrap();
+        l.seal(a, key(None, &[7]));
+        assert!(l.is_sealed(a));
+        l.unseal(a);
+        assert!(!l.is_sealed(a));
+        assert_eq!(l.lookup_retain(&key(None, &[7])), None);
+        assert_eq!(l.refcount(a), 1);
+    }
+
+    #[test]
+    fn seal_first_writer_wins() {
+        let mut l = BlockLedger::new(3);
+        let a = l.alloc().unwrap();
+        let b = l.alloc().unwrap();
+        l.seal(a, key(None, &[5]));
+        l.seal(b, key(None, &[5])); // duplicate chain: no-op
+        assert!(!l.is_sealed(b));
+        assert_eq!(l.lookup_retain(&key(None, &[5])), Some(a));
+    }
+}

@@ -1,0 +1,25 @@
+//! Paged KV-cache subsystem: block-pooled, prefix-shared KV storage with
+//! preemption-aware admission (the PagedAttention discipline, sized to
+//! this architecture's tile row groups).
+//!
+//! LEAP's serving capacity is bounded by how the dynamic KV tensors are
+//! packed into distributed tile-local memory, not by compute. This module
+//! replaces per-session flat `[s_max, d]` KV buffers with a shared pool of
+//! fixed-size blocks:
+//!
+//! - [`ledger`] — [`BlockLedger`]: refcounted block accounting + an
+//!   exact-match prefix cache. Also used storage-free by the coordinator's
+//!   simulated-scratchpad capacity manager.
+//! - [`store`] — [`KvStore`]/[`BlockTable`]: the f32 block arenas behind
+//!   the reference backend, with copy-on-write prefix sharing.
+//! - [`admission`] — [`AdmissionPolicy`]: admit/queue/reject against
+//!   actual free blocks; the engine preempts (release + re-queue +
+//!   re-prefill) when decode growth outruns the pool.
+
+pub mod admission;
+pub mod ledger;
+pub mod store;
+
+pub use admission::{AdmissionDecision, AdmissionPolicy};
+pub use ledger::{BlockId, BlockLedger, PoolStats, PrefixKey};
+pub use store::{BlockTable, KvCacheConfig, KvStore};

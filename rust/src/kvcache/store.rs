@@ -1,0 +1,432 @@
+//! Pooled KV storage: fixed-size f32 blocks shared by every session.
+//!
+//! A [`KvStore`] owns two flat arenas (K and V) of
+//! `n_blocks × n_layers × block_size × d_model` words plus a
+//! [`BlockLedger`]; each session holds a [`BlockTable`] mapping its token
+//! positions to physical blocks (`position p` lives in table block
+//! `p / block_size`, row `p % block_size`). Blocks are the unit of
+//! admission, sharing, and preemption:
+//!
+//! - **Prefix sharing.** [`KvStore::build_prefill`] walks the prompt in
+//!   block-size chunks through the ledger's exact prefix cache; matching
+//!   chunks (including a matching partial tail) map to the *same* physical
+//!   block with a refcount, so N sessions with a common system prompt
+//!   consume far fewer than `N × ceil(s/block_size)` blocks. After the
+//!   forward pass fills the fresh blocks, [`KvStore::seal_prefill`]
+//!   registers them for future prompts.
+//! - **Copy-on-write.** Appending into a shared tail block copies the
+//!   filled rows into a private block first ([`KvStore::grow`]), so no
+//!   physical block ever has two writers.
+//! - **Preemption.** Releasing a table returns its blocks to the pool;
+//!   the coordinator re-prefills the session's tokens on readmission.
+//!
+//! The block size defaults to one tile row group
+//! ([`crate::arch::TileGeometry::shard_rows`]) — the granularity at which
+//! the simulated hardware shards the KV cache across routers (§IV-C).
+
+use anyhow::Context;
+
+use crate::arch::{HwParams, TileGeometry};
+
+use super::ledger::{BlockId, BlockLedger, PoolStats, PrefixKey};
+
+/// Pool-shape knobs for a [`KvStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// Tokens per block (one tile row group by default).
+    pub block_size: usize,
+    /// Physical blocks in the pool.
+    pub n_blocks: usize,
+    /// Enable prompt-prefix sharing (identical prefixes map to the same
+    /// physical blocks). Disable for strictly private sessions.
+    pub prefix_sharing: bool,
+}
+
+impl KvCacheConfig {
+    /// Default pool for a model: block size = the tile row group of the
+    /// model's geometry, pool sized for a healthy running batch
+    /// (32 full-window sessions).
+    pub fn for_model(d_model: usize, s_max: usize) -> Self {
+        let geom = TileGeometry::for_model(d_model, &HwParams::default());
+        let block_size = geom.shard_rows.max(1);
+        let blocks_per_session = s_max.div_ceil(block_size).max(1);
+        Self { block_size, n_blocks: 32 * blocks_per_session, prefix_sharing: true }
+    }
+
+    /// Worst-case blocks a session of `tokens` KV positions needs
+    /// (ignoring any prefix sharing).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+}
+
+/// One session's block mapping: physical block ids in position order.
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    /// Token positions this table covers (`blocks.len() == ceil(len/bs)`).
+    len: usize,
+    /// Positions `[0, shared_prefix)` were resolved from the prefix cache
+    /// at prefill: their KV rows already exist and must not be rewritten.
+    shared_prefix: usize,
+}
+
+impl BlockTable {
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// KV positions covered.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Prompt positions mapped from the prefix cache at prefill.
+    pub fn shared_prefix(&self) -> usize {
+        self.shared_prefix
+    }
+}
+
+/// The pooled KV cache: block arenas + ledger. All sessions of one backend
+/// share one store.
+pub struct KvStore {
+    cfg: KvCacheConfig,
+    ledger: BlockLedger,
+    n_layers: usize,
+    d: usize,
+    /// K arena, `[n_blocks][n_layers][block_size][d]` row-major.
+    k: Vec<f32>,
+    /// V arena, same layout.
+    v: Vec<f32>,
+}
+
+impl KvStore {
+    pub fn new(cfg: KvCacheConfig, n_layers: usize, d: usize) -> Self {
+        assert!(cfg.block_size > 0 && cfg.n_blocks > 0, "degenerate KV pool config");
+        let words = cfg.n_blocks * n_layers * cfg.block_size * d;
+        Self {
+            cfg,
+            ledger: BlockLedger::new(cfg.n_blocks),
+            n_layers,
+            d,
+            k: vec![0f32; words],
+            v: vec![0f32; words],
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    pub fn ledger(&self) -> &BlockLedger {
+        &self.ledger
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.ledger.free_blocks()
+    }
+
+    /// Occupancy/sharing snapshot with `block_size` filled in.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats { block_size: self.cfg.block_size, ..self.ledger.stats() }
+    }
+
+    /// Arena offset of `(block, layer)` — identical for the K and V arenas.
+    #[inline]
+    fn off(&self, b: BlockId, layer: usize) -> usize {
+        (b as usize * self.n_layers + layer) * self.cfg.block_size * self.d
+    }
+
+    /// The whole K arena. Paged kernels index it directly with the offsets
+    /// produced by [`Self::fill_starts`].
+    pub fn k_arena(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The whole V arena (same layout as [`Self::k_arena`]).
+    pub fn v_arena(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// The `[block_size, d]` K slice of one block at one layer.
+    pub fn k_block(&self, b: BlockId, layer: usize) -> &[f32] {
+        let o = self.off(b, layer);
+        &self.k[o..o + self.cfg.block_size * self.d]
+    }
+
+    /// The `[block_size, d]` V slice of one block at one layer.
+    pub fn v_block(&self, b: BlockId, layer: usize) -> &[f32] {
+        let o = self.off(b, layer);
+        &self.v[o..o + self.cfg.block_size * self.d]
+    }
+
+    /// Fill `starts` with the arena offsets of `table`'s blocks at `layer`
+    /// (valid for both arenas — kernels add `row * d` per position).
+    pub fn fill_starts(&self, table: &BlockTable, layer: usize, starts: &mut Vec<usize>) {
+        starts.clear();
+        starts.extend(table.blocks.iter().map(|&b| self.off(b, layer)));
+    }
+
+    /// Write one position's K/V rows into `(block, layer, row)`. The block
+    /// must be privately held — shared blocks are copied first by
+    /// [`Self::grow`].
+    pub fn write_row(&mut self, b: BlockId, layer: usize, row: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(!self.ledger.is_shared(b), "write into a shared KV block (missing CoW)");
+        debug_assert!(row < self.cfg.block_size);
+        let o = self.off(b, layer) + row * self.d;
+        self.k[o..o + self.d].copy_from_slice(krow);
+        self.v[o..o + self.d].copy_from_slice(vrow);
+    }
+
+    /// Worst-case free blocks [`Self::grow`] would claim to extend `table`
+    /// by `new_positions` tokens (boundary blocks + a possible
+    /// copy-on-write of a shared tail).
+    pub fn grow_demand(&self, table: &BlockTable, new_positions: usize) -> usize {
+        if new_positions == 0 {
+            return 0;
+        }
+        let bs = self.cfg.block_size;
+        let mut demand = (table.len + new_positions).div_ceil(bs) - table.blocks.len();
+        if table.len % bs != 0 && self.ledger.is_shared(table.blocks[table.len / bs]) {
+            demand += 1; // CoW of the shared tail before the first write
+        }
+        demand
+    }
+
+    /// Reserve `new_positions` more token positions in `table`: allocate
+    /// boundary blocks, copy-on-write a shared tail, and unseal a sealed
+    /// private tail whose content is about to diverge. Callers that need
+    /// all-or-nothing semantics check [`Self::grow_demand`] against
+    /// [`Self::free_blocks`] first — with enough free blocks this cannot
+    /// fail.
+    pub fn grow(&mut self, table: &mut BlockTable, new_positions: usize) -> anyhow::Result<()> {
+        if new_positions == 0 {
+            return Ok(());
+        }
+        let bs = self.cfg.block_size;
+        if table.len % bs != 0 {
+            // The first new position lands mid-block: the tail must be
+            // privately writable.
+            let bi = table.len / bs;
+            let b = table.blocks[bi];
+            if self.ledger.is_shared(b) {
+                let nb = self.ledger.alloc().context("KV block pool exhausted (CoW)")?;
+                let rows = table.len % bs;
+                for layer in 0..self.n_layers {
+                    let src = self.off(b, layer);
+                    let dst = self.off(nb, layer);
+                    let n = rows * self.d;
+                    self.k.copy_within(src..src + n, dst);
+                    self.v.copy_within(src..src + n, dst);
+                }
+                self.ledger.release(b);
+                table.blocks[bi] = nb;
+                self.ledger.note_cow();
+            } else if self.ledger.is_sealed(b) {
+                self.ledger.unseal(b);
+            }
+        }
+        let need = (table.len + new_positions).div_ceil(bs) - table.blocks.len();
+        for _ in 0..need {
+            table.blocks.push(self.ledger.alloc().context("KV block pool exhausted")?);
+        }
+        table.len += new_positions;
+        Ok(())
+    }
+
+    /// Start a session table for `tokens`, resolving as much of the prompt
+    /// as possible from the prefix cache. The returned table covers only
+    /// the shared prefix (`len == shared_prefix`); the forward pass grows
+    /// it over the remaining positions and writes their KV rows.
+    pub fn build_prefill(&mut self, tokens: &[i32]) -> BlockTable {
+        let mut table = BlockTable::default();
+        if !self.cfg.prefix_sharing {
+            return table;
+        }
+        let mut parent = None;
+        for chunk in tokens.chunks(self.cfg.block_size) {
+            let key = PrefixKey { parent, tokens: chunk.to_vec() };
+            let Some(b) = self.ledger.lookup_retain(&key) else { break };
+            table.blocks.push(b);
+            table.len += chunk.len();
+            table.shared_prefix += chunk.len();
+            parent = Some(b);
+        }
+        table
+    }
+
+    /// Register the fresh prompt blocks of a completed prefill in the
+    /// prefix cache so future identical prefixes share them. Both full
+    /// chunks and the partial tail are sealed (the key carries the exact
+    /// chunk, so fills of different lengths never alias).
+    pub fn seal_prefill(&mut self, table: &BlockTable, tokens: &[i32]) {
+        if !self.cfg.prefix_sharing {
+            return;
+        }
+        let mut parent = None;
+        for (i, chunk) in tokens.chunks(self.cfg.block_size).enumerate() {
+            let b = table.blocks[i];
+            if i * self.cfg.block_size >= table.shared_prefix {
+                self.ledger.seal(b, PrefixKey { parent, tokens: chunk.to_vec() });
+            }
+            parent = Some(b);
+        }
+    }
+
+    /// Release every block a table holds (refcount-decrement; physical
+    /// blocks free when the last sharer releases).
+    pub fn release_table(&mut self, table: BlockTable) {
+        for b in table.blocks {
+            self.ledger.release(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(bs: usize, n_blocks: usize) -> KvStore {
+        KvStore::new(
+            KvCacheConfig { block_size: bs, n_blocks, prefix_sharing: true },
+            2, // layers
+            4, // d
+        )
+    }
+
+    /// Grow a fresh table over `tokens` and write distinct rows, sealing at
+    /// the end — a miniature prefill without the model forward.
+    fn prefill(s: &mut KvStore, tokens: &[i32], salt: f32) -> BlockTable {
+        let mut t = s.build_prefill(tokens);
+        let new = tokens.len() - t.len();
+        s.grow(&mut t, new).unwrap();
+        for pos in t.shared_prefix()..tokens.len() {
+            let b = t.blocks()[pos / s.cfg.block_size];
+            for layer in 0..2 {
+                let row = vec![salt + pos as f32 + layer as f32 * 0.5; 4];
+                s.write_row(b, layer, pos % s.cfg.block_size, &row, &row);
+            }
+        }
+        s.seal_prefill(&t, tokens);
+        t
+    }
+
+    #[test]
+    fn identical_prompts_share_all_blocks() {
+        let mut s = store(2, 16);
+        let a = prefill(&mut s, &[1, 2, 3, 4], 0.0);
+        let used_after_a = s.ledger().used_blocks();
+        let b = prefill(&mut s, &[1, 2, 3, 4], 0.0);
+        assert_eq!(a.blocks(), b.blocks(), "identical prompt must map to the same blocks");
+        assert_eq!(b.shared_prefix(), 4);
+        assert_eq!(s.ledger().used_blocks(), used_after_a, "no new physical blocks");
+        s.release_table(a);
+        assert_eq!(s.ledger().used_blocks(), used_after_a, "b still holds them");
+        s.release_table(b);
+        assert_eq!(s.ledger().used_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_diverging_suffix() {
+        let mut s = store(2, 16);
+        let a = prefill(&mut s, &[1, 2, 3, 4, 5, 6], 0.0);
+        let b = prefill(&mut s, &[1, 2, 3, 4, 9, 9], 0.0);
+        assert_eq!(b.shared_prefix(), 4);
+        assert_eq!(&a.blocks()[..2], &b.blocks()[..2]);
+        assert_ne!(a.blocks()[2], b.blocks()[2]);
+        // 3 blocks for a + 1 private block for b
+        assert_eq!(s.ledger().used_blocks(), 4);
+        s.release_table(a);
+        s.release_table(b);
+    }
+
+    #[test]
+    fn partial_tail_shares_and_cow_on_append() {
+        let mut s = store(4, 16);
+        // 6 tokens = 1 full block + a partial tail of 2 — both sealed
+        let a = prefill(&mut s, &[1, 2, 3, 4, 5, 6], 1.0);
+        let mut b = prefill(&mut s, &[1, 2, 3, 4, 5, 6], 0.0);
+        assert_eq!(b.shared_prefix(), 6, "partial tail chunk must share too");
+        assert_eq!(s.ledger().used_blocks(), 2);
+
+        // b appends into the shared tail → CoW: one fresh private block,
+        // a's view untouched
+        let tail_before = b.blocks()[1];
+        assert_eq!(s.grow_demand(&b, 1), 1);
+        s.grow(&mut b, 1).unwrap();
+        let tail_after = b.blocks()[1];
+        assert_ne!(tail_before, tail_after, "CoW must swap the tail block");
+        assert_eq!(a.blocks()[1], tail_before);
+        assert_eq!(s.ledger().refcount(tail_before), 1);
+        assert_eq!(s.stats().cow_copies, 1);
+        // the copied rows carry a's values (salt 1.0 from the first fill)
+        assert_eq!(s.k_block(tail_after, 0)[0], 1.0 + 4.0);
+        s.write_row(tail_after, 0, 2, &[9.0; 4], &[9.0; 4]);
+        s.release_table(a);
+        s.release_table(b);
+        assert_eq!(s.ledger().used_blocks(), 0);
+    }
+
+    #[test]
+    fn sole_owner_append_unseals_instead_of_copying() {
+        let mut s = store(4, 8);
+        let mut a = prefill(&mut s, &[1, 2, 3, 4, 5], 0.0);
+        assert_eq!(s.ledger().cached_prefix_blocks(), 2);
+        assert_eq!(s.grow_demand(&a, 1), 0);
+        s.grow(&mut a, 1).unwrap();
+        // the partial tail's cache entry is gone (content diverged) but no
+        // copy happened
+        assert_eq!(s.ledger().cached_prefix_blocks(), 1);
+        assert_eq!(s.stats().cow_copies, 0);
+        s.release_table(a);
+    }
+
+    #[test]
+    fn grow_demand_counts_boundary_blocks() {
+        let mut s = store(4, 8);
+        let a = prefill(&mut s, &[1, 2, 3], 0.0);
+        assert_eq!(s.grow_demand(&a, 1), 0); // fills the tail
+        assert_eq!(s.grow_demand(&a, 2), 1); // crosses one boundary
+        assert_eq!(s.grow_demand(&a, 6), 2);
+        s.release_table(a);
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error() {
+        let mut s = store(2, 2);
+        let mut a = prefill(&mut s, &[1, 2, 3, 4], 0.0);
+        assert!(s.grow(&mut a, 1).is_err());
+        s.release_table(a);
+    }
+
+    #[test]
+    fn sharing_disabled_allocates_privately() {
+        let mut s = KvStore::new(
+            KvCacheConfig { block_size: 2, n_blocks: 8, prefix_sharing: false },
+            1,
+            4,
+        );
+        let a = prefill(&mut s, &[1, 2, 3, 4], 0.0);
+        let b = prefill(&mut s, &[1, 2, 3, 4], 0.0);
+        assert_eq!(b.shared_prefix(), 0);
+        assert_ne!(a.blocks()[0], b.blocks()[0]);
+        assert_eq!(s.ledger().used_blocks(), 4);
+        s.release_table(a);
+        s.release_table(b);
+    }
+
+    #[test]
+    fn default_config_aligns_with_tile_geometry() {
+        let cfg = KvCacheConfig::for_model(256, 128);
+        assert_eq!(cfg.block_size, 2, "tiny model: shard_rows = 2");
+        assert_eq!(cfg.n_blocks, 32 * 64);
+        assert!(cfg.prefix_sharing);
+        assert_eq!(cfg.blocks_for(5), 3);
+        let cfg1b = KvCacheConfig::for_model(2048, 4096);
+        assert_eq!(cfg1b.block_size, 16, "Table I: C_S = 16 rows");
+    }
+}

@@ -25,6 +25,8 @@
 //!   prefill/decode dataflows (Fig. 6), KV-cache placement (§IV-C).
 //! - [`isa`] — the NoC instruction set: CMD pairs + configuration word,
 //!   assembler/disassembler, double-banked program memory (§V-A).
+//! - [`kvcache`] — paged KV cache: block-pooled, prefix-shared KV storage
+//!   with copy-on-write and preemption-aware admission.
 //! - [`noc`] — router mesh: 5-port routers, FIFOs, IRCUs, output crossbar,
 //!   multicast, X-Y routing (§V-B).
 //! - [`pim`] — crossbar PE timing/energy model (128×128, 8-bit cells).
@@ -53,6 +55,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod energy;
 pub mod isa;
+pub mod kvcache;
 pub mod mapping;
 pub mod model;
 pub mod noc;

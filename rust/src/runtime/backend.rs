@@ -69,8 +69,41 @@ pub trait NumericsBackend {
         Ok(steps.iter().map(|&(session, token)| self.decode_step(session, token)).collect())
     }
 
-    /// Drop the session's KV-cache state (idempotent).
+    /// Drop the session's KV-cache state (idempotent). A pooled backend
+    /// returns the session's blocks to the shared pool — this is also the
+    /// preemption hook: the coordinator releases a preempted session here
+    /// and re-prefills its tokens on readmission.
     fn release(&mut self, session: SessionId);
+
+    // --- pooled-KV admission hooks (defaulted so unpooled backends — the
+    // PJRT path, synthetic test doubles — compile and serve unchanged) ---
+
+    /// Model context window in tokens (`s_max`), when the backend knows
+    /// it. The engine uses this for typed submit-time validation.
+    fn context_window(&self) -> Option<usize> {
+        None
+    }
+
+    /// Snapshot of the backend's pooled-KV allocator (`None` = this
+    /// backend does not pool KV; admission falls back to the
+    /// coordinator's capacity accounting alone).
+    fn kv_pool_stats(&self) -> Option<crate::kvcache::PoolStats> {
+        None
+    }
+
+    /// Worst-case free blocks required to decode one more token on
+    /// `session` (0 for unpooled backends or unknown sessions). The
+    /// engine sums this over a decode round and preempts the youngest
+    /// sessions when the pool is short.
+    fn kv_append_demand(&self, _session: SessionId) -> usize {
+        0
+    }
+
+    /// Worst-case blocks needed to admit a new session holding `tokens`
+    /// KV positions, ignoring prefix sharing (`None` = unpooled).
+    fn kv_admit_demand(&self, _tokens: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.

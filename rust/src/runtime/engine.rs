@@ -211,6 +211,10 @@ impl NumericsBackend for PjrtBackend {
     fn release(&mut self, session: SessionId) {
         self.sessions.remove(&session);
     }
+
+    fn context_window(&self) -> Option<usize> {
+        Some(self.engine.meta.s_max)
+    }
 }
 
 // ArtifactMeta parsing is covered in runtime/backend.rs; engine execution

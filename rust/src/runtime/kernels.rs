@@ -430,6 +430,116 @@ pub fn attention_row(
     });
 }
 
+/// Causal attention for one query row over a *paged* KV cache: the
+/// context's positions live in fixed-size blocks scattered through the
+/// shared arenas; `starts[b]` is the offset of block `b`'s
+/// `[block_size, d]` slice (valid for both arenas), so position `j` is row
+/// `j % block_size` of `starts[j / block_size]`.
+///
+/// Per-position arithmetic and ordering are exactly
+/// [`attention_row`]'s, so the output is **bit-identical** to running the
+/// contiguous kernel over a gathered copy of the same cache — the paged
+/// backend inherits the batched ≡ sequential decode contract unchanged.
+/// Large contexts split the heads across scoped threads like the
+/// contiguous path.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_row_paged(
+    q: &[f32],
+    karena: &[f32],
+    varena: &[f32],
+    starts: &[usize],
+    block_size: usize,
+    ctx: usize,
+    n_heads: usize,
+    d_head: usize,
+    d: usize,
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(o.len(), d);
+    debug_assert!(block_size > 0 && starts.len() * block_size >= ctx);
+    debug_assert!(scores.len() >= ctx);
+    let t = threads_for(n_heads * ctx * d_head).min(n_heads);
+    if t <= 1 {
+        for (h, oh) in o.chunks_exact_mut(d_head).enumerate() {
+            head_attention_paged(
+                q,
+                karena,
+                varena,
+                starts,
+                block_size,
+                ctx,
+                h,
+                d_head,
+                d,
+                &mut scores[..ctx],
+                oh,
+            );
+        }
+        return;
+    }
+    let band = n_heads.div_ceil(t);
+    std::thread::scope(|s| {
+        for (hb, ob) in o.chunks_mut(band * d_head).enumerate() {
+            s.spawn(move || {
+                let mut local = vec![0f32; ctx];
+                for (hi, oh) in ob.chunks_exact_mut(d_head).enumerate() {
+                    let h = hb * band + hi;
+                    head_attention_paged(
+                        q, karena, varena, starts, block_size, ctx, h, d_head, d, &mut local, oh,
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// One head of [`attention_row_paged`] (same math as [`head_attention`],
+/// with the position → `(block, row)` indirection folded into the cache
+/// reads).
+#[allow(clippy::too_many_arguments)]
+fn head_attention_paged(
+    q: &[f32],
+    karena: &[f32],
+    varena: &[f32],
+    starts: &[usize],
+    block_size: usize,
+    ctx: usize,
+    h: usize,
+    d_head: usize,
+    d: usize,
+    scores: &mut [f32],
+    oh: &mut [f32],
+) {
+    let base = h * d_head;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let qh = &q[base..base + d_head];
+    let mut max = f32::NEG_INFINITY;
+    for (j, sc) in scores[..ctx].iter_mut().enumerate() {
+        let row = starts[j / block_size] + (j % block_size) * d;
+        let krow = &karena[row + base..row + base + d_head];
+        *sc = dot(qh, krow) * scale;
+        max = max.max(*sc);
+    }
+    let mut denom = 0f32;
+    for sc in scores[..ctx].iter_mut() {
+        *sc = (*sc - max).exp();
+        denom += *sc;
+    }
+    oh.fill(0.0);
+    for (j, &p) in scores[..ctx].iter().enumerate() {
+        let row = starts[j / block_size] + (j % block_size) * d;
+        let vrow = &varena[row + base..row + base + d_head];
+        for (ov, &vv) in oh.iter_mut().zip(vrow) {
+            *ov += p * vv;
+        }
+    }
+    for ov in oh.iter_mut() {
+        *ov /= denom;
+    }
+}
+
 /// One head of [`attention_row`] (softmax(q·Kᵀ)·V over `ctx` positions).
 #[allow(clippy::too_many_arguments)]
 fn head_attention(
@@ -494,6 +604,10 @@ pub struct Scratch {
     pub scores: Vec<f32>,
     /// Per-row cache position assigned this step `[rows]`.
     pub pos: Vec<usize>,
+    /// Paged-KV block offsets for the row currently under attention
+    /// (refilled per row/layer via `KvStore::fill_starts`; grow-only
+    /// capacity like every other scratch buffer).
+    pub block_starts: Vec<usize>,
 }
 
 impl Scratch {
@@ -751,6 +865,38 @@ mod tests {
         for (i, &ov) in o.iter().enumerate() {
             assert!((ov - i as f32).abs() < 1e-5, "o[{i}] = {ov}");
         }
+    }
+
+    #[test]
+    fn attention_row_paged_bitwise_matches_contiguous() {
+        // Scatter a contiguous [ctx, d] cache into out-of-order blocks of a
+        // larger arena: the paged kernel must reproduce the contiguous
+        // kernel bit for bit.
+        let (heads, dh, ctx, bs) = (3, 8, 11, 4);
+        let d = heads * dh;
+        let q = seq(d, 0.5);
+        let kcache = seq(ctx * d, 0.3);
+        let vcache = seq(ctx * d, -0.7);
+
+        let n_blocks = ctx.div_ceil(bs);
+        // blocks deliberately stored in reverse arena order with a gap
+        let mut karena = vec![f32::NAN; (n_blocks + 1) * bs * d];
+        let mut varena = vec![f32::NAN; (n_blocks + 1) * bs * d];
+        let starts: Vec<usize> = (0..n_blocks).map(|b| (n_blocks - b) * bs * d).collect();
+        for j in 0..ctx {
+            let at = starts[j / bs] + (j % bs) * d;
+            karena[at..at + d].copy_from_slice(&kcache[j * d..(j + 1) * d]);
+            varena[at..at + d].copy_from_slice(&vcache[j * d..(j + 1) * d]);
+        }
+
+        let mut scores = vec![0f32; ctx];
+        let mut want = vec![0f32; d];
+        attention_row(&q, &kcache, &vcache, ctx, heads, dh, d, &mut scores, &mut want);
+        let mut got = vec![0f32; d];
+        attention_row_paged(
+            &q, &karena, &varena, &starts, bs, ctx, heads, dh, d, &mut scores, &mut got,
+        );
+        assert_eq!(got, want, "paged attention must be bit-identical to contiguous");
     }
 
     #[test]

@@ -19,15 +19,20 @@
 //! multi-row forward ([`ReferenceModel::forward_rows`]); a single
 //! `decode_step` is a batch of one, which is what makes batched and
 //! sequential decode bit-identical (property-tested in
-//! `tests/prop_backend.rs`). Per-session KV caches are flat preallocated
-//! `[s_max, d]` buffers and all tensor intermediates live in a grow-only
-//! [`Scratch`] arena, so the steady-state decode loop performs no
-//! per-token tensor allocations — only the returned logits buffer and a
-//! few words of per-round bookkeeping.
+//! `tests/prop_backend.rs`).
 //!
-//! [`KernelMode::Naive`] retains the pre-optimisation scalar path
-//! (token-at-a-time prefill, per-call allocations, per-token trig) as the
-//! parity oracle and the bench baseline.
+//! **Paged KV.** Sessions no longer own flat `[s_max, d]` buffers: all KV
+//! lives in one [`KvStore`] block pool (block size = one tile row group),
+//! each session holding a [`BlockTable`]. Prompt prefixes that match an
+//! earlier live session's chain map to the *same* physical blocks
+//! (refcounted, copy-on-write on divergence), so concurrency is bounded by
+//! actual KV residency rather than session count. The fast path reads the
+//! cache through [`kernels::attention_row_paged`] (gather per block, no
+//! contiguous copy); the retained [`KernelMode::Naive`] scalar path
+//! gathers per call (it allocates per call by design) — both are
+//! bit-identical to the pre-pool flat layout, which
+//! `tests/integration_reference.rs` pins by comparing a paged pool against
+//! a one-block-per-session (flat-equivalent) pool.
 
 use std::collections::HashMap;
 use std::collections::HashSet;
@@ -35,9 +40,11 @@ use std::path::Path;
 
 use anyhow::{ensure, Context};
 
+use crate::kvcache::{BlockTable, KvCacheConfig, KvStore, PoolStats};
+
 use super::backend::{ArtifactMeta, BatchResults, NumericsBackend, SessionId, StepOutput};
 use super::kernels::{
-    self, attention_row, gemm_q8, gemm_t, rmsnorm_into, silu_mul, QMat, RopeTable, Scratch,
+    self, attention_row_paged, gemm_q8, gemm_t, rmsnorm_into, silu_mul, QMat, RopeTable, Scratch,
 };
 use super::leapbin::{self, DType, Tensor};
 
@@ -98,28 +105,25 @@ pub struct ReferenceModel {
     rope: RopeTable,
 }
 
-/// Per-request decode state: flat preallocated KV caches, one
-/// `[s_max, d_model]` row-major block per layer (layer `l` starts at
-/// `l * s_max * d_model`), filled through `pos`.
+/// Per-request decode state: a block table into the shared [`KvStore`]
+/// pool plus the count of positions actually forwarded. Invariant between
+/// operations: `pos == table.len()` (positions are reserved exactly when
+/// their rows are computed; a prefix-shared prefill starts with
+/// `table.len() == shared_prefix` and skips rewriting those rows).
 struct RefSession {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    table: BlockTable,
     pos: usize,
 }
 
-impl RefSession {
-    fn new(n_layers: usize, s_max: usize, d: usize) -> Self {
-        Self { k: vec![0f32; n_layers * s_max * d], v: vec![0f32; n_layers * s_max * d], pos: 0 }
-    }
-}
-
-/// The reference backend: a [`ReferenceModel`], per-session KV caches, and
-/// the shared scratch arena (sessions are stepped one batch at a time, so
-/// one arena serves them all).
+/// The reference backend: a [`ReferenceModel`], the pooled KV store shared
+/// by all sessions, per-session block tables, and the shared scratch arena
+/// (sessions are stepped one batch at a time, so one arena serves them
+/// all).
 pub struct ReferenceBackend {
     model: ReferenceModel,
     sessions: HashMap<SessionId, RefSession>,
     scratch: Scratch,
+    kv: KvStore,
 }
 
 /// Dequantise one `[kp, np]` int8 tile matrix with `[kt, nt]` per-tile
@@ -292,10 +296,18 @@ impl ReferenceModel {
     /// norm, projection dot, rope, attention, residual — touches only that
     /// row's data in a fixed order.
     ///
-    /// Validates every token and session capacity *before* mutating any
-    /// session, so an error leaves all sessions untouched.
+    /// KV positions live in the shared block pool: the needed blocks
+    /// (boundary growth + copy-on-write of shared tails) are reserved up
+    /// front, rows whose position falls inside a prefix-shared block skip
+    /// the (bit-identical) rewrite, and attention gathers per block via
+    /// [`attention_row_paged`].
+    ///
+    /// Validates every token, session capacity, and the pool's free-block
+    /// demand *before* mutating any session, so an error leaves all
+    /// sessions untouched.
     fn forward_rows(
         &self,
+        kv: &mut KvStore,
         sessions: &mut [RefSession],
         rows: &[(usize, i32)],
         scratch: &mut Scratch,
@@ -308,6 +320,7 @@ impl ReferenceModel {
         let dh = m.d_head();
         let r = rows.len();
         ensure!(r > 0, "empty row batch");
+        let bs = kv.config().block_size;
 
         // -- validate everything up front ---------------------------------
         let mut extra = vec![0usize; sessions.len()];
@@ -320,6 +333,7 @@ impl ReferenceModel {
             );
             extra[si] += 1;
         }
+        let mut demand = 0usize;
         for (si, (sess, &n)) in sessions.iter().zip(&extra).enumerate() {
             ensure!(
                 sess.pos + n <= s_max,
@@ -327,6 +341,19 @@ impl ReferenceModel {
                  model window s_max={s_max}",
                 sess.pos
             );
+            let new_positions = (sess.pos + n).saturating_sub(sess.table.len());
+            demand += kv.grow_demand(&sess.table, new_positions);
+        }
+        ensure!(
+            demand <= kv.free_blocks(),
+            "KV block pool exhausted: step needs {demand} free blocks, {} available",
+            kv.free_blocks()
+        );
+
+        // -- reserve block capacity (cannot fail after the demand check) --
+        for (sess, &n) in sessions.iter_mut().zip(&extra) {
+            let new_positions = (sess.pos + n).saturating_sub(sess.table.len());
+            kv.grow(&mut sess.table, new_positions)?;
         }
 
         // -- assign cache positions and gather embeddings -----------------
@@ -339,8 +366,6 @@ impl ReferenceModel {
         }
 
         for (li, lw) in self.qlayers.iter().enumerate() {
-            let koff = li * s_max * d;
-
             // -- attention sub-layer --------------------------------------
             for (xrow, xnrow) in
                 scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
@@ -355,23 +380,33 @@ impl ReferenceModel {
                 let pos = scratch.pos[i];
                 self.rope.apply(&mut scratch.q[i * d..(i + 1) * d], pos, heads, dh);
                 self.rope.apply(&mut scratch.k[i * d..(i + 1) * d], pos, heads, dh);
-                let sess = &mut sessions[si];
-                sess.k[koff + pos * d..koff + (pos + 1) * d]
-                    .copy_from_slice(&scratch.k[i * d..(i + 1) * d]);
-                sess.v[koff + pos * d..koff + (pos + 1) * d]
-                    .copy_from_slice(&scratch.v[i * d..(i + 1) * d]);
+                let sess = &sessions[si];
+                // Positions inside the prefix-shared region already hold
+                // these exact rows (same tokens, same kernels), and shared
+                // blocks must never be rewritten — skip, don't copy.
+                if pos >= sess.table.shared_prefix() {
+                    kv.write_row(
+                        sess.table.blocks()[pos / bs],
+                        li,
+                        pos % bs,
+                        &scratch.k[i * d..(i + 1) * d],
+                        &scratch.v[i * d..(i + 1) * d],
+                    );
+                }
             }
 
             // Causal attention per row: the KV rows for every position of
-            // this step are already written, and row i only reads
-            // positions 0..=pos[i] of its own session.
+            // this step are already present (written above or shared), and
+            // row i only reads positions 0..=pos[i] of its own session.
             for (i, &(si, _)) in rows.iter().enumerate() {
                 let ctx = scratch.pos[i] + 1;
-                let sess = &sessions[si];
-                attention_row(
+                kv.fill_starts(&sessions[si].table, li, &mut scratch.block_starts);
+                attention_row_paged(
                     &scratch.q[i * d..(i + 1) * d],
-                    &sess.k[koff..koff + ctx * d],
-                    &sess.v[koff..koff + ctx * d],
+                    kv.k_arena(),
+                    kv.v_arena(),
+                    &scratch.block_starts,
+                    bs,
                     ctx,
                     heads,
                     dh,
@@ -413,20 +448,40 @@ impl ReferenceModel {
 
     /// One causal step through the retained naive scalar path (the exact
     /// pre-optimisation algorithm: per-call `Vec`s, zero-skip axpy matvec
-    /// over `[k, n]` weights, per-token trig). Parity oracle + bench
-    /// baseline; only valid on a `KernelMode::Naive` model.
-    fn step_one_naive(&self, sess: &mut RefSession, token: i32) -> anyhow::Result<Vec<f32>> {
+    /// over `[k, n]` weights, per-token trig). The paged cache is gathered
+    /// into contiguous per-call buffers (the naive path allocates per call
+    /// by design), so the retained kernel below runs unchanged and
+    /// bit-identically. Parity oracle + bench baseline; only valid on a
+    /// `KernelMode::Naive` model.
+    fn step_one_naive(
+        &self,
+        kv: &mut KvStore,
+        sess: &mut RefSession,
+        token: i32,
+    ) -> anyhow::Result<Vec<f32>> {
         use kernels::naive::{matvec, rmsnorm, rope};
         ensure!(self.mode == KernelMode::Naive, "step_one_naive requires a Naive-mode model");
         let m = &self.meta;
-        let (d, ff, heads, s_max) = (m.d_model, m.d_ff, m.n_heads, m.s_max);
+        let (d, ff, heads, _s_max) = (m.d_model, m.d_ff, m.n_heads, m.s_max);
         let dh = m.d_head();
         m.check_step(sess.pos, token)?;
         let pos = sess.pos;
+        let bs = kv.config().block_size;
+
+        // Reserve the position's block up front; an exhausted pool fails
+        // before any state changes.
+        let new_positions = (pos + 1).saturating_sub(sess.table.len());
+        ensure!(
+            kv.grow_demand(&sess.table, new_positions) <= kv.free_blocks(),
+            "KV block pool exhausted: step needs {} free blocks, {} available",
+            kv.grow_demand(&sess.table, new_positions),
+            kv.free_blocks()
+        );
+        kv.grow(&mut sess.table, new_positions)?;
+
         let mut x = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
 
         for (li, lw) in self.dlayers.iter().enumerate() {
-            let koff = li * s_max * d;
             // -- attention sub-layer --------------------------------------
             let xn = rmsnorm(&x, &lw.attn_norm);
             let mut q = matvec(&xn, &lw.wq, d, d);
@@ -434,12 +489,22 @@ impl ReferenceModel {
             let v = matvec(&xn, &lw.wv, d, d);
             rope(&mut q, pos, heads, dh);
             rope(&mut k, pos, heads, dh);
-            sess.k[koff + pos * d..koff + (pos + 1) * d].copy_from_slice(&k);
-            sess.v[koff + pos * d..koff + (pos + 1) * d].copy_from_slice(&v);
+            if pos >= sess.table.shared_prefix() {
+                kv.write_row(sess.table.blocks()[pos / bs], li, pos % bs, &k, &v);
+            }
 
             let ctx = pos + 1;
-            let kcache = &sess.k[koff..koff + ctx * d];
-            let vcache = &sess.v[koff..koff + ctx * d];
+            // gather the paged cache into the naive path's contiguous view
+            let mut kcache = vec![0f32; ctx * d];
+            let mut vcache = vec![0f32; ctx * d];
+            for (j, (kd, vd)) in
+                kcache.chunks_exact_mut(d).zip(vcache.chunks_exact_mut(d)).enumerate()
+            {
+                let b = sess.table.blocks()[j / bs];
+                let row = (j % bs) * d;
+                kd.copy_from_slice(&kv.k_block(b, li)[row..row + d]);
+                vd.copy_from_slice(&kv.v_block(b, li)[row..row + d]);
+            }
             let scale = 1.0 / (dh as f32).sqrt();
             let mut o = vec![0f32; d];
             let mut scores = vec![0f32; ctx];
@@ -505,7 +570,8 @@ impl ReferenceModel {
 }
 
 impl ReferenceBackend {
-    /// Load the model from an artifact/fixture directory (fast kernels).
+    /// Load the model from an artifact/fixture directory (fast kernels,
+    /// default pool sizing).
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
         Self::load_with_mode(dir, KernelMode::Fast)
     }
@@ -514,11 +580,44 @@ impl ReferenceBackend {
     /// pre-optimisation scalar path for parity tests and the bench
     /// baseline).
     pub fn load_with_mode(dir: impl AsRef<Path>, mode: KernelMode) -> anyhow::Result<Self> {
-        Ok(Self {
-            model: ReferenceModel::load_with_mode(dir, mode)?,
-            sessions: HashMap::new(),
-            scratch: Scratch::new(),
-        })
+        Self::load_with_opts(dir, mode, None)
+    }
+
+    /// Load with an explicit KV pool configuration (`None` = the model's
+    /// default: block size = one tile row group, pool sized for 32
+    /// full-window sessions, capped at [`Self::DEFAULT_POOL_WORDS`] per
+    /// arena so big artifacts don't eagerly allocate tens of GB — the
+    /// arenas are allocated up front, unlike the old lazy per-session
+    /// buffers). Small pools exercise admission/preemption;
+    /// `block_size = s_max` + sharing off reproduces the pre-pool flat-KV
+    /// layout.
+    pub fn load_with_opts(
+        dir: impl AsRef<Path>,
+        mode: KernelMode,
+        kv_cfg: Option<KvCacheConfig>,
+    ) -> anyhow::Result<Self> {
+        let model = ReferenceModel::load_with_mode(dir, mode)?;
+        let cfg = kv_cfg.unwrap_or_else(|| Self::default_kv_config(&model.meta));
+        let kv = KvStore::new(cfg, model.meta.n_layers, model.meta.d_model);
+        Ok(Self { model, sessions: HashMap::new(), scratch: Scratch::new(), kv })
+    }
+
+    /// Eager-arena budget for the *default* pool, in f32 words per arena
+    /// (64 Mi words = 256 MiB per arena, ×2 arenas). Explicit
+    /// [`KvCacheConfig`]s are taken verbatim.
+    pub const DEFAULT_POOL_WORDS: usize = 64 << 20;
+
+    /// The default pool for an artifact: 32 full-window sessions, capped
+    /// at the word budget but never below one full-window session (a
+    /// single max-length request must always be serveable).
+    fn default_kv_config(meta: &ArtifactMeta) -> KvCacheConfig {
+        let mut cfg = KvCacheConfig::for_model(meta.d_model, meta.s_max);
+        let words_per_block = meta.n_layers * cfg.block_size * meta.d_model;
+        let budget_blocks = (Self::DEFAULT_POOL_WORDS / words_per_block.max(1))
+            .max(cfg.blocks_for(meta.s_max))
+            .max(1);
+        cfg.n_blocks = cfg.n_blocks.min(budget_blocks);
+        cfg
     }
 
     pub fn model(&self) -> &ReferenceModel {
@@ -527,6 +626,11 @@ impl ReferenceBackend {
 
     pub fn meta(&self) -> &ArtifactMeta {
         &self.model.meta
+    }
+
+    /// The shared KV block pool (tests, benches, gauges).
+    pub fn kv(&self) -> &KvStore {
+        &self.kv
     }
 
     /// Live session count (tests: release bookkeeping).
@@ -558,38 +662,66 @@ impl NumericsBackend for ReferenceBackend {
             tokens.len(),
             m.s_max
         );
-        let (l, s_max, d) = (m.n_layers, m.s_max, m.d_model);
-        let Self { model, sessions, scratch } = self;
-        let mut sess = RefSession::new(l, s_max, d);
-        let logits = match model.mode {
+        // A resubmitted session id restarts from scratch — return its old
+        // blocks to the pool first.
+        if let Some(old) = self.sessions.remove(&session) {
+            self.kv.release_table(old.table);
+        }
+        let Self { model, sessions, scratch, kv } = self;
+        // Resolve as much of the prompt as possible from the prefix cache;
+        // the forward pass below computes every row (full logits, same
+        // bits) but only writes KV for the unshared positions.
+        let table = kv.build_prefill(tokens);
+        let mut sess = RefSession { table, pos: 0 };
+        let result = match model.mode {
             KernelMode::Fast => {
                 let rows: Vec<(usize, i32)> = tokens.iter().map(|&t| (0usize, t)).collect();
-                model.forward_rows(std::slice::from_mut(&mut sess), &rows, scratch)?
+                model.forward_rows(kv, std::slice::from_mut(&mut sess), &rows, scratch)
             }
             KernelMode::Naive => {
                 let mut logits = Vec::with_capacity(tokens.len() * model.meta.vocab);
+                let mut err = None;
                 for &t in tokens {
-                    logits.extend(model.step_one_naive(&mut sess, t)?);
+                    match model.step_one_naive(kv, &mut sess, t) {
+                        Ok(row) => logits.extend(row),
+                        Err(e) => {
+                            err = Some(e);
+                            break;
+                        }
+                    }
                 }
-                logits
+                match err {
+                    None => Ok(logits),
+                    Some(e) => Err(e),
+                }
             }
         };
-        // A resubmitted session id restarts from scratch.
-        sessions.insert(session, sess);
-        Ok(StepOutput { logits, rows: tokens.len() })
+        match result {
+            Ok(logits) => {
+                kv.seal_prefill(&sess.table, tokens);
+                sessions.insert(session, sess);
+                Ok(StepOutput { logits, rows: tokens.len() })
+            }
+            Err(e) => {
+                // release whatever the partial prefill held (shared prefix
+                // refcounts included) — a failed prefill leaks nothing
+                kv.release_table(sess.table);
+                Err(e)
+            }
+        }
     }
 
     fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
-        let Self { model, sessions, scratch } = self;
+        let Self { model, sessions, scratch, kv } = self;
         let sess = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
         model.meta.check_step(sess.pos, token)?;
         let logits = match model.mode {
             KernelMode::Fast => {
-                model.forward_rows(std::slice::from_mut(sess), &[(0, token)], scratch)?
+                model.forward_rows(kv, std::slice::from_mut(sess), &[(0, token)], scratch)?
             }
-            KernelMode::Naive => model.step_one_naive(sess, token)?,
+            KernelMode::Naive => model.step_one_naive(kv, sess, token)?,
         };
         Ok(StepOutput { logits, rows: 1 })
     }
@@ -600,8 +732,10 @@ impl NumericsBackend for ReferenceBackend {
     /// per session. Bit-identical to sequential [`Self::decode_step`]
     /// calls in the same order (each row's arithmetic touches only its own
     /// data); a per-session failure (unknown session, bad token, exhausted
-    /// window) occupies its slot as an `Err` without disturbing the rest
-    /// of the round.
+    /// window, starved block pool) occupies its slot as an `Err` without
+    /// disturbing the rest of the round. Pool-exhaustion slot failures are
+    /// conservative (worst-case demand, see the inline comment), unlike
+    /// the window/vocab checks which match sequential behaviour exactly.
     fn decode_batch(&mut self, steps: &[(SessionId, i32)]) -> anyhow::Result<BatchResults> {
         // The naive path has no batched kernel; duplicate session ids need
         // earlier steps visible to later ones. Both fall back to the
@@ -612,34 +746,51 @@ impl NumericsBackend for ReferenceBackend {
             return Ok(steps.iter().map(|&(sid, t)| self.decode_step(sid, t)).collect());
         }
 
-        let vocab = self.model.meta.vocab;
+        let Self { model, sessions, scratch, kv } = self;
+        let vocab = model.meta.vocab;
         let mut results: Vec<Option<anyhow::Result<StepOutput>>> =
             steps.iter().map(|_| None).collect();
         // Move each valid session out of the map for the batch (restored
         // below); invalid steps record their error and stay put. The
-        // checks (and error text) are exactly decode_step's, so batched
-        // and sequential rounds fail identically.
+        // window/vocab checks (and error text) are exactly decode_step's,
+        // so batched and sequential rounds fail identically on those. The
+        // per-slot pool check is *conservative*: each slot is charged its
+        // worst-case demand in step order, and two sharers of one tail
+        // block both count a CoW even though the first copy makes the
+        // second unnecessary — so under extreme pressure a slot may fail
+        // here that a sequential round would have served. The engine
+        // preempts using the same conservative sum before every round, so
+        // engine-driven batches never reach this backstop.
+        let mut free = kv.free_blocks();
         let mut batch_sessions: Vec<RefSession> = Vec::with_capacity(steps.len());
         let mut batch_slots: Vec<(usize, SessionId)> = Vec::with_capacity(steps.len());
         let mut rows: Vec<(usize, i32)> = Vec::with_capacity(steps.len());
         for (i, &(sid, token)) in steps.iter().enumerate() {
-            let Some(sess) = self.sessions.remove(&sid) else {
+            let Some(sess) = sessions.remove(&sid) else {
                 results[i] = Some(Err(anyhow::anyhow!("unknown session {sid} (prefill first)")));
                 continue;
             };
-            if let Err(err) = self.model.meta.check_step(sess.pos, token) {
+            if let Err(err) = model.meta.check_step(sess.pos, token) {
                 results[i] = Some(Err(err));
-                self.sessions.insert(sid, sess);
+                sessions.insert(sid, sess);
                 continue;
             }
+            let need = kv.grow_demand(&sess.table, (sess.pos + 1).saturating_sub(sess.table.len()));
+            if need > free {
+                results[i] = Some(Err(anyhow::anyhow!(
+                    "KV block pool exhausted: session {sid} needs {need} free blocks"
+                )));
+                sessions.insert(sid, sess);
+                continue;
+            }
+            free -= need;
             rows.push((batch_sessions.len(), token));
             batch_sessions.push(sess);
             batch_slots.push((i, sid));
         }
 
         if !rows.is_empty() {
-            let Self { model, sessions, scratch } = self;
-            let forward = model.forward_rows(&mut batch_sessions, &rows, scratch);
+            let forward = model.forward_rows(kv, &mut batch_sessions, &rows, scratch);
             // Restore sessions whatever happened (validation precedes any
             // mutation inside forward_rows, so an error leaves them
             // unchanged).
@@ -657,7 +808,27 @@ impl NumericsBackend for ReferenceBackend {
     }
 
     fn release(&mut self, session: SessionId) {
-        self.sessions.remove(&session);
+        if let Some(sess) = self.sessions.remove(&session) {
+            self.kv.release_table(sess.table);
+        }
+    }
+
+    fn context_window(&self) -> Option<usize> {
+        Some(self.model.meta.s_max)
+    }
+
+    fn kv_pool_stats(&self) -> Option<PoolStats> {
+        Some(self.kv.stats())
+    }
+
+    fn kv_append_demand(&self, session: SessionId) -> usize {
+        self.sessions.get(&session).map_or(0, |s| {
+            self.kv.grow_demand(&s.table, (s.pos + 1).saturating_sub(s.table.len()))
+        })
+    }
+
+    fn kv_admit_demand(&self, tokens: usize) -> Option<usize> {
+        Some(self.kv.config().blocks_for(tokens))
     }
 }
 
@@ -675,11 +846,18 @@ mod tests {
     }
 
     #[test]
-    fn session_layout_flat_per_layer() {
-        let sess = RefSession::new(3, 8, 4);
-        assert_eq!(sess.k.len(), 3 * 8 * 4);
-        assert_eq!(sess.v.len(), 3 * 8 * 4);
-        assert_eq!(sess.pos, 0);
+    fn session_kv_is_block_pooled() {
+        // the session layout is a block table, not a flat [s_max, d] buffer
+        let cfg = KvCacheConfig { block_size: 4, n_blocks: 8, prefix_sharing: true };
+        let mut kv = KvStore::new(cfg, 3, 8);
+        let mut t = kv.build_prefill(&[1, 2, 3, 4, 5]);
+        assert_eq!(t.len(), 0, "cold cache: nothing shared");
+        kv.grow(&mut t, 5).unwrap();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.blocks().len(), 2, "5 tokens at bs=4 span 2 blocks");
+        assert_eq!(kv.free_blocks(), 6);
+        kv.release_table(t);
+        assert_eq!(kv.free_blocks(), 8);
     }
 
     #[test]

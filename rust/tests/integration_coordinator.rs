@@ -21,7 +21,7 @@ fn mixed_workload_completes() {
     for i in 0..12 {
         let plen = 16 + (i * 37) % 200;
         let gen = 4 + (i * 13) % 24;
-        e.submit(vec![1; plen], gen);
+        e.submit(vec![1; plen], gen).expect("submit");
         expected_decode += gen as u64;
     }
     e.run_until_idle().unwrap();
@@ -38,14 +38,14 @@ fn batching_improves_simulated_throughput_vs_serial() {
     // must at least not make it worse).
     let single = {
         let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
-        e.submit(vec![1; 64], 16);
+        e.submit(vec![1; 64], 16).expect("submit");
         e.run_until_idle().unwrap();
         e.metrics.sim_time_ns
     };
     let batch4 = {
         let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
         for _ in 0..4 {
-            e.submit(vec![1; 64], 16);
+            e.submit(vec![1; 64], 16).expect("submit");
         }
         e.run_until_idle().unwrap();
         e.metrics.sim_time_ns
@@ -56,7 +56,7 @@ fn batching_improves_simulated_throughput_vs_serial() {
 #[test]
 fn npm_swaps_track_dispatches() {
     let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
-    e.submit(vec![1; 32], 8);
+    e.submit(vec![1; 32], 8).expect("submit");
     e.run_until_idle().unwrap();
     // 1 prefill (yields token 1) + 7 decode rounds (tokens 2..=8)
     assert_eq!(e.metrics.npm_swaps, 8);
@@ -66,7 +66,7 @@ fn npm_swaps_track_dispatches() {
 fn kv_balance_invariant_held_throughout() {
     let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
     for i in 0..6 {
-        e.submit(vec![1; 31 + i * 17], 12);
+        e.submit(vec![1; 31 + i * 17], 12).expect("submit");
     }
     while e.step().unwrap() {
         assert!(e.kv_imbalance() <= 2, "imbalance {} mid-serve", e.kv_imbalance());
@@ -101,7 +101,7 @@ fn per_request_isolation_of_outputs() {
     // given prompt must be deterministic.
     let run = |seed: i32| {
         let mut e = ServingEngine::new(cfg(ModelPreset::Llama1B)).unwrap();
-        let id = e.submit(vec![seed; 16], 8);
+        let id = e.submit(vec![seed; 16], 8).expect("submit");
         e.run_until_idle().unwrap();
         e.take_completion(id).unwrap().tokens
     };

@@ -32,7 +32,7 @@ fn prop_kv_positions_monotonic_under_random_ops() {
             match rng.below(4) {
                 0 => {
                     let tokens = rng.range(1, 50);
-                    if m.has_room(tokens) {
+                    if m.can_admit(tokens) {
                         m.prefill(next_id, tokens).map_err(|e| e.to_string())?;
                         mirror.insert(next_id, tokens);
                         next_id += 1;
@@ -40,7 +40,7 @@ fn prop_kv_positions_monotonic_under_random_ops() {
                 }
                 1 | 2 => {
                     if let Some(&id) = mirror.keys().next() {
-                        if m.has_room(1) {
+                        if m.can_append(id) {
                             let before = m.ctx_of(id).ok_or("live request lost")?;
                             m.append(id).map_err(|e| e.to_string())?;
                             let after = m.ctx_of(id).ok_or("live request lost")?;
@@ -136,7 +136,7 @@ fn prop_batcher_invariants_synthetic() {
             // keep prompt+gen well under the ctx budget so FCFS can't stall
             let prompt = rng.range(1, 120);
             let gen = rng.range(1, 24);
-            e.submit(vec![1; prompt], gen);
+            e.submit(vec![1; prompt], gen).map_err(|err| err.to_string())?;
         }
         let (done, failed) = check_batch_invariants(e, "synthetic")?;
         if done + failed != n as u64 {
@@ -164,7 +164,7 @@ fn prop_batcher_invariants_reference() {
         for _ in 0..n {
             let plen = rng.range(1, 6);
             let prompt: Vec<i32> = (0..plen).map(|_| rng.below(512) as i32).collect();
-            e.submit(prompt, rng.range(1, 3));
+            e.submit(prompt, rng.range(1, 3)).map_err(|err| err.to_string())?;
         }
         let (done, failed) = check_batch_invariants(e, "reference")?;
         if done + failed != n as u64 {

@@ -1,13 +1,18 @@
 //! Property-based invariants (SplitMix64 harness — proptest is unavailable
-//! offline). Coordinator invariants: routing, batching, KV state; plus the
-//! NoC packet-conservation and ISA-roundtrip properties under random
-//! programs.
+//! offline). Coordinator invariants: routing, batching, KV state; the
+//! paged KV block allocator (no leaks, no aliased writers, exact
+//! refcounts, preempt/readmit token equivalence); plus the NoC
+//! packet-conservation and ISA-roundtrip properties under random programs.
+
+use std::collections::HashMap;
 
 use leap::arch::{Coord, HwParams, Mesh, TileGeometry};
 use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
 use leap::isa::{assemble, disassemble, Cmd, Instruction, Opcode, Program, SelBits};
+use leap::kvcache::{BlockTable, KvCacheConfig, KvStore};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
+use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend};
 use leap::schedule::{KvPlacement, ShardLayout};
 use leap::testutil::{forall, Config, SplitMix64};
 
@@ -187,7 +192,7 @@ fn prop_engine_accounting() {
         for _ in 0..n {
             let plen = rng.range(1, 300);
             let gen = rng.range(1, 40);
-            e.submit(vec![1; plen], gen);
+            e.submit(vec![1; plen], gen).map_err(|err| err.to_string())?;
             expected += gen as u64;
         }
         e.run_until_idle().map_err(|e| e.to_string())?;
@@ -227,6 +232,235 @@ fn prop_selbits_count_consistent() {
         }
         if sel.active_count(w, h) != brute {
             return Err(format!("{sel:?} count mismatch"));
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 4 satellite: the paged-KV block allocator under random
+/// admit/append/release traffic.
+///
+/// - **No leaks**: free + used == total after every operation, and
+///   releasing every table drains the pool to exactly empty.
+/// - **Exact refcounts**: a block's ledger refcount equals the number of
+///   live tables referencing it — it hits zero exactly when the last
+///   sharer releases (that is when `used` drops).
+/// - **No aliased writers**: every table reads back exactly the rows its
+///   own token chain wrote. Any write through an aliased block (a missed
+///   copy-on-write) would corrupt a sharer's read-back.
+#[test]
+fn prop_block_pool_no_leak_no_alias_exact_refcounts() {
+    forall(Config::cases(40), |rng| {
+        let bs = rng.range(1, 4);
+        let n_blocks = rng.range(8, 40);
+        let n_layers = rng.range(1, 2);
+        let d = 4usize;
+        let mut kv = KvStore::new(
+            KvCacheConfig { block_size: bs, n_blocks, prefix_sharing: rng.below(4) != 0 },
+            n_layers,
+            d,
+        );
+        // the deterministic row value a position of a token chain holds
+        fn val(pos: usize, tok: i32, layer: usize) -> f32 {
+            tok as f32 * 1000.0 + pos as f32 + layer as f32 * 0.25
+        }
+        let mut live: Vec<(BlockTable, Vec<i32>)> = Vec::new();
+
+        for _ in 0..rng.range(8, 40) {
+            match rng.below(4) {
+                // admit: prefill a prompt from a tiny alphabet (prefix
+                // collisions are the point)
+                0 | 1 => {
+                    let len = rng.range(1, 8);
+                    let toks: Vec<i32> = (0..len).map(|_| rng.below(2) as i32).collect();
+                    let mut t = kv.build_prefill(&toks);
+                    let new = toks.len() - t.len();
+                    if kv.grow_demand(&t, new) > kv.free_blocks() {
+                        kv.release_table(t); // pool full: give back the shared prefix
+                        continue;
+                    }
+                    kv.grow(&mut t, new).map_err(|e| e.to_string())?;
+                    for pos in t.shared_prefix()..toks.len() {
+                        let b = t.blocks()[pos / bs];
+                        for layer in 0..n_layers {
+                            let row = vec![val(pos, toks[pos], layer); d];
+                            kv.write_row(b, layer, pos % bs, &row, &row);
+                        }
+                    }
+                    kv.seal_prefill(&t, &toks);
+                    live.push((t, toks));
+                }
+                // append one decode token to a random live table (CoW path)
+                2 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (t, toks) = &mut live[i];
+                    if kv.grow_demand(t, 1) > kv.free_blocks() {
+                        continue;
+                    }
+                    kv.grow(t, 1).map_err(|e| e.to_string())?;
+                    let pos = toks.len();
+                    let tok = 100 + rng.below(50) as i32; // disjoint from prompts
+                    toks.push(tok);
+                    let b = t.blocks()[pos / bs];
+                    for layer in 0..n_layers {
+                        let row = vec![val(pos, tok, layer); d];
+                        kv.write_row(b, layer, pos % bs, &row, &row);
+                    }
+                }
+                // release a random table
+                _ => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (t, _) = live.swap_remove(i);
+                    kv.release_table(t);
+                }
+            }
+
+            // -- invariants after every operation -------------------------
+            let s = kv.stats();
+            if s.blocks_free + s.blocks_used != s.blocks_total {
+                return Err(format!(
+                    "conservation broken: {} free + {} used != {} total",
+                    s.blocks_free, s.blocks_used, s.blocks_total
+                ));
+            }
+            let mut holders: HashMap<u32, u32> = HashMap::new();
+            for (t, _) in &live {
+                for &b in t.blocks() {
+                    *holders.entry(b).or_default() += 1;
+                }
+            }
+            if holders.len() != s.blocks_used {
+                return Err(format!(
+                    "leak: ledger says {} blocks used, live tables hold {}",
+                    s.blocks_used,
+                    holders.len()
+                ));
+            }
+            for (&b, &n) in &holders {
+                if kv.ledger().refcount(b) != n {
+                    return Err(format!(
+                        "refcount of block {b} is {} but {n} tables hold it",
+                        kv.ledger().refcount(b)
+                    ));
+                }
+            }
+            for (t, toks) in &live {
+                for (pos, &tok) in toks.iter().enumerate() {
+                    let b = t.blocks()[pos / bs];
+                    for layer in 0..n_layers {
+                        let got = kv.k_block(b, layer)[(pos % bs) * d];
+                        let want = val(pos, tok, layer);
+                        if got != want {
+                            return Err(format!(
+                                "aliased writer: table row {pos} holds {got}, chain wrote {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        for (t, _) in live.drain(..) {
+            kv.release_table(t);
+        }
+        if kv.stats().blocks_used != 0 {
+            return Err(format!("{} blocks leaked after releasing all tables", kv.stats().blocks_used));
+        }
+        if kv.ledger().cached_prefix_blocks() != 0 {
+            return Err(format!(
+                "{} prefix-cache entries survived a full drain",
+                kv.ledger().cached_prefix_blocks()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 4 satellite: random admit/preempt/readmit schedules on the paged
+/// backend decode exactly the tokens of the unpooled flat-KV path.
+/// Preemption = release the session's blocks; readmission = re-prefill
+/// `prompt ++ generated` (the engine's recompute discipline).
+#[test]
+fn prop_preempt_readmit_token_equivalence() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref");
+    forall(Config::cases(3), |rng| {
+        const NSESS: usize = 3;
+        const STEPS: usize = 8; // tokens per session, prefill token included
+        let bs = rng.range(2, 6);
+        let mut paged = ReferenceBackend::load_with_opts(
+            &dir,
+            KernelMode::Fast,
+            Some(KvCacheConfig { block_size: bs, n_blocks: 64, prefix_sharing: true }),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut flat = ReferenceBackend::load_with_opts(
+            &dir,
+            KernelMode::Fast,
+            Some(KvCacheConfig { block_size: 128, n_blocks: NSESS, prefix_sharing: false }),
+        )
+        .map_err(|e| e.to_string())?;
+        let v = paged.vocab();
+
+        // shared random prefix + distinct random tails
+        let prefix: Vec<i32> =
+            (0..rng.range(2, 8)).map(|_| rng.below(512) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..NSESS)
+            .map(|_| {
+                let mut p = prefix.clone();
+                p.extend((0..rng.range(1, 4)).map(|_| rng.below(512) as i32));
+                p
+            })
+            .collect();
+
+        // the flat oracle: straight greedy decode, never interrupted
+        let mut want: Vec<Vec<i32>> = Vec::new();
+        for (s, p) in prompts.iter().enumerate() {
+            let out = flat.prefill(s as u64, p).map_err(|e| e.to_string())?;
+            let mut toks = vec![argmax_row(&out.logits, p.len() - 1, v) as i32];
+            while toks.len() < STEPS {
+                let last = *toks.last().unwrap();
+                let out = flat.decode_step(s as u64, last).map_err(|e| e.to_string())?;
+                toks.push(argmax_row(&out.logits, 0, v) as i32);
+            }
+            want.push(toks);
+        }
+
+        // the paged side: random interleaving of decode / preempt / readmit
+        let mut got: Vec<Vec<i32>> = vec![Vec::new(); NSESS];
+        let mut resident = [false; NSESS];
+        for _ in 0..2000 {
+            if got.iter().all(|g| g.len() >= STEPS) {
+                break;
+            }
+            let s = rng.below(NSESS as u64) as usize;
+            if got[s].len() >= STEPS {
+                continue;
+            }
+            if !resident[s] {
+                // (re)admit: re-prefill prompt ++ generated in one batch
+                let mut toks = prompts[s].clone();
+                toks.extend_from_slice(&got[s]);
+                let out = paged.prefill(s as u64, &toks).map_err(|e| e.to_string())?;
+                got[s].push(argmax_row(&out.logits, toks.len() - 1, v) as i32);
+                resident[s] = true;
+            } else if rng.below(4) == 0 {
+                paged.release(s as u64); // preempt
+                resident[s] = false;
+            } else {
+                let last = *got[s].last().unwrap();
+                let out = paged.decode_step(s as u64, last).map_err(|e| e.to_string())?;
+                got[s].push(argmax_row(&out.logits, 0, v) as i32);
+            }
+        }
+
+        if got != want {
+            return Err(format!("preempt/readmit diverged:\n got {got:?}\nwant {want:?}"));
         }
         Ok(())
     });
