@@ -26,7 +26,7 @@ use leap::kvcache::KvCacheConfig;
 use leap::mapping::{paper_mapping, CostModel};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
-use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend};
+use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend, WorkerPool};
 use leap::schedule::{decode_phases, prefill_phases};
 use leap::sim::AnalyticalSim;
 
@@ -53,6 +53,46 @@ fn decode_ns_per_token(mode: KernelMode, tokens: usize, samples: usize) -> f64 {
         best = best.min(t0.elapsed().as_nanos() as f64 / tokens as f64);
     }
     best
+}
+
+/// Best-of-`samples` single-session fast-path decode through an explicitly
+/// sized worker pool (`None` = the backend default: LEAP_THREADS /
+/// available_parallelism). Returns `(ns_per_token, pool_dispatches_per_token)`
+/// of the best sample — the dispatch counter is the witness that all
+/// parallelism flows through the resident pool (zero spawns after load).
+fn decode_ns_per_token_pooled(threads: Option<usize>, tokens: usize, samples: usize) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut best_disp = 0f64;
+    for _ in 0..samples {
+        let mut b = match threads {
+            Some(t) => ReferenceBackend::load_with_pool(
+                fixture_dir(),
+                KernelMode::Fast,
+                None,
+                WorkerPool::with_threads(t),
+            )
+            .expect("fixture loads"),
+            None => {
+                ReferenceBackend::load_with_mode(fixture_dir(), KernelMode::Fast)
+                    .expect("fixture loads")
+            }
+        };
+        b.prefill(1, &fixture_prompt(1)).expect("prefill");
+        let d0 = b.worker_pool_stats().map_or(0, |s| s.dispatches);
+        let mut tok = 3i32;
+        let t0 = Instant::now();
+        for _ in 0..tokens {
+            let out = b.decode_step(1, tok).expect("decode");
+            tok = argmax_row(&out.logits, 0, b.vocab()) as i32;
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / tokens as f64;
+        if ns < best {
+            best = ns;
+            let d1 = b.worker_pool_stats().map_or(0, |s| s.dispatches);
+            best_disp = d1.saturating_sub(d0) as f64 / tokens as f64;
+        }
+    }
+    (best, best_disp)
 }
 
 /// Best-of-`samples` cost of one `decode_batch` round over `nsessions`
@@ -118,11 +158,15 @@ fn kv_pool_pressure_report(smoke: bool) -> Metrics {
         m.kv_peak_blocks_used, m.kv_blocks_total, m.kv_shared_blocks
     );
     println!(
-        "prefix sharing          {:.1}% hit rate ({}/{} probes)   CoW copies {}\n",
+        "prefix sharing          {:.1}% hit rate ({}/{} probes)   CoW copies {}",
         100.0 * m.kv_prefix_hit_rate(),
         m.kv_prefix_hits,
         m.kv_prefix_lookups,
         m.kv_cow_copies
+    );
+    println!(
+        "worker pool             {} lanes, {} dispatches ({} parks / {} wakes)\n",
+        m.pool_threads, m.pool_dispatches, m.pool_parks, m.pool_wakes
     );
     m
 }
@@ -131,11 +175,22 @@ fn kv_pool_pressure_report(smoke: bool) -> Metrics {
 /// machine-readable JSON out.
 fn decode_throughput_report(smoke: bool) {
     println!("=== reference-backend decode throughput (tiny_ref) ===\n");
-    let (tokens, rounds, samples) = if smoke { (24, 16, 2) } else { (96, 64, 5) };
+    // Smoke keeps 3 best-of samples (not 2): the smoke numbers feed the
+    // CI regression gate across heterogeneous shared runners, so the
+    // best-of estimate needs some noise rejection.
+    let (tokens, rounds, samples) = if smoke { (24, 16, 3) } else { (96, 64, 5) };
 
     let naive_ns = decode_ns_per_token(KernelMode::Naive, tokens, samples);
-    let fast_ns = decode_ns_per_token(KernelMode::Fast, tokens, samples);
+    let (fast_ns, disp_per_tok) = decode_ns_per_token_pooled(None, tokens, samples);
+    // Single-lane pool: the fused pipeline with all parallelism off. A
+    // conservative stand-in for the pre-PR scoped-thread baseline — on
+    // this model the old per-call threshold (1 << 21 MACs) never spawned,
+    // so pre-PR fast was single-threaded AND unfused, i.e. no faster than
+    // this.
+    let (serial_ns, _) = decode_ns_per_token_pooled(Some(1), tokens, samples);
     let speedup = naive_ns / fast_ns;
+    let pool_speedup = serial_ns / fast_ns;
+    let pool_threads = WorkerPool::default_threads();
     println!(
         "single-session decode   naive {:>10}/tok ({:>9.0} tok/s)",
         Stats::fmt_ns(naive_ns),
@@ -145,6 +200,14 @@ fn decode_throughput_report(smoke: bool) {
         "single-session decode   fast  {:>10}/tok ({:>9.0} tok/s)   speedup {speedup:.2}x",
         Stats::fmt_ns(fast_ns),
         1e9 / fast_ns
+    );
+    println!(
+        "worker pool             {pool_threads} lanes, {disp_per_tok:.1} dispatches/token \
+         (0 thread spawns after load)"
+    );
+    println!(
+        "pool vs single lane     1-lane fused {:>10}/tok → pooled speedup {pool_speedup:.2}x",
+        Stats::fmt_ns(serial_ns)
     );
 
     let b1_ns = batch_ns_per_round(1, rounds, samples);
@@ -164,18 +227,27 @@ fn decode_throughput_report(smoke: bool) {
     let kv = kv_pool_pressure_report(smoke);
     let json = format!(
         "{{\n  \"bench\": \"hotpath_decode\",\n  \"fixture\": \"tiny_ref\",\n  \
+         \"provenance\": \"measured\",\n  \
          \"smoke\": {smoke},\n  \"decode_tokens\": {tokens},\n  \"samples\": {samples},\n  \
-         \"naive_baseline\": \"paged-kv gather (semantics changed with the pool PR; \
-         not comparable to pre-pool records)\",\n  \
+         \"naive_baseline\": \"retained pre-optimisation scalar path (in-place paged reads)\",\n  \
+         \"serial_baseline\": \"single-lane pool: fused pipeline, parallelism off — an upper \
+         bound on the pre-PR scoped-thread fast path, which was single-threaded AND unfused \
+         on this model\",\n  \
          \"naive_ns_per_token\": {naive_ns:.1},\n  \"naive_tokens_per_s\": {:.1},\n  \
          \"fast_ns_per_token\": {fast_ns:.1},\n  \"fast_tokens_per_s\": {:.1},\n  \
          \"speedup_fast_over_naive\": {speedup:.3},\n  \
+         \"serial_lane_ns_per_token\": {serial_ns:.1},\n  \
+         \"speedup_pool_over_single_lane\": {pool_speedup:.3},\n  \
+         \"pool_threads\": {pool_threads},\n  \
+         \"pool_dispatches_per_token\": {disp_per_tok:.1},\n  \
          \"batch1_ns_per_round\": {b1_ns:.1},\n  \"batch8_ns_per_round\": {b8_ns:.1},\n  \
          \"batch8_over_batch1\": {sublin:.3},\n  \"batch8_tokens_per_s\": {:.1},\n  \
          \"kv_block_size\": {},\n  \"kv_blocks_total\": {},\n  \
          \"kv_peak_blocks_used\": {},\n  \"kv_prefix_hit_rate\": {:.3},\n  \
          \"kv_prefix_lookups\": {},\n  \"kv_prefix_hits\": {},\n  \
-         \"kv_cow_copies\": {},\n  \"kv_preemptions\": {}\n}}\n",
+         \"kv_cow_copies\": {},\n  \"kv_preemptions\": {},\n  \
+         \"engine_pool_dispatches\": {},\n  \"engine_pool_parks\": {},\n  \
+         \"engine_pool_wakes\": {}\n}}\n",
         1e9 / naive_ns,
         1e9 / fast_ns,
         8.0 * 1e9 / b8_ns,
@@ -187,23 +259,21 @@ fn decode_throughput_report(smoke: bool) {
         kv.kv_prefix_hits,
         kv.kv_cow_copies,
         kv.preemptions,
+        kv.pool_dispatches,
+        kv.pool_parks,
+        kv.pool_wakes,
     );
-    let override_path = std::env::var("BENCH_HOTPATH_JSON").ok();
-    let path = override_path.clone().unwrap_or_else(|| "BENCH_hotpath.json".to_string());
+    // Written to the crate dir (gitignored) or an explicit override —
+    // never to the repo root: the root BENCH_hotpath.json is the
+    // *committed* regression-gate baseline, advanced only by an explicit
+    // copy (see README), so a local bench run can never silently clobber
+    // it into the next commit.
+    let path = std::env::var("BENCH_HOTPATH_JSON")
+        .ok()
+        .unwrap_or_else(|| "BENCH_hotpath.json".to_string());
     match std::fs::write(&path, &json) {
         Ok(()) => println!("wrote {path}"),
         Err(err) => eprintln!("could not write {path}: {err}"),
-    }
-    // Default destination only: also mirror to the workspace root (the
-    // bench's CWD is the crate dir, but perf tooling typically looks from
-    // the repo root). An explicit BENCH_HOTPATH_JSON is authoritative.
-    if override_path.is_none() {
-        let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
-        if let Some(root) = manifest.parent() {
-            if root.join("Cargo.toml").is_file() {
-                let _ = std::fs::write(root.join("BENCH_hotpath.json"), &json);
-            }
-        }
     }
 }
 

@@ -183,6 +183,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             m.preemptions
         );
     }
+    // Naive-mode (and LEAP_THREADS=1) backends hold a lane-less stub pool
+    // that never dispatches — only report a pool that can actually engage.
+    if m.pool_threads > 1 || m.pool_dispatches > 0 {
+        println!(
+            "worker pool     : {} lanes, {} tile dispatches ({} parks / {} wakes; \
+             0 spawns after load)",
+            m.pool_threads, m.pool_dispatches, m.pool_parks, m.pool_wakes
+        );
+    }
     Ok(0)
 }
 

@@ -558,6 +558,9 @@ impl ServingEngine {
             if let Some(stats) = backend.kv_pool_stats() {
                 self.metrics.observe_kv_pool(&stats);
             }
+            if let Some(stats) = backend.worker_pool_stats() {
+                self.metrics.observe_worker_pool(&stats);
+            }
         }
 
         self.metrics.host_time_ns += host_t0.elapsed().as_nanos() as u64;

@@ -43,6 +43,18 @@ pub struct Metrics {
     pub kv_prefix_hits: u64,
     /// Copy-on-write block copies performed.
     pub kv_cow_copies: u64,
+
+    // --- worker-pool gauges (zero when the backend has no resident pool) -
+    /// Pool lanes (resident workers + the dispatching thread).
+    pub pool_threads: usize,
+    /// Parallel tile dispatches since backend load (serial fallbacks never
+    /// dispatch). Nonzero with zero thread spawns after load is the
+    /// persistent-pool contract.
+    pub pool_dispatches: u64,
+    /// Worker park transitions (spin budget exhausted → condvar block).
+    pub pool_parks: u64,
+    /// Parked-worker wake transitions.
+    pub pool_wakes: u64,
 }
 
 impl Metrics {
@@ -101,6 +113,15 @@ impl Metrics {
         self.kv_prefix_lookups = s.prefix_lookups;
         self.kv_prefix_hits = s.prefix_hits;
         self.kv_cow_copies = s.cow_copies;
+    }
+
+    /// Fold one worker-pool snapshot into the gauges (counters are
+    /// cumulative in the pool, so overwrite).
+    pub fn observe_worker_pool(&mut self, s: &crate::runtime::WorkerPoolStats) {
+        self.pool_threads = s.threads;
+        self.pool_dispatches = s.dispatches;
+        self.pool_parks = s.parks;
+        self.pool_wakes = s.wakes;
     }
 
     /// Fraction of prefix-cache probes that hit (0 when never probed).
@@ -166,6 +187,31 @@ mod tests {
         assert_eq!(m.kv_peak_blocks_used, 14);
         assert_eq!(m.kv_cow_copies, 2);
         assert!((m.kv_prefix_hit_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_pool_gauges_fold_snapshots() {
+        use crate::runtime::WorkerPoolStats;
+        let mut m = Metrics::default();
+        assert_eq!(m.pool_threads, 0);
+        m.observe_worker_pool(&WorkerPoolStats {
+            threads: 4,
+            workers: 3,
+            dispatches: 12,
+            parks: 2,
+            wakes: 2,
+        });
+        m.observe_worker_pool(&WorkerPoolStats {
+            threads: 4,
+            workers: 3,
+            dispatches: 40,
+            parks: 5,
+            wakes: 5,
+        });
+        assert_eq!(m.pool_threads, 4);
+        assert_eq!(m.pool_dispatches, 40, "cumulative counter: overwrite, not add");
+        assert_eq!(m.pool_parks, 5);
+        assert_eq!(m.pool_wakes, 5);
     }
 
     #[test]

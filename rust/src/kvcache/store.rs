@@ -142,7 +142,7 @@ impl KvStore {
     }
 
     /// The whole K arena. Paged kernels index it directly with the offsets
-    /// produced by [`Self::fill_starts`].
+    /// produced by [`Self::append_starts`].
     pub fn k_arena(&self) -> &[f32] {
         &self.k
     }
@@ -164,10 +164,11 @@ impl KvStore {
         &self.v[o..o + self.cfg.block_size * self.d]
     }
 
-    /// Fill `starts` with the arena offsets of `table`'s blocks at `layer`
-    /// (valid for both arenas — kernels add `row * d` per position).
-    pub fn fill_starts(&self, table: &BlockTable, layer: usize, starts: &mut Vec<usize>) {
-        starts.clear();
+    /// Append the arena offsets of `table`'s blocks at `layer` to `starts`
+    /// (valid for both arenas — kernels add `row * d` per position). One
+    /// flat buffer carries every session of a batched forward pass, each
+    /// session recording its own offset run; callers clear between layers.
+    pub fn append_starts(&self, table: &BlockTable, layer: usize, starts: &mut Vec<usize>) {
         starts.extend(table.blocks.iter().map(|&b| self.off(b, layer)));
     }
 

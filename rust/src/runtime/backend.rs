@@ -104,6 +104,15 @@ pub trait NumericsBackend {
     fn kv_admit_demand(&self, _tokens: usize) -> Option<usize> {
         None
     }
+
+    /// Snapshot of the backend's resident worker pool (`None` = this
+    /// backend computes inline / has no persistent pool). Dispatch and
+    /// park/wake counters feed the serving metrics; the dispatch counter
+    /// is also the observable witness that the hot path never spawns
+    /// threads after load.
+    fn worker_pool_stats(&self) -> Option<super::pool::WorkerPoolStats> {
+        None
+    }
 }
 
 /// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.

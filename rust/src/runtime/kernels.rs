@@ -14,51 +14,57 @@
 //!   the same inputs produces the same bits on every code path — the
 //!   bitwise `decode_batch` ≡ sequential `decode_step` contract rests on
 //!   this.
-//! - **Weight-stationary multi-row GEMM.** [`gemm_t`] iterates weight rows
-//!   in the *outer* loop: one pass over `W` serves every activation row,
-//!   which is what makes batched decode sublinear in batch size.
-//! - **`std::thread::scope` parallelism, zero deps.** Large matvecs split
-//!   the output columns, large GEMMs split the activation rows, and large
-//!   attention contexts split the heads — all gated behind a work
-//!   threshold so tiny models never pay a spawn.
+//! - **Weight-stationary multi-row GEMM.** [`gemm_t`]/[`gemm_q8`] iterate
+//!   weight rows in the *outer* loop: one pass over `W` serves every
+//!   activation row, which is what makes batched decode sublinear in batch
+//!   size.
+//! - **Persistent-pool parallelism, zero deps.** Every parallel kernel
+//!   dispatches fixed-ownership tile bands onto the backend's resident
+//!   [`WorkerPool`] (`runtime::pool`) — no thread is ever spawned on the
+//!   hot path. Small calls stay serial behind the pool's work threshold,
+//!   so tiny models never pay a dispatch.
+//! - **Fused per-layer pipeline.** [`gemm_q8_qkv`] computes all three
+//!   attention projections in one pass over the activations,
+//!   [`gemm_q8_swiglu`] streams the gate and up matrices side by side and
+//!   applies SiLU in-register, [`add_residual_rmsnorm`] folds the residual
+//!   add into the next norm's sweep, and [`attention_rows_paged`] is a
+//!   flash-style online-softmax kernel that walks `BlockTable` blocks in
+//!   place (no gathered K/V copy, no score buffer). A decode layer is a
+//!   handful of pool dispatches instead of a dozen fork-join barriers.
 //! - **No per-token tensor allocation.** [`Scratch`] owns every
 //!   intermediate tensor buffer and only ever grows; [`RopeTable`]
 //!   precomputes the rotary sin/cos so the steady-state decode loop does
 //!   no trig.
+//!
+//! Every fused kernel preserves the per-element expression of its unfused
+//! ancestors exactly (same operand order, same reduction order), so row
+//! `i` of any multi-row call is bit-identical to a batch containing only
+//! row `i` — fusion never moves the numerics. The one deliberate
+//! arithmetic change of this layer is [`attention_rows_paged`]'s online
+//! softmax (a running max/denominator instead of the two-pass
+//! max-subtract): it is deterministic and layout/band invariant, but
+//! differs from the two-pass oracle in final-bit rounding, which the
+//! parity tests treat as a ≤1e-5 comparison rather than a bitwise one.
 //!
 //! The [`naive`] submodule retains the pre-optimisation scalar kernels
 //! verbatim. They are the parity oracle for the fast path
 //! (`tests/integration_kernels.rs`) and the baseline the decode-throughput
 //! bench (`benches/bench_hotpath.rs`) measures speedups against.
 
+use std::ops::Range;
+
+use super::pool::{SharedSliceMut, WorkerPool};
+
 /// RMSNorm epsilon (matches `python/compile/kernels/ref.py`).
 pub const RMS_EPS: f32 = 1e-5;
 /// Rotary embedding base (matches the python oracle).
 pub const ROPE_THETA: f64 = 10000.0;
 
-/// Minimum multiply-accumulate count before a kernel spawns threads; below
-/// this, scoped-thread setup costs more than it saves (a tiny-model decode
-/// matvec is ~131K MACs and must stay on one core).
-const PAR_MIN_WORK: usize = 1 << 21;
-/// Upper bound on worker threads per kernel call.
-const MAX_THREADS: usize = 8;
-
-/// Worker-thread count for a kernel invocation of `work` multiply-adds:
-/// 1 under the threshold, else enough threads to give each at least
-/// `PAR_MIN_WORK`, capped by the machine and [`MAX_THREADS`].
-fn threads_for(work: usize) -> usize {
-    if work < 2 * PAR_MIN_WORK {
-        return 1;
-    }
-    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    avail.min(MAX_THREADS).min(work / PAR_MIN_WORK).max(1)
-}
-
 /// Dot product with 8 fixed accumulator lanes reduced in index order.
 ///
 /// The lane structure gives the auto-vectoriser independent dependency
 /// chains; the fixed reduction order makes the result a pure function of
-/// the inputs (same bits from `matvec_t`, `gemm_t`, serial or threaded).
+/// the inputs (same bits from `matvec_t`, `gemm_t`, serial or pooled).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -78,28 +84,26 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// `y = x @ W` for one activation row against a *transposed* weight matrix
-/// `wt: [n, k]` (row `n` of `wt` is output column `n`). Splits the output
-/// columns across scoped threads when the work is large; each column's
-/// arithmetic is identical either way.
-pub fn matvec_t(x: &[f32], wt: &[f32], k: usize, n: usize, y: &mut [f32]) {
+/// `wt: [n, k]` (row `n` of `wt` is output column `n`). Large calls split
+/// the output columns across pool lanes; each column's arithmetic is
+/// identical either way.
+pub fn matvec_t(pool: &WorkerPool, x: &[f32], wt: &[f32], k: usize, n: usize, y: &mut [f32]) {
     debug_assert_eq!(x.len(), k);
     debug_assert_eq!(wt.len(), k * n);
     debug_assert_eq!(y.len(), n);
-    let t = threads_for(k * n);
-    if t <= 1 {
+    let lanes = pool.lanes_for(k * n);
+    if lanes <= 1 {
         for (yv, wrow) in y.iter_mut().zip(wt.chunks_exact(k)) {
             *yv = dot(x, wrow);
         }
         return;
     }
-    let band = n.div_ceil(t);
-    std::thread::scope(|s| {
-        for (yb, wb) in y.chunks_mut(band).zip(wt.chunks(band * k)) {
-            s.spawn(move || {
-                for (yv, wrow) in yb.iter_mut().zip(wb.chunks_exact(k)) {
-                    *yv = dot(x, wrow);
-                }
-            });
+    let out = SharedSliceMut::new(y);
+    pool.run_tiles_bounded(0..n, lanes, |cols| {
+        // SAFETY: tile bands are disjoint column ranges.
+        let yb = unsafe { out.borrow_range(cols.clone()) };
+        for (yv, nn) in yb.iter_mut().zip(cols) {
+            *yv = dot(x, &wt[nn * k..(nn + 1) * k]);
         }
     });
 }
@@ -111,17 +115,26 @@ pub fn matvec_t(x: &[f32], wt: &[f32], k: usize, n: usize, y: &mut [f32]) {
 ///
 /// Row `r` of the result is bit-identical to `matvec_t` on row `r` alone:
 /// each output element is one [`dot`] call either way. Large calls split
-/// the activation rows across scoped threads (each worker keeps the
-/// weight-stationary inner structure over its row band).
-pub fn gemm_t(x: &[f32], wt: &[f32], rows: usize, k: usize, n: usize, y: &mut [f32]) {
+/// the output *columns* across pool lanes (every lane keeps the
+/// weight-stationary inner structure over its column band, and the full
+/// weight stream is paid once across the pool, not once per lane).
+pub fn gemm_t(
+    pool: &WorkerPool,
+    x: &[f32],
+    wt: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    y: &mut [f32],
+) {
     debug_assert_eq!(x.len(), rows * k);
     debug_assert_eq!(wt.len(), k * n);
     debug_assert_eq!(y.len(), rows * n);
     if rows == 1 {
-        return matvec_t(x, wt, k, n, y);
+        return matvec_t(pool, x, wt, k, n, y);
     }
-    let t = threads_for(rows * k * n).min(rows);
-    if t <= 1 {
+    let lanes = pool.lanes_for(rows * k * n);
+    if lanes <= 1 {
         for (nn, wrow) in wt.chunks_exact(k).enumerate() {
             for (r, xrow) in x.chunks_exact(k).enumerate() {
                 y[r * n + nn] = dot(xrow, wrow);
@@ -129,16 +142,14 @@ pub fn gemm_t(x: &[f32], wt: &[f32], rows: usize, k: usize, n: usize, y: &mut [f
         }
         return;
     }
-    let band = rows.div_ceil(t);
-    std::thread::scope(|s| {
-        for (yb, xb) in y.chunks_mut(band * n).zip(x.chunks(band * k)) {
-            s.spawn(move || {
-                for (nn, wrow) in wt.chunks_exact(k).enumerate() {
-                    for (r, xrow) in xb.chunks_exact(k).enumerate() {
-                        yb[r * n + nn] = dot(xrow, wrow);
-                    }
-                }
-            });
+    let out = SharedSliceMut::new(y);
+    pool.run_tiles_bounded(0..n, lanes, |cols| {
+        for nn in cols {
+            let wrow = &wt[nn * k..(nn + 1) * k];
+            for (r, xrow) in x.chunks_exact(k).enumerate() {
+                // SAFETY: column `nn` is owned exclusively by this band.
+                unsafe { out.write(r * n + nn, dot(xrow, wrow)) };
+            }
         }
     });
 }
@@ -232,39 +243,43 @@ fn matvec_q8_band(x: &[f32], m: &QMat, n0: usize, y: &mut [f32]) {
 }
 
 /// `y = x @ W` for one activation row against a quantised matrix,
-/// streaming the int8 cells directly. Column-band threaded like
+/// streaming the int8 cells directly. Column-banded across pool lanes like
 /// [`matvec_t`]; per-column arithmetic is identical on every path.
-pub fn matvec_q8(x: &[f32], m: &QMat, y: &mut [f32]) {
+pub fn matvec_q8(pool: &WorkerPool, x: &[f32], m: &QMat, y: &mut [f32]) {
     debug_assert_eq!(x.len(), m.k);
     debug_assert_eq!(y.len(), m.n);
-    let t = threads_for(m.k * m.n);
-    if t <= 1 {
+    let lanes = pool.lanes_for(m.k * m.n);
+    if lanes <= 1 {
         return matvec_q8_band(x, m, 0, y);
     }
-    let band = m.n.div_ceil(t);
-    std::thread::scope(|s| {
-        for (bi, yb) in y.chunks_mut(band).enumerate() {
-            s.spawn(move || matvec_q8_band(x, m, bi * band, yb));
-        }
+    let out = SharedSliceMut::new(y);
+    pool.run_tiles_bounded(0..m.n, lanes, |cols| {
+        // SAFETY: tile bands are disjoint column ranges.
+        let yb = unsafe { out.borrow_range(cols.clone()) };
+        matvec_q8_band(x, m, cols.start, yb);
     });
 }
 
-/// One row band of [`gemm_q8`]: all columns for the rows in `xs`/`yb`.
-/// Weight-stationary — the column (weight row + scale column) is the
-/// outer loop, so the int8 stream is paid once for every activation row.
-fn gemm_q8_rows(xs: &[f32], m: &QMat, yb: &mut [f32]) {
+/// Columns `cols` of the weight-stationary q8 GEMM `y[rows, n] = x @ W`:
+/// the column (weight row + scale column) is the outer loop, so the int8
+/// stream is paid once for every activation row. Writes only the
+/// `(r, nn)` cells with `nn ∈ cols` — the caller hands each band a
+/// disjoint column range.
+fn gemm_q8_cols(x: &[f32], m: &QMat, rows: usize, cols: Range<usize>, out: &SharedSliceMut<f32>) {
     let (k, n, xb) = (m.k, m.n, m.xb);
+    debug_assert_eq!(x.len(), rows * k);
     let nt = n / xb;
-    for nn in 0..n {
+    for nn in cols {
         let wrow = &m.q[nn * k..(nn + 1) * k];
         let scol = nn / xb;
-        for (r, xrow) in xs.chunks_exact(k).enumerate() {
+        for (r, xrow) in x.chunks_exact(k).enumerate() {
             let mut acc = 0f32;
             for (kt, xtile) in xrow.chunks(xb).enumerate() {
                 let partial = dot_q8(xtile, &wrow[kt * xb..kt * xb + xtile.len()]);
                 acc += m.s[kt * nt + scol] * partial;
             }
-            yb[r * n + nn] = acc;
+            // SAFETY: column `nn` is owned exclusively by this band.
+            unsafe { out.write(r * n + nn, acc) };
         }
     }
 }
@@ -272,23 +287,102 @@ fn gemm_q8_rows(xs: &[f32], m: &QMat, yb: &mut [f32]) {
 /// Weight-stationary multi-row GEMM over a quantised matrix:
 /// `y[rows, n] = x[rows, k] @ W`. Row `r` is bit-identical to
 /// [`matvec_q8`] on row `r` alone (same per-element tile order). Large
-/// calls split the activation rows across scoped threads.
-pub fn gemm_q8(x: &[f32], m: &QMat, rows: usize, y: &mut [f32]) {
+/// calls split the output columns across pool lanes.
+pub fn gemm_q8(pool: &WorkerPool, x: &[f32], m: &QMat, rows: usize, y: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * m.k);
     debug_assert_eq!(y.len(), rows * m.n);
     if rows == 1 {
-        return matvec_q8(x, m, y);
+        return matvec_q8(pool, x, m, y);
     }
-    let t = threads_for(rows * m.k * m.n).min(rows);
-    if t <= 1 {
-        return gemm_q8_rows(x, m, y);
+    let lanes = pool.lanes_for(rows * m.k * m.n);
+    let out = SharedSliceMut::new(y);
+    if lanes <= 1 {
+        return gemm_q8_cols(x, m, rows, 0..m.n, &out);
     }
-    let band = rows.div_ceil(t);
-    std::thread::scope(|s| {
-        for (yb, xb_rows) in y.chunks_mut(band * m.n).zip(x.chunks(band * m.k)) {
-            s.spawn(move || gemm_q8_rows(xb_rows, m, yb));
+    pool.run_tiles_bounded(0..m.n, lanes, |cols| gemm_q8_cols(x, m, rows, cols, &out));
+}
+
+/// Fused Q/K/V projection: one tile pipeline computes `q = x@Wq`,
+/// `k = x@Wk`, `v = x@Wv` (each `[rows, n]`) under a **single** pool
+/// dispatch — each column band streams its slice of all three weight
+/// matrices while the activation rows are hot. Every output element is
+/// exactly the [`matvec_q8`] expression, so the fusion is bit-identical
+/// to three separate GEMMs.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q8_qkv(
+    pool: &WorkerPool,
+    x: &[f32],
+    wq: &QMat,
+    wk: &QMat,
+    wv: &QMat,
+    rows: usize,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+) {
+    let n = wq.n;
+    debug_assert!(wk.n == n && wv.n == n && wk.k == wq.k && wv.k == wq.k);
+    debug_assert_eq!(x.len(), rows * wq.k);
+    debug_assert!(q.len() == rows * n && k.len() == rows * n && v.len() == rows * n);
+    let lanes = pool.lanes_for(3 * rows * wq.k * n);
+    let qo = SharedSliceMut::new(q);
+    let ko = SharedSliceMut::new(k);
+    let vo = SharedSliceMut::new(v);
+    let run = |cols: Range<usize>| {
+        gemm_q8_cols(x, wq, rows, cols.clone(), &qo);
+        gemm_q8_cols(x, wk, rows, cols.clone(), &ko);
+        gemm_q8_cols(x, wv, rows, cols, &vo);
+    };
+    if lanes <= 1 {
+        return run(0..n);
+    }
+    pool.run_tiles_bounded(0..n, lanes, run);
+}
+
+/// Fused SwiGLU: `out[r, j] = silu((x@Wgate)[r, j]) · (x@Wup)[r, j]` in
+/// one weight-stationary pass and a single pool dispatch. The gate and up
+/// columns stream side by side, and the SiLU·mul combine happens
+/// in-register — the unfused pipeline's `up` buffer (written once, read
+/// once) never exists. Per element this is exactly
+/// `silu_mul(gemm_q8(Wgate), gemm_q8(Wup))`, so the fusion is
+/// bit-identical to the unfused pipeline.
+pub fn gemm_q8_swiglu(
+    pool: &WorkerPool,
+    x: &[f32],
+    w_gate: &QMat,
+    w_up: &QMat,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let (k, n, xb) = (w_gate.k, w_gate.n, w_gate.xb);
+    debug_assert!(w_up.k == k && w_up.n == n && w_up.xb == xb);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * n);
+    let lanes = pool.lanes_for(2 * rows * k * n);
+    let o = SharedSliceMut::new(out);
+    let nt = n / xb;
+    let run = |cols: Range<usize>| {
+        for nn in cols {
+            let grow = &w_gate.q[nn * k..(nn + 1) * k];
+            let urow = &w_up.q[nn * k..(nn + 1) * k];
+            let scol = nn / xb;
+            for (r, xrow) in x.chunks_exact(k).enumerate() {
+                let mut g = 0f32;
+                let mut u = 0f32;
+                for (kt, xtile) in xrow.chunks(xb).enumerate() {
+                    let span = kt * xb..kt * xb + xtile.len();
+                    g += w_gate.s[kt * nt + scol] * dot_q8(xtile, &grow[span.clone()]);
+                    u += w_up.s[kt * nt + scol] * dot_q8(xtile, &urow[span]);
+                }
+                // SAFETY: column `nn` is owned exclusively by this band.
+                unsafe { o.write(r * n + nn, g / (1.0 + (-g).exp()) * u) };
+            }
         }
-    });
+    };
+    if lanes <= 1 {
+        return run(0..n);
+    }
+    pool.run_tiles_bounded(0..n, lanes, run);
 }
 
 /// Transpose a row-major `[k, n]` matrix into `[n, k]` (the layout the
@@ -320,8 +414,28 @@ pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Fused residual-add + RMSNorm for one row: `x += res`, then
+/// `out = rmsnorm(x) · g`, folding the residual into the norm's sweep over
+/// the row. Element order is add-then-square, sequentially — exactly a
+/// separate residual loop followed by [`rmsnorm_into`], so the fusion is
+/// bit-identical.
+pub fn add_residual_rmsnorm(x: &mut [f32], res: &[f32], g: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), res.len());
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), out.len());
+    let mut sq = 0f32;
+    for (xv, &rv) in x.iter_mut().zip(res) {
+        *xv += rv;
+        sq += *xv * *xv;
+    }
+    let inv = 1.0 / (sq / x.len() as f32 + RMS_EPS).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x.iter()).zip(g) {
+        *o = v * inv * gv;
+    }
+}
+
 /// SwiGLU combine in place: `gate[i] = silu(gate[i]) * up[i]` (same
-/// expression as the naive path, so bit-identical).
+/// expression as the naive path and [`gemm_q8_swiglu`], so bit-identical).
 pub fn silu_mul(gate: &mut [f32], up: &[f32]) {
     debug_assert_eq!(gate.len(), up.len());
     for (g, &u) in gate.iter_mut().zip(up) {
@@ -389,10 +503,9 @@ impl RopeTable {
 /// (merged-head layout, `d = n_heads * d_head`). `scores` is a scratch
 /// buffer of at least `ctx` entries; `o` receives the `[d]` output.
 ///
-/// Per-head arithmetic matches the naive path's structure (max-subtracted
-/// exp, deferred denominator divide); large contexts split the heads
-/// across scoped threads with per-thread score buffers — each head's math
-/// is identical either way.
+/// Serial, two-pass (max-subtracted exp, deferred denominator divide) —
+/// the structural oracle the flash kernel [`attention_rows_paged`] is
+/// parity-tested against. Not on the hot path.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_row(
     q: &[f32],
@@ -409,134 +522,8 @@ pub fn attention_row(
     debug_assert_eq!(o.len(), d);
     debug_assert!(kcache.len() >= ctx * d && vcache.len() >= ctx * d);
     debug_assert!(scores.len() >= ctx);
-    let t = threads_for(n_heads * ctx * d_head).min(n_heads);
-    if t <= 1 {
-        for (h, oh) in o.chunks_exact_mut(d_head).enumerate() {
-            head_attention(q, kcache, vcache, ctx, h, d_head, d, &mut scores[..ctx], oh);
-        }
-        return;
-    }
-    let band = n_heads.div_ceil(t);
-    std::thread::scope(|s| {
-        for (hb, ob) in o.chunks_mut(band * d_head).enumerate() {
-            s.spawn(move || {
-                let mut local = vec![0f32; ctx];
-                for (hi, oh) in ob.chunks_exact_mut(d_head).enumerate() {
-                    let h = hb * band + hi;
-                    head_attention(q, kcache, vcache, ctx, h, d_head, d, &mut local, oh);
-                }
-            });
-        }
-    });
-}
-
-/// Causal attention for one query row over a *paged* KV cache: the
-/// context's positions live in fixed-size blocks scattered through the
-/// shared arenas; `starts[b]` is the offset of block `b`'s
-/// `[block_size, d]` slice (valid for both arenas), so position `j` is row
-/// `j % block_size` of `starts[j / block_size]`.
-///
-/// Per-position arithmetic and ordering are exactly
-/// [`attention_row`]'s, so the output is **bit-identical** to running the
-/// contiguous kernel over a gathered copy of the same cache — the paged
-/// backend inherits the batched ≡ sequential decode contract unchanged.
-/// Large contexts split the heads across scoped threads like the
-/// contiguous path.
-#[allow(clippy::too_many_arguments)]
-pub fn attention_row_paged(
-    q: &[f32],
-    karena: &[f32],
-    varena: &[f32],
-    starts: &[usize],
-    block_size: usize,
-    ctx: usize,
-    n_heads: usize,
-    d_head: usize,
-    d: usize,
-    scores: &mut [f32],
-    o: &mut [f32],
-) {
-    debug_assert_eq!(q.len(), d);
-    debug_assert_eq!(o.len(), d);
-    debug_assert!(block_size > 0 && starts.len() * block_size >= ctx);
-    debug_assert!(scores.len() >= ctx);
-    let t = threads_for(n_heads * ctx * d_head).min(n_heads);
-    if t <= 1 {
-        for (h, oh) in o.chunks_exact_mut(d_head).enumerate() {
-            head_attention_paged(
-                q,
-                karena,
-                varena,
-                starts,
-                block_size,
-                ctx,
-                h,
-                d_head,
-                d,
-                &mut scores[..ctx],
-                oh,
-            );
-        }
-        return;
-    }
-    let band = n_heads.div_ceil(t);
-    std::thread::scope(|s| {
-        for (hb, ob) in o.chunks_mut(band * d_head).enumerate() {
-            s.spawn(move || {
-                let mut local = vec![0f32; ctx];
-                for (hi, oh) in ob.chunks_exact_mut(d_head).enumerate() {
-                    let h = hb * band + hi;
-                    head_attention_paged(
-                        q, karena, varena, starts, block_size, ctx, h, d_head, d, &mut local, oh,
-                    );
-                }
-            });
-        }
-    });
-}
-
-/// One head of [`attention_row_paged`] (same math as [`head_attention`],
-/// with the position → `(block, row)` indirection folded into the cache
-/// reads).
-#[allow(clippy::too_many_arguments)]
-fn head_attention_paged(
-    q: &[f32],
-    karena: &[f32],
-    varena: &[f32],
-    starts: &[usize],
-    block_size: usize,
-    ctx: usize,
-    h: usize,
-    d_head: usize,
-    d: usize,
-    scores: &mut [f32],
-    oh: &mut [f32],
-) {
-    let base = h * d_head;
-    let scale = 1.0 / (d_head as f32).sqrt();
-    let qh = &q[base..base + d_head];
-    let mut max = f32::NEG_INFINITY;
-    for (j, sc) in scores[..ctx].iter_mut().enumerate() {
-        let row = starts[j / block_size] + (j % block_size) * d;
-        let krow = &karena[row + base..row + base + d_head];
-        *sc = dot(qh, krow) * scale;
-        max = max.max(*sc);
-    }
-    let mut denom = 0f32;
-    for sc in scores[..ctx].iter_mut() {
-        *sc = (*sc - max).exp();
-        denom += *sc;
-    }
-    oh.fill(0.0);
-    for (j, &p) in scores[..ctx].iter().enumerate() {
-        let row = starts[j / block_size] + (j % block_size) * d;
-        let vrow = &varena[row + base..row + base + d_head];
-        for (ov, &vv) in oh.iter_mut().zip(vrow) {
-            *ov += p * vv;
-        }
-    }
-    for ov in oh.iter_mut() {
-        *ov /= denom;
+    for (h, oh) in o.chunks_exact_mut(d_head).enumerate() {
+        head_attention(q, kcache, vcache, ctx, h, d_head, d, &mut scores[..ctx], oh);
     }
 }
 
@@ -579,10 +566,128 @@ fn head_attention(
     }
 }
 
+/// Flash-style causal attention for a whole batch of query rows over the
+/// *paged* KV cache, in one pool dispatch.
+///
+/// `q`/`o` are `[rows, d]` (merged heads); `rows_meta[i] = (off, ctx)`
+/// gives row `i`'s context length and the offset of its session's
+/// block-start table inside `starts_flat` (arena offsets valid for both
+/// the K and V arenas, `ceil(ctx / block_size)` entries per row; sessions
+/// sharing a table share one entry run). Position `j` of a row lives at
+/// arena offset `starts[j / block_size] + (j % block_size) * d`.
+///
+/// The tile space is `rows × n_heads`; each `(row, head)` tile runs an
+/// online-softmax pass that walks the blocks **in place** — no gathered
+/// K/V copy, no score buffer, one read of K and V per position. Tiles are
+/// mutually independent and each is serial inside, so the output is
+/// bitwise invariant across pool sizes and block layouts, and row `i` is
+/// bit-identical to a dispatch containing only row `i` (the batched ≡
+/// sequential decode contract).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_paged(
+    pool: &WorkerPool,
+    q: &[f32],
+    karena: &[f32],
+    varena: &[f32],
+    starts_flat: &[usize],
+    rows_meta: &[(usize, usize)],
+    block_size: usize,
+    n_heads: usize,
+    d_head: usize,
+    d: usize,
+    o: &mut [f32],
+) {
+    let rows = rows_meta.len();
+    debug_assert_eq!(q.len(), rows * d);
+    debug_assert_eq!(o.len(), rows * d);
+    debug_assert_eq!(n_heads * d_head, d);
+    debug_assert!(block_size > 0);
+    let total_ctx: usize = rows_meta.iter().map(|&(_, c)| c).sum();
+    // ~2·d MACs per cached position (q·K plus p·V across the heads).
+    let lanes = pool.lanes_for(2 * total_ctx * d);
+    let out = SharedSliceMut::new(o);
+    let run = |tiles: Range<usize>| {
+        for t in tiles {
+            // Row-interleaved tile order (row = t % rows, not t / heads):
+            // a prefill batch has ctx ascending 1..s, so contiguous
+            // equal-count bands of row-major tiles would hand the last
+            // lane ~2× the mean work. Interleaving gives every band a
+            // mix of short and long contexts. Still a fixed bijection —
+            // ownership and bits are unchanged by the traversal order.
+            let (row, h) = (t % rows, t / rows);
+            let (off, ctx) = rows_meta[row];
+            let starts = &starts_flat[off..off + ctx.div_ceil(block_size)];
+            let base = h * d_head;
+            let qh = &q[row * d + base..row * d + base + d_head];
+            // SAFETY: tile (row, h) exclusively owns this d_head slice.
+            let oh = unsafe { out.borrow_range(row * d + base..row * d + base + d_head) };
+            head_attention_flash(qh, karena, varena, starts, block_size, ctx, base, d, oh);
+        }
+    };
+    if lanes <= 1 {
+        return run(0..rows * n_heads);
+    }
+    pool.run_tiles_bounded(0..rows * n_heads, lanes, run);
+}
+
+/// One `(row, head)` tile of [`attention_rows_paged`]: online softmax with
+/// a running max/denominator, walking the context's blocks in place.
+#[allow(clippy::too_many_arguments)]
+fn head_attention_flash(
+    qh: &[f32],
+    karena: &[f32],
+    varena: &[f32],
+    starts: &[usize],
+    block_size: usize,
+    ctx: usize,
+    base: usize,
+    d: usize,
+    oh: &mut [f32],
+) {
+    debug_assert!(ctx > 0 && starts.len() * block_size >= ctx);
+    let dh = qh.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut m = f32::NEG_INFINITY;
+    let mut denom = 0f32;
+    oh.fill(0.0);
+    let mut j = 0usize;
+    for &bstart in starts {
+        let in_block = block_size.min(ctx - j);
+        for row in 0..in_block {
+            let at = bstart + row * d + base;
+            let s = dot(qh, &karena[at..at + dh]) * scale;
+            if s > m {
+                // New running max: rescale the accumulated numerator and
+                // denominator (first position: m = -inf ⇒ factor 0 on
+                // zeroed accumulators).
+                let c = (m - s).exp();
+                denom *= c;
+                for ov in oh.iter_mut() {
+                    *ov *= c;
+                }
+                m = s;
+            }
+            let p = (s - m).exp();
+            denom += p;
+            let vrow = &varena[at..at + dh];
+            for (ov, &vv) in oh.iter_mut().zip(vrow) {
+                *ov += p * vv;
+            }
+        }
+        j += in_block;
+        if j >= ctx {
+            break;
+        }
+    }
+    for ov in oh.iter_mut() {
+        *ov /= denom;
+    }
+}
+
 /// Grow-only scratch arena for the forward pass: one allocation family at
 /// the first call of each batch width, no tensor allocations in the
 /// steady state. Buffers are sized for `rows` activation rows of a
-/// `(d_model, d_ff)` model with an `s_max` context window.
+/// `(d_model, d_ff)` model.
 #[derive(Default)]
 pub struct Scratch {
     /// Residual stream `[rows, d]`.
@@ -595,19 +700,21 @@ pub struct Scratch {
     pub v: Vec<f32>,
     /// Attention output `[rows, d]`.
     pub o: Vec<f32>,
-    /// Output-projection / MLP-down result `[rows, d]`.
+    /// Output-projection / MLP-down result `[rows, d]` (doubles as the
+    /// pending residual folded into the next norm).
     pub proj: Vec<f32>,
-    /// SwiGLU gate and up `[rows, ff]` each.
+    /// Fused SwiGLU result `[rows, ff]` (gate and up never materialise
+    /// separately on the fast path).
     pub gate: Vec<f32>,
-    pub up: Vec<f32>,
-    /// Attention score buffer `[s_max]`.
-    pub scores: Vec<f32>,
     /// Per-row cache position assigned this step `[rows]`.
     pub pos: Vec<usize>,
-    /// Paged-KV block offsets for the row currently under attention
-    /// (refilled per row/layer via `KvStore::fill_starts`; grow-only
-    /// capacity like every other scratch buffer).
+    /// Flat per-layer block-start table for every session in the batch
+    /// (cleared and refilled per layer; grow-only capacity).
     pub block_starts: Vec<usize>,
+    /// Per batch-session offset into [`Self::block_starts`].
+    pub sess_starts: Vec<usize>,
+    /// Per row `(starts offset, ctx)` for the fused attention dispatch.
+    pub attn_rows: Vec<(usize, usize)>,
 }
 
 impl Scratch {
@@ -616,7 +723,7 @@ impl Scratch {
     }
 
     /// Ensure capacity for `rows` activation rows (grow-only).
-    pub fn ensure(&mut self, rows: usize, d: usize, ff: usize, s_max: usize) {
+    pub fn ensure(&mut self, rows: usize, d: usize, ff: usize) {
         let grow = |buf: &mut Vec<f32>, len: usize| {
             if buf.len() < len {
                 buf.resize(len, 0.0);
@@ -630,8 +737,6 @@ impl Scratch {
         grow(&mut self.o, rows * d);
         grow(&mut self.proj, rows * d);
         grow(&mut self.gate, rows * ff);
-        grow(&mut self.up, rows * ff);
-        grow(&mut self.scores, s_max);
         if self.pos.len() < rows {
             self.pos.resize(rows, 0);
         }
@@ -698,6 +803,11 @@ mod tests {
         (0..n).map(|i| ((i % 17) as f32 - 8.0) * scale).collect()
     }
 
+    /// Single-lane pool: kernels run serial (the structural baseline).
+    fn pool1() -> WorkerPool {
+        WorkerPool::with_threads(1)
+    }
+
     #[test]
     fn dot_matches_sequential_sum() {
         for len in [0, 1, 7, 8, 9, 31, 64, 100] {
@@ -718,7 +828,7 @@ mod tests {
         let x = seq(k, 0.3);
         let want = naive::matvec(&x, &w, k, n);
         let mut got = vec![0f32; n];
-        matvec_t(&x, &wt, k, n, &mut got);
+        matvec_t(&pool1(), &x, &wt, k, n, &mut got);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
         }
@@ -729,11 +839,12 @@ mod tests {
         let (rows, k, n) = (4, 24, 10);
         let x = seq(rows * k, 0.2);
         let wt = seq(n * k, -0.15);
+        let pool = pool1();
         let mut y = vec![0f32; rows * n];
-        gemm_t(&x, &wt, rows, k, n, &mut y);
+        gemm_t(&pool, &x, &wt, rows, k, n, &mut y);
         for r in 0..rows {
             let mut solo = vec![0f32; n];
-            matvec_t(&x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
+            matvec_t(&pool, &x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
             assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r} must be bit-identical");
         }
     }
@@ -774,7 +885,7 @@ mod tests {
         let x = seq(k, 0.3);
         let want = naive::matvec(&x, &dense, k, n);
         let mut got = vec![0f32; n];
-        matvec_q8(&x, &m, &mut got);
+        matvec_q8(&pool1(), &x, &m, &mut got);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
         }
@@ -785,13 +896,66 @@ mod tests {
         let (rows, k, n, xb) = (3, 8, 8, 4);
         let m = qmat(k, n, xb);
         let x = seq(rows * k, 0.2);
+        let pool = pool1();
         let mut y = vec![0f32; rows * n];
-        gemm_q8(&x, &m, rows, &mut y);
+        gemm_q8(&pool, &x, &m, rows, &mut y);
         for r in 0..rows {
             let mut solo = vec![0f32; n];
-            matvec_q8(&x[r * k..(r + 1) * k], &m, &mut solo);
+            matvec_q8(&pool, &x[r * k..(r + 1) * k], &m, &mut solo);
             assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r} must be bit-identical");
         }
+    }
+
+    /// Like [`qmat`] but seeded, so Q/K/V get distinct cell patterns.
+    fn qmat_seeded(k: usize, n: usize, xb: usize, seed: usize) -> QMat {
+        let cells: Vec<u8> = (0..k * n).map(|i| (i * 31 + 7 * seed + 3) as u8).collect();
+        let nt = (k / xb) * (n / xb);
+        let scales: Vec<f32> =
+            (0..nt).map(|i| 0.01 + 0.003 * ((i + seed) % 5) as f32).collect();
+        QMat::from_cells(&cells, &scales, k, n, xb)
+    }
+
+    #[test]
+    fn fused_qkv_bitwise_equals_three_gemms() {
+        let (rows, k, n, xb) = (3, 8, 8, 4);
+        let wq = qmat_seeded(k, n, xb, 1);
+        let wk = qmat_seeded(k, n, xb, 2);
+        let wv = qmat_seeded(k, n, xb, 3);
+        let x = seq(rows * k, 0.2);
+        let pool = pool1();
+        let (mut q, mut kk, mut v) =
+            (vec![0f32; rows * n], vec![0f32; rows * n], vec![0f32; rows * n]);
+        gemm_q8_qkv(&pool, &x, &wq, &wk, &wv, rows, &mut q, &mut kk, &mut v);
+        let (mut q2, mut k2, mut v2) =
+            (vec![0f32; rows * n], vec![0f32; rows * n], vec![0f32; rows * n]);
+        gemm_q8(&pool, &x, &wq, rows, &mut q2);
+        gemm_q8(&pool, &x, &wk, rows, &mut k2);
+        gemm_q8(&pool, &x, &wv, rows, &mut v2);
+        assert_eq!(q, q2, "fused Q must be bit-identical");
+        assert_eq!(kk, k2, "fused K must be bit-identical");
+        assert_eq!(v, v2, "fused V must be bit-identical");
+    }
+
+    #[test]
+    fn fused_swiglu_bitwise_equals_unfused_pipeline() {
+        let (rows, k, n, xb) = (2, 8, 12, 4);
+        let w_gate = qmat(k, n, xb);
+        let w_up = {
+            let cells: Vec<u8> = (0..k * n).map(|i| (i * 13 + 5) as u8).collect();
+            let nt = (k / xb) * (n / xb);
+            let scales: Vec<f32> = (0..nt).map(|i| 0.02 + 0.001 * (i % 7) as f32).collect();
+            QMat::from_cells(&cells, &scales, k, n, xb)
+        };
+        let x = seq(rows * k, 0.4);
+        let pool = pool1();
+        let mut fused = vec![0f32; rows * n];
+        gemm_q8_swiglu(&pool, &x, &w_gate, &w_up, rows, &mut fused);
+        let mut gate = vec![0f32; rows * n];
+        let mut up = vec![0f32; rows * n];
+        gemm_q8(&pool, &x, &w_gate, rows, &mut gate);
+        gemm_q8(&pool, &x, &w_up, rows, &mut up);
+        silu_mul(&mut gate, &up);
+        assert_eq!(fused, gate, "fused SwiGLU must be bit-identical to gemm+gemm+silu_mul");
     }
 
     #[test]
@@ -812,6 +976,25 @@ mod tests {
         let mut got = vec![0f32; 32];
         rmsnorm_into(&x, &g, &mut got);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn add_residual_rmsnorm_bitwise_matches_unfused() {
+        let mut x = seq(48, 0.7);
+        let res = seq(48, -0.2);
+        let g = seq(48, 0.4);
+        // unfused: residual loop, then rmsnorm
+        let mut x_ref = x.clone();
+        for (xv, &rv) in x_ref.iter_mut().zip(&res) {
+            *xv += rv;
+        }
+        let mut want = vec![0f32; 48];
+        rmsnorm_into(&x_ref, &g, &mut want);
+        // fused
+        let mut got = vec![0f32; 48];
+        add_residual_rmsnorm(&mut x, &res, &g, &mut got);
+        assert_eq!(got, want, "fused norm output must be bit-identical");
+        assert_eq!(x, x_ref, "fused residual stream must be bit-identical");
     }
 
     #[test]
@@ -842,12 +1025,12 @@ mod tests {
     #[test]
     fn scratch_grows_and_never_shrinks() {
         let mut s = Scratch::new();
-        s.ensure(4, 16, 32, 64);
-        assert!(s.x.len() >= 64 && s.gate.len() >= 128 && s.scores.len() >= 64);
+        s.ensure(4, 16, 32);
+        assert!(s.x.len() >= 64 && s.gate.len() >= 128);
         let cap = s.gate.len();
-        s.ensure(2, 16, 32, 64);
+        s.ensure(2, 16, 32);
         assert_eq!(s.gate.len(), cap, "ensure with fewer rows must not shrink");
-        s.ensure(8, 16, 32, 64);
+        s.ensure(8, 16, 32);
         assert!(s.gate.len() >= 8 * 32);
     }
 
@@ -867,42 +1050,124 @@ mod tests {
         }
     }
 
+    use crate::testutil::scatter_blocks as scatter;
+
     #[test]
-    fn attention_row_paged_bitwise_matches_contiguous() {
-        // Scatter a contiguous [ctx, d] cache into out-of-order blocks of a
-        // larger arena: the paged kernel must reproduce the contiguous
-        // kernel bit for bit.
+    fn flash_attention_matches_two_pass_oracle() {
         let (heads, dh, ctx, bs) = (3, 8, 11, 4);
         let d = heads * dh;
         let q = seq(d, 0.5);
         let kcache = seq(ctx * d, 0.3);
         let vcache = seq(ctx * d, -0.7);
-
-        let n_blocks = ctx.div_ceil(bs);
-        // blocks deliberately stored in reverse arena order with a gap
-        let mut karena = vec![f32::NAN; (n_blocks + 1) * bs * d];
-        let mut varena = vec![f32::NAN; (n_blocks + 1) * bs * d];
-        let starts: Vec<usize> = (0..n_blocks).map(|b| (n_blocks - b) * bs * d).collect();
-        for j in 0..ctx {
-            let at = starts[j / bs] + (j % bs) * d;
-            karena[at..at + d].copy_from_slice(&kcache[j * d..(j + 1) * d]);
-            varena[at..at + d].copy_from_slice(&vcache[j * d..(j + 1) * d]);
-        }
-
         let mut scores = vec![0f32; ctx];
         let mut want = vec![0f32; d];
         attention_row(&q, &kcache, &vcache, ctx, heads, dh, d, &mut scores, &mut want);
+
+        let (karena, varena, starts) = scatter(&kcache, &vcache, ctx, d, bs);
         let mut got = vec![0f32; d];
-        attention_row_paged(
-            &q, &karena, &varena, &starts, bs, ctx, heads, dh, d, &mut scores, &mut got,
+        attention_rows_paged(
+            &pool1(),
+            &q,
+            &karena,
+            &varena,
+            &starts,
+            &[(0, ctx)],
+            bs,
+            heads,
+            dh,
+            d,
+            &mut got,
         );
-        assert_eq!(got, want, "paged attention must be bit-identical to contiguous");
+        // online softmax vs two-pass: same value, last-bit rounding differs
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "o[{i}]: flash {a} vs two-pass {b}");
+        }
     }
 
     #[test]
-    fn threads_for_respects_threshold() {
-        assert_eq!(threads_for(0), 1);
-        assert_eq!(threads_for(PAR_MIN_WORK), 1);
-        assert!(threads_for(16 * PAR_MIN_WORK) >= 1);
+    fn flash_attention_is_block_layout_invariant_bitwise() {
+        // The paged ≡ flat backend contract rests on this: the same cache
+        // content must produce the same bits whether it lives in one big
+        // block or many scattered small ones.
+        let (heads, dh, ctx) = (2, 8, 13);
+        let d = heads * dh;
+        let q = seq(d, 0.5);
+        let kcache = seq(ctx * d, 0.3);
+        let vcache = seq(ctx * d, -0.7);
+        let pool = pool1();
+
+        // flat: one block holding the whole context, arena = cache
+        let mut flat = vec![0f32; d];
+        attention_rows_paged(
+            &pool,
+            &q,
+            &kcache,
+            &vcache,
+            &[0],
+            &[(0, ctx)],
+            ctx,
+            heads,
+            dh,
+            d,
+            &mut flat,
+        );
+        for bs in [1usize, 3, 4, 8] {
+            let (karena, varena, starts) = scatter(&kcache, &vcache, ctx, d, bs);
+            let mut got = vec![0f32; d];
+            attention_rows_paged(
+                &pool,
+                &q,
+                &karena,
+                &varena,
+                &starts,
+                &[(0, ctx)],
+                bs,
+                heads,
+                dh,
+                d,
+                &mut got,
+            );
+            assert_eq!(got, flat, "bs={bs}: paged attention must be layout invariant");
+        }
+    }
+
+    #[test]
+    fn flash_attention_rows_bitwise_equal_solo_rows() {
+        // Row i of a multi-row dispatch == a dispatch of row i alone (the
+        // foundation of batched ≡ sequential decode).
+        let (heads, dh, bs) = (2, 4, 4);
+        let d = heads * dh;
+        let rows = 3;
+        let ctxs = [5usize, 9, 2];
+        let max_ctx = 9;
+        let kcache = seq(max_ctx * d, 0.3);
+        let vcache = seq(max_ctx * d, -0.6);
+        let (karena, varena, starts) = scatter(&kcache, &vcache, max_ctx, d, bs);
+        let q = seq(rows * d, 0.5);
+        let pool = pool1();
+
+        // all rows share one starts run (same "session"), distinct ctx
+        let meta: Vec<(usize, usize)> = ctxs.iter().map(|&c| (0usize, c)).collect();
+        let mut batch = vec![0f32; rows * d];
+        attention_rows_paged(
+            &pool, &q, &karena, &varena, &starts, &meta, bs, heads, dh, d, &mut batch,
+        );
+        for (r, &ctx) in ctxs.iter().enumerate() {
+            let mut solo = vec![0f32; d];
+            attention_rows_paged(
+                &pool,
+                &q[r * d..(r + 1) * d],
+                &karena,
+                &varena,
+                &starts,
+                &[(0, ctx)],
+                bs,
+                heads,
+                dh,
+                d,
+                &mut solo,
+            );
+            assert_eq!(&batch[r * d..(r + 1) * d], &solo[..], "row {r} must be bit-identical");
+        }
     }
 }

@@ -3,9 +3,13 @@
 //!
 //! - [`backend`] — the [`NumericsBackend`] trait the coordinator talks to,
 //!   plus artifact metadata and helpers.
+//! - [`pool`] — the persistent worker pool: fixed-ownership tile bands
+//!   over resident, parkable threads (spawned once per backend; zero
+//!   spawns on the request path).
 //! - [`kernels`] — the fast CPU kernel layer (weight-stationary GEMM,
-//!   rope tables, scratch arena, scoped-thread parallelism) plus the
-//!   retained naive scalar kernels it is parity-tested against.
+//!   fused QKV/SwiGLU/residual-norm passes, flash paged attention, rope
+//!   tables, scratch arena, pool-dispatched parallelism) plus the retained
+//!   naive scalar kernels it is parity-tested against.
 //! - [`reference`] — pure-Rust f32 transformer over [`kernels`] (default
 //!   backend, zero non-std dependencies; mirrors
 //!   `python/compile/kernels/ref.py`).
@@ -20,6 +24,7 @@ pub mod backend;
 pub mod engine;
 pub mod kernels;
 pub mod leapbin;
+pub mod pool;
 pub mod reference;
 
 pub use backend::{
@@ -29,4 +34,5 @@ pub use backend::{
 #[cfg(feature = "xla")]
 pub use engine::{Engine, PjrtBackend};
 pub use leapbin::{DType, Tensor};
+pub use pool::{WorkerPool, WorkerPoolStats};
 pub use reference::{KernelMode, ReferenceBackend, ReferenceModel};

@@ -21,18 +21,29 @@
 //! sequential decode bit-identical (property-tested in
 //! `tests/prop_backend.rs`).
 //!
+//! **Persistent worker pool.** Each backend spawns one
+//! [`WorkerPool`](super::pool::WorkerPool) at load time; every parallel
+//! kernel dispatches fixed-ownership tile bands onto it, so **zero OS
+//! threads are spawned on the request path** after load (the pool's
+//! dispatch counter is the observable witness). The per-layer pipeline is
+//! fused — residual-add folded into each RMSNorm sweep, Q/K/V as one
+//! dispatch, SwiGLU gate·up as one dispatch, and a flash-style
+//! online-softmax attention over all `(row, head)` tiles at once — so a
+//! decode layer costs a handful of pool barriers instead of a dozen
+//! fork-joins.
+//!
 //! **Paged KV.** Sessions no longer own flat `[s_max, d]` buffers: all KV
 //! lives in one [`KvStore`] block pool (block size = one tile row group),
 //! each session holding a [`BlockTable`]. Prompt prefixes that match an
 //! earlier live session's chain map to the *same* physical blocks
 //! (refcounted, copy-on-write on divergence), so concurrency is bounded by
-//! actual KV residency rather than session count. The fast path reads the
-//! cache through [`kernels::attention_row_paged`] (gather per block, no
-//! contiguous copy); the retained [`KernelMode::Naive`] scalar path
-//! gathers per call (it allocates per call by design) — both are
-//! bit-identical to the pre-pool flat layout, which
-//! `tests/integration_reference.rs` pins by comparing a paged pool against
-//! a one-block-per-session (flat-equivalent) pool.
+//! actual KV residency rather than session count. Both kernel paths read
+//! the cache **in place** through the block tables — the fast path via
+//! [`kernels::attention_rows_paged`], the retained [`KernelMode::Naive`]
+//! scalar path by walking blocks inside its original per-head loops — so
+//! neither ever materialises a gathered K/V copy.
+//! `tests/integration_reference.rs` pins paged ≡ flat by comparing a paged
+//! pool against a one-block-per-session (flat-equivalent) pool.
 
 use std::collections::HashMap;
 use std::collections::HashSet;
@@ -44,9 +55,11 @@ use crate::kvcache::{BlockTable, KvCacheConfig, KvStore, PoolStats};
 
 use super::backend::{ArtifactMeta, BatchResults, NumericsBackend, SessionId, StepOutput};
 use super::kernels::{
-    self, attention_row_paged, gemm_q8, gemm_t, rmsnorm_into, silu_mul, QMat, RopeTable, Scratch,
+    self, add_residual_rmsnorm, attention_rows_paged, gemm_q8, gemm_q8_qkv, gemm_q8_swiglu,
+    gemm_t, rmsnorm_into, QMat, RopeTable, Scratch,
 };
 use super::leapbin::{self, DType, Tensor};
+use super::pool::{WorkerPool, WorkerPoolStats};
 
 /// Which kernel path the backend runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -116,14 +129,16 @@ struct RefSession {
 }
 
 /// The reference backend: a [`ReferenceModel`], the pooled KV store shared
-/// by all sessions, per-session block tables, and the shared scratch arena
+/// by all sessions, per-session block tables, the shared scratch arena
 /// (sessions are stepped one batch at a time, so one arena serves them
-/// all).
+/// all), and the resident worker pool every fast kernel dispatches onto —
+/// spawned once here, never on the request path.
 pub struct ReferenceBackend {
     model: ReferenceModel,
     sessions: HashMap<SessionId, RefSession>,
     scratch: Scratch,
     kv: KvStore,
+    pool: WorkerPool,
 }
 
 /// Dequantise one `[kp, np]` int8 tile matrix with `[kt, nt]` per-tile
@@ -284,11 +299,19 @@ impl ReferenceModel {
         self.mode
     }
 
-    /// Multi-row forward through the fast kernels: each entry of `rows` is
-    /// `(session index, token)`; row `i` appends one KV position to
-    /// `sessions[rows[i].0]`. A prefill is `s` rows of one session; a
-    /// batched decode is one row each of `B` sessions — either way each
-    /// weight matrix is streamed once for the whole batch.
+    /// Multi-row forward through the fused fast-kernel pipeline: each
+    /// entry of `rows` is `(session index, token)`; row `i` appends one KV
+    /// position to `sessions[rows[i].0]`. A prefill is `s` rows of one
+    /// session; a batched decode is one row each of `B` sessions — either
+    /// way each weight matrix is streamed once for the whole batch, and
+    /// every parallel kernel dispatches onto the resident `pool` (no
+    /// thread spawns).
+    ///
+    /// Per layer the pipeline is: fused residual+RMSNorm sweep → one
+    /// fused Q/K/V dispatch → rope + in-place KV block writes → one
+    /// flash-attention dispatch over all `(row, head)` tiles → output
+    /// projection → fused residual+RMSNorm → one fused SwiGLU dispatch →
+    /// down projection, whose residual stays pending for the next norm.
     ///
     /// Returns row-major `[rows.len(), vocab]` logits. Row `i` is
     /// bit-identical to what a batch containing only row `i` (with the
@@ -299,14 +322,15 @@ impl ReferenceModel {
     /// KV positions live in the shared block pool: the needed blocks
     /// (boundary growth + copy-on-write of shared tails) are reserved up
     /// front, rows whose position falls inside a prefix-shared block skip
-    /// the (bit-identical) rewrite, and attention gathers per block via
-    /// [`attention_row_paged`].
+    /// the (bit-identical) rewrite, and attention walks the blocks in
+    /// place via [`attention_rows_paged`] — no gathered copy.
     ///
     /// Validates every token, session capacity, and the pool's free-block
     /// demand *before* mutating any session, so an error leaves all
     /// sessions untouched.
     fn forward_rows(
         &self,
+        pool: &WorkerPool,
         kv: &mut KvStore,
         sessions: &mut [RefSession],
         rows: &[(usize, i32)],
@@ -357,7 +381,7 @@ impl ReferenceModel {
         }
 
         // -- assign cache positions and gather embeddings -----------------
-        scratch.ensure(r, d, ff, s_max);
+        scratch.ensure(r, d, ff);
         for (i, &(si, token)) in rows.iter().enumerate() {
             scratch.pos[i] = sessions[si].pos;
             sessions[si].pos += 1;
@@ -365,16 +389,54 @@ impl ReferenceModel {
             scratch.x[i * d..(i + 1) * d].copy_from_slice(erow);
         }
 
+        // Attention dispatch metadata is layer-invariant (every session
+        // contributes exactly `table.blocks().len()` entries to the flat
+        // start buffer at every layer): build the per-session offsets and
+        // per-row `(offset, ctx)` once; only the offsets' *values*
+        // (`block_starts`) are refilled per layer below.
+        scratch.sess_starts.clear();
+        let mut start_acc = 0usize;
+        for sess in sessions.iter() {
+            scratch.sess_starts.push(start_acc);
+            start_acc += sess.table.blocks().len();
+        }
+        scratch.attn_rows.clear();
+        for (i, &(si, _)) in rows.iter().enumerate() {
+            scratch.attn_rows.push((scratch.sess_starts[si], scratch.pos[i] + 1));
+        }
+
         for (li, lw) in self.qlayers.iter().enumerate() {
             // -- attention sub-layer --------------------------------------
-            for (xrow, xnrow) in
-                scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
-            {
-                rmsnorm_into(xrow, &lw.attn_norm, xnrow);
+            // Fold the previous layer's down-projection residual (pending
+            // in `proj`) into this norm's sweep; layer 0 norms the raw
+            // embeddings (no residual pending yet).
+            if li == 0 {
+                for (xrow, xnrow) in scratch.x[..r * d]
+                    .chunks_exact(d)
+                    .zip(scratch.xn[..r * d].chunks_exact_mut(d))
+                {
+                    rmsnorm_into(xrow, &lw.attn_norm, xnrow);
+                }
+            } else {
+                for ((xrow, prow), xnrow) in scratch.x[..r * d]
+                    .chunks_exact_mut(d)
+                    .zip(scratch.proj[..r * d].chunks_exact(d))
+                    .zip(scratch.xn[..r * d].chunks_exact_mut(d))
+                {
+                    add_residual_rmsnorm(xrow, prow, &lw.attn_norm, xnrow);
+                }
             }
-            gemm_q8(&scratch.xn[..r * d], &lw.wq, r, &mut scratch.q[..r * d]);
-            gemm_q8(&scratch.xn[..r * d], &lw.wk, r, &mut scratch.k[..r * d]);
-            gemm_q8(&scratch.xn[..r * d], &lw.wv, r, &mut scratch.v[..r * d]);
+            gemm_q8_qkv(
+                pool,
+                &scratch.xn[..r * d],
+                &lw.wq,
+                &lw.wk,
+                &lw.wv,
+                r,
+                &mut scratch.q[..r * d],
+                &mut scratch.k[..r * d],
+                &mut scratch.v[..r * d],
+            );
 
             for (i, &(si, _)) in rows.iter().enumerate() {
                 let pos = scratch.pos[i];
@@ -395,64 +457,74 @@ impl ReferenceModel {
                 }
             }
 
-            // Causal attention per row: the KV rows for every position of
-            // this step are already present (written above or shared), and
-            // row i only reads positions 0..=pos[i] of its own session.
-            for (i, &(si, _)) in rows.iter().enumerate() {
-                let ctx = scratch.pos[i] + 1;
-                kv.fill_starts(&sessions[si].table, li, &mut scratch.block_starts);
-                attention_row_paged(
-                    &scratch.q[i * d..(i + 1) * d],
-                    kv.k_arena(),
-                    kv.v_arena(),
-                    &scratch.block_starts,
-                    bs,
-                    ctx,
-                    heads,
-                    dh,
-                    d,
-                    &mut scratch.scores,
-                    &mut scratch.o[i * d..(i + 1) * d],
-                );
+            // Causal attention: the KV rows for every position of this
+            // step are already present (written above or shared), and row
+            // i only reads positions 0..=pos[i] of its own session. ONE
+            // dispatch covers every (row, head) tile of the batch: each
+            // session's block-start run goes into the flat buffer at the
+            // layer-invariant offset computed above.
+            scratch.block_starts.clear();
+            for sess in sessions.iter() {
+                kv.append_starts(&sess.table, li, &mut scratch.block_starts);
             }
-            gemm_q8(&scratch.o[..r * d], &lw.wo, r, &mut scratch.proj[..r * d]);
-            for (xv, &pv) in scratch.x[..r * d].iter_mut().zip(&scratch.proj[..r * d]) {
-                *xv += pv;
-            }
+            attention_rows_paged(
+                pool,
+                &scratch.q[..r * d],
+                kv.k_arena(),
+                kv.v_arena(),
+                &scratch.block_starts,
+                &scratch.attn_rows,
+                bs,
+                heads,
+                dh,
+                d,
+                &mut scratch.o[..r * d],
+            );
+            gemm_q8(pool, &scratch.o[..r * d], &lw.wo, r, &mut scratch.proj[..r * d]);
 
-            // -- SwiGLU MLP sub-layer -------------------------------------
-            for (xrow, xnrow) in
-                scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
+            // -- SwiGLU MLP sub-layer (attention residual folded in) ------
+            for ((xrow, prow), xnrow) in scratch.x[..r * d]
+                .chunks_exact_mut(d)
+                .zip(scratch.proj[..r * d].chunks_exact(d))
+                .zip(scratch.xn[..r * d].chunks_exact_mut(d))
             {
-                rmsnorm_into(xrow, &lw.mlp_norm, xnrow);
+                add_residual_rmsnorm(xrow, prow, &lw.mlp_norm, xnrow);
             }
-            gemm_q8(&scratch.xn[..r * d], &lw.w_gate, r, &mut scratch.gate[..r * ff]);
-            gemm_q8(&scratch.xn[..r * d], &lw.w_up, r, &mut scratch.up[..r * ff]);
-            silu_mul(&mut scratch.gate[..r * ff], &scratch.up[..r * ff]);
-            gemm_q8(&scratch.gate[..r * ff], &lw.w_down, r, &mut scratch.proj[..r * d]);
-            for (xv, &pv) in scratch.x[..r * d].iter_mut().zip(&scratch.proj[..r * d]) {
-                *xv += pv;
-            }
+            gemm_q8_swiglu(
+                pool,
+                &scratch.xn[..r * d],
+                &lw.w_gate,
+                &lw.w_up,
+                r,
+                &mut scratch.gate[..r * ff],
+            );
+            gemm_q8(pool, &scratch.gate[..r * ff], &lw.w_down, r, &mut scratch.proj[..r * d]);
+            // The down-projection residual stays pending in `proj`; the
+            // next layer's attention norm (or the final norm) folds it in.
         }
 
-        // -- tied LM head -------------------------------------------------
-        for (xrow, xnrow) in
-            scratch.x[..r * d].chunks_exact(d).zip(scratch.xn[..r * d].chunks_exact_mut(d))
+        // -- tied LM head (last residual folded into the final norm) ------
+        for ((xrow, prow), xnrow) in scratch.x[..r * d]
+            .chunks_exact_mut(d)
+            .zip(scratch.proj[..r * d].chunks_exact(d))
+            .zip(scratch.xn[..r * d].chunks_exact_mut(d))
         {
-            rmsnorm_into(xrow, &self.final_norm, xnrow);
+            add_residual_rmsnorm(xrow, prow, &self.final_norm, xnrow);
         }
         let mut logits = vec![0f32; r * m.vocab];
-        gemm_t(&scratch.xn[..r * d], &self.embed, r, d, m.vocab, &mut logits);
+        gemm_t(pool, &scratch.xn[..r * d], &self.embed, r, d, m.vocab, &mut logits);
         Ok(logits)
     }
 
     /// One causal step through the retained naive scalar path (the exact
     /// pre-optimisation algorithm: per-call `Vec`s, zero-skip axpy matvec
-    /// over `[k, n]` weights, per-token trig). The paged cache is gathered
-    /// into contiguous per-call buffers (the naive path allocates per call
-    /// by design), so the retained kernel below runs unchanged and
-    /// bit-identically. Parity oracle + bench baseline; only valid on a
-    /// `KernelMode::Naive` model.
+    /// over `[k, n]` weights, per-token trig). Attention walks the paged
+    /// cache **in place** through the block table — the per-position
+    /// arithmetic and order are exactly the old gathered loop's, so the
+    /// logits are bit-identical to the gather-era path while the per-call
+    /// `O(ctx·d)` K/V copies are gone (the score/output `Vec`s remain:
+    /// this path allocates per call by design). Parity oracle + bench
+    /// baseline; only valid on a `KernelMode::Naive` model.
     fn step_one_naive(
         &self,
         kv: &mut KvStore,
@@ -494,17 +566,9 @@ impl ReferenceModel {
             }
 
             let ctx = pos + 1;
-            // gather the paged cache into the naive path's contiguous view
-            let mut kcache = vec![0f32; ctx * d];
-            let mut vcache = vec![0f32; ctx * d];
-            for (j, (kd, vd)) in
-                kcache.chunks_exact_mut(d).zip(vcache.chunks_exact_mut(d)).enumerate()
-            {
-                let b = sess.table.blocks()[j / bs];
-                let row = (j % bs) * d;
-                kd.copy_from_slice(&kv.k_block(b, li)[row..row + d]);
-                vd.copy_from_slice(&kv.v_block(b, li)[row..row + d]);
-            }
+            // Walk the paged cache in place: position j is row j % bs of
+            // block j / bs. Same values, same order as the old gathered
+            // loop — bit-identical, without the per-call K/V copies.
             let scale = 1.0 / (dh as f32).sqrt();
             let mut o = vec![0f32; d];
             let mut scores = vec![0f32; ctx];
@@ -513,7 +577,9 @@ impl ReferenceModel {
                 let qh = &q[base..base + dh];
                 let mut max = f32::NEG_INFINITY;
                 for (j, sc) in scores.iter_mut().enumerate() {
-                    let krow = &kcache[j * d + base..j * d + base + dh];
+                    let blk = sess.table.blocks()[j / bs];
+                    let at = (j % bs) * d + base;
+                    let krow = &kv.k_block(blk, li)[at..at + dh];
                     let mut dot = 0f32;
                     for (a, b) in qh.iter().zip(krow) {
                         dot += a * b;
@@ -528,7 +594,9 @@ impl ReferenceModel {
                 }
                 let oh = &mut o[base..base + dh];
                 for (j, &p) in scores.iter().enumerate() {
-                    let vrow = &vcache[j * d + base..j * d + base + dh];
+                    let blk = sess.table.blocks()[j / bs];
+                    let at = (j % bs) * d + base;
+                    let vrow = &kv.v_block(blk, li)[at..at + dh];
                     for (ov, &vv) in oh.iter_mut().zip(vrow) {
                         *ov += p * vv;
                     }
@@ -596,10 +664,28 @@ impl ReferenceBackend {
         mode: KernelMode,
         kv_cfg: Option<KvCacheConfig>,
     ) -> anyhow::Result<Self> {
+        // The worker pool is spawned HERE, once — the decode hot path only
+        // ever dispatches onto it. The naive mode never dispatches, so it
+        // gets a lane-less pool instead of idle threads.
+        let pool = match mode {
+            KernelMode::Fast => WorkerPool::new(),
+            KernelMode::Naive => WorkerPool::with_threads(1),
+        };
+        Self::load_with_pool(dir, mode, kv_cfg, pool)
+    }
+
+    /// Load with an explicit worker pool (tests pin pool sizes 1/2/max for
+    /// the determinism props; the bench measures pool-off vs pool-on).
+    pub fn load_with_pool(
+        dir: impl AsRef<Path>,
+        mode: KernelMode,
+        kv_cfg: Option<KvCacheConfig>,
+        pool: WorkerPool,
+    ) -> anyhow::Result<Self> {
         let model = ReferenceModel::load_with_mode(dir, mode)?;
         let cfg = kv_cfg.unwrap_or_else(|| Self::default_kv_config(&model.meta));
         let kv = KvStore::new(cfg, model.meta.n_layers, model.meta.d_model);
-        Ok(Self { model, sessions: HashMap::new(), scratch: Scratch::new(), kv })
+        Ok(Self { model, sessions: HashMap::new(), scratch: Scratch::new(), kv, pool })
     }
 
     /// Eager-arena budget for the *default* pool, in f32 words per arena
@@ -631,6 +717,11 @@ impl ReferenceBackend {
     /// The shared KV block pool (tests, benches, gauges).
     pub fn kv(&self) -> &KvStore {
         &self.kv
+    }
+
+    /// The resident worker pool (tests, benches, gauges).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Live session count (tests: release bookkeeping).
@@ -667,7 +758,7 @@ impl NumericsBackend for ReferenceBackend {
         if let Some(old) = self.sessions.remove(&session) {
             self.kv.release_table(old.table);
         }
-        let Self { model, sessions, scratch, kv } = self;
+        let Self { model, sessions, scratch, kv, pool } = self;
         // Resolve as much of the prompt as possible from the prefix cache;
         // the forward pass below computes every row (full logits, same
         // bits) but only writes KV for the unshared positions.
@@ -676,7 +767,7 @@ impl NumericsBackend for ReferenceBackend {
         let result = match model.mode {
             KernelMode::Fast => {
                 let rows: Vec<(usize, i32)> = tokens.iter().map(|&t| (0usize, t)).collect();
-                model.forward_rows(kv, std::slice::from_mut(&mut sess), &rows, scratch)
+                model.forward_rows(pool, kv, std::slice::from_mut(&mut sess), &rows, scratch)
             }
             KernelMode::Naive => {
                 let mut logits = Vec::with_capacity(tokens.len() * model.meta.vocab);
@@ -712,14 +803,14 @@ impl NumericsBackend for ReferenceBackend {
     }
 
     fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput> {
-        let Self { model, sessions, scratch, kv } = self;
+        let Self { model, sessions, scratch, kv, pool } = self;
         let sess = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session} (prefill first)"))?;
         model.meta.check_step(sess.pos, token)?;
         let logits = match model.mode {
             KernelMode::Fast => {
-                model.forward_rows(kv, std::slice::from_mut(sess), &[(0, token)], scratch)?
+                model.forward_rows(pool, kv, std::slice::from_mut(sess), &[(0, token)], scratch)?
             }
             KernelMode::Naive => model.step_one_naive(kv, sess, token)?,
         };
@@ -746,7 +837,7 @@ impl NumericsBackend for ReferenceBackend {
             return Ok(steps.iter().map(|&(sid, t)| self.decode_step(sid, t)).collect());
         }
 
-        let Self { model, sessions, scratch, kv } = self;
+        let Self { model, sessions, scratch, kv, pool } = self;
         let vocab = model.meta.vocab;
         let mut results: Vec<Option<anyhow::Result<StepOutput>>> =
             steps.iter().map(|_| None).collect();
@@ -790,7 +881,7 @@ impl NumericsBackend for ReferenceBackend {
         }
 
         if !rows.is_empty() {
-            let forward = model.forward_rows(kv, &mut batch_sessions, &rows, scratch);
+            let forward = model.forward_rows(pool, kv, &mut batch_sessions, &rows, scratch);
             // Restore sessions whatever happened (validation precedes any
             // mutation inside forward_rows, so an error leaves them
             // unchanged).
@@ -829,6 +920,10 @@ impl NumericsBackend for ReferenceBackend {
 
     fn kv_admit_demand(&self, tokens: usize) -> Option<usize> {
         Some(self.kv.config().blocks_for(tokens))
+    }
+
+    fn worker_pool_stats(&self) -> Option<WorkerPoolStats> {
+        Some(self.pool.stats())
     }
 }
 

@@ -10,3 +10,29 @@ pub mod rng;
 
 pub use prop::{forall, Config};
 pub use rng::SplitMix64;
+
+/// Scatter a contiguous `[ctx, d]` K/V cache into out-of-order blocks of a
+/// larger arena (reverse block order, one unused gap block, `NaN` filler so
+/// any out-of-bounds read poisons the result). Returns
+/// `(karena, varena, starts)` in the layout `attention_rows_paged` reads:
+/// position `j` lives at `starts[j / bs] + (j % bs) * d`. Shared by the
+/// kernel unit tests and the integration parity props so the block-layout
+/// convention is encoded in exactly one place.
+pub fn scatter_blocks(
+    kcache: &[f32],
+    vcache: &[f32],
+    ctx: usize,
+    d: usize,
+    bs: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+    let n_blocks = ctx.div_ceil(bs);
+    let mut karena = vec![f32::NAN; (n_blocks + 1) * bs * d];
+    let mut varena = vec![f32::NAN; (n_blocks + 1) * bs * d];
+    let starts: Vec<usize> = (0..n_blocks).map(|b| (n_blocks - b) * bs * d).collect();
+    for j in 0..ctx {
+        let at = starts[j / bs] + (j % bs) * d;
+        karena[at..at + d].copy_from_slice(&kcache[j * d..(j + 1) * d]);
+        varena[at..at + d].copy_from_slice(&vcache[j * d..(j + 1) * d]);
+    }
+    (karena, varena, starts)
+}

@@ -1,15 +1,21 @@
-//! Kernel-layer parity (ISSUE 2 satellite): the optimized kernels in
-//! `runtime::kernels` match the retained naive scalar path within 1e-5 on
-//! random shapes, multi-row GEMMs are bitwise identical to their
-//! single-row kernels (the foundation of the `decode_batch` ≡ sequential
-//! `decode_step` contract), and the threaded code paths produce the same
-//! bits as the serial ones.
+//! Kernel-layer parity (ISSUE 2 satellite, extended by the ISSUE 5 worker
+//! pool): the optimized kernels in `runtime::kernels` match the retained
+//! naive scalar path within 1e-5 on random shapes, multi-row GEMMs are
+//! bitwise identical to their single-row kernels (the foundation of the
+//! `decode_batch` ≡ sequential `decode_step` contract), the fused
+//! QKV/SwiGLU passes are bitwise identical to their unfused pipelines,
+//! and every pool-dispatched code path produces the same bits as the
+//! serial one — across pool sizes 1/2/max and across repeated dispatches
+//! on the same pool (fixed tile ownership).
 
 use leap::runtime::kernels::{
-    dot, dot_q8, gemm_q8, gemm_t, matvec_q8, matvec_t, naive, rmsnorm_into, transpose, QMat,
-    RopeTable, ROPE_THETA,
+    attention_row, attention_rows_paged, dot, dot_q8, gemm_q8, gemm_q8_qkv, gemm_q8_swiglu,
+    gemm_t, matvec_q8, matvec_t, naive, rmsnorm_into, silu_mul, transpose, QMat, RopeTable,
+    ROPE_THETA,
 };
-use leap::testutil::{forall, Config, SplitMix64};
+use leap::runtime::pool::PAR_MIN_WORK;
+use leap::runtime::WorkerPool;
+use leap::testutil::{forall, scatter_blocks, Config, SplitMix64};
 
 /// |a - b| within `tol` relative to b's magnitude (floor 1.0).
 fn close(a: f32, b: f32, tol: f32) -> bool {
@@ -26,6 +32,7 @@ fn rand_qmat(rng: &mut SplitMix64, k: usize, n: usize, xb: usize) -> QMat {
 
 #[test]
 fn prop_matvec_t_matches_naive_on_random_shapes() {
+    let pool = WorkerPool::with_threads(2);
     forall(Config::cases(50), |rng| {
         let k = rng.range(1, 96);
         let n = rng.range(1, 96);
@@ -34,7 +41,7 @@ fn prop_matvec_t_matches_naive_on_random_shapes() {
         let x = rng.normal_vec(k);
         let want = naive::matvec(&x, &w, k, n);
         let mut got = vec![0f32; n];
-        matvec_t(&x, &wt, k, n, &mut got);
+        matvec_t(&pool, &x, &wt, k, n, &mut got);
         for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
             if !close(a, b, 1e-5) {
                 return Err(format!("k={k} n={n} col {i}: fast {a} vs naive {b}"));
@@ -46,6 +53,7 @@ fn prop_matvec_t_matches_naive_on_random_shapes() {
 
 #[test]
 fn prop_matvec_q8_matches_dequant_naive_on_random_shapes() {
+    let pool = WorkerPool::with_threads(2);
     forall(Config::cases(50), |rng| {
         // shapes are multiples of the tile edge, like real artifacts
         let xb = *rng.choose(&[1usize, 2, 4, 8]);
@@ -56,7 +64,7 @@ fn prop_matvec_q8_matches_dequant_naive_on_random_shapes() {
         let x = rng.normal_vec(k);
         let want = naive::matvec(&x, &dense, k, n);
         let mut got = vec![0f32; n];
-        matvec_q8(&x, &m, &mut got);
+        matvec_q8(&pool, &x, &m, &mut got);
         for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
             if !close(a, b, 1e-5) {
                 return Err(format!("xb={xb} k={k} n={n} col {i}: q8 {a} vs naive {b}"));
@@ -70,6 +78,7 @@ fn prop_matvec_q8_matches_dequant_naive_on_random_shapes() {
 fn prop_gemm_rows_bitwise_equal_single_row_kernels() {
     // The per-row bitwise contract batched decode rests on: a row of a
     // multi-row GEMM == the single-row kernel on that row, exactly.
+    let pool = WorkerPool::with_threads(2);
     forall(Config::cases(30), |rng| {
         let rows = rng.range(2, 9);
         let k = rng.range(1, 48);
@@ -77,10 +86,10 @@ fn prop_gemm_rows_bitwise_equal_single_row_kernels() {
         let x = rng.normal_vec(rows * k);
         let wt = rng.normal_vec(n * k);
         let mut y = vec![0f32; rows * n];
-        gemm_t(&x, &wt, rows, k, n, &mut y);
+        gemm_t(&pool, &x, &wt, rows, k, n, &mut y);
         for r in 0..rows {
             let mut solo = vec![0f32; n];
-            matvec_t(&x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
+            matvec_t(&pool, &x[r * k..(r + 1) * k], &wt, k, n, &mut solo);
             if y[r * n..(r + 1) * n] != solo[..] {
                 return Err(format!("gemm_t row {r} not bitwise equal (rows={rows} k={k} n={n})"));
             }
@@ -92,10 +101,10 @@ fn prop_gemm_rows_bitwise_equal_single_row_kernels() {
         let m = rand_qmat(rng, qk, qn, xb);
         let qx = rng.normal_vec(rows * qk);
         let mut qy = vec![0f32; rows * qn];
-        gemm_q8(&qx, &m, rows, &mut qy);
+        gemm_q8(&pool, &qx, &m, rows, &mut qy);
         for r in 0..rows {
             let mut solo = vec![0f32; qn];
-            matvec_q8(&qx[r * qk..(r + 1) * qk], &m, &mut solo);
+            matvec_q8(&pool, &qx[r * qk..(r + 1) * qk], &m, &mut solo);
             if qy[r * qn..(r + 1) * qn] != solo[..] {
                 return Err(format!("gemm_q8 row {r} not bitwise equal (rows={rows})"));
             }
@@ -105,36 +114,150 @@ fn prop_gemm_rows_bitwise_equal_single_row_kernels() {
 }
 
 #[test]
-fn threaded_matvec_bitwise_equals_serial_dots() {
-    // Big enough to cross the parallel threshold: every column must still
+fn prop_fused_qkv_and_swiglu_bitwise_equal_unfused() {
+    let pool = WorkerPool::with_threads(2);
+    forall(Config::cases(25), |rng| {
+        let xb = *rng.choose(&[1usize, 2, 4]);
+        let rows = rng.range(1, 6);
+        let k = xb * rng.range(1, 8);
+        let n = xb * rng.range(1, 8);
+        let x = rng.normal_vec(rows * k);
+
+        let wq = rand_qmat(rng, k, n, xb);
+        let wk = rand_qmat(rng, k, n, xb);
+        let wv = rand_qmat(rng, k, n, xb);
+        let (mut q, mut kk, mut v) =
+            (vec![0f32; rows * n], vec![0f32; rows * n], vec![0f32; rows * n]);
+        gemm_q8_qkv(&pool, &x, &wq, &wk, &wv, rows, &mut q, &mut kk, &mut v);
+        for (m, fused, tag) in [(&wq, &q, "q"), (&wk, &kk, "k"), (&wv, &v, "v")] {
+            let mut solo = vec![0f32; rows * n];
+            gemm_q8(&pool, &x, m, rows, &mut solo);
+            if *fused != solo {
+                return Err(format!("fused qkv '{tag}' diverges (rows={rows} k={k} n={n})"));
+            }
+        }
+
+        let w_gate = rand_qmat(rng, k, n, xb);
+        let w_up = rand_qmat(rng, k, n, xb);
+        let mut fused = vec![0f32; rows * n];
+        gemm_q8_swiglu(&pool, &x, &w_gate, &w_up, rows, &mut fused);
+        let mut gate = vec![0f32; rows * n];
+        let mut up = vec![0f32; rows * n];
+        gemm_q8(&pool, &x, &w_gate, rows, &mut gate);
+        gemm_q8(&pool, &x, &w_up, rows, &mut up);
+        silu_mul(&mut gate, &up);
+        if fused != gate {
+            return Err(format!("fused swiglu diverges (rows={rows} k={k} n={n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pooled_matvec_bitwise_equals_serial_dots() {
+    // Big enough to cross the dispatch threshold: every column must still
     // be exactly one `dot` of the same slices (same bits as serial).
     let (k, n) = (256, 32 * 1024);
+    assert!(k * n >= 2 * PAR_MIN_WORK, "shape must cross the pool threshold");
+    let pool = WorkerPool::with_threads(4);
     let mut rng = SplitMix64::new(0xBEEF);
     let x = rng.normal_vec(k);
     let wt = rng.normal_vec(n * k);
     let mut y = vec![0f32; n];
-    matvec_t(&x, &wt, k, n, &mut y);
+    matvec_t(&pool, &x, &wt, k, n, &mut y);
+    assert!(pool.stats().dispatches >= 1, "this shape must dispatch to the pool");
     for (i, &yv) in y.iter().enumerate() {
         let want = dot(&x, &wt[i * k..(i + 1) * k]);
-        assert!(yv == want, "col {i}: threaded {yv} != serial {want}");
+        assert!(yv == want, "col {i}: pooled {yv} != serial {want}");
     }
 }
 
 #[test]
-fn threaded_gemm_q8_bitwise_equals_serial() {
-    // rows * k * n crosses the threshold → the row-band threaded path
+fn pooled_gemm_q8_bitwise_equals_serial() {
+    // rows * k * n crosses the threshold → the column-banded pool path
     // runs; every row must match the single-row kernel bitwise.
     let (rows, k, n, xb) = (64, 128, 1024, 64);
+    let pool = WorkerPool::with_threads(4);
+    let serial = WorkerPool::with_threads(1);
     let mut rng = SplitMix64::new(0xCAFE);
     let m = rand_qmat(&mut rng, k, n, xb);
     let x = rng.normal_vec(rows * k);
     let mut y = vec![0f32; rows * n];
-    gemm_q8(&x, &m, rows, &mut y);
+    gemm_q8(&pool, &x, &m, rows, &mut y);
+    assert!(pool.stats().dispatches >= 1);
     for r in 0..rows {
         let mut solo = vec![0f32; n];
-        matvec_q8(&x[r * k..(r + 1) * k], &m, &mut solo);
+        matvec_q8(&serial, &x[r * k..(r + 1) * k], &m, &mut solo);
         assert_eq!(&y[r * n..(r + 1) * n], &solo[..], "row {r}");
     }
+}
+
+/// ISSUE 5 satellite: `run_tiles`-backed kernels are bitwise equal across
+/// pool sizes 1/2/max, and across repeated invocations on the same pool.
+#[test]
+fn pool_determinism_across_sizes_and_invocations() {
+    let (rows, k, n, xb) = (8, 128, 512, 64); // 8·128·512 = 512K MACs ≫ threshold
+    let mut rng = SplitMix64::new(0x5EED);
+    let m = rand_qmat(&mut rng, k, n, xb);
+    let m2 = rand_qmat(&mut rng, k, n, xb);
+    let x = rng.normal_vec(rows * k);
+
+    let run = |pool: &WorkerPool| {
+        let mut y = vec![0f32; rows * n];
+        gemm_q8(pool, &x, &m, rows, &mut y);
+        let mut sw = vec![0f32; rows * n];
+        gemm_q8_swiglu(pool, &x, &m, &m2, rows, &mut sw);
+        y.extend(sw);
+        y
+    };
+
+    let p1 = WorkerPool::with_threads(1);
+    let p2 = WorkerPool::with_threads(2);
+    let pmax = WorkerPool::with_threads(WorkerPool::default_threads().max(4));
+    let a = run(&p1);
+    let b = run(&p2);
+    let c = run(&pmax);
+    assert_eq!(a, b, "pool size 1 vs 2 must be bitwise equal");
+    assert_eq!(a, c, "pool size 1 vs max must be bitwise equal");
+    // repeated invocations on the SAME pool (fixed tile ownership)
+    let again = run(&pmax);
+    assert_eq!(c, again, "repeat on one pool must be bitwise equal");
+    assert!(pmax.stats().dispatches >= 2, "both invocations must have dispatched");
+}
+
+#[test]
+fn prop_flash_attention_matches_two_pass_oracle_on_random_shapes() {
+    let pool = WorkerPool::with_threads(2);
+    forall(Config::cases(40), |rng| {
+        let d_head = 2 * rng.range(1, 12);
+        let heads = rng.range(1, 5);
+        let d = heads * d_head;
+        let ctx = rng.range(1, 40);
+        let bs = rng.range(1, 9);
+        let q = rng.normal_vec(d);
+        let kcache = rng.normal_vec(ctx * d);
+        let vcache = rng.normal_vec(ctx * d);
+
+        // two-pass contiguous oracle
+        let mut scores = vec![0f32; ctx];
+        let mut want = vec![0f32; d];
+        attention_row(&q, &kcache, &vcache, ctx, heads, d_head, d, &mut scores, &mut want);
+
+        // flash over a scattered block layout of the same cache
+        let (karena, varena, starts) = scatter_blocks(&kcache, &vcache, ctx, d, bs);
+        let mut got = vec![0f32; d];
+        attention_rows_paged(
+            &pool, &q, &karena, &varena, &starts, &[(0, ctx)], bs, heads, d_head, d, &mut got,
+        );
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            if !close(a, b, 1e-5) {
+                return Err(format!(
+                    "ctx={ctx} bs={bs} h={heads} dh={d_head} o[{i}]: flash {a} vs two-pass {b}"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Soft regression gate over the decode-throughput record.
+
+Compares a freshly produced ``BENCH_hotpath.json`` against the committed
+baseline and fails (exit 1) when the fast-path decode tokens/sec dropped by
+more than ``--max-regression`` (default 20%).
+
+Bootstrap mode: a committed baseline whose ``provenance`` is not
+``"measured"`` (or that lacks a positive ``fast_tokens_per_s``) cannot be
+compared — the gate prints the fresh numbers and passes, so the very first
+measured CI artifact can be committed to arm the gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", required=True, help="committed BENCH_hotpath.json")
+    p.add_argument("--fresh", required=True, help="BENCH_hotpath.json from this run")
+    p.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="maximum tolerated fractional drop in fast_tokens_per_s (default 0.20)",
+    )
+    args = p.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    key = "fast_tokens_per_s"
+    b = float(base.get(key) or 0.0)
+    f = float(fresh.get(key) or 0.0)
+
+    print(f"baseline: {b:.1f} tok/s  (provenance: {base.get('provenance', 'unknown')}, "
+          f"smoke: {base.get('smoke')})")
+    print(f"fresh   : {f:.1f} tok/s  (provenance: {fresh.get('provenance', 'unknown')}, "
+          f"smoke: {fresh.get('smoke')})")
+
+    if base.get("provenance") != "measured" or b <= 0.0:
+        # GitHub Actions warning annotation: keep the unarmed gate loud on
+        # every run page until a measured baseline lands.
+        print("::warning title=bench gate unarmed::committed BENCH_hotpath.json is a "
+              "seed record — commit this run's BENCH_hotpath artifact to the repo "
+              "root to arm the regression gate")
+        print("baseline is a seed record without measured numbers — gate passes in "
+              "bootstrap mode. Commit this run's artifact as BENCH_hotpath.json to arm it.")
+        return 0
+    if f <= 0.0:
+        print("FAIL: fresh record lacks a fast-path throughput number")
+        return 1
+    if base.get("smoke") != fresh.get("smoke"):
+        print("note: smoke flags differ between baseline and fresh run; "
+              "comparison is indicative only")
+
+    ratio = f / b
+    floor = 1.0 - args.max_regression
+    print(f"fresh/baseline = {ratio:.3f} (floor {floor:.2f})")
+    if ratio < floor:
+        print(f"FAIL: fast-path decode regressed more than "
+              f"{args.max_regression:.0%} vs the committed baseline")
+        return 1
+    print("OK: fast-path decode within the regression budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
