@@ -22,6 +22,7 @@ use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
 use leap::kvcache::KvCacheConfig;
 use leap::model::ModelPreset;
 use leap::runtime::{leapbin, KernelMode, ReferenceBackend};
+use leap::scenario::{chunk_ab_json, Scenario};
 
 fn main() -> anyhow::Result<()> {
     // Pin the checked-in fixture: its golden comes from gen_ref_fixture.py,
@@ -94,8 +95,53 @@ fn main() -> anyhow::Result<()> {
     println!("host/sim ratio  : {:.2}", m.host_overhead());
 
     high_concurrency_scenario()?;
+    chunked_prefill_scenario()?;
 
     println!("\nAll layers composed: leapbin weights → reference numerics → coordinator ✓");
+    Ok(())
+}
+
+/// ISSUE 6 tentpole: the declarative scenario harness — run the
+/// mixed-length stress script (one 96-token prompt ahead of short sampled
+/// requests) with its scripted chunk size and with chunking off, and show
+/// the short-request TTFT win. Tokens must be identical in both runs:
+/// chunking is a scheduling change, never a numerics change.
+fn chunked_prefill_scenario() -> anyhow::Result<()> {
+    println!("\n== chunked prefill A/B (scenario harness) ==\n");
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let sc = Scenario::load(root.join("scenarios/mixed_length.scn"))?;
+    let (on, off) = sc.run_chunk_ab(Some(&root.join("tests/fixtures/tiny_ref")))?;
+    anyhow::ensure!(on.passed() && off.passed(), "scenario expectations failed");
+
+    println!(
+        "scenario        : {} ({} sessions, chunk={})",
+        on.scenario,
+        on.sessions.len(),
+        sc.chunk.unwrap_or(0)
+    );
+    println!(
+        "{:<8} {:>13} {:>12} {:>13} {:>9}",
+        "session", "prompt_tokens", "ttft_on_ns", "ttft_off_ns", "improved"
+    );
+    let fmt = |t: Option<u64>| t.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+    for (a, b) in on.sessions.iter().zip(&off.sessions) {
+        anyhow::ensure!(a.output == b.output, "session {}: chunking changed tokens", a.index);
+        let improved = matches!((a.ttft_ns, b.ttft_ns), (Some(x), Some(y)) if x < y);
+        println!(
+            "{:<8} {:>13} {:>12} {:>13} {:>9}",
+            a.index,
+            a.prompt_tokens,
+            fmt(a.ttft_ns),
+            fmt(b.ttft_ns),
+            improved
+        );
+    }
+
+    let out_dir = root.join("target/scenarios");
+    std::fs::create_dir_all(&out_dir)?;
+    let out = out_dir.join("mixed_length_ab.json");
+    std::fs::write(&out, chunk_ab_json(&on, &off))?;
+    println!("✓ identical tokens, chunk-on/off A/B recorded at {}", out.display());
     Ok(())
 }
 

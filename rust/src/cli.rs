@@ -14,7 +14,7 @@ use std::collections::HashMap;
 
 use crate::arch::{HwParams, TileGeometry};
 use crate::baselines::GpuModel;
-use crate::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
+use crate::coordinator::{BatchPolicy, EngineConfig, GenerationConfig, Numerics, ServingEngine};
 use crate::energy::{AreaBreakdown, MacroArea};
 use crate::mapping::explore;
 use crate::model::ModelPreset;
@@ -52,6 +52,14 @@ impl Args {
         self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn model(&self) -> anyhow::Result<ModelPreset> {
         let name = self.get("model", "1b");
         ModelPreset::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
@@ -66,8 +74,16 @@ USAGE: leap <command> [--key value ...]
 COMMANDS
   serve        --model 1b --requests 8 --prompt 64 --gen 32
                [--numerics ref|synthetic|xla] [--artifacts DIR]
-               (tiny model defaults to the pure-Rust reference backend;
-                xla requires building with `--features xla`)
+               [--chunk N] (chunked prefill; omit = monolithic)
+               [--temp F --top-k N --top-p F --rep F --seed N]
+               (sampling; --temp 0 = greedy. tiny model defaults to the
+                pure-Rust reference backend; xla requires building with
+                `--features xla`)
+  scenario     --script FILE.scn | --suite DIR
+               [--json-dir DIR] [--artifacts DIR] [--ab-chunk true]
+               (declarative e2e traffic scripts — see rust/scenarios/;
+                --ab-chunk also runs each scenario with chunking off and
+                reports the per-session TTFT comparison)
   simulate     --model 8b --in 1024 --out 1024
   map-explore  [--dc 16]                         (Fig. 8)
   compare-gpu  [--in 1024 --out 1024]            (Table III)
@@ -83,6 +99,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     let args = Args::parse(argv);
     match args.command.as_str() {
         "serve" => cmd_serve(&args),
+        "scenario" => cmd_scenario(&args),
         "simulate" => cmd_simulate(&args),
         "map-explore" => cmd_map_explore(&args),
         "compare-gpu" => cmd_compare_gpu(&args),
@@ -138,12 +155,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         policy: BatchPolicy::default(),
         numerics,
     })?;
+    // chunked prefill (omit = monolithic) and per-request sampling knobs;
+    // --temp 0 (the default) is exact greedy decode
+    engine.prefill_chunk = args.options.get("chunk").and_then(|v| v.parse().ok());
+    let gen_cfg = GenerationConfig {
+        max_new_tokens: gen,
+        temperature: args.get_f32("temp", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        top_p: args.get_f32("top-p", 1.0),
+        repetition_penalty: args.get_f32("rep", 1.0),
+        stop: Vec::new(),
+        seed: args.get_u64("seed", 0),
+    };
     for i in 0..n_requests {
         let prompt: Vec<i32> =
             (0..prompt_len).map(|k| ((i * 31 + k * 7) % preset.shape().vocab) as i32).collect();
         // a typed rejection drops this request only; the run keeps serving
         // (the engine counts it in the `rejected` summary line)
-        if let Err(err) = engine.submit(prompt, gen) {
+        if let Err(err) = engine.submit_with(prompt, gen_cfg.clone()) {
             eprintln!("request {i} rejected: {err}");
         }
     }
@@ -156,7 +185,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         "requests done   : {} (failed {}, rejected {})",
         m.requests_done, m.requests_failed, m.requests_rejected
     );
-    println!("prefill tokens  : {}", m.prefill_tokens);
+    println!("prefill tokens  : {} ({} chunks)", m.prefill_tokens, m.prefill_chunks);
     println!("decode tokens   : {}", m.decode_tokens);
     println!("sim time        : {:.3} s", m.sim_time_ns as f64 * 1e-9);
     println!("throughput      : {:.2} tok/s (decode {:.2})", m.total_tokens_per_s(), m.decode_tokens_per_s());
@@ -193,6 +222,73 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         );
     }
     Ok(0)
+}
+
+fn cmd_scenario(args: &Args) -> anyhow::Result<i32> {
+    use crate::scenario::{chunk_ab_json, Scenario};
+    // collect scripts: one --script, or every *.scn under --suite (sorted)
+    let mut scripts: Vec<std::path::PathBuf> = Vec::new();
+    if let Some(s) = args.options.get("script") {
+        scripts.push(s.into());
+    } else if let Some(dir) = args.options.get("suite") {
+        for entry in std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("--suite {dir}: {e}"))?
+        {
+            let path = entry?.path();
+            if path.extension().is_some_and(|x| x == "scn") {
+                scripts.push(path);
+            }
+        }
+        scripts.sort();
+        anyhow::ensure!(!scripts.is_empty(), "--suite {dir}: no .scn scripts there");
+    } else {
+        anyhow::bail!("scenario needs --script FILE.scn or --suite DIR");
+    }
+    let artifacts = args.options.get("artifacts").map(std::path::PathBuf::from);
+    let ab = args.get("ab-chunk", "false") == "true";
+    let json_dir = args.options.get("json-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &json_dir {
+        std::fs::create_dir_all(d)?;
+    }
+
+    let mut all_passed = true;
+    for path in &scripts {
+        let sc = Scenario::load(path)?;
+        let (report, json, passed) = if ab && sc.chunk.is_some() {
+            let (on, off) = sc.run_chunk_ab(artifacts.as_deref())?;
+            let json = chunk_ab_json(&on, &off);
+            let passed = on.passed() && off.passed();
+            (on, json, passed)
+        } else {
+            let report = sc.run(artifacts.as_deref())?;
+            let json = report.to_json();
+            let passed = report.passed();
+            (report, json, passed)
+        };
+        let verdict = if passed { "PASS" } else { "FAIL" };
+        println!(
+            "{verdict} {:<16} sessions {:>2}  done {:>2}  rejected {} preempt {} \
+             prefix-hits {} ttft-p50 {:.2} ms",
+            report.scenario,
+            report.sessions.len(),
+            report.metrics.requests_done,
+            report.metrics.requests_rejected,
+            report.metrics.preemptions,
+            report.metrics.kv_prefix_hits,
+            report.metrics.ttft_p50_p99().0 as f64 * 1e-6,
+        );
+        for f in &report.expect_failures {
+            println!("     ! {f}");
+        }
+        if let Some(d) = &json_dir {
+            let suffix = if ab && sc.chunk.is_some() { "_ab" } else { "" };
+            let out = d.join(format!("{}{suffix}.json", report.scenario));
+            std::fs::write(&out, &json)?;
+            println!("     → {}", out.display());
+        }
+        all_passed &= passed;
+    }
+    Ok(if all_passed { 0 } else { 1 })
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<i32> {
@@ -382,5 +478,33 @@ mod tests {
     #[test]
     fn bad_model_errors() {
         assert!(run(&argv("simulate --model 70b")).is_err());
+    }
+
+    #[test]
+    fn scenario_command_runs_synthetic_script() {
+        let dir = std::env::temp_dir().join("leap_cli_scn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let script = dir.join("demo.scn");
+        std::fs::write(
+            &script,
+            "scenario demo\nnumerics synthetic\nchunk 16\n\
+             session prompt=rand:40:1 gen=4\nsession prompt=rand:8:2 gen=2\n",
+        )
+        .unwrap();
+        let cmd = format!(
+            "scenario --script {} --json-dir {} --ab-chunk true",
+            script.display(),
+            dir.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let json = std::fs::read_to_string(dir.join("demo_ab.json")).unwrap();
+        assert!(json.contains("\"chunk_on\""), "A/B artifact must embed both runs");
+        // a missing script is an error, not a crash
+        assert!(run(&argv("scenario --script /nonexistent.scn")).is_err());
+        // an expectation failure exits nonzero
+        std::fs::write(&script, "scenario bad\nnumerics synthetic\nsession prompt=rand:8:3 gen=2 expect=rejected\n")
+            .unwrap();
+        let cmd = format!("scenario --script {}", script.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 1);
     }
 }

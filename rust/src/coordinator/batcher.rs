@@ -52,7 +52,7 @@ impl Batcher {
     /// Total context tokens the running batch will hold after admitting a
     /// request of `extra` prompt tokens.
     fn ctx_with(&self, extra: usize) -> usize {
-        self.running.iter().map(|r| r.ctx_len() + r.max_new_tokens - r.output.len()).sum::<usize>()
+        self.running.iter().map(|r| r.ctx_len() + r.max_new_tokens() - r.output.len()).sum::<usize>()
             + extra
     }
 
@@ -77,7 +77,7 @@ impl Batcher {
         let mut rejected = Vec::new();
         while let Some(front) = self.waiting.front() {
             // remaining budget: current context + tokens still to generate
-            let need = front.ctx_len() + front.max_new_tokens - front.output.len();
+            let need = front.ctx_len() + front.max_new_tokens() - front.output.len();
             if self.running.len() >= self.policy.max_batch
                 || self.ctx_with(need) > self.policy.max_total_ctx
             {
@@ -111,6 +111,10 @@ impl Batcher {
         };
         let mut req = self.running.remove(i);
         req.state = RequestState::Waiting;
+        // the engine released this session's KV: readmission re-prefills
+        // prompt ++ output from scratch
+        req.prefilled = 0;
+        req.preemptions += 1;
         self.waiting.push_front(req);
         true
     }

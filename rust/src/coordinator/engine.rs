@@ -27,14 +27,15 @@ use crate::energy::table2;
 use crate::isa::Npm;
 use crate::kvcache::{AdmissionDecision, AdmissionPolicy};
 use crate::model::ModelPreset;
-use crate::runtime::{argmax_row, NumericsBackend, ReferenceBackend};
+use crate::runtime::{NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
 use crate::sim::AnalyticalSim;
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::generation::{sample, GenerationConfig};
 use super::kv::KvManager;
 use super::metrics::Metrics;
-use super::request::{Request, RequestId, RequestState};
+use super::request::{FinishReason, Request, RequestId, RequestState};
 
 /// Functional-numerics configuration.
 pub enum Numerics {
@@ -92,6 +93,9 @@ pub enum SubmitError {
     ContextTooLong { need: usize, s_max: usize },
     /// The full context needs more KV blocks than the pool contains.
     KvNeverFits { need_blocks: usize, total_blocks: usize },
+    /// The generation config is malformed (negative temperature, top_p
+    /// outside (0, 1], empty stop sequence, …).
+    InvalidConfig { reason: &'static str },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -111,11 +115,32 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "request needs {need_blocks} KV blocks but the pool only has {total_blocks}"
             ),
+            Self::InvalidConfig { reason } => write!(f, "invalid generation config: {reason}"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// What a round's numerics produced for one request: a logits row for the
+/// sampler (functional backends) or a token computed directly (synthetic
+/// numerics, which has no logits).
+enum NextToken {
+    Row(Vec<f32>),
+    Token(i32),
+}
+
+impl NextToken {
+    /// Resolve to a token for `req`'s next generation step.
+    fn resolve(self, req: &Request) -> i32 {
+        match self {
+            NextToken::Row(row) => {
+                sample(&req.gen, &row, &req.prompt, &req.output, req.output.len()) as i32
+            }
+            NextToken::Token(t) => t,
+        }
+    }
+}
 
 /// The serving engine.
 pub struct ServingEngine {
@@ -127,6 +152,16 @@ pub struct ServingEngine {
     pub metrics: Metrics,
     /// Block-granular admission knobs (watermark, output reservation).
     pub admission: AdmissionPolicy,
+    /// Chunked-prefill knob: `Some(c)` splits every prompt into `c`-token
+    /// chunks, one chunk per engine step, so decode rounds (and short
+    /// requests' first tokens) interleave with a long neighbor's prefill.
+    /// `None` (default) prefills each prompt whole in its admission step.
+    /// Chunk sizes that are multiples of the backend's KV block size keep
+    /// every chunk boundary on a block boundary; any size is correct
+    /// (`tests/integration_generation.rs` pins chunked ≡ monolithic).
+    /// Backends without [`NumericsBackend::supports_chunked_prefill`] are
+    /// served whole regardless.
+    pub prefill_chunk: Option<usize>,
     numerics: Numerics,
     next_id: RequestId,
     /// Simulated clock, ns.
@@ -150,6 +185,7 @@ impl ServingEngine {
             npm: Npm::new(),
             metrics: Metrics::default(),
             admission: AdmissionPolicy::default(),
+            prefill_chunk: None,
             numerics: cfg.numerics,
             next_id: 0,
             now_ns: 0,
@@ -157,22 +193,36 @@ impl ServingEngine {
         })
     }
 
-    /// Submit a prompt for up to `max_new_tokens` of generation; returns
-    /// the request id, or a typed [`SubmitError`] when the request can
-    /// never run (bad shape, context window, pool too small). Rejected
+    /// Submit a prompt for up to `max_new_tokens` of greedy generation;
+    /// returns the request id, or a typed [`SubmitError`] when the request
+    /// can never run (bad shape, context window, pool too small). Rejected
     /// requests are counted but never queued.
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
     ) -> Result<RequestId, SubmitError> {
-        if let Err(err) = self.validate_submit(&prompt, max_new_tokens) {
+        self.submit_with(prompt, GenerationConfig::greedy(max_new_tokens))
+    }
+
+    /// Submit a prompt with a full per-request [`GenerationConfig`]
+    /// (sampling knobs, stop sequences, seed). The config is validated
+    /// here — a malformed one is refused before it queues, like every
+    /// other [`SubmitError`].
+    pub fn submit_with(
+        &mut self,
+        prompt: Vec<i32>,
+        gen: GenerationConfig,
+    ) -> Result<RequestId, SubmitError> {
+        if let Err(err) =
+            gen.validate().and_then(|()| self.validate_submit(&prompt, gen.max_new_tokens))
+        {
             self.metrics.requests_rejected += 1;
             return Err(err);
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.submit(Request::new(id, prompt, max_new_tokens, self.now_ns));
+        self.batcher.submit(Request::with_gen(id, prompt, gen, self.now_ns));
         Ok(id)
     }
 
@@ -224,6 +274,14 @@ impl ServingEngine {
         self.now_ns
     }
 
+    /// Jump the simulated clock forward to `ns` (no-op if already past).
+    /// Scenario drivers use this to model request arrival times: an idle
+    /// engine waits at simulated speed, not host speed. Does not count as
+    /// simulated *compute* time (`metrics.sim_time_ns` is untouched).
+    pub fn advance_clock_to(&mut self, ns: u64) {
+        self.now_ns = self.now_ns.max(ns);
+    }
+
     fn advance(&mut self, cycles: u64) {
         let ns = (cycles as f64 / self.sim.hw.freq_ghz) as u64;
         self.now_ns += ns;
@@ -266,14 +324,32 @@ impl ServingEngine {
         // scratchpad ledger and (when the backend pools KV) the functional
         // pool, with running tallies so one round's admissions don't
         // double-spend blocks none of them has claimed yet.
-        let (admitted, rejected) = {
+        let (_admitted, rejected) = {
             let admission = self.admission;
             let Self { batcher, kv, numerics, .. } = self;
             let mut sim_pending = 0usize;
+            // Blocks the sessions already mid-chunked-prefill will still
+            // claim before they produce a token: their future chunks must
+            // not be starved by this round's admissions. (Zero when
+            // prefill is monolithic — every prefill completes in its
+            // admission step.)
             let mut pool_pending = 0usize;
+            if let Numerics::Backend(backend) = &*numerics {
+                pool_pending = batcher
+                    .running()
+                    .iter()
+                    .filter(|r| r.state == RequestState::Prefilling)
+                    .map(|r| {
+                        backend
+                            .kv_admit_demand(r.ctx_len())
+                            .unwrap_or(0)
+                            .saturating_sub(backend.kv_admit_demand(r.prefilled).unwrap_or(0))
+                    })
+                    .sum();
+            }
             batcher.admit_with(|req| {
                 let resume_ctx = req.ctx_len(); // prompt + generated (resume)
-                let remaining = req.max_new_tokens - req.output.len();
+                let remaining = req.max_new_tokens() - req.output.len();
                 // simulated scratchpad: reject what can never fit (the
                 // ledger tracks every generated token, so full usage is
                 // ctx + remaining), queue until the (re-)prefill AND its
@@ -313,89 +389,140 @@ impl ServingEngine {
             self.completed.push(req);
         }
 
-        // --- prefill the admitted ----------------------------------------
-        // A preempted request resumes here: its prompt ++ generated tokens
-        // re-prefill in one batch (recompute), which greedy decode makes
-        // bit-equivalent to never having been preempted.
-        for id in admitted {
-            let tokens = {
+        // --- advance every prefill by one chunk --------------------------
+        // With `prefill_chunk = None` (or a backend without chunk support)
+        // this is exactly the old monolithic phase: each freshly admitted
+        // request prefills whole and produces its first token now. With a
+        // chunk size set, every `Prefilling` session — newly admitted or
+        // mid-prompt from an earlier step — advances by ONE chunk, then
+        // the decode round below runs: a long prompt no longer stalls its
+        // neighbors' tokens for its full prefill, only for one chunk.
+        //
+        // A preempted request resumes here too: its prompt ++ generated
+        // tokens re-prefill (recompute). The counter-based sampler makes
+        // that lossless beyond greedy: the replayed steps consume the same
+        // per-step randomness over bit-identical logits.
+        let chunk_cfg = self.prefill_chunk;
+        let prefilling: Vec<RequestId> = self
+            .batcher
+            .running()
+            .iter()
+            .filter(|r| r.state == RequestState::Prefilling)
+            .map(|r| r.id)
+            .collect();
+        for id in prefilling {
+            let (tokens, prefilled) = {
                 let r = self.batcher.running().iter().find(|r| r.id == id).unwrap();
                 let mut t = r.prompt.clone();
                 t.extend_from_slice(&r.output);
-                t
+                (t, r.prefilled)
             };
             // admission reserved these blocks (prefill + first append);
             // a ledger refusal is a per-request failure, never an engine
-            // crash
-            if let Err(err) = self.kv.prefill(id, tokens.len()) {
-                eprintln!("request {id} rejected by the scratchpad ledger: {err:#}");
-                self.fail_request(id);
-                continue;
+            // crash. The simulated ledger reserves the whole context on
+            // the first chunk (it has no chunk granularity).
+            if prefilled == 0 {
+                if let Err(err) = self.kv.prefill(id, tokens.len()) {
+                    eprintln!("request {id} rejected by the scratchpad ledger: {err:#}");
+                    self.fail_request(id);
+                    continue;
+                }
             }
+            let chunked = chunk_cfg.is_some()
+                && match &self.numerics {
+                    Numerics::Backend(backend) => backend.supports_chunked_prefill(),
+                    Numerics::Synthetic { .. } => true,
+                };
+            let chunk_len = match chunk_cfg {
+                Some(c) if chunked => c.max(1).min(tokens.len() - prefilled),
+                _ => tokens.len() - prefilled,
+            };
+            let chunk = &tokens[prefilled..prefilled + chunk_len];
+            let last = prefilled + chunk_len == tokens.len();
 
-            // timing: one prefill program per layer, layers sequential
+            // timing: one program per layer over this chunk's rows
             let layers = self.compiled.shape.n_layers as u64;
-            let prog = self.compiled.prefill_program(tokens.len().max(1)).clone();
+            let prog = self.compiled.prefill_program(chunk_len.max(1)).clone();
             let per_layer = self.dispatch(prog)?;
             self.advance(per_layer * layers);
-            self.metrics.prefill_tokens += tokens.len() as u64;
+            self.metrics.prefill_tokens += chunk_len as u64;
+            self.metrics.prefill_chunks += 1;
 
             // numerics — a backend error (e.g. out-of-vocab prompt) fails
-            // this request only; the engine and its batch keep serving
-            let next_token = match &mut self.numerics {
-                Numerics::Backend(backend) => match backend.prefill(id, &tokens) {
-                    // enforce the trait's no-silent-truncation contract:
-                    // fewer rows than prompt tokens would argmax the wrong
-                    // context, so fail the request instead
-                    Ok(out) if out.rows >= tokens.len() => {
-                        Some(argmax_row(&out.logits, tokens.len() - 1, backend.vocab()) as i32)
+            // this request only; the engine and its batch keep serving.
+            // `first` is the sampler input for the first generated token
+            // (only produced by the last chunk).
+            let first: Option<Option<NextToken>> = match &mut self.numerics {
+                Numerics::Backend(backend) => {
+                    let vocab = backend.vocab();
+                    let out = if prefilled == 0 && last {
+                        // whole prompt in one call: the monolithic entry
+                        // point, byte-identical to the pre-chunking engine
+                        backend.prefill(id, chunk)
+                    } else {
+                        backend.prefill_chunk(id, chunk, prefilled, last)
+                    };
+                    match out {
+                        // enforce the trait's no-silent-truncation
+                        // contract: fewer rows than chunk tokens would
+                        // sample the wrong context, so fail the request
+                        Ok(out) if out.rows >= chunk_len => Some(last.then(|| {
+                            NextToken::Row(
+                                out.logits[(chunk_len - 1) * vocab..chunk_len * vocab].to_vec(),
+                            )
+                        })),
+                        Ok(out) => {
+                            eprintln!(
+                                "request {id} rejected: backend returned {} logits rows \
+                                 for a {}-token prefill chunk",
+                                out.rows, chunk_len
+                            );
+                            backend.release(id);
+                            None
+                        }
+                        Err(err) => {
+                            eprintln!("request {id} rejected by numerics prefill: {err:#}");
+                            backend.release(id);
+                            None
+                        }
                     }
-                    Ok(out) => {
-                        eprintln!(
-                            "request {id} rejected: backend returned {} logits rows \
-                             for a {}-token prompt",
-                            out.rows,
-                            tokens.len()
-                        );
-                        backend.release(id);
-                        None
-                    }
-                    Err(err) => {
-                        eprintln!("request {id} rejected by numerics prefill: {err:#}");
-                        backend.release(id);
-                        None
-                    }
-                },
-                Numerics::Synthetic { vocab } => {
-                    Some((tokens.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32)
                 }
+                Numerics::Synthetic { vocab } => Some(last.then(|| {
+                    NextToken::Token(
+                        (tokens.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32,
+                    )
+                })),
             };
-            let Some(next_token) = next_token else {
+            let Some(first) = first else {
                 self.kv.release(id);
                 self.fail_request(id);
                 continue;
             };
 
             let now = self.now_ns;
+            let Some(next) = first else {
+                // mid-prompt: remember the cursor, stay Prefilling
+                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                    r.prefilled += chunk_len;
+                }
+                continue;
+            };
+            let mut finished = false;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                r.prefilled = tokens.len();
                 r.state = RequestState::Decoding;
-                r.output.push(next_token);
-                // keep the first-token timestamp across preemption cycles
-                if r.t_first_token_ns.is_none() {
-                    r.t_first_token_ns = Some(now);
-                }
-                if r.output.len() >= r.max_new_tokens {
-                    r.state = RequestState::Done;
-                    r.t_done_ns = Some(now);
-                }
+                // the prefill's token is generation step `output.len()`
+                // (0 for a fresh request, the resume step after preemption)
+                let token = next.resolve(r);
+                finished = r.accept_token(token, now);
             }
-            if self.kv.can_append(id) {
-                self.kv.append(id)?;
-            } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
-                // no scratchpad block for the next position: finish here
-                if r.state != RequestState::Done {
-                    r.state = RequestState::Done;
-                    r.t_done_ns = Some(now);
+            if !finished {
+                if self.kv.can_append(id) {
+                    self.kv.append(id)?;
+                } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id)
+                {
+                    // no scratchpad block for the next position: finish here
+                    r.finish_with(FinishReason::KvExhausted, now);
                 }
             }
             self.metrics.decode_tokens += 1;
@@ -421,8 +548,30 @@ impl ServingEngine {
                             .map(|r| r.id)
                             .collect();
                         let free = backend.kv_pool_stats().map_or(0, |s| s.blocks_free);
-                        let demand: usize =
-                            decoding.iter().map(|&id| backend.kv_append_demand(id)).sum();
+                        // sessions still mid-chunked-prefill claim their
+                        // next chunk's blocks before the next decode
+                        // round — count them, or a starved chunk would
+                        // fail its request instead of preempting a decoder
+                        let prefill_need: usize = batcher
+                            .running()
+                            .iter()
+                            .filter(|r| r.state == RequestState::Prefilling && r.prefilled > 0)
+                            .map(|r| {
+                                let total = r.ctx_len();
+                                let next_end = match chunk_cfg {
+                                    Some(c) => (r.prefilled + c.max(1)).min(total),
+                                    None => total,
+                                };
+                                backend
+                                    .kv_admit_demand(next_end)
+                                    .unwrap_or(0)
+                                    .saturating_sub(
+                                        backend.kv_admit_demand(r.prefilled).unwrap_or(0),
+                                    )
+                            })
+                            .sum();
+                        let demand: usize = prefill_need
+                            + decoding.iter().map(|&id| backend.kv_append_demand(id)).sum::<usize>();
                         if demand <= free {
                             break;
                         }
@@ -477,7 +626,7 @@ impl ServingEngine {
         // stationary backend streams each weight matrix once for every
         // live session (LEAP's dataflow, in software). A per-session error
         // fails that request only.
-        let next_tokens: Vec<(RequestId, Option<i32>)> = match &mut self.numerics {
+        let next_tokens: Vec<(RequestId, Option<NextToken>)> = match &mut self.numerics {
             Numerics::Backend(backend) => {
                 let steps: Vec<(u64, i32)> = round.iter().map(|&(id, _, t)| (id, t)).collect();
                 let outs = backend.decode_batch(&steps)?;
@@ -487,12 +636,11 @@ impl ServingEngine {
                     outs.len(),
                     steps.len()
                 );
-                let vocab = backend.vocab();
                 round
                     .iter()
                     .zip(outs)
                     .map(|(&(id, _, _), res)| match res {
-                        Ok(out) => (id, Some(argmax_row(&out.logits, 0, vocab) as i32)),
+                        Ok(out) => (id, Some(NextToken::Row(out.logits))),
                         Err(err) => {
                             eprintln!("request {id} failed in numerics decode: {err:#}");
                             (id, None)
@@ -502,7 +650,7 @@ impl ServingEngine {
             }
             Numerics::Synthetic { vocab } => round
                 .iter()
-                .map(|&(id, ctx, _)| (id, Some(((ctx * 2654435761) % *vocab) as i32)))
+                .map(|&(id, ctx, _)| (id, Some(NextToken::Token(((ctx * 2654435761) % *vocab) as i32))))
                 .collect(),
         };
 
@@ -512,25 +660,25 @@ impl ServingEngine {
                 continue;
             };
 
-            // The token is already computed (and cached by the backend) —
-            // keep it, then reserve the *next* position; exhaustion
-            // finishes the request early without dropping this token
-            // (same order as the prefill path).
+            // The logits are already computed (and the position cached by
+            // the backend) — sample and keep the token, then reserve the
+            // *next* position; exhaustion finishes the request early
+            // without dropping this token (same order as the prefill
+            // path). A request its stop sequence or length budget just
+            // finished needs no next position.
             self.metrics.decode_tokens += 1;
+            let mut finished = false;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
-                r.output.push(next);
-                if r.output.len() >= r.max_new_tokens {
-                    r.state = RequestState::Done;
-                    r.t_done_ns = Some(now);
-                }
+                let token = next.resolve(r);
+                finished = r.accept_token(token, now);
             }
-            if self.kv.can_append(id) {
-                self.kv.append(id)?;
-            } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
-                // out of scratchpad blocks: finish at this token
-                if r.state != RequestState::Done {
-                    r.state = RequestState::Done;
-                    r.t_done_ns = Some(now);
+            if !finished {
+                if self.kv.can_append(id) {
+                    self.kv.append(id)?;
+                } else if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id)
+                {
+                    // out of scratchpad blocks: finish at this token
+                    r.finish_with(FinishReason::KvExhausted, now);
                 }
             }
         }
@@ -543,6 +691,9 @@ impl ServingEngine {
             }
             if done.state == RequestState::Done {
                 self.metrics.requests_done += 1;
+                if done.finish == Some(FinishReason::Stop) {
+                    self.metrics.requests_stopped += 1;
+                }
                 if let Some(l) = done.latency_ns() {
                     self.metrics.latencies_ns.push(l);
                 }
@@ -587,8 +738,21 @@ impl ServingEngine {
             tokens: r.output.clone(),
             ttft_ns: r.ttft_ns(),
             latency_ns: r.latency_ns(),
+            finish: r.finish,
             rejected: None,
         })
+    }
+
+    /// Pop a finished request whole (scenario harness: per-session results
+    /// need timings, preemption counts, and the finish reason together).
+    pub fn take_finished_request(&mut self, id: RequestId) -> Option<Request> {
+        let idx = self.completed.iter().position(|r| r.id == id)?;
+        Some(self.completed.swap_remove(idx))
+    }
+
+    /// Drain every finished request collected so far.
+    pub fn drain_finished(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.completed)
     }
 }
 
@@ -675,6 +839,73 @@ mod tests {
         assert!(err.to_string().contains("s_max"), "unhelpful rendering: {err}");
         // the boundary itself is accepted
         e.submit(vec![1; 100], 29).expect("100 + 28 = 128 fits exactly");
+    }
+
+    #[test]
+    fn chunked_prefill_same_tokens_better_neighbor_ttft() {
+        // synthetic numerics: outputs must be identical with chunking on or
+        // off, while a short request's TTFT improves when its long
+        // neighbor's prefill is chunked (the decode/prefill interleave).
+        let run = |chunk: Option<usize>| {
+            let mut e = engine();
+            e.prefill_chunk = chunk;
+            let long = e.submit(vec![3; 70], 4).expect("submit");
+            let short = e.submit(vec![4; 10], 4).expect("submit");
+            e.run_until_idle().unwrap();
+            let l = e.take_finished_request(long).unwrap();
+            let s = e.take_finished_request(short).unwrap();
+            (l.output, s.output, s.ttft_ns().unwrap(), e.metrics.clone())
+        };
+        let (l_mono, s_mono, ttft_mono, m_mono) = run(None);
+        let (l_chunk, s_chunk, ttft_chunk, m_chunk) = run(Some(16));
+        assert_eq!(l_mono, l_chunk, "chunking must not change tokens");
+        assert_eq!(s_mono, s_chunk);
+        assert!(
+            ttft_chunk < ttft_mono,
+            "short request behind a 70-token prompt: chunked TTFT {ttft_chunk} \
+             must beat monolithic {ttft_mono}"
+        );
+        assert_eq!(m_mono.prefill_chunks, 2, "one dispatch per prompt");
+        assert_eq!(m_chunk.prefill_chunks, 6, "ceil(70/16) + ceil(10/16) dispatches");
+        assert_eq!(m_mono.prefill_tokens, m_chunk.prefill_tokens);
+        assert_eq!(m_mono.decode_tokens, m_chunk.decode_tokens);
+    }
+
+    #[test]
+    fn stop_sequence_truncates_and_counts() {
+        // learn the deterministic synthetic stream, then stop on its third
+        // token and expect a truncated output with FinishReason::Stop
+        let mut e = engine();
+        let id = e.submit(vec![2; 16], 6).expect("submit");
+        e.run_until_idle().unwrap();
+        let full = e.take_finished_request(id).unwrap().output;
+        assert_eq!(full.len(), 6);
+
+        let gen = GenerationConfig {
+            max_new_tokens: 6,
+            stop: vec![vec![full[2]]],
+            ..GenerationConfig::default()
+        };
+        let mut e = engine();
+        let id = e.submit_with(vec![2; 16], gen).expect("submit");
+        e.run_until_idle().unwrap();
+        let r = e.take_finished_request(id).unwrap();
+        assert_eq!(r.output, &full[..2], "matched stop token truncated");
+        assert_eq!(r.finish, Some(super::FinishReason::Stop));
+        assert_eq!(e.metrics.requests_stopped, 1);
+        assert_eq!(e.metrics.requests_done, 1);
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_submit() {
+        let mut e = engine();
+        let err = e
+            .submit_with(vec![1; 4], GenerationConfig { top_p: 2.0, ..Default::default() })
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::InvalidConfig { .. }), "got {err}");
+        assert!(err.to_string().contains("top_p"), "unhelpful rendering: {err}");
+        assert_eq!(e.metrics.requests_rejected, 1);
+        assert!(e.batcher.is_idle(), "rejected requests never queue");
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Per-request generation configuration and the seeded deterministic
+//! sampler.
+//!
+//! The sampler is **counter-based**: the randomness for generation step
+//! `n` is derived from `(seed, n)` alone, never from mutable RNG state
+//! threaded through the decode loop. That makes sampling compatible with
+//! the engine's preemption discipline — a preempted request re-prefills
+//! `prompt ++ output` and resumes at the same step index, so the replayed
+//! draw consumes exactly the same randomness and the token stream is
+//! identical to an uninterrupted run. It also makes the stream independent
+//! of batch composition and worker-pool size: the backend's logits are
+//! bitwise-identical across pool sizes (see `forward_rows`), and all
+//! sampler arithmetic happens in f64 on the coordinator thread.
+//!
+//! Pipeline per step: repetition penalty (over prompt + generated history)
+//! → greedy shortcut at `temperature == 0` → temperature scaling → top-k
+//! → softmax → top-p (nucleus) → renormalise → one uniform draw. The
+//! penalty is applied *before* filtering, so a token filtered out by
+//! top-k/top-p can never be resurrected by any later stage.
+
+use crate::testutil::SplitMix64;
+
+use super::engine::SubmitError;
+
+/// Per-request sampling/termination knobs. [`Default`] is greedy decode
+/// with 16 tokens — byte-identical to the pre-sampling engine behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerationConfig {
+    /// Maximum generated tokens (≥ 1).
+    pub max_new_tokens: usize,
+    /// Softmax temperature; `0.0` selects exact greedy argmax (the
+    /// NaN-safe, lowest-index-ties semantics of
+    /// [`crate::runtime::argmax_row`]).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-probability tokens (`0` = off).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability-sorted prefix with
+    /// cumulative probability ≥ `top_p` (`1.0` = off).
+    pub top_p: f32,
+    /// Divide positive / multiply negative logits of tokens already in the
+    /// prompt or output by this factor (`1.0` = off; > 1 discourages
+    /// repetition — the HF/CTRL convention).
+    pub repetition_penalty: f32,
+    /// Stop sequences over *generated* tokens. When the output ends with
+    /// one, the request finishes and the matched tokens are truncated from
+    /// the output.
+    pub stop: Vec<Vec<i32>>,
+    /// Seed of the counter-based per-step RNG.
+    pub seed: u64,
+}
+
+impl Default for GenerationConfig {
+    fn default() -> Self {
+        Self::greedy(16)
+    }
+}
+
+impl GenerationConfig {
+    /// Greedy decode for `max_new_tokens` — what [`super::ServingEngine::submit`]
+    /// uses, and exactly the pre-sampling engine behaviour.
+    pub fn greedy(max_new_tokens: usize) -> Self {
+        Self {
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            stop: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    /// True when every step reduces to argmax (no randomness consumed).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Typed validation, shared by the engine's submit path: a config that
+    /// can never run is refused before it queues.
+    pub fn validate(&self) -> Result<(), SubmitError> {
+        if self.max_new_tokens == 0 {
+            return Err(SubmitError::ZeroMaxNewTokens);
+        }
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(SubmitError::InvalidConfig {
+                reason: "temperature must be finite and >= 0",
+            });
+        }
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(SubmitError::InvalidConfig { reason: "top_p must be in (0, 1]" });
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            return Err(SubmitError::InvalidConfig {
+                reason: "repetition_penalty must be finite and > 0",
+            });
+        }
+        if self.stop.iter().any(Vec::is_empty) {
+            return Err(SubmitError::InvalidConfig {
+                reason: "stop sequences must be non-empty",
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The counter-based RNG for generation step `step`: a fresh SplitMix64
+/// whose seed mixes the config seed with the step index, so draw `n` is a
+/// pure function of `(seed, n)` (preemption replay consumes identical
+/// randomness).
+fn step_rng(seed: u64, step: usize) -> SplitMix64 {
+    // wyhash-style odd multiplier decorrelates consecutive step indices
+    // before SplitMix64's own finaliser mixes them further.
+    SplitMix64::new(seed ^ (step as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+/// Total-order key for sorting logits: NaN sorts like −∞ (it can never
+/// win — argmax semantics), ±∞ clamps to the finite range so softmax
+/// shifting stays well-defined.
+fn sort_key(x: f64) -> f64 {
+    if x.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        x.clamp(f64::MIN, f64::MAX)
+    }
+}
+
+/// The post-penalty, post-filter, renormalised sampling distribution for
+/// one `[vocab]` logits row: `(token, probability)` pairs sorted by
+/// probability descending, ties to the lower token id. Greedy
+/// (`temperature == 0`) returns the single argmax token with probability 1.
+/// Exposed for the property tests — [`sample`] draws from exactly this.
+pub fn distribution(
+    cfg: &GenerationConfig,
+    logits: &[f32],
+    prompt: &[i32],
+    output: &[i32],
+) -> Vec<(usize, f64)> {
+    let vocab = logits.len();
+    debug_assert!(vocab > 0, "empty logits row");
+    let mut adj: Vec<f64> = logits.iter().map(|&v| v as f64).collect();
+
+    // -- repetition penalty over the unique history tokens, BEFORE any
+    //    filtering (a penalised token can drop out of the top-k/top-p
+    //    support but never re-enter it) --------------------------------
+    if cfg.repetition_penalty != 1.0 {
+        let p = cfg.repetition_penalty as f64;
+        let mut seen = vec![false; vocab];
+        for &t in prompt.iter().chain(output.iter()) {
+            let Ok(t) = usize::try_from(t) else { continue };
+            if t < vocab && !seen[t] {
+                seen[t] = true;
+                adj[t] = if adj[t] > 0.0 { adj[t] / p } else { adj[t] * p };
+            }
+        }
+    }
+
+    // -- greedy shortcut: exact argmax_row semantics (NaN never wins,
+    //    ties break to the lowest index) ------------------------------
+    if cfg.temperature == 0.0 {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for (i, &v) in adj.iter().enumerate() {
+            if v > best_v {
+                best = i;
+                best_v = v;
+            }
+        }
+        return vec![(best, 1.0)];
+    }
+
+    // -- sort by penalised logit desc (== probability desc), truncate to
+    //    top-k --------------------------------------------------------
+    let mut idx: Vec<usize> = (0..vocab).collect();
+    idx.sort_by(|&a, &b| {
+        sort_key(adj[b]).partial_cmp(&sort_key(adj[a])).unwrap().then(a.cmp(&b))
+    });
+    if cfg.top_k > 0 {
+        idx.truncate(cfg.top_k.min(vocab));
+    }
+
+    // -- softmax over the kept set (max-shifted; temperature folded into
+    //    the exponent) ------------------------------------------------
+    let mx = sort_key(adj[idx[0]]);
+    if mx == f64::NEG_INFINITY {
+        // degenerate row (all −∞/NaN): match argmax's lowest-index rule
+        return vec![(idx[0], 1.0)];
+    }
+    let inv_t = 1.0 / cfg.temperature as f64;
+    let mut probs: Vec<f64> = idx.iter().map(|&i| ((sort_key(adj[i]) - mx) * inv_t).exp()).collect();
+    let sum: f64 = probs.iter().sum();
+
+    // -- nucleus (top-p): minimal sorted prefix with cumulative
+    //    probability ≥ top_p; always keeps at least the argmax ---------
+    if cfg.top_p < 1.0 {
+        let tp = cfg.top_p as f64;
+        let mut cum = 0.0;
+        let mut keep = idx.len();
+        for (j, &p) in probs.iter().enumerate() {
+            cum += p / sum;
+            if cum >= tp {
+                keep = j + 1;
+                break;
+            }
+        }
+        idx.truncate(keep);
+        probs.truncate(keep);
+    }
+
+    // -- renormalise the surviving support -----------------------------
+    let ksum: f64 = probs.iter().sum();
+    idx.into_iter().zip(probs).map(|(i, p)| (i, p / ksum)).collect()
+}
+
+/// Draw the next token for generation step `step` (`= output.len()` at
+/// sampling time). Deterministic: a pure function of the config, the
+/// logits row, and the history. Greedy configs consume no randomness.
+pub fn sample(
+    cfg: &GenerationConfig,
+    logits: &[f32],
+    prompt: &[i32],
+    output: &[i32],
+    step: usize,
+) -> usize {
+    let dist = distribution(cfg, logits, prompt, output);
+    if dist.len() == 1 {
+        return dist[0].0;
+    }
+    let u = step_rng(cfg.seed, step).f64();
+    let mut cum = 0.0;
+    for &(t, p) in &dist {
+        cum += p;
+        if u < cum {
+            return t;
+        }
+    }
+    // fp rounding left cum fractionally below 1: the tail token takes it
+    dist.last().expect("non-empty distribution").0
+}
+
+/// First stop sequence that is a suffix of `output`; returns its length
+/// (the number of tokens to truncate). Sequences are checked in config
+/// order.
+pub fn match_stop(output: &[i32], stop: &[Vec<i32>]) -> Option<usize> {
+    stop.iter()
+        .find(|s| !s.is_empty() && output.len() >= s.len() && output[output.len() - s.len()..] == s[..])
+        .map(Vec::len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::argmax_row;
+    use crate::testutil::{forall, Config};
+
+    #[test]
+    fn default_is_greedy() {
+        let cfg = GenerationConfig::default();
+        assert!(cfg.is_greedy());
+        assert_eq!(cfg.max_new_tokens, 16);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn greedy_matches_argmax_row_exactly() {
+        forall(Config::cases(200), |rng| {
+            let vocab = rng.range(2, 64);
+            let mut logits = rng.normal_vec(vocab);
+            if rng.below(4) == 0 {
+                logits[rng.below(vocab as u64) as usize] = f32::NAN;
+            }
+            let cfg = GenerationConfig::greedy(4);
+            let got = sample(&cfg, &logits, &[1, 2], &[3], 1);
+            let want = argmax_row(&logits, 0, vocab);
+            if got != want {
+                return Err(format!("greedy {got} != argmax {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn distribution_sums_to_one_and_is_sorted() {
+        forall(Config::cases(100), |rng| {
+            let vocab = rng.range(4, 128);
+            let logits = rng.normal_vec(vocab);
+            let cfg = GenerationConfig {
+                temperature: 0.9,
+                top_k: rng.range(0, vocab),
+                top_p: 0.2 + 0.8 * rng.f64() as f32,
+                ..GenerationConfig::greedy(4)
+            };
+            let dist = distribution(&cfg, &logits, &[], &[]);
+            let sum: f64 = dist.iter().map(|&(_, p)| p).sum();
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("probs sum to {sum}"));
+            }
+            for w in dist.windows(2) {
+                if w[1].1 > w[0].1 + 1e-15 {
+                    return Err("distribution not sorted by probability".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_step() {
+        let cfg = GenerationConfig {
+            temperature: 1.0,
+            top_k: 8,
+            seed: 0xBEEF,
+            ..GenerationConfig::greedy(4)
+        };
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = sample(&cfg, &logits, &[1], &[2, 3], 2);
+        let b = sample(&cfg, &logits, &[1], &[2, 3], 2);
+        assert_eq!(a, b);
+        // different steps consume different randomness (usually different
+        // draws; at minimum the RNG differs — check the distribution is
+        // wide enough that some step picks another token)
+        let picks: std::collections::HashSet<usize> =
+            (0..64).map(|s| sample(&cfg, &logits, &[1], &[2, 3], s)).collect();
+        assert!(picks.len() > 1, "64 steps all drew the same token");
+    }
+
+    #[test]
+    fn stop_suffix_matching() {
+        let stop = vec![vec![5, 6], vec![9]];
+        assert_eq!(match_stop(&[1, 2, 5, 6], &stop), Some(2));
+        assert_eq!(match_stop(&[1, 9], &stop), Some(1));
+        assert_eq!(match_stop(&[5, 6, 1], &stop), None);
+        assert_eq!(match_stop(&[6], &stop), None);
+        assert_eq!(match_stop(&[], &stop), None);
+        assert_eq!(match_stop(&[1, 2], &[]), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let ok = GenerationConfig::greedy(4);
+        ok.validate().unwrap();
+        let bad = |f: &dyn Fn(&mut GenerationConfig)| {
+            let mut c = GenerationConfig::greedy(4);
+            f(&mut c);
+            c.validate().unwrap_err()
+        };
+        assert_eq!(
+            bad(&|c| c.max_new_tokens = 0),
+            SubmitError::ZeroMaxNewTokens
+        );
+        assert!(matches!(
+            bad(&|c| c.temperature = -1.0),
+            SubmitError::InvalidConfig { .. }
+        ));
+        assert!(matches!(
+            bad(&|c| c.temperature = f32::NAN),
+            SubmitError::InvalidConfig { .. }
+        ));
+        assert!(matches!(bad(&|c| c.top_p = 0.0), SubmitError::InvalidConfig { .. }));
+        assert!(matches!(bad(&|c| c.top_p = 1.5), SubmitError::InvalidConfig { .. }));
+        assert!(matches!(
+            bad(&|c| c.repetition_penalty = 0.0),
+            SubmitError::InvalidConfig { .. }
+        ));
+        assert!(matches!(
+            bad(&|c| c.stop = vec![vec![]]),
+            SubmitError::InvalidConfig { .. }
+        ));
+    }
+
+    #[test]
+    fn top_k_caps_support() {
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        let cfg = GenerationConfig { temperature: 1.0, top_k: 2, ..GenerationConfig::greedy(4) };
+        let dist = distribution(&cfg, &logits, &[], &[]);
+        assert_eq!(dist.len(), 2);
+        assert_eq!(dist[0].0, 3);
+        assert_eq!(dist[1].0, 2);
+    }
+
+    #[test]
+    fn penalty_discourages_history_tokens() {
+        let logits = vec![2.0f32, 2.0, 2.0];
+        let cfg = GenerationConfig {
+            temperature: 1.0,
+            repetition_penalty: 2.0,
+            ..GenerationConfig::greedy(4)
+        };
+        // token 1 is in the history → its probability must drop below the
+        // others'
+        let dist = distribution(&cfg, &logits, &[1], &[]);
+        let p = |t: usize| dist.iter().find(|&&(tok, _)| tok == t).unwrap().1;
+        assert!(p(1) < p(0));
+        assert!((p(0) - p(2)).abs() < 1e-12);
+    }
+}

@@ -24,6 +24,12 @@ pub struct Metrics {
     /// Pool preemptions: a running request released its KV blocks and
     /// re-entered the wait queue.
     pub preemptions: u64,
+    /// Prefill program dispatches (one per chunk; equals the number of
+    /// prefills when chunking is off).
+    pub prefill_chunks: u64,
+    /// Requests finished by a stop-sequence match (subset of
+    /// `requests_done`).
+    pub requests_stopped: u64,
 
     // --- paged-KV pool gauges (zero when the backend does not pool) -----
     /// Tokens per physical KV block.

@@ -12,6 +12,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod generation;
 pub mod kv;
 pub mod metrics;
 pub mod request;
@@ -19,7 +20,8 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{EngineConfig, Numerics, ServingEngine, SubmitError};
+pub use generation::GenerationConfig;
 pub use kv::KvManager;
 pub use metrics::Metrics;
-pub use request::{Request, RequestId, RequestState};
-pub use server::Server;
+pub use request::{FinishReason, Request, RequestId, RequestState};
+pub use server::{Completion, Server};

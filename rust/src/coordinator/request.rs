@@ -1,5 +1,7 @@
 //! Request lifecycle types.
 
+use super::generation::{match_stop, GenerationConfig};
+
 /// Monotonic request identifier.
 pub type RequestId = u64;
 
@@ -8,14 +10,38 @@ pub type RequestId = u64;
 pub enum RequestState {
     /// Queued; not yet admitted to the running batch.
     Waiting,
-    /// Admitted; prefill pending or in flight.
+    /// Admitted; prefill pending or in flight (possibly mid-chunk).
     Prefilling,
     /// In the decode batch, generating tokens.
     Decoding,
-    /// Finished (max tokens or EOS).
+    /// Finished (max tokens or stop sequence).
     Done,
     /// Rejected/aborted (e.g. KV capacity exhausted).
     Failed,
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// A configured stop sequence matched (and was truncated from the
+    /// output).
+    Stop,
+    /// The paged KV pool could not hold another token and the request was
+    /// finished early with what it had.
+    KvExhausted,
+}
+
+impl FinishReason {
+    /// Stable lowercase name, used in scenario JSON and completions.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::KvExhausted => "kv_exhausted",
+        }
+    }
 }
 
 /// One inference request and its progress.
@@ -23,10 +49,19 @@ pub enum RequestState {
 pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
+    /// Per-request sampling/termination config (greedy by default).
+    pub gen: GenerationConfig,
     pub state: RequestState,
     /// Generated token ids.
     pub output: Vec<i32>,
+    /// Prompt+output positions whose KV has been written this admission —
+    /// the chunked-prefill cursor. Reset to 0 on preemption (the KV is
+    /// released; readmission re-prefills `prompt ++ output`).
+    pub prefilled: usize,
+    /// How many times this request has been preempted.
+    pub preemptions: u32,
+    /// Set exactly once, when the request transitions to `Done`.
+    pub finish: Option<FinishReason>,
     /// Simulated clock (ns) when the request arrived / prefilled / finished.
     pub t_arrive_ns: u64,
     pub t_first_token_ns: Option<u64>,
@@ -34,17 +69,31 @@ pub struct Request {
 }
 
 impl Request {
+    /// Greedy request for `max_new_tokens` (the pre-sampling API shape).
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize, now_ns: u64) -> Self {
+        Self::with_gen(id, prompt, GenerationConfig::greedy(max_new_tokens), now_ns)
+    }
+
+    /// Request with a full per-request generation config.
+    pub fn with_gen(id: RequestId, prompt: Vec<i32>, gen: GenerationConfig, now_ns: u64) -> Self {
         Self {
             id,
             prompt,
-            max_new_tokens,
+            gen,
             state: RequestState::Waiting,
             output: Vec::new(),
+            prefilled: 0,
+            preemptions: 0,
+            finish: None,
             t_arrive_ns: now_ns,
             t_first_token_ns: None,
             t_done_ns: None,
         }
+    }
+
+    /// Generation budget (≥ 1; validated at submit).
+    pub fn max_new_tokens(&self) -> usize {
+        self.gen.max_new_tokens
     }
 
     /// Current context length (prompt + generated).
@@ -54,6 +103,37 @@ impl Request {
 
     pub fn is_finished(&self) -> bool {
         matches!(self.state, RequestState::Done | RequestState::Failed)
+    }
+
+    /// Accept one generated token: record TTFT on the first, then apply
+    /// the config's termination rules — stop-sequence suffix match (which
+    /// truncates the matched tokens and finishes with
+    /// [`FinishReason::Stop`]) before the `max_new_tokens` length check.
+    /// Returns `true` when the request just finished.
+    pub fn accept_token(&mut self, token: i32, now_ns: u64) -> bool {
+        self.output.push(token);
+        if self.t_first_token_ns.is_none() {
+            self.t_first_token_ns = Some(now_ns);
+        }
+        if let Some(n) = match_stop(&self.output, &self.gen.stop) {
+            self.output.truncate(self.output.len() - n);
+            self.finish_with(FinishReason::Stop, now_ns);
+            return true;
+        }
+        if self.output.len() >= self.gen.max_new_tokens {
+            self.finish_with(FinishReason::Length, now_ns);
+            return true;
+        }
+        false
+    }
+
+    /// Transition to `Done` with a reason (idempotent on the reason).
+    pub fn finish_with(&mut self, reason: FinishReason, now_ns: u64) {
+        self.state = RequestState::Done;
+        self.t_done_ns = Some(now_ns);
+        if self.finish.is_none() {
+            self.finish = Some(reason);
+        }
     }
 
     /// Time-to-first-token in simulated ns.
@@ -75,6 +155,7 @@ mod tests {
     fn lifecycle_accessors() {
         let mut r = Request::new(1, vec![1, 2, 3], 4, 100);
         assert_eq!(r.ctx_len(), 3);
+        assert_eq!(r.max_new_tokens(), 4);
         assert!(!r.is_finished());
         r.output.push(7);
         assert_eq!(r.ctx_len(), 4);
@@ -84,5 +165,41 @@ mod tests {
         r.t_done_ns = Some(400);
         assert_eq!(r.latency_ns(), Some(300));
         assert!(r.is_finished());
+    }
+
+    #[test]
+    fn accept_token_length_finish() {
+        let mut r = Request::new(1, vec![1], 2, 0);
+        assert!(!r.accept_token(10, 50));
+        assert_eq!(r.ttft_ns(), Some(50));
+        assert!(r.accept_token(11, 60));
+        assert_eq!(r.finish, Some(FinishReason::Length));
+        assert_eq!(r.output, vec![10, 11]);
+        assert_eq!(r.latency_ns(), Some(60));
+    }
+
+    #[test]
+    fn accept_token_stop_truncates() {
+        let gen = GenerationConfig {
+            stop: vec![vec![8, 9]],
+            ..GenerationConfig::greedy(10)
+        };
+        let mut r = Request::with_gen(2, vec![1], gen, 0);
+        assert!(!r.accept_token(7, 10));
+        assert!(!r.accept_token(8, 20));
+        assert!(r.accept_token(9, 30));
+        assert_eq!(r.finish, Some(FinishReason::Stop));
+        assert_eq!(r.output, vec![7], "matched stop tokens truncated");
+        // TTFT was still recorded on the first (kept) token
+        assert_eq!(r.ttft_ns(), Some(10));
+    }
+
+    #[test]
+    fn stop_beats_length_on_final_token() {
+        let gen = GenerationConfig { stop: vec![vec![5]], ..GenerationConfig::greedy(1) };
+        let mut r = Request::with_gen(3, vec![1], gen, 0);
+        assert!(r.accept_token(5, 10));
+        assert_eq!(r.finish, Some(FinishReason::Stop));
+        assert!(r.output.is_empty());
     }
 }

@@ -12,8 +12,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use super::engine::ServingEngine;
+use super::generation::GenerationConfig;
 use super::metrics::Metrics;
-use super::request::RequestId;
+use super::request::{FinishReason, RequestId};
 
 /// A completed request's outputs. A request refused at submit with a typed
 /// [`crate::coordinator::SubmitError`] completes immediately with empty
@@ -24,11 +25,13 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     pub ttft_ns: Option<u64>,
     pub latency_ns: Option<u64>,
+    /// Why generation stopped (`None` for rejected/failed requests).
+    pub finish: Option<FinishReason>,
     pub rejected: Option<String>,
 }
 
 enum Msg {
-    Submit { prompt: Vec<i32>, max_new: usize, reply: Sender<Completion> },
+    Submit { prompt: Vec<i32>, gen: GenerationConfig, reply: Sender<Completion> },
     Shutdown,
 }
 
@@ -54,28 +57,16 @@ impl Server {
                     // drain submissions (block only when idle)
                     if engine.batcher.is_idle() {
                         match rx.recv() {
-                            Ok(Msg::Submit { prompt, max_new, reply }) => {
-                                Self::submit_or_reject(
-                                    &mut engine,
-                                    prompt,
-                                    max_new,
-                                    reply,
-                                    &mut pending,
-                                );
+                            Ok(Msg::Submit { prompt, gen, reply }) => {
+                                Self::submit_or_reject(&mut engine, prompt, gen, reply, &mut pending);
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     }
                     while let Ok(msg) = rx.try_recv() {
                         match msg {
-                            Msg::Submit { prompt, max_new, reply } => {
-                                Self::submit_or_reject(
-                                    &mut engine,
-                                    prompt,
-                                    max_new,
-                                    reply,
-                                    &mut pending,
-                                );
+                            Msg::Submit { prompt, gen, reply } => {
+                                Self::submit_or_reject(&mut engine, prompt, gen, reply, &mut pending);
                             }
                             Msg::Shutdown => {
                                 engine.run_until_idle()?;
@@ -99,11 +90,11 @@ impl Server {
     fn submit_or_reject(
         engine: &mut ServingEngine,
         prompt: Vec<i32>,
-        max_new: usize,
+        gen: GenerationConfig,
         reply: Sender<Completion>,
         pending: &mut Vec<(RequestId, Sender<Completion>)>,
     ) {
-        match engine.submit(prompt, max_new) {
+        match engine.submit_with(prompt, gen) {
             Ok(id) => pending.push((id, reply)),
             Err(err) => {
                 let _ = reply.send(Completion {
@@ -111,6 +102,7 @@ impl Server {
                     tokens: Vec::new(),
                     ttft_ns: None,
                     latency_ns: None,
+                    finish: None,
                     rejected: Some(err.to_string()),
                 });
             }
@@ -128,10 +120,17 @@ impl Server {
         });
     }
 
-    /// Submit a prompt; returns a receiver for the completion.
+    /// Submit a prompt for greedy generation; returns a receiver for the
+    /// completion.
     pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<Completion> {
+        self.submit_with(prompt, GenerationConfig::greedy(max_new))
+    }
+
+    /// Submit a prompt with a full per-request [`GenerationConfig`];
+    /// returns a receiver for the completion.
+    pub fn submit_with(&self, prompt: Vec<i32>, gen: GenerationConfig) -> Receiver<Completion> {
         let (reply, rx) = channel();
-        let _ = self.tx.send(Msg::Submit { prompt, max_new, reply });
+        let _ = self.tx.send(Msg::Submit { prompt, gen, reply });
         rx
     }
 
@@ -197,6 +196,22 @@ mod tests {
         let metrics = server.shutdown().unwrap();
         assert_eq!(metrics.requests_rejected, 1);
         assert_eq!(metrics.requests_done, 1);
+    }
+
+    #[test]
+    fn submit_with_config_round_trips_finish_reason() {
+        let server = Server::spawn(factory()).unwrap();
+        let gen = GenerationConfig { max_new_tokens: 5, seed: 7, ..Default::default() };
+        let rx = server.submit_with(vec![1; 8], gen);
+        let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c.tokens.len(), 5);
+        assert_eq!(c.finish, Some(FinishReason::Length));
+        // an invalid config rejects immediately with the rendered error
+        let bad = GenerationConfig { temperature: -1.0, ..Default::default() };
+        let rx = server.submit_with(vec![1; 8], bad);
+        let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(c.rejected.unwrap().contains("temperature"));
+        server.shutdown().unwrap();
     }
 
     #[test]

@@ -43,7 +43,10 @@
 //!   and the PJRT client wrapper (`--features xla`) that loads
 //!   `artifacts/*.hlo.txt`.
 //! - [`coordinator`] — serving engine: request queue, batcher,
-//!   prefill/decode scheduler, KV-shard manager, metrics.
+//!   prefill/decode scheduler (chunked prefill), seeded sampler,
+//!   KV-shard manager, metrics.
+//! - [`scenario`] — declarative e2e scenario harness: scripted serving
+//!   traffic (`.scn` files) with per-session JSON results.
 //! - [`testutil`] — deterministic PRNG + mini property-testing harness
 //!   (the registry is offline: no proptest/criterion/clap/tokio).
 
@@ -62,6 +65,7 @@ pub mod noc;
 pub mod partition;
 pub mod pim;
 pub mod runtime;
+pub mod scenario;
 pub mod schedule;
 pub mod sim;
 pub mod testutil;

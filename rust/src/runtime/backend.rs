@@ -54,6 +54,35 @@ pub trait NumericsBackend {
     /// Advance the session by one token; returns a single logits row.
     fn decode_step(&mut self, session: SessionId, token: i32) -> anyhow::Result<StepOutput>;
 
+    /// Whether [`Self::prefill_chunk`] is implemented. Backends that only
+    /// support monolithic prefill (the default) are served by the engine
+    /// with `chunk = whole prompt` regardless of its chunk setting.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Run one contiguous slice of the prompt through the model,
+    /// incrementally extending the session's KV cache. `start` is the
+    /// absolute position of `chunk[0]` (the first call has `start == 0`
+    /// and creates the session; later calls must resume exactly where the
+    /// previous chunk ended). `last` marks the final chunk — after it the
+    /// session must be in the same state monolithic
+    /// [`Self::prefill`]`(prompt)` would have produced (bitwise-identical
+    /// KV, same sealing/sharing), and the returned logits' row
+    /// `chunk.len() - 1` selects the first generated token. Returns
+    /// `chunk.len()` logits rows.
+    ///
+    /// The default refuses (see [`Self::supports_chunked_prefill`]).
+    fn prefill_chunk(
+        &mut self,
+        _session: SessionId,
+        _chunk: &[i32],
+        _start: usize,
+        _last: bool,
+    ) -> anyhow::Result<StepOutput> {
+        anyhow::bail!("backend does not support chunked prefill")
+    }
+
     /// Advance many sessions by one token each — the weight-stationary
     /// entry point: one pass over each weight matrix can serve every step
     /// in the slice. Returns one result per step, in order; a per-session

@@ -126,6 +126,11 @@ pub struct ReferenceModel {
 struct RefSession {
     table: BlockTable,
     pos: usize,
+    /// Prompt tokens accumulated across [`NumericsBackend::prefill_chunk`]
+    /// calls, so the final chunk can seal the prefix cache with the full
+    /// prompt (exactly what monolithic prefill seals). Empty outside a
+    /// chunked prefill.
+    prompt: Vec<i32>,
 }
 
 /// The reference backend: a [`ReferenceModel`], the pooled KV store shared
@@ -728,6 +733,12 @@ impl ReferenceBackend {
     pub fn live_sessions(&self) -> usize {
         self.sessions.len()
     }
+
+    /// One session's block table (tests: the chunked-vs-monolithic parity
+    /// check reads KV block contents through it).
+    pub fn session_table(&self, session: SessionId) -> Option<&BlockTable> {
+        self.sessions.get(&session).map(|s| &s.table)
+    }
 }
 
 impl NumericsBackend for ReferenceBackend {
@@ -763,7 +774,7 @@ impl NumericsBackend for ReferenceBackend {
         // the forward pass below computes every row (full logits, same
         // bits) but only writes KV for the unshared positions.
         let table = kv.build_prefill(tokens);
-        let mut sess = RefSession { table, pos: 0 };
+        let mut sess = RefSession { table, pos: 0, prompt: Vec::new() };
         let result = match model.mode {
             KernelMode::Fast => {
                 let rows: Vec<(usize, i32)> = tokens.iter().map(|&t| (0usize, t)).collect();
@@ -796,6 +807,97 @@ impl NumericsBackend for ReferenceBackend {
             Err(e) => {
                 // release whatever the partial prefill held (shared prefix
                 // refcounts included) — a failed prefill leaks nothing
+                kv.release_table(sess.table);
+                Err(e)
+            }
+        }
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Incremental prefill: one contiguous prompt slice per call. The
+    /// first chunk (`start == 0`) creates the session and resolves the
+    /// prefix cache against that chunk alone (sharing a *shorter* prefix
+    /// than monolithic prefill might — an efficiency difference only: the
+    /// recomputed rows are bit-identical, see `forward_rows`). Mid-prefill
+    /// blocks stay unsealed, so concurrent sessions cannot share a
+    /// half-written chain; the last chunk seals the prefix cache with the
+    /// full accumulated prompt — exactly what monolithic
+    /// [`Self::prefill`] seals, making the post-prefill ledger state and
+    /// KV bytes identical for any chunking. A failed chunk releases the
+    /// whole session (nothing leaks; the engine re-prefills on retry).
+    fn prefill_chunk(
+        &mut self,
+        session: SessionId,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+    ) -> anyhow::Result<StepOutput> {
+        ensure!(!chunk.is_empty(), "empty prefill chunk");
+        let m = &self.model.meta;
+        // Same no-silent-truncation contract as monolithic prefill, applied
+        // to the running total.
+        ensure!(
+            start + chunk.len() <= m.s_max,
+            "prompt of {} tokens exceeds the model window s_max={}",
+            start + chunk.len(),
+            m.s_max
+        );
+        if start == 0 {
+            // first chunk (re)creates the session from scratch
+            if let Some(old) = self.sessions.remove(&session) {
+                self.kv.release_table(old.table);
+            }
+            let table = self.kv.build_prefill(chunk);
+            self.sessions.insert(session, RefSession { table, pos: 0, prompt: Vec::new() });
+        }
+        let Self { model, sessions, scratch, kv, pool } = self;
+        let sess = sessions.get_mut(&session).ok_or_else(|| {
+            anyhow::anyhow!("unknown session {session} (chunked prefill must start at 0)")
+        })?;
+        ensure!(
+            sess.pos == start,
+            "prefill chunk starts at {start} but session {session} is at position {}",
+            sess.pos
+        );
+        let result = match model.mode {
+            KernelMode::Fast => {
+                let rows: Vec<(usize, i32)> = chunk.iter().map(|&t| (0usize, t)).collect();
+                model.forward_rows(pool, kv, std::slice::from_mut(sess), &rows, scratch)
+            }
+            KernelMode::Naive => {
+                let mut logits = Vec::with_capacity(chunk.len() * model.meta.vocab);
+                let mut err = None;
+                for &t in chunk {
+                    match model.step_one_naive(kv, sess, t) {
+                        Ok(row) => logits.extend(row),
+                        Err(e) => {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                match err {
+                    None => Ok(logits),
+                    Some(e) => Err(e),
+                }
+            }
+        };
+        match result {
+            Ok(logits) => {
+                sess.prompt.extend_from_slice(chunk);
+                if last {
+                    kv.seal_prefill(&sess.table, &sess.prompt);
+                    sess.prompt = Vec::new();
+                }
+                Ok(StepOutput { logits, rows: chunk.len() })
+            }
+            Err(e) => {
+                // a failed chunk drops the whole partial session — the
+                // engine treats it like a failed prefill
+                let sess = sessions.remove(&session).expect("session present");
                 kv.release_table(sess.table);
                 Err(e)
             }

@@ -1,0 +1,844 @@
+//! Declarative e2e scenario harness: scripted serving traffic against the
+//! [`crate::coordinator::ServingEngine`], with machine-readable results.
+//!
+//! A scenario is a small text script (`.scn`) describing a traffic shape —
+//! per-session arrival times, prompt specs, generation configs, expected
+//! outcomes — plus engine knobs (chunked-prefill size, batch policy, KV
+//! pool shape) and aggregate expectations (minimum preemptions, minimum
+//! prefix-cache hits). The runner drives the engine on the *simulated*
+//! clock, collects one [`SessionResult`] per scripted session, checks every
+//! expectation, and renders the whole run as JSON for CI artifacts.
+//!
+//! Script format — `#` comments; global `key value` lines; one
+//! `session k=v ...` line per request:
+//!
+//! ```text
+//! scenario mixed_length
+//! numerics ref              # ref (tiny artifact model) or synthetic
+//! chunk 8                   # chunked prefill; omit (or `off`) = monolithic
+//! max_batch 8
+//! block_size 4              # KV pool overrides (ref numerics only)
+//! blocks 12
+//! expect_min_preemptions 1
+//!
+//! session arrive=0 prompt=rand:96:11 gen=8 expect=done
+//! session arrive=0 prompt=rand:12:12 gen=8 seed=5 temp=0.8 top_k=40
+//! session arrive=0 prompt=prefix:8:21+2:31 gen=6 stop=3,4|9
+//! ```
+//!
+//! Prompt specs: `tokens:1,2,3` (literal ids), `rand:LEN:SEED`
+//! (deterministic [`SplitMix64`] tokens), and
+//! `prefix:PLEN:PSEED+SLEN:SSEED` (a shared deterministic prefix plus a
+//! private suffix — sessions repeating the same `PLEN:PSEED` share KV
+//! blocks when prefix sharing is on). Arrivals are simulated nanoseconds;
+//! a request arriving mid decode-round is observed at the next round
+//! boundary, which is the engine's natural scheduling quantum.
+
+use std::path::{Path, PathBuf};
+
+use crate::arch::HwParams;
+use crate::coordinator::{
+    BatchPolicy, EngineConfig, FinishReason, GenerationConfig, Metrics, Numerics, RequestId,
+    RequestState, ServingEngine,
+};
+use crate::kvcache::KvCacheConfig;
+use crate::model::ModelPreset;
+use crate::runtime::{KernelMode, NumericsBackend, ReferenceBackend};
+use crate::testutil::SplitMix64;
+
+/// Which numerics the scenario engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumericsKind {
+    /// Synthetic tokens (simulation-only; any model preset).
+    Synthetic,
+    /// The pure-Rust reference backend over the tiny artifact model.
+    Reference,
+}
+
+/// How one scripted session's prompt is produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PromptSpec {
+    /// Literal token ids.
+    Tokens(Vec<i32>),
+    /// `len` deterministic tokens from `seed` (uniform over the vocab).
+    Random { len: usize, seed: u64 },
+    /// A shared deterministic prefix plus a private suffix: sessions with
+    /// the same `(prefix_len, prefix_seed)` have identical prefixes.
+    SharedPrefix { prefix_len: usize, prefix_seed: u64, suffix_len: usize, suffix_seed: u64 },
+}
+
+impl PromptSpec {
+    /// Materialise the token ids for a backend with `vocab` entries.
+    pub fn materialize(&self, vocab: usize) -> Vec<i32> {
+        let v = vocab.max(1) as u64;
+        let rand = |len: usize, seed: u64| -> Vec<i32> {
+            let mut rng = SplitMix64::new(seed);
+            (0..len).map(|_| rng.below(v) as i32).collect()
+        };
+        match self {
+            PromptSpec::Tokens(t) => t.clone(),
+            PromptSpec::Random { len, seed } => rand(*len, *seed),
+            PromptSpec::SharedPrefix { prefix_len, prefix_seed, suffix_len, suffix_seed } => {
+                let mut p = rand(*prefix_len, *prefix_seed);
+                p.extend(rand(*suffix_len, *suffix_seed));
+                p
+            }
+        }
+    }
+
+    /// Prompt length in tokens (materialisation-free).
+    pub fn len(&self) -> usize {
+        match self {
+            PromptSpec::Tokens(t) => t.len(),
+            PromptSpec::Random { len, .. } => *len,
+            PromptSpec::SharedPrefix { prefix_len, suffix_len, .. } => prefix_len + suffix_len,
+        }
+    }
+
+    /// True when the prompt has no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Expected terminal outcome of one scripted session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Expectation {
+    /// Completes with generated tokens.
+    Done,
+    /// Refused with a typed [`crate::coordinator::SubmitError`] (never
+    /// queues).
+    Rejected,
+    /// Admitted but fails or is dropped by the engine.
+    Failed,
+}
+
+impl Expectation {
+    fn as_str(self) -> &'static str {
+        match self {
+            Expectation::Done => "done",
+            Expectation::Rejected => "rejected",
+            Expectation::Failed => "failed",
+        }
+    }
+}
+
+/// One scripted request.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Simulated arrival time, ns (observed at the next round boundary).
+    pub arrive_ns: u64,
+    pub prompt: PromptSpec,
+    pub gen: GenerationConfig,
+    pub expect: Expectation,
+}
+
+/// Aggregate expectations checked after the run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Expect {
+    pub min_preemptions: u64,
+    pub min_prefix_hits: u64,
+}
+
+/// A parsed scenario script.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub numerics: NumericsKind,
+    /// Engine model preset (defaults: Tiny for reference numerics, 1B for
+    /// synthetic).
+    pub model: Option<ModelPreset>,
+    /// Chunked-prefill size (`None` = monolithic prefill).
+    pub chunk: Option<usize>,
+    pub max_batch: Option<usize>,
+    pub max_total_ctx: Option<usize>,
+    /// KV pool overrides (reference numerics only).
+    pub block_size: Option<usize>,
+    pub blocks: Option<usize>,
+    pub prefix_sharing: Option<bool>,
+    pub expect: Expect,
+    pub sessions: Vec<SessionSpec>,
+}
+
+/// Outcome of one scripted session.
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    /// Index in script order.
+    pub index: usize,
+    /// Engine request id (`None` when rejected at submit).
+    pub id: Option<RequestId>,
+    /// `"done"`, `"rejected"`, or `"failed"`.
+    pub outcome: &'static str,
+    /// Rendered [`crate::coordinator::SubmitError`] for rejections.
+    pub rejected: Option<String>,
+    pub prompt_tokens: usize,
+    pub output: Vec<i32>,
+    pub finish: Option<FinishReason>,
+    pub ttft_ns: Option<u64>,
+    pub latency_ns: Option<u64>,
+    pub preemptions: u32,
+    /// Did the outcome match the script's `expect=`?
+    pub expect_ok: bool,
+}
+
+/// One full scenario run: per-session results + engine metrics +
+/// expectation verdicts.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub numerics: NumericsKind,
+    pub chunk: Option<usize>,
+    pub sessions: Vec<SessionResult>,
+    pub metrics: Metrics,
+    /// Human-readable expectation failures (empty = passed).
+    pub expect_failures: Vec<String>,
+}
+
+impl ScenarioReport {
+    /// True when every per-session and aggregate expectation held.
+    pub fn passed(&self) -> bool {
+        self.expect_failures.is_empty()
+    }
+
+    /// Render the report as a JSON object (hand-rolled — serde is not in
+    /// the offline registry; the schema is pinned by
+    /// `tests/integration_scenarios.rs`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push('{');
+        push_kv_str(&mut s, "scenario", &self.scenario);
+        s.push(',');
+        push_kv_str(
+            &mut s,
+            "numerics",
+            match self.numerics {
+                NumericsKind::Synthetic => "synthetic",
+                NumericsKind::Reference => "ref",
+            },
+        );
+        s.push(',');
+        match self.chunk {
+            Some(c) => s.push_str(&format!("\"chunk\":{c}")),
+            None => s.push_str("\"chunk\":null"),
+        }
+        s.push_str(&format!(",\"passed\":{}", self.passed()));
+        s.push_str(",\"expect_failures\":[");
+        for (i, f) in self.expect_failures.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&json_string(f));
+        }
+        s.push(']');
+        let m = &self.metrics;
+        let (tp50, tp99) = m.ttft_p50_p99();
+        let (lp50, lp99) = m.latency_p50_p99();
+        s.push_str(&format!(
+            ",\"metrics\":{{\"requests_done\":{},\"requests_failed\":{},\
+             \"requests_rejected\":{},\"requests_stopped\":{},\"preemptions\":{},\
+             \"prefill_tokens\":{},\"prefill_chunks\":{},\"decode_tokens\":{},\
+             \"sim_time_ns\":{},\"kv_prefix_hits\":{},\"kv_cow_copies\":{},\
+             \"kv_peak_blocks_used\":{},\"ttft_p50_ns\":{tp50},\"ttft_p99_ns\":{tp99},\
+             \"latency_p50_ns\":{lp50},\"latency_p99_ns\":{lp99}}}",
+            m.requests_done,
+            m.requests_failed,
+            m.requests_rejected,
+            m.requests_stopped,
+            m.preemptions,
+            m.prefill_tokens,
+            m.prefill_chunks,
+            m.decode_tokens,
+            m.sim_time_ns,
+            m.kv_prefix_hits,
+            m.kv_cow_copies,
+            m.kv_peak_blocks_used,
+        ));
+        s.push_str(",\"sessions\":[");
+        for (i, r) in self.sessions.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('{');
+            s.push_str(&format!("\"index\":{}", r.index));
+            match r.id {
+                Some(id) => s.push_str(&format!(",\"id\":{id}")),
+                None => s.push_str(",\"id\":null"),
+            }
+            s.push(',');
+            push_kv_str(&mut s, "outcome", r.outcome);
+            match &r.rejected {
+                Some(msg) => s.push_str(&format!(",\"rejected\":{}", json_string(msg))),
+                None => s.push_str(",\"rejected\":null"),
+            }
+            s.push_str(&format!(
+                ",\"prompt_tokens\":{},\"output_tokens\":{}",
+                r.prompt_tokens,
+                r.output.len()
+            ));
+            match r.finish {
+                Some(f) => {
+                    s.push(',');
+                    push_kv_str(&mut s, "finish", f.as_str());
+                }
+                None => s.push_str(",\"finish\":null"),
+            }
+            push_kv_opt_u64(&mut s, "ttft_ns", r.ttft_ns);
+            push_kv_opt_u64(&mut s, "latency_ns", r.latency_ns);
+            s.push_str(&format!(",\"preemptions\":{},\"expect_ok\":{}", r.preemptions, r.expect_ok));
+            s.push('}');
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn push_kv_str(s: &mut String, key: &str, val: &str) {
+    s.push_str(&format!("\"{key}\":{}", json_string(val)));
+}
+
+fn push_kv_opt_u64(s: &mut String, key: &str, val: Option<u64>) {
+    match val {
+        Some(v) => s.push_str(&format!(",\"{key}\":{v}")),
+        None => s.push_str(&format!(",\"{key}\":null")),
+    }
+}
+
+/// A/B report for the chunked-prefill TTFT comparison: the same scenario
+/// run with its scripted chunk size and with chunking off. The JSON keeps
+/// both full reports plus a per-session TTFT table so CI artifacts show
+/// the interleaving win directly.
+pub fn chunk_ab_json(on: &ScenarioReport, off: &ScenarioReport) -> String {
+    let mut s = String::with_capacity(2048);
+    s.push('{');
+    push_kv_str(&mut s, "scenario", &on.scenario);
+    s.push_str(",\"ttft_ns\":[");
+    for (i, (a, b)) in on.sessions.iter().zip(&off.sessions).enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{{\"index\":{},\"prompt_tokens\":{}", a.index, a.prompt_tokens));
+        push_kv_opt_u64(&mut s, "chunk_on", a.ttft_ns);
+        push_kv_opt_u64(&mut s, "chunk_off", b.ttft_ns);
+        let improved = matches!((a.ttft_ns, b.ttft_ns), (Some(x), Some(y)) if x < y);
+        s.push_str(&format!(",\"improved\":{improved}}}"));
+    }
+    s.push_str("],\"chunk_on\":");
+    s.push_str(&on.to_json());
+    s.push_str(",\"chunk_off\":");
+    s.push_str(&off.to_json());
+    s.push('}');
+    s
+}
+
+impl Scenario {
+    /// Parse a scenario script (see the module docs for the format).
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut sc = Scenario {
+            name: "unnamed".into(),
+            numerics: NumericsKind::Synthetic,
+            model: None,
+            chunk: None,
+            max_batch: None,
+            max_total_ctx: None,
+            block_size: None,
+            blocks: None,
+            prefix_sharing: None,
+            expect: Expect::default(),
+            sessions: Vec::new(),
+        };
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = |msg: String| anyhow::anyhow!("line {}: {msg}", ln + 1);
+            let (key, rest) = match line.split_once(char::is_whitespace) {
+                Some((k, r)) => (k, r.trim()),
+                None => (line, ""),
+            };
+            match key {
+                "scenario" => sc.name = rest.to_string(),
+                "numerics" => {
+                    sc.numerics = match rest {
+                        "synthetic" => NumericsKind::Synthetic,
+                        "ref" | "reference" => NumericsKind::Reference,
+                        other => return Err(ctx(format!("unknown numerics '{other}'"))),
+                    }
+                }
+                "model" => {
+                    sc.model = Some(
+                        ModelPreset::parse(rest)
+                            .ok_or_else(|| ctx(format!("unknown model '{rest}'")))?,
+                    )
+                }
+                "chunk" => {
+                    sc.chunk = match rest {
+                        "off" | "none" => None,
+                        n => Some(parse_num(n).map_err(&ctx)?),
+                    }
+                }
+                "max_batch" => sc.max_batch = Some(parse_num(rest).map_err(&ctx)?),
+                "max_total_ctx" => sc.max_total_ctx = Some(parse_num(rest).map_err(&ctx)?),
+                "block_size" => sc.block_size = Some(parse_num(rest).map_err(&ctx)?),
+                "blocks" => sc.blocks = Some(parse_num(rest).map_err(&ctx)?),
+                "prefix_sharing" => {
+                    sc.prefix_sharing = Some(match rest {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        other => return Err(ctx(format!("prefix_sharing on|off, got '{other}'"))),
+                    })
+                }
+                "expect_min_preemptions" => {
+                    sc.expect.min_preemptions = parse_num(rest).map_err(&ctx)?
+                }
+                "expect_min_prefix_hits" => {
+                    sc.expect.min_prefix_hits = parse_num(rest).map_err(&ctx)?
+                }
+                "session" => {
+                    sc.sessions.push(Self::parse_session(rest).map_err(|e| ctx(e.to_string()))?)
+                }
+                other => return Err(ctx(format!("unknown directive '{other}'"))),
+            }
+        }
+        anyhow::ensure!(!sc.sessions.is_empty(), "scenario '{}' has no sessions", sc.name);
+        Ok(sc)
+    }
+
+    fn parse_session(rest: &str) -> anyhow::Result<SessionSpec> {
+        let mut spec = SessionSpec {
+            arrive_ns: 0,
+            prompt: PromptSpec::Tokens(Vec::new()),
+            gen: GenerationConfig::default(),
+            expect: Expectation::Done,
+        };
+        for field in rest.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("session field '{field}' is not key=value"))?;
+            match k {
+                "arrive" => spec.arrive_ns = parse_num(v).map_err(anyhow::Error::msg)?,
+                "prompt" => spec.prompt = Self::parse_prompt(v)?,
+                "gen" => spec.gen.max_new_tokens = parse_num(v).map_err(anyhow::Error::msg)?,
+                "temp" => spec.gen.temperature = parse_f32(v)?,
+                "top_k" => spec.gen.top_k = parse_num(v).map_err(anyhow::Error::msg)?,
+                "top_p" => spec.gen.top_p = parse_f32(v)?,
+                "rep" => spec.gen.repetition_penalty = parse_f32(v)?,
+                "seed" => spec.gen.seed = parse_num(v).map_err(anyhow::Error::msg)?,
+                "stop" => {
+                    spec.gen.stop = v
+                        .split('|')
+                        .map(|seq| {
+                            seq.split(',')
+                                .map(|t| {
+                                    t.parse::<i32>().map_err(|_| {
+                                        anyhow::anyhow!("bad stop token '{t}' in '{v}'")
+                                    })
+                                })
+                                .collect::<anyhow::Result<Vec<i32>>>()
+                        })
+                        .collect::<anyhow::Result<Vec<Vec<i32>>>>()?
+                }
+                "expect" => {
+                    spec.expect = match v {
+                        "done" => Expectation::Done,
+                        "rejected" => Expectation::Rejected,
+                        "failed" => Expectation::Failed,
+                        other => anyhow::bail!("expect done|rejected|failed, got '{other}'"),
+                    }
+                }
+                other => anyhow::bail!("unknown session field '{other}'"),
+            }
+        }
+        // `gen=0` is a deliberately invalid config scenarios use to script
+        // a typed rejection, so it is NOT validated here — the engine's
+        // submit path is the thing under test.
+        anyhow::ensure!(
+            !spec.prompt.is_empty() || matches!(spec.expect, Expectation::Rejected),
+            "session needs a prompt= spec (or expect=rejected)"
+        );
+        Ok(spec)
+    }
+
+    fn parse_prompt(v: &str) -> anyhow::Result<PromptSpec> {
+        let bad = || anyhow::anyhow!("bad prompt spec '{v}' (tokens:…, rand:LEN:SEED, or prefix:PLEN:PSEED+SLEN:SSEED)");
+        let (kind, rest) = v.split_once(':').ok_or_else(bad)?;
+        match kind {
+            "tokens" => Ok(PromptSpec::Tokens(
+                rest.split(',')
+                    .map(|t| t.parse::<i32>().map_err(|_| bad()))
+                    .collect::<anyhow::Result<Vec<i32>>>()?,
+            )),
+            "rand" => {
+                let (len, seed) = rest.split_once(':').ok_or_else(bad)?;
+                Ok(PromptSpec::Random {
+                    len: len.parse().map_err(|_| bad())?,
+                    seed: seed.parse().map_err(|_| bad())?,
+                })
+            }
+            "prefix" => {
+                let (pre, suf) = rest.split_once('+').ok_or_else(bad)?;
+                let (plen, pseed) = pre.split_once(':').ok_or_else(bad)?;
+                let (slen, sseed) = suf.split_once(':').ok_or_else(bad)?;
+                Ok(PromptSpec::SharedPrefix {
+                    prefix_len: plen.parse().map_err(|_| bad())?,
+                    prefix_seed: pseed.parse().map_err(|_| bad())?,
+                    suffix_len: slen.parse().map_err(|_| bad())?,
+                    suffix_seed: sseed.parse().map_err(|_| bad())?,
+                })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// Load and parse a `.scn` script file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let mut sc = Self::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        if sc.name == "unnamed" {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                sc.name = stem.to_string();
+            }
+        }
+        Ok(sc)
+    }
+
+    fn preset(&self) -> ModelPreset {
+        self.model.unwrap_or(match self.numerics {
+            NumericsKind::Reference => ModelPreset::Tiny,
+            NumericsKind::Synthetic => ModelPreset::Llama1B,
+        })
+    }
+
+    /// Build the scenario's numerics. Reference scenarios resolve the
+    /// artifact directory (explicit `artifacts` beats the default search)
+    /// and apply the script's KV pool overrides to the backend.
+    fn build_numerics(&self, artifacts: Option<&Path>) -> anyhow::Result<Numerics> {
+        match self.numerics {
+            NumericsKind::Synthetic => Ok(Numerics::synthetic(self.preset().shape().vocab)),
+            NumericsKind::Reference => {
+                let dir: PathBuf = match artifacts {
+                    Some(d) => d.to_path_buf(),
+                    None => crate::runtime::default_artifacts_dir(None).ok_or_else(|| {
+                        anyhow::anyhow!("reference scenario needs an artifact dir with meta.txt")
+                    })?,
+                };
+                let backend = ReferenceBackend::load(&dir)?;
+                let overridden =
+                    self.block_size.is_some() || self.blocks.is_some() || self.prefix_sharing.is_some();
+                if !overridden {
+                    return Ok(Numerics::Backend(Box::new(backend)));
+                }
+                let meta = backend.meta();
+                let mut cfg = KvCacheConfig::for_model(meta.d_model, meta.s_max);
+                if let Some(bs) = self.block_size {
+                    cfg.block_size = bs.max(1);
+                }
+                if let Some(n) = self.blocks {
+                    cfg.n_blocks = n.max(1);
+                }
+                if let Some(ps) = self.prefix_sharing {
+                    cfg.prefix_sharing = ps;
+                }
+                let backend = ReferenceBackend::load_with_opts(&dir, KernelMode::Fast, Some(cfg))?;
+                Ok(Numerics::Backend(Box::new(backend)))
+            }
+        }
+    }
+
+    /// Run the scenario with its scripted chunk size.
+    pub fn run(&self, artifacts: Option<&Path>) -> anyhow::Result<ScenarioReport> {
+        self.run_with_chunk(self.chunk, artifacts)
+    }
+
+    /// Run the scenario with an explicit chunked-prefill override (the
+    /// chunk-on/off A/B uses this with the scripted size and `None`).
+    pub fn run_with_chunk(
+        &self,
+        chunk: Option<usize>,
+        artifacts: Option<&Path>,
+    ) -> anyhow::Result<ScenarioReport> {
+        let numerics = self.build_numerics(artifacts)?;
+        let vocab = match &numerics {
+            Numerics::Backend(b) => b.vocab(),
+            Numerics::Synthetic { vocab } => *vocab,
+        };
+        let mut policy = BatchPolicy::default();
+        if let Some(b) = self.max_batch {
+            policy.max_batch = b;
+        }
+        if let Some(c) = self.max_total_ctx {
+            policy.max_total_ctx = c;
+        }
+        let mut engine = ServingEngine::new(EngineConfig {
+            preset: self.preset(),
+            hw: HwParams::default(),
+            policy,
+            numerics,
+        })?;
+        engine.prefill_chunk = chunk;
+
+        // submissions in arrival order (stable: ties stay in script order)
+        let mut order: Vec<usize> = (0..self.sessions.len()).collect();
+        order.sort_by_key(|&i| self.sessions[i].arrive_ns);
+        let mut submitted: Vec<(usize, Result<RequestId, String>)> = Vec::new();
+        let mut pending = order.into_iter().peekable();
+        loop {
+            while let Some(&i) = pending.peek() {
+                let spec = &self.sessions[i];
+                if spec.arrive_ns > engine.now_ns() {
+                    break;
+                }
+                let prompt = spec.prompt.materialize(vocab);
+                let res = engine
+                    .submit_with(prompt, spec.gen.clone())
+                    .map_err(|e| e.to_string());
+                submitted.push((i, res));
+                pending.next();
+            }
+            if !engine.step()? {
+                match pending.peek() {
+                    Some(&i) => engine.advance_clock_to(self.sessions[i].arrive_ns),
+                    None => break,
+                }
+            }
+        }
+
+        // collect per-session results in script order
+        submitted.sort_by_key(|&(i, _)| i);
+        let mut sessions = Vec::with_capacity(submitted.len());
+        let mut failures = Vec::new();
+        for (i, res) in submitted {
+            let spec = &self.sessions[i];
+            let r = match res {
+                Err(msg) => SessionResult {
+                    index: i,
+                    id: None,
+                    outcome: "rejected",
+                    rejected: Some(msg),
+                    prompt_tokens: spec.prompt.len(),
+                    output: Vec::new(),
+                    finish: None,
+                    ttft_ns: None,
+                    latency_ns: None,
+                    preemptions: 0,
+                    expect_ok: spec.expect == Expectation::Rejected,
+                },
+                Ok(id) => match engine.take_finished_request(id) {
+                    Some(req) => {
+                        let outcome = if req.state == RequestState::Done { "done" } else { "failed" };
+                        SessionResult {
+                            index: i,
+                            id: Some(id),
+                            outcome,
+                            rejected: None,
+                            prompt_tokens: req.prompt.len(),
+                            ttft_ns: req.ttft_ns(),
+                            latency_ns: req.latency_ns(),
+                            finish: req.finish,
+                            preemptions: req.preemptions,
+                            output: req.output,
+                            expect_ok: outcome == spec.expect.as_str(),
+                        }
+                    }
+                    None => SessionResult {
+                        index: i,
+                        id: Some(id),
+                        outcome: "failed",
+                        rejected: None,
+                        prompt_tokens: spec.prompt.len(),
+                        output: Vec::new(),
+                        finish: None,
+                        ttft_ns: None,
+                        latency_ns: None,
+                        preemptions: 0,
+                        expect_ok: spec.expect == Expectation::Failed,
+                    },
+                },
+            };
+            if !r.expect_ok {
+                failures.push(format!(
+                    "session {i}: expected {}, got {}{}",
+                    spec.expect.as_str(),
+                    r.outcome,
+                    r.rejected.as_deref().map(|m| format!(" ({m})")).unwrap_or_default()
+                ));
+            }
+            sessions.push(r);
+        }
+        let m = &engine.metrics;
+        if m.preemptions < self.expect.min_preemptions {
+            failures.push(format!(
+                "expected >= {} preemptions, saw {}",
+                self.expect.min_preemptions, m.preemptions
+            ));
+        }
+        if m.kv_prefix_hits < self.expect.min_prefix_hits {
+            failures.push(format!(
+                "expected >= {} prefix-cache hits, saw {}",
+                self.expect.min_prefix_hits, m.kv_prefix_hits
+            ));
+        }
+        Ok(ScenarioReport {
+            scenario: self.name.clone(),
+            numerics: self.numerics,
+            chunk,
+            sessions,
+            metrics: engine.metrics.clone(),
+            expect_failures: failures,
+        })
+    }
+
+    /// Run the chunk-on/off A/B: the scripted chunk size vs monolithic
+    /// prefill. Returns `(on, off)`.
+    pub fn run_chunk_ab(
+        &self,
+        artifacts: Option<&Path>,
+    ) -> anyhow::Result<(ScenarioReport, ScenarioReport)> {
+        anyhow::ensure!(
+            self.chunk.is_some(),
+            "scenario '{}' has no chunk size — nothing to A/B",
+            self.name
+        );
+        let on = self.run_with_chunk(self.chunk, artifacts)?;
+        let off = self.run_with_chunk(None, artifacts)?;
+        Ok((on, off))
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str) -> Result<T, String> {
+    s.parse().map_err(|_| format!("bad number '{s}'"))
+}
+
+fn parse_f32(s: &str) -> anyhow::Result<f32> {
+    s.parse().map_err(|_| anyhow::anyhow!("bad float '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCRIPT: &str = "\
+# demo script
+scenario demo
+numerics synthetic
+model 1b
+chunk 16
+max_batch 4
+expect_min_preemptions 0
+
+session arrive=0 prompt=rand:40:1 gen=4 expect=done
+session arrive=500 prompt=tokens:1,2,3 gen=2 seed=9 temp=0.8 top_k=8 stop=5,6|7
+session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
+";
+
+    #[test]
+    fn parse_roundtrip() {
+        let sc = Scenario::parse(SCRIPT).unwrap();
+        assert_eq!(sc.name, "demo");
+        assert_eq!(sc.numerics, NumericsKind::Synthetic);
+        assert_eq!(sc.chunk, Some(16));
+        assert_eq!(sc.max_batch, Some(4));
+        assert_eq!(sc.sessions.len(), 3);
+        assert_eq!(sc.sessions[0].prompt.len(), 40);
+        assert_eq!(sc.sessions[1].arrive_ns, 500);
+        assert_eq!(sc.sessions[1].gen.stop, vec![vec![5, 6], vec![7]]);
+        assert!((sc.sessions[1].gen.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(sc.sessions[2].expect, Expectation::Rejected);
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Scenario::parse("bogus directive\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Scenario::parse("scenario x\nsession prompt=nope:1\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // no sessions at all
+        assert!(Scenario::parse("scenario empty\n").is_err());
+    }
+
+    #[test]
+    fn prompt_specs_are_deterministic_and_share_prefixes() {
+        let a = PromptSpec::Random { len: 16, seed: 7 }.materialize(512);
+        let b = PromptSpec::Random { len: 16, seed: 7 }.materialize(512);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..512).contains(&t)));
+        let p1 = PromptSpec::SharedPrefix {
+            prefix_len: 8,
+            prefix_seed: 3,
+            suffix_len: 2,
+            suffix_seed: 10,
+        }
+        .materialize(512);
+        let p2 = PromptSpec::SharedPrefix {
+            prefix_len: 8,
+            prefix_seed: 3,
+            suffix_len: 2,
+            suffix_seed: 11,
+        }
+        .materialize(512);
+        assert_eq!(p1[..8], p2[..8], "same prefix seed ⇒ identical prefix");
+        assert_ne!(p1[8..], p2[8..], "different suffix seeds ⇒ distinct tails");
+    }
+
+    #[test]
+    fn synthetic_scenario_runs_and_reports() {
+        let sc = Scenario::parse(SCRIPT).unwrap();
+        let report = sc.run(None).unwrap();
+        assert!(report.passed(), "failures: {:?}", report.expect_failures);
+        assert_eq!(report.sessions.len(), 3);
+        assert_eq!(report.sessions[0].outcome, "done");
+        assert_eq!(report.sessions[0].output.len(), 4);
+        assert_eq!(report.sessions[1].outcome, "done");
+        assert_eq!(report.sessions[2].outcome, "rejected");
+        assert!(report.sessions[2].rejected.as_deref().unwrap().contains("max_new_tokens"));
+        // the late arrival was observed at (or after) its scripted time
+        assert!(report.metrics.requests_done == 2);
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\":\"demo\""));
+        assert!(json.contains("\"passed\":true"));
+        assert!(json.contains("\"outcome\":\"rejected\""));
+    }
+
+    #[test]
+    fn expectation_mismatch_fails_the_report() {
+        let text = "scenario bad\nnumerics synthetic\nsession prompt=rand:8:1 gen=2 expect=rejected\n";
+        let sc = Scenario::parse(text).unwrap();
+        let report = sc.run(None).unwrap();
+        assert!(!report.passed());
+        assert!(report.expect_failures[0].contains("session 0"));
+        assert!(report.to_json().contains("\"passed\":false"));
+    }
+
+    #[test]
+    fn chunk_ab_json_shape() {
+        let sc = Scenario::parse(SCRIPT).unwrap();
+        let (on, off) = sc.run_chunk_ab(None).unwrap();
+        assert_eq!(on.chunk, Some(16));
+        assert_eq!(off.chunk, None);
+        let json = chunk_ab_json(&on, &off);
+        assert!(json.contains("\"ttft_ns\":["));
+        assert!(json.contains("\"chunk_on\":{"));
+        assert!(json.contains("\"chunk_off\":{"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Chunked prefill ≡ monolithic prefill (ISSUE 6 regression pins).
+//!
+//! The chunked path must be a pure scheduling transformation: for every
+//! chunk size — block-aligned or ragged — the final KV blocks and the
+//! first-token logits must be **bitwise** identical to one monolithic
+//! prefill, the sealed prefix chain must be equally sharable, and engine
+//! token streams must not change. Plus the stop-sequence / `SubmitError`
+//! interplay with chunking enabled.
+
+use std::path::PathBuf;
+
+use leap::arch::HwParams;
+use leap::coordinator::{
+    BatchPolicy, EngineConfig, FinishReason, GenerationConfig, Numerics, ServingEngine,
+    SubmitError,
+};
+use leap::model::ModelPreset;
+use leap::runtime::{NumericsBackend, ReferenceBackend};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+fn prompt(n: usize, salt: i32) -> Vec<i32> {
+    (0..n as i32).map(|i| (i * 29 + salt) % 512).collect()
+}
+
+fn ref_engine() -> ServingEngine {
+    ServingEngine::new(EngineConfig {
+        preset: ModelPreset::Tiny,
+        hw: HwParams::default(),
+        policy: BatchPolicy::default(),
+        numerics: Numerics::reference(fixture_dir()).unwrap(),
+    })
+    .unwrap()
+}
+
+/// The tentpole regression pin: drive `prefill_chunk` directly at every
+/// interesting chunk size — multiples of the fixture's KV block size (2),
+/// ragged sizes that put chunk boundaries mid-block, and one larger than
+/// the prompt — and compare against one monolithic `prefill` of a fresh
+/// backend: first-token logits row, per-layer KV block contents, block
+/// count, and (cold caches) the physical block ids themselves.
+#[test]
+fn chunked_prefill_matches_monolithic_bitwise() {
+    // 19 tokens at block_size 2: 9 full blocks + a partial tail
+    let p = prompt(19, 11);
+    for &chunk in &[2usize, 4, 8, 16, 3, 5, 7, 32] {
+        let mut mono = ReferenceBackend::load(fixture_dir()).unwrap();
+        let mut chunked = ReferenceBackend::load(fixture_dir()).unwrap();
+        assert!(chunked.supports_chunked_prefill());
+        let v = mono.vocab();
+
+        let whole = mono.prefill(0, &p).unwrap();
+        let mut last = None;
+        let mut start = 0;
+        while start < p.len() {
+            let end = (start + chunk).min(p.len());
+            let out = chunked.prefill_chunk(0, &p[start..end], start, end == p.len()).unwrap();
+            assert_eq!(out.rows, end - start, "chunk={chunk}: wrong row count");
+            last = Some(out);
+            start = end;
+        }
+        let last = last.unwrap();
+
+        // first-token logits: the final row selects the first generated
+        // token and must be bitwise identical
+        let mono_row = &whole.logits[(p.len() - 1) * v..p.len() * v];
+        let chunk_row = &last.logits[(last.rows - 1) * v..last.rows * v];
+        assert_eq!(mono_row, chunk_row, "chunk={chunk}: first-token logits differ");
+
+        // KV state: same coverage, bitwise-identical block contents
+        let tm = mono.session_table(0).unwrap();
+        let tc = chunked.session_table(0).unwrap();
+        assert_eq!(tm.len(), tc.len(), "chunk={chunk}: KV positions covered");
+        assert_eq!(tm.blocks().len(), tc.blocks().len(), "chunk={chunk}: block count");
+        let layers = mono.meta().n_layers;
+        for (bm, bc) in tm.blocks().iter().zip(tc.blocks()) {
+            for layer in 0..layers {
+                assert_eq!(
+                    mono.kv().k_block(*bm, layer),
+                    chunked.kv().k_block(*bc, layer),
+                    "chunk={chunk}: K block differs at layer {layer}"
+                );
+                assert_eq!(
+                    mono.kv().v_block(*bm, layer),
+                    chunked.kv().v_block(*bc, layer),
+                    "chunk={chunk}: V block differs at layer {layer}"
+                );
+            }
+        }
+        // both runs start from a cold pool with no interleaved frees, so
+        // even the physical block ids must line up
+        assert_eq!(tm.blocks(), tc.blocks(), "chunk={chunk}: cold-cache block ids");
+
+        // sealing parity: the last chunk seals the full prompt chain, so a
+        // second session over the same prompt must share it on both
+        // backends identically — same prefix hits, same logits
+        let m2 = mono.prefill(1, &p).unwrap();
+        let c2 = chunked.prefill(1, &p).unwrap();
+        assert_eq!(
+            mono.kv().stats().prefix_hits,
+            chunked.kv().stats().prefix_hits,
+            "chunk={chunk}: sealed chains differ in sharability"
+        );
+        assert!(
+            chunked.kv().stats().prefix_hits > 0,
+            "chunk={chunk}: chunked seal produced no sharable chain"
+        );
+        assert_eq!(m2.logits, c2.logits, "chunk={chunk}: shared-prefix logits differ");
+    }
+}
+
+/// Engine level: chunking on (block-aligned, ragged, oversized) vs off
+/// must produce identical greedy token streams, identical prefill token
+/// totals, and the expected number of chunk dispatches.
+#[test]
+fn engine_chunk_on_off_identical_greedy_tokens() {
+    let lens = [24usize, 17];
+    let run = |chunk: Option<usize>| {
+        let mut e = ref_engine();
+        e.prefill_chunk = chunk;
+        let a = e.submit(prompt(lens[0], 3), 8).expect("submit");
+        let b = e.submit(prompt(lens[1], 8), 8).expect("submit");
+        e.run_until_idle().unwrap();
+        let outs =
+            (e.take_completion(a).unwrap().tokens, e.take_completion(b).unwrap().tokens);
+        (outs, e.metrics.clone())
+    };
+    let (mono, m_mono) = run(None);
+    assert_eq!(mono.0.len(), 8);
+    assert_eq!(m_mono.prefill_chunks, 2, "one dispatch per prompt without chunking");
+    for &c in &[2usize, 5, 32] {
+        let (outs, m) = run(Some(c));
+        assert_eq!(outs, mono, "chunk={c} changed a greedy stream");
+        let want: u64 = lens.iter().map(|&l| l.div_ceil(c) as u64).sum();
+        assert_eq!(m.prefill_chunks, want, "chunk={c}: dispatch count");
+        assert_eq!(m.prefill_tokens, m_mono.prefill_tokens, "chunk={c}: prefill tokens");
+        assert_eq!(m.decode_tokens, m_mono.decode_tokens, "chunk={c}: decode tokens");
+    }
+}
+
+/// A chain sealed by a *chunked* prefill serves the prefix cache exactly
+/// like a monolithic one: a later identical prompt hits it.
+#[test]
+fn chunked_seal_then_prefix_share() {
+    let mut e = ref_engine();
+    e.prefill_chunk = Some(3); // ragged: chunk boundaries off the block grid
+    let first = e.submit(prompt(20, 5), 4).expect("submit");
+    e.run_until_idle().unwrap();
+    let first = e.take_completion(first).unwrap().tokens;
+
+    let second = e.submit(prompt(20, 5), 4).expect("submit");
+    e.run_until_idle().unwrap();
+    let second = e.take_completion(second).unwrap().tokens;
+
+    assert_eq!(first, second, "prefix reuse changed tokens");
+    assert!(
+        e.metrics.kv_prefix_hits > 0,
+        "second identical prompt must hit the chain the chunked prefill sealed"
+    );
+}
+
+/// Stop sequences keep working when the match spans the chunked-prefill /
+/// decode boundary: the first generated token comes from the last prefill
+/// chunk's logits, the second from the first decode round, and a 2-token
+/// stop across them must truncate both.
+#[test]
+fn stop_sequence_spans_chunk_and_decode_boundary() {
+    // learn the deterministic greedy stream first
+    let mut e = ref_engine();
+    let id = e.submit(prompt(16, 7), 4).expect("submit");
+    e.run_until_idle().unwrap();
+    let full = e.take_finished_request(id).unwrap().output;
+    assert_eq!(full.len(), 4);
+
+    let run = |stop: Vec<Vec<i32>>| {
+        let mut e = ref_engine();
+        e.prefill_chunk = Some(3);
+        let gen = GenerationConfig { max_new_tokens: 4, stop, ..GenerationConfig::default() };
+        let id = e.submit_with(prompt(16, 7), gen).expect("submit");
+        e.run_until_idle().unwrap();
+        let r = e.take_finished_request(id).unwrap();
+        assert_eq!(e.metrics.requests_stopped, 1);
+        r
+    };
+
+    // spans the boundary: token 0 (prefill logits) + token 1 (decode)
+    let r = run(vec![vec![full[0], full[1]]]);
+    assert_eq!(r.output, Vec::<i32>::new(), "matched stop tokens must be truncated");
+    assert_eq!(r.finish, Some(FinishReason::Stop));
+
+    // matches later, fully inside decode: output keeps the prefix
+    let r = run(vec![vec![full[2], full[3]]]);
+    assert_eq!(r.output, &full[..2]);
+    assert_eq!(r.finish, Some(FinishReason::Stop));
+}
+
+/// Typed submit rejections with chunking enabled: a chunked engine still
+/// refuses malformed configs and impossible contexts before they queue,
+/// and keeps serving afterwards.
+#[test]
+fn submit_errors_with_chunking_enabled() {
+    let mut e = ref_engine();
+    e.prefill_chunk = Some(4);
+
+    let err = e.submit_with(prompt(8, 1), GenerationConfig::greedy(0)).unwrap_err();
+    assert_eq!(err, SubmitError::ZeroMaxNewTokens);
+
+    let bad = GenerationConfig { top_p: 0.0, ..GenerationConfig::greedy(4) };
+    let err = e.submit_with(prompt(8, 1), bad).unwrap_err();
+    assert!(matches!(err, SubmitError::InvalidConfig { .. }), "got {err}");
+
+    let bad = GenerationConfig { stop: vec![vec![]], ..GenerationConfig::greedy(4) };
+    let err = e.submit_with(prompt(8, 1), bad).unwrap_err();
+    assert!(matches!(err, SubmitError::InvalidConfig { .. }), "got {err}");
+
+    // window validation happens before any chunking: s_max = 128
+    let err = e.submit(prompt(200, 1), 4).unwrap_err();
+    assert!(matches!(err, SubmitError::PromptTooLong { s_max: 128, .. }), "got {err}");
+
+    assert_eq!(e.metrics.requests_rejected, 4);
+    assert!(e.batcher.is_idle(), "rejected requests never queue");
+
+    // the engine still serves normally after the rejections
+    let ok = e.submit(prompt(12, 2), 3).expect("valid request");
+    e.run_until_idle().unwrap();
+    assert_eq!(e.take_completion(ok).unwrap().tokens.len(), 3);
+    assert_eq!(e.metrics.requests_done, 1);
+    assert_eq!(e.metrics.requests_failed, 0);
+}

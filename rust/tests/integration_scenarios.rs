@@ -1,0 +1,117 @@
+//! Scenario-suite e2e (ISSUE 6): run the checked-in `.scn` stress scripts
+//! against the tiny reference model and pin their expectations — including
+//! the mixed-length chunk-on/off A/B in which short requests' TTFT must
+//! improve under chunked prefill (the issue's acceptance criterion).
+
+use std::path::PathBuf;
+
+use leap::scenario::{chunk_ab_json, Scenario};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn load(name: &str) -> Scenario {
+    Scenario::load(scenarios_dir().join(name)).unwrap()
+}
+
+/// Every checked-in script parses, runs, and meets its own expectations —
+/// the same sweep the CI scenario-suite job performs.
+#[test]
+fn whole_suite_passes() {
+    let mut ran = 0;
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(scenarios_dir())
+        .unwrap()
+        .filter_map(|e| Some(e.ok()?.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "scn"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let sc = Scenario::load(&path).unwrap();
+        let report = sc.run(Some(&fixture_dir())).unwrap();
+        assert!(
+            report.passed(),
+            "{}: expectation failures: {:?}",
+            sc.name,
+            report.expect_failures
+        );
+        ran += 1;
+    }
+    assert!(ran >= 3, "expected the three checked-in stress scenarios, found {ran}");
+}
+
+#[test]
+fn long_context_scenario_passes() {
+    let report = load("long_context.scn").run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    assert_eq!(report.metrics.requests_done, 3);
+    assert_eq!(report.metrics.requests_rejected, 1);
+    // the over-window prompt carries the typed submit error text
+    assert_eq!(report.sessions[2].outcome, "rejected");
+    let msg = report.sessions[2].rejected.as_deref().unwrap();
+    assert!(msg.contains("s_max"), "unhelpful rejection: {msg}");
+    // the exactly-at-window session spent its whole generation budget
+    assert_eq!(report.sessions[3].output.len(), 29);
+    assert_eq!(report.sessions[0].output.len(), 8);
+}
+
+#[test]
+fn prefix_storm_scenario_preempts_and_shares() {
+    let report = load("prefix_storm.scn").run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    assert_eq!(report.metrics.requests_done, 8);
+    assert!(report.metrics.preemptions >= 1, "12-block pool must preempt under 8 sessions");
+    assert!(report.metrics.kv_prefix_hits >= 1, "shared prefix must hit the cache");
+    assert!(
+        report.metrics.kv_peak_blocks_used <= 12,
+        "peak occupancy {} exceeds the scripted pool",
+        report.metrics.kv_peak_blocks_used
+    );
+    for s in &report.sessions {
+        assert_eq!(s.outcome, "done", "session {}: preemption must not kill requests", s.index);
+        assert_eq!(s.output.len(), 6, "session {}: full budget despite preemption", s.index);
+    }
+    // the per-session results carry the preemption counts
+    assert!(report.sessions.iter().any(|s| s.preemptions > 0));
+    let json = report.to_json();
+    assert!(json.contains("\"passed\":true"));
+    assert!(json.contains("\"preemptions\""));
+}
+
+#[test]
+fn mixed_length_chunking_improves_short_request_ttft() {
+    let sc = load("mixed_length.scn");
+    let (on, off) = sc.run_chunk_ab(Some(&fixture_dir())).unwrap();
+    assert!(on.passed(), "chunk-on failures: {:?}", on.expect_failures);
+    assert!(off.passed(), "chunk-off failures: {:?}", off.expect_failures);
+
+    // chunking is a pure scheduling change: tokens must be identical
+    for (a, b) in on.sessions.iter().zip(&off.sessions) {
+        assert_eq!(a.output, b.output, "session {}: chunking changed tokens", a.index);
+    }
+    assert!(
+        on.metrics.prefill_chunks > off.metrics.prefill_chunks,
+        "chunked run must dispatch more, smaller prefills"
+    );
+
+    // the short interactive sessions (script indexes 1 and 2) sit behind a
+    // 96-token neighbor: chunked prefill must interleave them in sooner
+    for i in [1usize, 2] {
+        let t_on = on.sessions[i].ttft_ns.unwrap();
+        let t_off = off.sessions[i].ttft_ns.unwrap();
+        assert!(
+            t_on < t_off,
+            "session {i}: chunked TTFT {t_on}ns must beat monolithic {t_off}ns"
+        );
+    }
+
+    // the A/B artifact records the win machine-readably
+    let json = chunk_ab_json(&on, &off);
+    assert!(json.contains("\"improved\":true"));
+    assert!(json.contains("\"chunk_on\":{"));
+    assert!(json.contains("\"chunk_off\":{"));
+}

@@ -1,0 +1,266 @@
+//! Sampler determinism and distribution properties (ISSUE 6).
+//!
+//! The seeded sampler is counter-based — the draw for generation step `n`
+//! is a pure function of `(seed, n)` — so a request's token stream must be
+//! invariant to everything the serving environment can vary: worker-pool
+//! size, repeated runs, chunked vs monolithic prefill, and preemption
+//! replay. The pure-distribution properties (temperature → 0 convergence,
+//! top-k / top-p support and renormalisation, penalty-before-filter) are
+//! checked against independent f64 recomputation.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use leap::arch::HwParams;
+use leap::coordinator::generation::distribution;
+use leap::coordinator::{BatchPolicy, EngineConfig, GenerationConfig, Numerics, ServingEngine};
+use leap::kvcache::KvCacheConfig;
+use leap::model::ModelPreset;
+use leap::runtime::{KernelMode, ReferenceBackend, WorkerPool};
+use leap::testutil::{forall, Config};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+/// Serving engine over the tiny reference model with an explicit
+/// worker-pool size (the determinism props pin pool sizes 1/2/max).
+fn engine_with_pool(threads: usize) -> ServingEngine {
+    let backend = ReferenceBackend::load_with_pool(
+        fixture_dir(),
+        KernelMode::Fast,
+        None,
+        WorkerPool::with_threads(threads),
+    )
+    .unwrap();
+    ServingEngine::new(EngineConfig {
+        preset: ModelPreset::Tiny,
+        hw: HwParams::default(),
+        policy: BatchPolicy::default(),
+        numerics: Numerics::Backend(Box::new(backend)),
+    })
+    .unwrap()
+}
+
+fn prompt(n: usize, salt: i32) -> Vec<i32> {
+    (0..n as i32).map(|i| (i * 29 + salt) % 512).collect()
+}
+
+fn sampled_cfg(seed: u64) -> GenerationConfig {
+    GenerationConfig {
+        max_new_tokens: 8,
+        temperature: 0.9,
+        top_k: 40,
+        top_p: 0.9,
+        repetition_penalty: 1.1,
+        stop: Vec::new(),
+        seed,
+    }
+}
+
+/// Run two sampled requests (distinct prompts, seeds) through `e` and
+/// return their token streams.
+fn run_two(e: &mut ServingEngine) -> (Vec<i32>, Vec<i32>) {
+    let a = e.submit_with(prompt(24, 3), sampled_cfg(7)).expect("submit");
+    let b = e.submit_with(prompt(17, 8), sampled_cfg(1234)).expect("submit");
+    e.run_until_idle().unwrap();
+    (e.take_completion(a).unwrap().tokens, e.take_completion(b).unwrap().tokens)
+}
+
+#[test]
+fn same_seed_same_stream_across_pool_sizes_and_runs() {
+    let max = WorkerPool::default_threads().max(4);
+    let (a1, b1) = run_two(&mut engine_with_pool(1));
+    let rerun = run_two(&mut engine_with_pool(1));
+    let two = run_two(&mut engine_with_pool(2));
+    let wide = run_two(&mut engine_with_pool(max));
+    assert_eq!(a1.len(), 8, "sampled request must spend its full budget");
+    assert_eq!(b1.len(), 8);
+    let base = (a1, b1);
+    assert_eq!(base, rerun, "same seed, same pool: streams differ across runs");
+    assert_eq!(base, two, "pool size 2 changed a sampled stream");
+    assert_eq!(base, wide, "pool size {max} changed a sampled stream");
+}
+
+#[test]
+fn sampled_streams_identical_chunked_vs_monolithic() {
+    let run = |chunk: Option<usize>| {
+        let mut e = engine_with_pool(2);
+        e.prefill_chunk = chunk;
+        run_two(&mut e)
+    };
+    let mono = run(None);
+    // a block-aligned size (4 = 2× the KV block size), a ragged one, and
+    // one larger than the short prompt
+    for chunk in [3usize, 4, 20] {
+        assert_eq!(run(Some(chunk)), mono, "chunk={chunk} changed a sampled stream");
+    }
+}
+
+#[test]
+fn sampled_streams_survive_preemption_replay() {
+    // The proven preemption recipe (see tests/integration_reference.rs)
+    // with per-session sampled configs: 8 sessions over a 12-block pool
+    // must preempt, and the counter-based RNG must make readmission replay
+    // draw-for-draw identical to the uninterrupted run on the big pool.
+    let run = |cfg: Option<KvCacheConfig>| {
+        let backend =
+            ReferenceBackend::load_with_opts(fixture_dir(), KernelMode::Fast, cfg).unwrap();
+        let mut e = ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Tiny,
+            hw: HwParams::default(),
+            policy: BatchPolicy { max_batch: 16, max_total_ctx: 100_000 },
+            numerics: Numerics::Backend(Box::new(backend)),
+        })
+        .unwrap();
+        let mut ids = Vec::new();
+        for s in 0..8i32 {
+            // shared 8-token prefix + 2 distinct tokens, generate 6
+            let mut p: Vec<i32> = (0..8).map(|i| (i * 29 + 3) % 512).collect();
+            p.extend([(s * 67 + 40) % 512, (s * 31 + 77) % 512]);
+            let gen = GenerationConfig { max_new_tokens: 6, ..sampled_cfg(100 + s as u64) };
+            ids.push(e.submit_with(p, gen).expect("submit"));
+        }
+        e.run_until_idle().unwrap();
+        assert_eq!(e.metrics.requests_done, 8, "every request must complete");
+        let outs: Vec<Vec<i32>> =
+            ids.into_iter().map(|id| e.take_completion(id).unwrap().tokens).collect();
+        (outs, e.metrics.clone())
+    };
+
+    let tight = KvCacheConfig { block_size: 4, n_blocks: 12, prefix_sharing: true };
+    let (tokens_tight, m_tight) = run(Some(tight));
+    let (tokens_big, m_big) = run(None);
+
+    assert_eq!(tokens_tight, tokens_big, "preemption replay changed a sampled stream");
+    assert!(m_tight.preemptions > 0, "the 12-block pool must have preempted under this load");
+    assert_eq!(m_big.preemptions, 0, "abundant pool must never preempt");
+    for t in &tokens_tight {
+        assert_eq!(t.len(), 6, "preemption must not eat generation budget");
+    }
+}
+
+#[test]
+fn low_temperature_converges_to_greedy_argmax() {
+    forall(Config::cases(200), |rng| {
+        let vocab = rng.range(4, 96);
+        let logits = rng.normal_vec(vocab);
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        let mut runner_up = f32::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            if i != best {
+                runner_up = runner_up.max(v);
+            }
+        }
+        if logits[best] - runner_up < 0.05 {
+            // no clear winner: the limit argument needs a logit gap
+            return Ok(());
+        }
+        let zero = GenerationConfig::greedy(4);
+        let cold = GenerationConfig { temperature: 1e-3, ..GenerationConfig::greedy(4) };
+        let d_zero = distribution(&zero, &logits, &[], &[]);
+        let d_cold = distribution(&cold, &logits, &[], &[]);
+        if d_zero.len() != 1 || d_zero[0] != (best, 1.0) {
+            return Err(format!("temperature 0 is not exact argmax: {d_zero:?}"));
+        }
+        if d_cold[0].0 != best {
+            return Err(format!("T=1e-3 top token {} != argmax {best}", d_cold[0].0));
+        }
+        // gap ≥ 0.05 at T=1e-3 puts the runner-up mass at ≤ e^{-50}
+        if d_cold[0].1 < 0.999 {
+            return Err(format!("T=1e-3 argmax mass {} not ≈ 1", d_cold[0].1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn top_k_top_p_support_is_minimal_and_renormalised() {
+    forall(Config::cases(200), |rng| {
+        let vocab = rng.range(8, 128);
+        let logits = rng.normal_vec(vocab);
+        let top_k = rng.range(1, vocab);
+        let top_p = (0.3 + 0.65 * rng.f64()) as f32;
+        let cfg =
+            GenerationConfig { temperature: 0.8, top_k, top_p, ..GenerationConfig::greedy(4) };
+        // the same config with the nucleus off gives the post-top-k
+        // distribution the nucleus prefix is carved from
+        let full =
+            distribution(&GenerationConfig { top_p: 1.0, ..cfg.clone() }, &logits, &[], &[]);
+        let kept = distribution(&cfg, &logits, &[], &[]);
+
+        if full.len() != top_k.min(vocab) {
+            return Err(format!("top-k support {} != {}", full.len(), top_k.min(vocab)));
+        }
+        if kept.len() > full.len() {
+            return Err("nucleus grew the support".into());
+        }
+        for (a, b) in kept.iter().zip(&full) {
+            if a.0 != b.0 {
+                return Err(format!("nucleus reordered the support: {} vs {}", a.0, b.0));
+            }
+        }
+        let sum: f64 = kept.iter().map(|&(_, p)| p).sum();
+        if (sum - 1.0).abs() > 1e-9 {
+            return Err(format!("kept probs sum to {sum}"));
+        }
+        // minimality against the unfiltered distribution: the kept prefix
+        // is the smallest one whose cumulative mass reaches top_p
+        let tp = top_p as f64;
+        let mass: f64 = full.iter().take(kept.len()).map(|&(_, p)| p).sum();
+        let mass_less: f64 = full.iter().take(kept.len() - 1).map(|&(_, p)| p).sum();
+        if kept.len() < full.len() && mass + 1e-9 < tp {
+            return Err(format!("kept mass {mass} below top_p {tp}"));
+        }
+        if kept.len() > 1 && mass_less >= tp + 1e-9 {
+            return Err(format!("prefix of {} already reaches top_p {tp}", kept.len() - 1));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn repetition_penalty_never_resurrects_filtered_tokens() {
+    forall(Config::cases(200), |rng| {
+        let vocab = rng.range(8, 64);
+        let logits = rng.normal_vec(vocab);
+        let top_k = rng.range(2, vocab / 2);
+        let penalty = 1.2 + rng.f64() as f32;
+        let hist: Vec<i32> =
+            (0..rng.range(1, 6)).map(|_| rng.below(vocab as u64) as i32).collect();
+        let cfg = GenerationConfig {
+            temperature: 1.0,
+            top_k,
+            repetition_penalty: penalty,
+            ..GenerationConfig::greedy(4)
+        };
+        let dist = distribution(&cfg, &logits, &hist, &[]);
+
+        // independently recompute: penalise first, THEN take top-k — a
+        // token the penalty pushed out of the top-k must stay out, and no
+        // later stage may resurrect it
+        let p = penalty as f64;
+        let mut adj: Vec<f64> = logits.iter().map(|&v| v as f64).collect();
+        let mut seen = vec![false; vocab];
+        for &t in &hist {
+            let t = t as usize;
+            if !seen[t] {
+                seen[t] = true;
+                adj[t] = if adj[t] > 0.0 { adj[t] / p } else { adj[t] * p };
+            }
+        }
+        let mut idx: Vec<usize> = (0..vocab).collect();
+        idx.sort_by(|&a, &b| adj[b].partial_cmp(&adj[a]).unwrap().then(a.cmp(&b)));
+        let want: HashSet<usize> = idx[..top_k].iter().copied().collect();
+        let got: HashSet<usize> = dist.iter().map(|&(t, _)| t).collect();
+        if got != want {
+            return Err(format!("support {got:?} != penalised top-{top_k} {want:?}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Promote a CI-measured decode-throughput record to the committed baseline.
+
+Every CI run uploads a fresh ``BENCH_hotpath`` artifact produced by a real
+``cargo bench --bench bench_hotpath`` execution (``provenance: "measured"``).
+The committed repo-root ``BENCH_hotpath.json`` arms the >20% regression gate
+(``tools/bench_gate.py``) — but only a genuinely measured record may land
+there, never a hand-edited one. This tool is the only supported way to
+advance the baseline:
+
+    python3 tools/promote_bench.py --fresh path/to/downloaded/BENCH_hotpath.json
+    git add BENCH_hotpath.json && git commit
+
+It refuses records that are not ``provenance: "measured"``, that carry no
+decode work, or whose schema drifted from the committed file (so gate keys
+never silently vanish).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
+
+# Keys the regression gate and the PR-4/PR-6 evidence trail rely on.
+REQUIRED_POSITIVE = [
+    "decode_tokens",
+    "samples",
+    "fast_tokens_per_s",
+    "fast_ns_per_token",
+    "pool_threads",
+]
+
+
+def fail(msg):
+    print(f"REFUSED: {msg}", file=sys.stderr)
+    return 1
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--fresh",
+        required=True,
+        help="BENCH_hotpath.json downloaded from a CI run's BENCH_hotpath artifact",
+    )
+    p.add_argument(
+        "--baseline",
+        default=BASELINE,
+        help=f"committed baseline to replace (default: {BASELINE})",
+    )
+    args = p.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    if fresh.get("provenance") != "measured":
+        return fail(
+            f"fresh record has provenance={fresh.get('provenance')!r}; only a real "
+            "bench run's output (provenance='measured') may become the baseline"
+        )
+    for key in REQUIRED_POSITIVE:
+        if not float(fresh.get(key) or 0.0) > 0.0:
+            return fail(f"fresh record's {key!r} is missing or non-positive")
+
+    missing = sorted(set(base) - set(fresh) - {"note"})
+    if missing:
+        return fail(
+            "fresh record dropped baseline keys the gate/evidence trail uses: "
+            + ", ".join(missing)
+        )
+
+    if fresh.get("smoke"):
+        print(
+            "note: promoting a smoke-profile record (CI default). Fine for the "
+            "gate — both sides of the comparison run the same profile."
+        )
+    prev = float(base.get("fast_tokens_per_s") or 0.0)
+    now = float(fresh["fast_tokens_per_s"])
+    if prev > 0.0:
+        print(f"baseline fast-path: {prev:.1f} -> {now:.1f} tok/s ({now / prev - 1:+.1%})")
+    else:
+        print(f"arming the gate: fast-path {now:.1f} tok/s (previous baseline was a seed)")
+
+    with open(args.baseline, "w") as f:
+        json.dump(fresh, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.baseline} — commit it to advance the regression baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
