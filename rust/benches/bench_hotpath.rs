@@ -22,7 +22,7 @@ use leap::bench_util::{bench, Stats};
 use leap::compiler::{lower_phases, Compiler};
 use leap::coordinator::{BatchPolicy, EngineConfig, Metrics, Numerics, ServingEngine};
 use leap::isa::assemble;
-use leap::kvcache::KvCacheConfig;
+use leap::kvcache::{KvCacheConfig, KvDtype};
 use leap::mapping::{paper_mapping, CostModel};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
@@ -53,6 +53,58 @@ fn decode_ns_per_token(mode: KernelMode, tokens: usize, samples: usize) -> f64 {
         best = best.min(t0.elapsed().as_nanos() as f64 / tokens as f64);
     }
     best
+}
+
+/// Best-of-`samples` single-session fast decode with the KV pool stored at
+/// `dtype` (the f32 case re-measures the plain fast path through the typed
+/// read-side, so the three numbers are apples-to-apples).
+fn decode_ns_per_token_dtype(dtype: KvDtype, tokens: usize, samples: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let mut b = ReferenceBackend::load_with_kv_dtype(fixture_dir(), KernelMode::Fast, dtype)
+            .expect("fixture loads");
+        b.prefill(1, &fixture_prompt(1)).expect("prefill");
+        let mut tok = 3i32;
+        let t0 = Instant::now();
+        for _ in 0..tokens {
+            let out = b.decode_step(1, tok).expect("decode");
+            tok = argmax_row(&out.logits, 0, b.vocab()) as i32;
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / tokens as f64);
+    }
+    best
+}
+
+/// Byte budget for the KV-dtype capacity sweep: 1 MiB holds 32 f32 blocks
+/// of the tiny model at block_size 4, so the sweep's session counts leave
+/// room to show the ~2×/~4× capacity gain at f16/q8.
+const KV_SWEEP_POOL_BYTES: usize = 1 << 20;
+
+/// Size a pool to `pool_bytes` at `dtype` and admit 24-token sessions until
+/// the allocator refuses. Returns `(bytes_per_token, sessions_admitted)` —
+/// the capacity half of the ISSUE 7 acceptance evidence.
+fn kv_capacity_probe(dtype: KvDtype, pool_bytes: usize) -> (usize, usize) {
+    let probe =
+        ReferenceBackend::load_with_mode(fixture_dir(), KernelMode::Fast).expect("fixture loads");
+    let meta = probe.meta();
+    let mut cfg = KvCacheConfig::for_model(meta.d_model, meta.s_max);
+    cfg.block_size = 4;
+    cfg.dtype = dtype;
+    cfg.prefix_sharing = false;
+    cfg.n_blocks = cfg.blocks_for_bytes(pool_bytes, meta.n_layers, meta.d_model);
+    let bytes_per_token = cfg.bytes_per_token(meta.n_layers, meta.d_model);
+    let mut b = ReferenceBackend::load_with_opts(fixture_dir(), KernelMode::Fast, Some(cfg))
+        .expect("fixture loads");
+    let mut admitted = 0usize;
+    for s in 0..4096u64 {
+        let prompt: Vec<i32> =
+            (0..24).map(|i| ((s as i32 * 97) + i * 37 + 11) % 512).collect();
+        if b.prefill(s, &prompt).is_err() {
+            break;
+        }
+        admitted += 1;
+    }
+    (bytes_per_token, admitted)
 }
 
 /// Best-of-`samples` single-session fast-path decode through an explicitly
@@ -127,7 +179,8 @@ fn batch_ns_per_round(nsessions: usize, rounds: usize, samples: usize) -> f64 {
 /// the engine metrics for the JSON record.
 fn kv_pool_pressure_report(smoke: bool) -> Metrics {
     let (requests, gen) = if smoke { (6, 4) } else { (10, 8) };
-    let cfg = KvCacheConfig { block_size: 4, n_blocks: 14, prefix_sharing: true };
+    let cfg =
+        KvCacheConfig { block_size: 4, n_blocks: 14, prefix_sharing: true, dtype: KvDtype::F32 };
     let (bs, n_blocks) = (cfg.block_size, cfg.n_blocks);
     let backend = ReferenceBackend::load_with_opts(fixture_dir(), KernelMode::Fast, Some(cfg))
         .expect("fixture loads");
@@ -188,6 +241,14 @@ fn decode_throughput_report(smoke: bool) {
     // so pre-PR fast was single-threaded AND unfused, i.e. no faster than
     // this.
     let (serial_ns, _) = decode_ns_per_token_pooled(Some(1), tokens, samples);
+    // SIMD vs forced-scalar A/B on the identical fused pipeline: the
+    // dispatch is bitwise-invisible (same fixed-order reduction), so this
+    // isolates the vectorisation win alone.
+    leap::runtime::simd::force_scalar(true);
+    let (fast_scalar_ns, _) = decode_ns_per_token_pooled(None, tokens, samples);
+    leap::runtime::simd::force_scalar(false);
+    let simd_level = leap::runtime::simd::probed_level().as_str();
+    let simd_speedup = fast_scalar_ns / fast_ns;
     let speedup = naive_ns / fast_ns;
     let pool_speedup = serial_ns / fast_ns;
     let pool_threads = WorkerPool::default_threads();
@@ -209,6 +270,10 @@ fn decode_throughput_report(smoke: bool) {
         "pool vs single lane     1-lane fused {:>10}/tok → pooled speedup {pool_speedup:.2}x",
         Stats::fmt_ns(serial_ns)
     );
+    println!(
+        "simd dispatch           {simd_level}; forced-scalar {:>10}/tok → simd speedup {simd_speedup:.2}x",
+        Stats::fmt_ns(fast_scalar_ns)
+    );
 
     let b1_ns = batch_ns_per_round(1, rounds, samples);
     let b8_ns = batch_ns_per_round(8, rounds, samples);
@@ -224,6 +289,28 @@ fn decode_throughput_report(smoke: bool) {
         8.0 * 1e9 / b8_ns
     );
 
+    // KV dtype sweep: per-token bytes, capacity on a fixed byte budget,
+    // and decode cost with the quantized read-side in the attention walk.
+    println!(
+        "=== KV dtype sweep ({} KiB pool, 24-token sessions) ===\n",
+        KV_SWEEP_POOL_BYTES >> 10
+    );
+    let mut sweep = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Q8] {
+        let (bpt, sessions) = kv_capacity_probe(dtype, KV_SWEEP_POOL_BYTES);
+        let ns = decode_ns_per_token_dtype(dtype, tokens, samples);
+        println!(
+            "{:<4}  {bpt:>6} B/token   {sessions:>3} sessions admitted   decode {:>10}/tok",
+            dtype.as_str(),
+            Stats::fmt_ns(ns)
+        );
+        sweep.push((dtype, bpt, sessions, ns));
+    }
+    println!();
+    let (f32_bpt, f32_sessions, f32_ns) = (sweep[0].1, sweep[0].2, sweep[0].3);
+    let (f16_bpt, f16_sessions, f16_ns) = (sweep[1].1, sweep[1].2, sweep[1].3);
+    let (q8_bpt, q8_sessions, q8_ns) = (sweep[2].1, sweep[2].2, sweep[2].3);
+
     let kv = kv_pool_pressure_report(smoke);
     let json = format!(
         "{{\n  \"bench\": \"hotpath_decode\",\n  \"fixture\": \"tiny_ref\",\n  \
@@ -236,6 +323,9 @@ fn decode_throughput_report(smoke: bool) {
          \"naive_ns_per_token\": {naive_ns:.1},\n  \"naive_tokens_per_s\": {:.1},\n  \
          \"fast_ns_per_token\": {fast_ns:.1},\n  \"fast_tokens_per_s\": {:.1},\n  \
          \"speedup_fast_over_naive\": {speedup:.3},\n  \
+         \"simd_level\": \"{simd_level}\",\n  \
+         \"fast_scalar_ns_per_token\": {fast_scalar_ns:.1},\n  \
+         \"speedup_simd_over_scalar\": {simd_speedup:.3},\n  \
          \"serial_lane_ns_per_token\": {serial_ns:.1},\n  \
          \"speedup_pool_over_single_lane\": {pool_speedup:.3},\n  \
          \"pool_threads\": {pool_threads},\n  \
@@ -246,6 +336,16 @@ fn decode_throughput_report(smoke: bool) {
          \"kv_peak_blocks_used\": {},\n  \"kv_prefix_hit_rate\": {:.3},\n  \
          \"kv_prefix_lookups\": {},\n  \"kv_prefix_hits\": {},\n  \
          \"kv_cow_copies\": {},\n  \"kv_preemptions\": {},\n  \
+         \"kv_sweep_pool_bytes\": {KV_SWEEP_POOL_BYTES},\n  \
+         \"kv_f32_bytes_per_token\": {f32_bpt},\n  \
+         \"kv_f32_max_sessions\": {f32_sessions},\n  \
+         \"kv_f32_decode_ns_per_token\": {f32_ns:.1},\n  \
+         \"kv_f16_bytes_per_token\": {f16_bpt},\n  \
+         \"kv_f16_max_sessions\": {f16_sessions},\n  \
+         \"kv_f16_decode_ns_per_token\": {f16_ns:.1},\n  \
+         \"kv_q8_bytes_per_token\": {q8_bpt},\n  \
+         \"kv_q8_max_sessions\": {q8_sessions},\n  \
+         \"kv_q8_decode_ns_per_token\": {q8_ns:.1},\n  \
          \"engine_pool_dispatches\": {},\n  \"engine_pool_parks\": {},\n  \
          \"engine_pool_wakes\": {}\n}}\n",
         1e9 / naive_ns,

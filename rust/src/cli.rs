@@ -75,6 +75,9 @@ COMMANDS
   serve        --model 1b --requests 8 --prompt 64 --gen 32
                [--numerics ref|synthetic|xla] [--artifacts DIR]
                [--chunk N] (chunked prefill; omit = monolithic)
+               [--kv-dtype f32|f16|q8] (KV-cache storage; ref numerics only.
+                f16 halves and q8 roughly quarters KV bytes/token, so the
+                same pool byte budget admits more concurrent sessions)
                [--temp F --top-k N --top-p F --rep F --seed N]
                (sampling; --temp 0 = greedy. tiny model defaults to the
                 pure-Rust reference backend; xla requires building with
@@ -137,9 +140,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             None => anyhow::anyhow!("no artifact directory with meta.txt found"),
         })
     };
+    let kv_dtype = match args.options.get("kv-dtype") {
+        None => None,
+        Some(v) => Some(
+            crate::kvcache::KvDtype::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("--kv-dtype {v}: expected f32, f16, or q8"))?,
+        ),
+    };
     let numerics = match which.as_str() {
         "synthetic" => Numerics::synthetic(preset.shape().vocab),
-        "ref" | "reference" => Numerics::reference(artifacts()?)?,
+        "ref" | "reference" => match kv_dtype {
+            None => Numerics::reference(artifacts()?)?,
+            Some(dt) => Numerics::Backend(Box::new(
+                crate::runtime::ReferenceBackend::load_with_kv_dtype(
+                    artifacts()?,
+                    crate::runtime::KernelMode::Fast,
+                    dt,
+                )?,
+            )),
+        },
         #[cfg(feature = "xla")]
         "xla" | "pjrt" => Numerics::pjrt(artifacts()?)?,
         #[cfg(not(feature = "xla"))]
@@ -194,6 +213,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     println!("ttft    p50/p99 : {:.2} / {:.2} ms", tp50 as f64 * 1e-6, tp99 as f64 * 1e-6);
     println!("npm swaps       : {}", m.npm_swaps);
     println!("host overhead   : {:.4}×", m.host_overhead());
+    println!("simd kernels    : {}", crate::runtime::simd::level().as_str());
     if m.kv_blocks_total > 0 {
         println!(
             "kv pool         : {} blocks × {} tokens, peak {} used ({:.1}%)",
@@ -201,6 +221,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             m.kv_block_size,
             m.kv_peak_blocks_used,
             100.0 * m.kv_peak_blocks_used as f64 / m.kv_blocks_total as f64
+        );
+        println!(
+            "kv storage      : {} ({} B/token across both arenas, all layers)",
+            m.kv_dtype.as_str(),
+            m.kv_bytes_per_token
         );
         println!(
             "kv sharing      : prefix hit {:.1}% ({}/{} probes), {} CoW copies, \

@@ -34,6 +34,11 @@ pub struct Metrics {
     // --- paged-KV pool gauges (zero when the backend does not pool) -----
     /// Tokens per physical KV block.
     pub kv_block_size: usize,
+    /// Storage dtype of the backend KV pool (f32 when the backend does
+    /// not pool).
+    pub kv_dtype: crate::kvcache::KvDtype,
+    /// Bytes one KV token position occupies (both arenas, all layers).
+    pub kv_bytes_per_token: usize,
     /// Physical blocks in the backend pool.
     pub kv_blocks_total: usize,
     /// Blocks in use at the last observation.
@@ -112,6 +117,8 @@ impl Metrics {
     /// cumulative in the pool, so overwrite; the peak is kept monotone).
     pub fn observe_kv_pool(&mut self, s: &crate::kvcache::PoolStats) {
         self.kv_block_size = s.block_size;
+        self.kv_dtype = s.dtype;
+        self.kv_bytes_per_token = s.bytes_per_token;
         self.kv_blocks_total = s.blocks_total;
         self.kv_blocks_used = s.blocks_used;
         self.kv_peak_blocks_used = self.kv_peak_blocks_used.max(s.peak_blocks_used);
@@ -168,6 +175,8 @@ mod tests {
         assert_eq!(m.kv_prefix_hit_rate(), 0.0);
         m.observe_kv_pool(&PoolStats {
             block_size: 4,
+            dtype: crate::kvcache::KvDtype::Q8,
+            bytes_per_token: 40,
             blocks_total: 32,
             blocks_free: 20,
             blocks_used: 12,
@@ -180,6 +189,8 @@ mod tests {
         // a later, quieter snapshot must not lower the peak
         m.observe_kv_pool(&PoolStats {
             block_size: 4,
+            dtype: crate::kvcache::KvDtype::Q8,
+            bytes_per_token: 40,
             blocks_total: 32,
             blocks_free: 30,
             blocks_used: 2,
@@ -190,6 +201,8 @@ mod tests {
             cow_copies: 2,
         });
         assert_eq!(m.kv_blocks_used, 2);
+        assert_eq!(m.kv_dtype.as_str(), "q8");
+        assert_eq!(m.kv_bytes_per_token, 40);
         assert_eq!(m.kv_peak_blocks_used, 14);
         assert_eq!(m.kv_cow_copies, 2);
         assert!((m.kv_prefix_hit_rate() - 0.7).abs() < 1e-12);

@@ -16,6 +16,8 @@
 
 use std::collections::HashMap;
 
+use super::store::KvDtype;
+
 /// Physical block identifier within one pool.
 pub type BlockId = u32;
 
@@ -27,12 +29,17 @@ pub struct PrefixKey {
     pub tokens: Vec<i32>,
 }
 
-/// Snapshot of pool occupancy and sharing counters. `block_size` is filled
-/// in by the pool that owns the ledger (the ledger itself is size-blind).
+/// Snapshot of pool occupancy and sharing counters. `block_size`,
+/// `dtype`, and `bytes_per_token` are filled in by the pool that owns the
+/// ledger (the ledger itself is size- and dtype-blind).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PoolStats {
     /// Tokens per block.
     pub block_size: usize,
+    /// Storage dtype of the owning pool's arenas.
+    pub dtype: KvDtype,
+    /// Bytes one token position occupies (both arenas, all layers).
+    pub bytes_per_token: usize,
     pub blocks_total: usize,
     pub blocks_free: usize,
     pub blocks_used: usize,
@@ -230,11 +237,13 @@ impl BlockLedger {
         self.cow_copies += 1;
     }
 
-    /// Occupancy/sharing snapshot (`block_size` left 0 — the owning pool
-    /// fills it in).
+    /// Occupancy/sharing snapshot (`block_size`/`dtype`/`bytes_per_token`
+    /// left at defaults — the owning pool fills them in).
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             block_size: 0,
+            dtype: KvDtype::default(),
+            bytes_per_token: 0,
             blocks_total: self.total(),
             blocks_free: self.free_blocks(),
             blocks_used: self.used_blocks(),

@@ -10,8 +10,9 @@
 //! - [`ledger`] — [`BlockLedger`]: refcounted block accounting + an
 //!   exact-match prefix cache. Also used storage-free by the coordinator's
 //!   simulated-scratchpad capacity manager.
-//! - [`store`] — [`KvStore`]/[`BlockTable`]: the f32 block arenas behind
-//!   the reference backend, with copy-on-write prefix sharing.
+//! - [`store`] — [`KvStore`]/[`BlockTable`]: the typed block arenas
+//!   ([`KvDtype`]: f32 / f16 / per-row-scaled q8) behind the reference
+//!   backend, with copy-on-write prefix sharing.
 //! - [`admission`] — [`AdmissionPolicy`]: admit/queue/reject against
 //!   actual free blocks; the engine preempts (release + re-queue +
 //!   re-prefill) when decode growth outruns the pool.
@@ -22,4 +23,4 @@ pub mod store;
 
 pub use admission::{AdmissionDecision, AdmissionPolicy};
 pub use ledger::{BlockId, BlockLedger, PoolStats, PrefixKey};
-pub use store::{BlockTable, KvCacheConfig, KvStore};
+pub use store::{BlockTable, KvCacheConfig, KvDtype, KvStore, KvView};

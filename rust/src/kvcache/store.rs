@@ -1,10 +1,14 @@
-//! Pooled KV storage: fixed-size f32 blocks shared by every session.
+//! Pooled KV storage: fixed-size typed blocks shared by every session.
 //!
 //! A [`KvStore`] owns two flat arenas (K and V) of
-//! `n_blocks × n_layers × block_size × d_model` words plus a
+//! `n_blocks × n_layers × block_size × d_model` elements plus a
 //! [`BlockLedger`]; each session holds a [`BlockTable`] mapping its token
 //! positions to physical blocks (`position p` lives in table block
-//! `p / block_size`, row `p % block_size`). Blocks are the unit of
+//! `p / block_size`, row `p % block_size`). Arenas are stored at a
+//! configurable [`KvDtype`] — full f32, IEEE half (f16, 2× residency),
+//! or symmetric per-row int8 (q8, ~4× residency; one f32 scale per
+//! `d_model`-wide row, quantized at [`KvStore::write_row`] and consumed
+//! in place by the paged attention readers). Blocks are the unit of
 //! admission, sharing, and preemption:
 //!
 //! - **Prefix sharing.** [`KvStore::build_prefill`] walks the prompt in
@@ -30,6 +34,112 @@ use crate::arch::{HwParams, TileGeometry};
 
 use super::ledger::{BlockId, BlockLedger, PoolStats, PrefixKey};
 
+/// Storage dtype of the pooled KV arenas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// Full-precision rows; the bitwise-exact baseline.
+    #[default]
+    F32,
+    /// IEEE binary16 rows (round-to-nearest-even on write), 2× residency.
+    F16,
+    /// Symmetric int8 rows with one f32 scale per `d`-wide row,
+    /// ~4× residency; attention scores run `dot_q8` on the stored cells.
+    Q8,
+}
+
+impl KvDtype {
+    /// Parse a CLI/scenario spelling. Case-insensitive.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Self::F32),
+            "f16" | "fp16" | "half" => Some(Self::F16),
+            "q8" | "i8" | "int8" => Some(Self::Q8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F16 => "f16",
+            Self::Q8 => "q8",
+        }
+    }
+
+    /// Bytes one `d`-wide KV row occupies in an arena (including the q8
+    /// per-row scale).
+    pub fn row_bytes(self, d: usize) -> usize {
+        match self {
+            Self::F32 => 4 * d,
+            Self::F16 => 2 * d,
+            Self::Q8 => d + 4,
+        }
+    }
+}
+
+/// Convert f32 → IEEE binary16 bits with round-to-nearest-even.
+/// Handles normals, subnormals, overflow-to-inf, and NaN payloads.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays inf; NaN keeps a quiet bit plus the top payload bits.
+        let payload = if man == 0 { 0 } else { 0x0200 | ((man >> 13) as u16 & 0x03ff) | 1 };
+        return sign | 0x7c00 | payload;
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half: drop 13 mantissa bits, round to nearest even. A
+        // round-up can carry into the exponent; 0x7c00 (inf) is then the
+        // correct saturation.
+        let mut h = ((unbiased + 15) as u32) << 10 | (man >> 13);
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && h & 1 != 0) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal half: value = m * 2^-24 for m in [0, 1024).
+        let man_full = man | 0x0080_0000;
+        let shift = (-unbiased - 1) as u32; // 14..=24
+        let h = man_full >> shift;
+        let rem = man_full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let h = if rem > half || (rem == half && h & 1 != 0) { h + 1 } else { h };
+        // h == 1024 after round-up is exactly the smallest normal (0x0400).
+        return sign | h as u16;
+    }
+    sign // underflows to ±0
+}
+
+/// Convert IEEE binary16 bits → f32. Exact (every half is an f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x03ff) as u32;
+    match (exp, man) {
+        (0, 0) => f32::from_bits(sign),
+        (0, _) => {
+            // Subnormal: m * 2^-24, both factors exact in f32.
+            let v = man as f32 * f32::from_bits(0x3380_0000);
+            if sign != 0 {
+                -v
+            } else {
+                v
+            }
+        }
+        (0x1f, 0) => f32::from_bits(sign | 0x7f80_0000),
+        (0x1f, _) => f32::from_bits(sign | 0x7f80_0000 | (man << 13)),
+        _ => f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13)),
+    }
+}
+
 /// Pool-shape knobs for a [`KvStore`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvCacheConfig {
@@ -40,6 +150,8 @@ pub struct KvCacheConfig {
     /// Enable prompt-prefix sharing (identical prefixes map to the same
     /// physical blocks). Disable for strictly private sessions.
     pub prefix_sharing: bool,
+    /// Storage dtype of the K/V arenas.
+    pub dtype: KvDtype,
 }
 
 impl KvCacheConfig {
@@ -50,13 +162,141 @@ impl KvCacheConfig {
         let geom = TileGeometry::for_model(d_model, &HwParams::default());
         let block_size = geom.shard_rows.max(1);
         let blocks_per_session = s_max.div_ceil(block_size).max(1);
-        Self { block_size, n_blocks: 32 * blocks_per_session, prefix_sharing: true }
+        Self {
+            block_size,
+            n_blocks: 32 * blocks_per_session,
+            prefix_sharing: true,
+            dtype: KvDtype::F32,
+        }
     }
 
     /// Worst-case blocks a session of `tokens` KV positions needs
     /// (ignoring any prefix sharing).
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
+    }
+
+    /// Bytes one token position occupies across both arenas and all layers.
+    pub fn bytes_per_token(&self, n_layers: usize, d: usize) -> usize {
+        2 * n_layers * self.dtype.row_bytes(d)
+    }
+
+    /// Bytes one physical block occupies across both arenas and all layers.
+    pub fn bytes_per_block(&self, n_layers: usize, d: usize) -> usize {
+        self.block_size * self.bytes_per_token(n_layers, d)
+    }
+
+    /// Largest pool (block count) that fits a byte budget at this dtype;
+    /// at least one block.
+    pub fn blocks_for_bytes(&self, bytes: usize, n_layers: usize, d: usize) -> usize {
+        (bytes / self.bytes_per_block(n_layers, d)).max(1)
+    }
+}
+
+/// A borrowed, dtype-tagged arena the paged attention kernels read in
+/// place. Offsets from [`KvStore::append_starts`] are *element* offsets,
+/// valid for every variant; q8 carries the per-row scale plane
+/// (`scale index = row_element_offset / d`).
+#[derive(Clone, Copy)]
+pub enum KvView<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Q8 { q: &'a [i8], s: &'a [f32] },
+}
+
+impl KvView<'_> {
+    /// Dequantize `out.len()` elements starting `base` into a row whose
+    /// first element sits at element offset `row_start` (`row_start` must
+    /// be row-aligned: divisible by `d`). Used by the naive readers and
+    /// tests; the fused kernels consume the variants directly.
+    pub fn read_into(&self, row_start: usize, d: usize, base: usize, out: &mut [f32]) {
+        debug_assert_eq!(row_start % d, 0, "row_start must be row-aligned");
+        debug_assert!(base + out.len() <= d);
+        let at = row_start + base;
+        match *self {
+            KvView::F32(a) => out.copy_from_slice(&a[at..at + out.len()]),
+            KvView::F16(a) => {
+                for (x, &hb) in out.iter_mut().zip(&a[at..at + out.len()]) {
+                    *x = f16_to_f32(hb);
+                }
+            }
+            KvView::Q8 { q, s } => {
+                let scale = s[row_start / d];
+                for (x, &qv) in out.iter_mut().zip(&q[at..at + out.len()]) {
+                    *x = scale * qv as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Owned, dtype-tagged arena storage. Quantization happens once at
+/// [`KvArena::write_row`]; copy-on-write moves the stored representation
+/// (and q8 scales) verbatim, so a CoW never re-rounds values.
+enum KvArena {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Q8 { q: Vec<i8>, s: Vec<f32> },
+}
+
+impl KvArena {
+    fn new(dtype: KvDtype, elems: usize, rows: usize) -> Self {
+        match dtype {
+            KvDtype::F32 => Self::F32(vec![0f32; elems]),
+            KvDtype::F16 => Self::F16(vec![0u16; elems]),
+            KvDtype::Q8 => Self::Q8 { q: vec![0i8; elems], s: vec![0f32; rows] },
+        }
+    }
+
+    fn view(&self) -> KvView<'_> {
+        match self {
+            Self::F32(a) => KvView::F32(a),
+            Self::F16(a) => KvView::F16(a),
+            Self::Q8 { q, s } => KvView::Q8 { q, s },
+        }
+    }
+
+    fn as_f32(&self) -> &[f32] {
+        match self {
+            Self::F32(a) => a,
+            _ => panic!("f32 arena accessor used on a quantized KV pool; use the view API"),
+        }
+    }
+
+    /// Store one `d`-wide row at element offset `o` (row-aligned).
+    fn write_row(&mut self, o: usize, src: &[f32]) {
+        let d = src.len();
+        match self {
+            Self::F32(a) => a[o..o + d].copy_from_slice(src),
+            Self::F16(a) => {
+                for (hb, &x) in a[o..o + d].iter_mut().zip(src) {
+                    *hb = f32_to_f16(x);
+                }
+            }
+            Self::Q8 { q, s } => {
+                let amax = src.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let scale = if amax > 0.0 { amax / 127.0 } else { 0.0 };
+                s[o / d] = scale;
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                for (qc, &x) in q[o..o + d].iter_mut().zip(src) {
+                    *qc = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Copy `src..src + n` to `dst` (all row-aligned multiples of `d`),
+    /// moving q8 scales alongside the cells.
+    fn copy_rows_within(&mut self, src: usize, n: usize, dst: usize, d: usize) {
+        debug_assert!(src % d == 0 && n % d == 0 && dst % d == 0);
+        match self {
+            Self::F32(a) => a.copy_within(src..src + n, dst),
+            Self::F16(a) => a.copy_within(src..src + n, dst),
+            Self::Q8 { q, s } => {
+                q.copy_within(src..src + n, dst);
+                s.copy_within(src / d..(src + n) / d, dst / d);
+            }
+        }
     }
 }
 
@@ -99,22 +339,23 @@ pub struct KvStore {
     n_layers: usize,
     d: usize,
     /// K arena, `[n_blocks][n_layers][block_size][d]` row-major.
-    k: Vec<f32>,
+    k: KvArena,
     /// V arena, same layout.
-    v: Vec<f32>,
+    v: KvArena,
 }
 
 impl KvStore {
     pub fn new(cfg: KvCacheConfig, n_layers: usize, d: usize) -> Self {
         assert!(cfg.block_size > 0 && cfg.n_blocks > 0, "degenerate KV pool config");
-        let words = cfg.n_blocks * n_layers * cfg.block_size * d;
+        let rows = cfg.n_blocks * n_layers * cfg.block_size;
+        let elems = rows * d;
         Self {
             cfg,
             ledger: BlockLedger::new(cfg.n_blocks),
             n_layers,
             d,
-            k: vec![0f32; words],
-            v: vec![0f32; words],
+            k: KvArena::new(cfg.dtype, elems, rows),
+            v: KvArena::new(cfg.dtype, elems, rows),
         }
     }
 
@@ -130,9 +371,20 @@ impl KvStore {
         self.ledger.free_blocks()
     }
 
-    /// Occupancy/sharing snapshot with `block_size` filled in.
+    /// Bytes one token position occupies across both arenas and all layers.
+    pub fn bytes_per_token(&self) -> usize {
+        self.cfg.bytes_per_token(self.n_layers, self.d)
+    }
+
+    /// Occupancy/sharing snapshot with the pool shape (`block_size`,
+    /// `dtype`, `bytes_per_token`) filled in over the ledger's counters.
     pub fn stats(&self) -> PoolStats {
-        PoolStats { block_size: self.cfg.block_size, ..self.ledger.stats() }
+        PoolStats {
+            block_size: self.cfg.block_size,
+            dtype: self.cfg.dtype,
+            bytes_per_token: self.bytes_per_token(),
+            ..self.ledger.stats()
+        }
     }
 
     /// Arena offset of `(block, layer)` — identical for the K and V arenas.
@@ -141,27 +393,48 @@ impl KvStore {
         (b as usize * self.n_layers + layer) * self.cfg.block_size * self.d
     }
 
-    /// The whole K arena. Paged kernels index it directly with the offsets
-    /// produced by [`Self::append_starts`].
+    /// The whole K arena as f32. Paged kernels index it directly with the
+    /// offsets produced by [`Self::append_starts`]. Panics unless the pool
+    /// dtype is [`KvDtype::F32`] — quantized pools go through
+    /// [`Self::k_view`].
     pub fn k_arena(&self) -> &[f32] {
-        &self.k
+        self.k.as_f32()
     }
 
     /// The whole V arena (same layout as [`Self::k_arena`]).
     pub fn v_arena(&self) -> &[f32] {
-        &self.v
+        self.v.as_f32()
     }
 
-    /// The `[block_size, d]` K slice of one block at one layer.
+    /// Dtype-tagged view of the K arena, valid for every pool dtype.
+    pub fn k_view(&self) -> KvView<'_> {
+        self.k.view()
+    }
+
+    /// Dtype-tagged view of the V arena.
+    pub fn v_view(&self) -> KvView<'_> {
+        self.v.view()
+    }
+
+    /// The `[block_size, d]` K slice of one block at one layer (f32 pools
+    /// only; see [`Self::k_view`] + [`KvView::read_into`] otherwise).
     pub fn k_block(&self, b: BlockId, layer: usize) -> &[f32] {
         let o = self.off(b, layer);
-        &self.k[o..o + self.cfg.block_size * self.d]
+        &self.k.as_f32()[o..o + self.cfg.block_size * self.d]
     }
 
     /// The `[block_size, d]` V slice of one block at one layer.
     pub fn v_block(&self, b: BlockId, layer: usize) -> &[f32] {
         let o = self.off(b, layer);
-        &self.v[o..o + self.cfg.block_size * self.d]
+        &self.v.as_f32()[o..o + self.cfg.block_size * self.d]
+    }
+
+    /// Element offset of `(block, layer, row)` — the `row_start` argument
+    /// of [`KvView::read_into`].
+    #[inline]
+    pub fn row_start(&self, b: BlockId, layer: usize, row: usize) -> usize {
+        debug_assert!(row < self.cfg.block_size);
+        self.off(b, layer) + row * self.d
     }
 
     /// Append the arena offsets of `table`'s blocks at `layer` to `starts`
@@ -172,15 +445,16 @@ impl KvStore {
         starts.extend(table.blocks.iter().map(|&b| self.off(b, layer)));
     }
 
-    /// Write one position's K/V rows into `(block, layer, row)`. The block
-    /// must be privately held — shared blocks are copied first by
-    /// [`Self::grow`].
+    /// Write one position's K/V rows into `(block, layer, row)`,
+    /// quantizing to the pool dtype. The block must be privately held —
+    /// shared blocks are copied first by [`Self::grow`].
     pub fn write_row(&mut self, b: BlockId, layer: usize, row: usize, krow: &[f32], vrow: &[f32]) {
         debug_assert!(!self.ledger.is_shared(b), "write into a shared KV block (missing CoW)");
         debug_assert!(row < self.cfg.block_size);
+        debug_assert!(krow.len() == self.d && vrow.len() == self.d);
         let o = self.off(b, layer) + row * self.d;
-        self.k[o..o + self.d].copy_from_slice(krow);
-        self.v[o..o + self.d].copy_from_slice(vrow);
+        self.k.write_row(o, krow);
+        self.v.write_row(o, vrow);
     }
 
     /// Worst-case free blocks [`Self::grow`] would claim to extend `table`
@@ -221,8 +495,8 @@ impl KvStore {
                     let src = self.off(b, layer);
                     let dst = self.off(nb, layer);
                     let n = rows * self.d;
-                    self.k.copy_within(src..src + n, dst);
-                    self.v.copy_within(src..src + n, dst);
+                    self.k.copy_rows_within(src, n, dst, self.d);
+                    self.v.copy_rows_within(src, n, dst, self.d);
                 }
                 self.ledger.release(b);
                 table.blocks[bi] = nb;
@@ -292,8 +566,12 @@ mod tests {
     use super::*;
 
     fn store(bs: usize, n_blocks: usize) -> KvStore {
+        store_with_dtype(bs, n_blocks, KvDtype::F32)
+    }
+
+    fn store_with_dtype(bs: usize, n_blocks: usize, dtype: KvDtype) -> KvStore {
         KvStore::new(
-            KvCacheConfig { block_size: bs, n_blocks, prefix_sharing: true },
+            KvCacheConfig { block_size: bs, n_blocks, prefix_sharing: true, dtype },
             2, // layers
             4, // d
         )
@@ -407,7 +685,12 @@ mod tests {
     #[test]
     fn sharing_disabled_allocates_privately() {
         let mut s = KvStore::new(
-            KvCacheConfig { block_size: 2, n_blocks: 8, prefix_sharing: false },
+            KvCacheConfig {
+                block_size: 2,
+                n_blocks: 8,
+                prefix_sharing: false,
+                dtype: KvDtype::F32,
+            },
             1,
             4,
         );
@@ -426,8 +709,113 @@ mod tests {
         assert_eq!(cfg.block_size, 2, "tiny model: shard_rows = 2");
         assert_eq!(cfg.n_blocks, 32 * 64);
         assert!(cfg.prefix_sharing);
+        assert_eq!(cfg.dtype, KvDtype::F32);
         assert_eq!(cfg.blocks_for(5), 3);
         let cfg1b = KvCacheConfig::for_model(2048, 4096);
         assert_eq!(cfg1b.block_size, 16, "Table I: C_S = 16 rows");
+    }
+
+    #[test]
+    fn dtype_byte_accounting() {
+        let mut cfg = KvCacheConfig::for_model(256, 128);
+        let f32_tok = cfg.bytes_per_token(4, 256);
+        assert_eq!(f32_tok, 2 * 4 * 4 * 256);
+        cfg.dtype = KvDtype::F16;
+        assert_eq!(cfg.bytes_per_token(4, 256) * 2, f32_tok, "f16 halves residency");
+        cfg.dtype = KvDtype::Q8;
+        let q8_tok = cfg.bytes_per_token(4, 256);
+        assert!(
+            q8_tok * 3 < f32_tok,
+            "q8 ({q8_tok}B) must be well under a third of f32 ({f32_tok}B)"
+        );
+        // Same byte budget → proportionally more blocks.
+        let budget = cfg.bytes_per_block(4, 256) * 10;
+        assert_eq!(cfg.blocks_for_bytes(budget, 4, 256), 10);
+        cfg.dtype = KvDtype::F32;
+        assert!(cfg.blocks_for_bytes(budget, 4, 256) < 4);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_for_halves_and_bounded_otherwise() {
+        // Every exactly-representable half survives the round trip.
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 65504.0, -65504.0, 6.104e-5] {
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (back - x).abs() <= x.abs() * 1e-3,
+                "f16 round trip drifted: {x} -> {back}"
+            );
+        }
+        assert_eq!(f16_to_f32(f32_to_f16(1.0)), 1.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-2.5)), -2.5);
+        // Overflow saturates to inf, NaN stays NaN, subnormals survive.
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        let sub = f16_to_f32(f32_to_f16(3.0e-6));
+        assert!((sub - 3.0e-6).abs() < 6.0e-8, "subnormal half drifted: {sub}");
+        // Relative error ≤ 2^-11 across the normal range.
+        let mut x = 6.2e-5f32;
+        while x < 6.0e4 {
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!((back - x).abs() <= x * (1.0 / 2048.0) * 1.0001, "{x} -> {back}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn quantized_write_read_round_trip_bounds() {
+        for dtype in [KvDtype::F16, KvDtype::Q8] {
+            let mut s = store_with_dtype(4, 4, dtype);
+            let b = s.ledger.alloc().unwrap();
+            let krow = [1.0f32, -0.5, 0.25, 0.9375];
+            let vrow = [-2.0f32, 0.0, 127.0, 1.0];
+            s.write_row(b, 1, 2, &krow, &vrow);
+            let mut kout = [0f32; 4];
+            let mut vout = [0f32; 4];
+            let rs = s.row_start(b, 1, 2);
+            s.k_view().read_into(rs, 4, 0, &mut kout);
+            s.v_view().read_into(rs, 4, 0, &mut vout);
+            for i in 0..4 {
+                // q8 bound: half a step of amax/127; f16 is far tighter.
+                let kbound = krow.iter().fold(0f32, |m, &x| m.max(x.abs())) / 127.0 * 0.5 + 1e-4;
+                let vbound = vrow.iter().fold(0f32, |m, &x| m.max(x.abs())) / 127.0 * 0.5 + 1e-2;
+                assert!(
+                    (kout[i] - krow[i]).abs() <= kbound,
+                    "{dtype:?} K[{i}]: {} vs {}",
+                    kout[i],
+                    krow[i]
+                );
+                assert!(
+                    (vout[i] - vrow[i]).abs() <= vbound,
+                    "{dtype:?} V[{i}]: {} vs {}",
+                    vout[i],
+                    vrow[i]
+                );
+            }
+            // Sub-row (head-sliced) reads use the same per-row scale.
+            let mut half = [0f32; 2];
+            s.k_view().read_into(rs, 4, 2, &mut half);
+            assert_eq!(half, [kout[2], kout[3]]);
+        }
+    }
+
+    #[test]
+    fn cow_preserves_quantized_tail_rows_bitwise() {
+        let mut s = store_with_dtype(4, 16, KvDtype::Q8);
+        let a = prefill(&mut s, &[1, 2, 3, 4, 5, 6], 1.0);
+        let mut b = prefill(&mut s, &[1, 2, 3, 4, 5, 6], 0.0);
+        assert_eq!(b.shared_prefix(), 6);
+        let tail_before = b.blocks()[1];
+        let mut orig = [0f32; 4];
+        s.k_view().read_into(s.row_start(tail_before, 0, 1), 4, 0, &mut orig);
+        s.grow(&mut b, 1).unwrap();
+        let tail_after = b.blocks()[1];
+        assert_ne!(tail_before, tail_after);
+        let mut copied = [0f32; 4];
+        s.k_view().read_into(s.row_start(tail_after, 0, 1), 4, 0, &mut copied);
+        assert_eq!(orig, copied, "CoW must move q8 cells and scales verbatim");
+        assert_eq!(s.stats().dtype, KvDtype::Q8);
+        assert_eq!(s.stats().bytes_per_token, 2 * 2 * (4 + 4));
+        s.release_table(a);
+        s.release_table(b);
     }
 }

@@ -54,6 +54,7 @@
 use std::ops::Range;
 
 use super::pool::{SharedSliceMut, WorkerPool};
+use crate::kvcache::store::{f16_to_f32, KvView};
 
 /// RMSNorm epsilon (matches `python/compile/kernels/ref.py`).
 pub const RMS_EPS: f32 = 1e-5;
@@ -65,22 +66,13 @@ pub const ROPE_THETA: f64 = 10000.0;
 /// The lane structure gives the auto-vectoriser independent dependency
 /// chains; the fixed reduction order makes the result a pure function of
 /// the inputs (same bits from `matvec_t`, `gemm_t`, serial or pooled).
+/// Dispatches to the explicit SIMD paths in [`crate::runtime::simd`]
+/// (AVX2/NEON probe, `LEAP_SIMD=0` forces scalar) — every path reproduces
+/// the 8-lane order exactly, so the dispatch level never changes the bits.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0.0f32; 8];
-    let mut ac = a.chunks_exact(8);
-    let mut bc = b.chunks_exact(8);
-    for (av, bv) in (&mut ac).zip(&mut bc) {
-        for ((lane, &x), &y) in lanes.iter_mut().zip(av).zip(bv) {
-            *lane += x * y;
-        }
-    }
-    let mut tail = 0.0f32;
-    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
-        tail += x * y;
-    }
-    lanes.iter().sum::<f32>() + tail
+    super::simd::dot(a, b)
 }
 
 /// `y = x @ W` for one activation row against a *transposed* weight matrix
@@ -208,22 +200,11 @@ impl QMat {
 /// Dot product of an f32 activation tile against int8 cells, with the
 /// same 8-lane fixed-order accumulation as [`dot`] (the cells are
 /// sign-extended to f32 in-register; no dequantised copy ever exists).
+/// SIMD-dispatched like [`dot`]; bitwise identical at every level.
 #[inline]
 pub fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut lanes = [0.0f32; 8];
-    let mut ac = a.chunks_exact(8);
-    let mut bc = b.chunks_exact(8);
-    for (av, bv) in (&mut ac).zip(&mut bc) {
-        for ((lane, &x), &qv) in lanes.iter_mut().zip(av).zip(bv) {
-            *lane += x * qv as f32;
-        }
-    }
-    let mut tail = 0.0f32;
-    for (&x, &qv) in ac.remainder().iter().zip(bc.remainder()) {
-        tail += x * qv as f32;
-    }
-    lanes.iter().sum::<f32>() + tail
+    super::simd::dot_q8(a, b)
 }
 
 /// One output band of [`matvec_q8`]: columns `n0 .. n0 + y.len()`.
@@ -672,6 +653,184 @@ fn head_attention_flash(
             let vrow = &varena[at..at + dh];
             for (ov, &vv) in oh.iter_mut().zip(vrow) {
                 *ov += p * vv;
+            }
+        }
+        j += in_block;
+        if j >= ctx {
+            break;
+        }
+    }
+    for ov in oh.iter_mut() {
+        *ov /= denom;
+    }
+}
+
+/// Widest `d_head` the quantized attention readers support (stack-buffer
+/// bound for the f16 dequant tile; 13B-class models use 128).
+pub const MAX_D_HEAD: usize = 512;
+
+/// [`attention_rows_paged`] over dtype-tagged KV arenas. The
+/// [`KvView::F32`] case routes to the untyped kernel and is bitwise
+/// identical to it; f16 dequantizes each K row into a stack tile before
+/// the dot, and q8 scores run [`dot_q8`] directly on the stored cells
+/// (per-row scale folded into the softmax logit) — quantized attention
+/// never materialises a dequantized K/V copy larger than one row.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_paged_kv(
+    pool: &WorkerPool,
+    q: &[f32],
+    k: KvView<'_>,
+    v: KvView<'_>,
+    starts_flat: &[usize],
+    rows_meta: &[(usize, usize)],
+    block_size: usize,
+    n_heads: usize,
+    d_head: usize,
+    d: usize,
+    o: &mut [f32],
+) {
+    if let (KvView::F32(ka), KvView::F32(va)) = (k, v) {
+        return attention_rows_paged(
+            pool, q, ka, va, starts_flat, rows_meta, block_size, n_heads, d_head, d, o,
+        );
+    }
+    let rows = rows_meta.len();
+    debug_assert_eq!(q.len(), rows * d);
+    debug_assert_eq!(o.len(), rows * d);
+    debug_assert_eq!(n_heads * d_head, d);
+    debug_assert!(block_size > 0);
+    assert!(d_head <= MAX_D_HEAD, "d_head {d_head} exceeds MAX_D_HEAD");
+    let total_ctx: usize = rows_meta.iter().map(|&(_, c)| c).sum();
+    let lanes = pool.lanes_for(2 * total_ctx * d);
+    let out = SharedSliceMut::new(o);
+    // Same row-interleaved tile bijection as the f32 kernel (see there).
+    let run = |tiles: Range<usize>| {
+        for t in tiles {
+            let (row, h) = (t % rows, t / rows);
+            let (off, ctx) = rows_meta[row];
+            let starts = &starts_flat[off..off + ctx.div_ceil(block_size)];
+            let base = h * d_head;
+            let qh = &q[row * d + base..row * d + base + d_head];
+            // SAFETY: tile (row, h) exclusively owns this d_head slice.
+            let oh = unsafe { out.borrow_range(row * d + base..row * d + base + d_head) };
+            match (k, v) {
+                (KvView::F16(ka), KvView::F16(va)) => {
+                    head_attention_flash_f16(qh, ka, va, starts, block_size, ctx, base, d, oh);
+                }
+                (KvView::Q8 { q: kq, s: ks }, KvView::Q8 { q: vq, s: vs }) => {
+                    head_attention_flash_q8(
+                        qh, kq, ks, vq, vs, starts, block_size, ctx, base, d, oh,
+                    );
+                }
+                _ => unreachable!("K and V arenas always share one dtype"),
+            }
+        }
+    };
+    if lanes <= 1 {
+        return run(0..rows * n_heads);
+    }
+    pool.run_tiles_bounded(0..rows * n_heads, lanes, run);
+}
+
+/// [`head_attention_flash`] over f16 arenas: each K row's head slice is
+/// dequantized into a stack tile (exact conversion), then the walk is
+/// identical to the f32 kernel; V accumulates converted-per-element.
+#[allow(clippy::too_many_arguments)]
+fn head_attention_flash_f16(
+    qh: &[f32],
+    karena: &[u16],
+    varena: &[u16],
+    starts: &[usize],
+    block_size: usize,
+    ctx: usize,
+    base: usize,
+    d: usize,
+    oh: &mut [f32],
+) {
+    debug_assert!(ctx > 0 && starts.len() * block_size >= ctx);
+    let dh = qh.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut kbuf = [0f32; MAX_D_HEAD];
+    let mut m = f32::NEG_INFINITY;
+    let mut denom = 0f32;
+    oh.fill(0.0);
+    let mut j = 0usize;
+    for &bstart in starts {
+        let in_block = block_size.min(ctx - j);
+        for row in 0..in_block {
+            let at = bstart + row * d + base;
+            for (x, &hb) in kbuf[..dh].iter_mut().zip(&karena[at..at + dh]) {
+                *x = f16_to_f32(hb);
+            }
+            let s = dot(qh, &kbuf[..dh]) * scale;
+            if s > m {
+                let c = (m - s).exp();
+                denom *= c;
+                for ov in oh.iter_mut() {
+                    *ov *= c;
+                }
+                m = s;
+            }
+            let p = (s - m).exp();
+            denom += p;
+            for (ov, &hb) in oh.iter_mut().zip(&varena[at..at + dh]) {
+                *ov += p * f16_to_f32(hb);
+            }
+        }
+        j += in_block;
+        if j >= ctx {
+            break;
+        }
+    }
+    for ov in oh.iter_mut() {
+        *ov /= denom;
+    }
+}
+
+/// [`head_attention_flash`] over q8 arenas: scores are `dot_q8` on the
+/// stored int8 K cells with the per-row scale folded into the logit, and
+/// the V accumulation folds `p * v_scale` into one factor per position —
+/// the attention walk reads one byte per cached element.
+#[allow(clippy::too_many_arguments)]
+fn head_attention_flash_q8(
+    qh: &[f32],
+    kq: &[i8],
+    ks: &[f32],
+    vq: &[i8],
+    vs: &[f32],
+    starts: &[usize],
+    block_size: usize,
+    ctx: usize,
+    base: usize,
+    d: usize,
+    oh: &mut [f32],
+) {
+    debug_assert!(ctx > 0 && starts.len() * block_size >= ctx);
+    let dh = qh.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut m = f32::NEG_INFINITY;
+    let mut denom = 0f32;
+    oh.fill(0.0);
+    let mut j = 0usize;
+    for &bstart in starts {
+        let in_block = block_size.min(ctx - j);
+        for row in 0..in_block {
+            let rowstart = bstart + row * d;
+            let at = rowstart + base;
+            let s = dot_q8(qh, &kq[at..at + dh]) * ks[rowstart / d] * scale;
+            if s > m {
+                let c = (m - s).exp();
+                denom *= c;
+                for ov in oh.iter_mut() {
+                    *ov *= c;
+                }
+                m = s;
+            }
+            let p = (s - m).exp();
+            denom += p;
+            let pv = p * vs[rowstart / d];
+            for (ov, &qv) in oh.iter_mut().zip(&vq[at..at + dh]) {
+                *ov += pv * qv as f32;
             }
         }
         j += in_block;

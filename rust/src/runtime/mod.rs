@@ -6,6 +6,9 @@
 //! - [`pool`] — the persistent worker pool: fixed-ownership tile bands
 //!   over resident, parkable threads (spawned once per backend; zero
 //!   spawns on the request path).
+//! - [`simd`] — runtime-dispatched SIMD inner products (AVX2/NEON with the
+//!   fixed-order scalar path retained as the bitwise oracle; `LEAP_SIMD=0`
+//!   forces scalar).
 //! - [`kernels`] — the fast CPU kernel layer (weight-stationary GEMM,
 //!   fused QKV/SwiGLU/residual-norm passes, flash paged attention, rope
 //!   tables, scratch arena, pool-dispatched parallelism) plus the retained
@@ -26,6 +29,7 @@ pub mod kernels;
 pub mod leapbin;
 pub mod pool;
 pub mod reference;
+pub mod simd;
 
 pub use backend::{
     argmax_row, default_artifacts_dir, ArtifactMeta, BatchResults, NumericsBackend, SessionId,
@@ -36,3 +40,4 @@ pub use engine::{Engine, PjrtBackend};
 pub use leapbin::{DType, Tensor};
 pub use pool::{WorkerPool, WorkerPoolStats};
 pub use reference::{KernelMode, ReferenceBackend, ReferenceModel};
+pub use simd::SimdLevel;

@@ -51,11 +51,11 @@ use std::path::Path;
 
 use anyhow::{ensure, Context};
 
-use crate::kvcache::{BlockTable, KvCacheConfig, KvStore, PoolStats};
+use crate::kvcache::{BlockTable, KvCacheConfig, KvDtype, KvStore, PoolStats};
 
 use super::backend::{ArtifactMeta, BatchResults, NumericsBackend, SessionId, StepOutput};
 use super::kernels::{
-    self, add_residual_rmsnorm, attention_rows_paged, gemm_q8, gemm_q8_qkv, gemm_q8_swiglu,
+    self, add_residual_rmsnorm, attention_rows_paged_kv, gemm_q8, gemm_q8_qkv, gemm_q8_swiglu,
     gemm_t, rmsnorm_into, QMat, RopeTable, Scratch,
 };
 use super::leapbin::{self, DType, Tensor};
@@ -328,7 +328,9 @@ impl ReferenceModel {
     /// (boundary growth + copy-on-write of shared tails) are reserved up
     /// front, rows whose position falls inside a prefix-shared block skip
     /// the (bit-identical) rewrite, and attention walks the blocks in
-    /// place via [`attention_rows_paged`] — no gathered copy.
+    /// place via [`attention_rows_paged_kv`] — no gathered copy, reading
+    /// the pool's storage dtype (f32 bitwise; f16/q8 dequantized
+    /// per-row in-register).
     ///
     /// Validates every token, session capacity, and the pool's free-block
     /// demand *before* mutating any session, so an error leaves all
@@ -472,11 +474,11 @@ impl ReferenceModel {
             for sess in sessions.iter() {
                 kv.append_starts(&sess.table, li, &mut scratch.block_starts);
             }
-            attention_rows_paged(
+            attention_rows_paged_kv(
                 pool,
                 &scratch.q[..r * d],
-                kv.k_arena(),
-                kv.v_arena(),
+                kv.k_view(),
+                kv.v_view(),
                 &scratch.block_starts,
                 &scratch.attn_rows,
                 bs,
@@ -572,21 +574,23 @@ impl ReferenceModel {
 
             let ctx = pos + 1;
             // Walk the paged cache in place: position j is row j % bs of
-            // block j / bs. Same values, same order as the old gathered
-            // loop — bit-identical, without the per-call K/V copies.
+            // block j / bs. Rows are read through the dtype-tagged view
+            // (an f32 pool's copy is bit-identical to the old direct
+            // slice walk; f16/q8 dequantize one head slice at a time).
             let scale = 1.0 / (dh as f32).sqrt();
             let mut o = vec![0f32; d];
             let mut scores = vec![0f32; ctx];
+            let mut kbuf = vec![0f32; dh];
+            let mut vbuf = vec![0f32; dh];
             for h in 0..heads {
                 let base = h * dh;
                 let qh = &q[base..base + dh];
                 let mut max = f32::NEG_INFINITY;
                 for (j, sc) in scores.iter_mut().enumerate() {
                     let blk = sess.table.blocks()[j / bs];
-                    let at = (j % bs) * d + base;
-                    let krow = &kv.k_block(blk, li)[at..at + dh];
+                    kv.k_view().read_into(kv.row_start(blk, li, j % bs), d, base, &mut kbuf);
                     let mut dot = 0f32;
-                    for (a, b) in qh.iter().zip(krow) {
+                    for (a, b) in qh.iter().zip(&kbuf) {
                         dot += a * b;
                     }
                     *sc = dot * scale;
@@ -600,9 +604,8 @@ impl ReferenceModel {
                 let oh = &mut o[base..base + dh];
                 for (j, &p) in scores.iter().enumerate() {
                     let blk = sess.table.blocks()[j / bs];
-                    let at = (j % bs) * d + base;
-                    let vrow = &kv.v_block(blk, li)[at..at + dh];
-                    for (ov, &vv) in oh.iter_mut().zip(vrow) {
+                    kv.v_view().read_into(kv.row_start(blk, li, j % bs), d, base, &mut vbuf);
+                    for (ov, &vv) in oh.iter_mut().zip(&vbuf) {
                         *ov += p * vv;
                     }
                 }
@@ -658,9 +661,9 @@ impl ReferenceBackend {
 
     /// Load with an explicit KV pool configuration (`None` = the model's
     /// default: block size = one tile row group, pool sized for 32
-    /// full-window sessions, capped at [`Self::DEFAULT_POOL_WORDS`] per
-    /// arena so big artifacts don't eagerly allocate tens of GB — the
-    /// arenas are allocated up front, unlike the old lazy per-session
+    /// full-window sessions, capped at [`Self::DEFAULT_POOL_BYTES`] across
+    /// both arenas so big artifacts don't eagerly allocate tens of GB —
+    /// the arenas are allocated up front, unlike the old lazy per-session
     /// buffers). Small pools exercise admission/preemption;
     /// `block_size = s_max` + sharing off reproduces the pre-pool flat-KV
     /// layout.
@@ -679,6 +682,25 @@ impl ReferenceBackend {
         Self::load_with_pool(dir, mode, kv_cfg, pool)
     }
 
+    /// Load with the default pool shape at an explicit KV storage dtype.
+    /// The byte budget is unchanged, so quantized dtypes fit
+    /// proportionally more blocks when the budget (not the 32-session
+    /// sizing) is the binding cap — the capacity win `leap serve
+    /// --kv-dtype q8` exposes.
+    pub fn load_with_kv_dtype(
+        dir: impl AsRef<Path>,
+        mode: KernelMode,
+        dtype: KvDtype,
+    ) -> anyhow::Result<Self> {
+        let pool = match mode {
+            KernelMode::Fast => WorkerPool::new(),
+            KernelMode::Naive => WorkerPool::with_threads(1),
+        };
+        let model = ReferenceModel::load_with_mode(dir, mode)?;
+        let cfg = Self::default_kv_config_with_dtype(&model.meta, dtype);
+        Ok(Self::assemble(model, cfg, pool))
+    }
+
     /// Load with an explicit worker pool (tests pin pool sizes 1/2/max for
     /// the determinism props; the bench measures pool-off vs pool-on).
     pub fn load_with_pool(
@@ -689,24 +711,33 @@ impl ReferenceBackend {
     ) -> anyhow::Result<Self> {
         let model = ReferenceModel::load_with_mode(dir, mode)?;
         let cfg = kv_cfg.unwrap_or_else(|| Self::default_kv_config(&model.meta));
-        let kv = KvStore::new(cfg, model.meta.n_layers, model.meta.d_model);
-        Ok(Self { model, sessions: HashMap::new(), scratch: Scratch::new(), kv, pool })
+        Ok(Self::assemble(model, cfg, pool))
     }
 
-    /// Eager-arena budget for the *default* pool, in f32 words per arena
-    /// (64 Mi words = 256 MiB per arena, ×2 arenas). Explicit
+    fn assemble(model: ReferenceModel, cfg: KvCacheConfig, pool: WorkerPool) -> Self {
+        let kv = KvStore::new(cfg, model.meta.n_layers, model.meta.d_model);
+        Self { model, sessions: HashMap::new(), scratch: Scratch::new(), kv, pool }
+    }
+
+    /// Eager-arena byte budget for the *default* pool across both arenas
+    /// (512 MiB — the same envelope as the old 64 Mi-f32-words-per-arena
+    /// budget; quantized dtypes fit 2–4× more blocks inside it). Explicit
     /// [`KvCacheConfig`]s are taken verbatim.
-    pub const DEFAULT_POOL_WORDS: usize = 64 << 20;
+    pub const DEFAULT_POOL_BYTES: usize = 512 << 20;
 
     /// The default pool for an artifact: 32 full-window sessions, capped
-    /// at the word budget but never below one full-window session (a
+    /// at the byte budget but never below one full-window session (a
     /// single max-length request must always be serveable).
     fn default_kv_config(meta: &ArtifactMeta) -> KvCacheConfig {
+        Self::default_kv_config_with_dtype(meta, KvDtype::F32)
+    }
+
+    fn default_kv_config_with_dtype(meta: &ArtifactMeta, dtype: KvDtype) -> KvCacheConfig {
         let mut cfg = KvCacheConfig::for_model(meta.d_model, meta.s_max);
-        let words_per_block = meta.n_layers * cfg.block_size * meta.d_model;
-        let budget_blocks = (Self::DEFAULT_POOL_WORDS / words_per_block.max(1))
-            .max(cfg.blocks_for(meta.s_max))
-            .max(1);
+        cfg.dtype = dtype;
+        let budget_blocks = cfg
+            .blocks_for_bytes(Self::DEFAULT_POOL_BYTES, meta.n_layers, meta.d_model)
+            .max(cfg.blocks_for(meta.s_max));
         cfg.n_blocks = cfg.n_blocks.min(budget_blocks);
         cfg
     }
@@ -1045,7 +1076,12 @@ mod tests {
     #[test]
     fn session_kv_is_block_pooled() {
         // the session layout is a block table, not a flat [s_max, d] buffer
-        let cfg = KvCacheConfig { block_size: 4, n_blocks: 8, prefix_sharing: true };
+        let cfg = KvCacheConfig {
+            block_size: 4,
+            n_blocks: 8,
+            prefix_sharing: true,
+            dtype: KvDtype::F32,
+        };
         let mut kv = KvStore::new(cfg, 3, 8);
         let mut t = kv.build_prefill(&[1, 2, 3, 4, 5]);
         assert_eq!(t.len(), 0, "cold cache: nothing shared");

@@ -1,0 +1,344 @@
+//! Runtime-dispatched SIMD inner products for the kernel layer.
+//!
+//! Every hot loop in [`crate::runtime::kernels`] bottoms out in one of two
+//! inner products: `dot` (f32 · f32) and `dot_q8` (f32 activations · int8
+//! crossbar cells). Both accumulate into a **fixed 8-lane order**: lane `j`
+//! sums elements `j, j+8, j+16, …`, lanes are reduced in index order, and a
+//! scalar tail handles the ragged remainder. That order is the foundation of
+//! the repo's bitwise determinism contracts (batched==sequential,
+//! paged==flat, pool-size invariance).
+//!
+//! The vector paths here reproduce that order *exactly*:
+//!
+//! - **AVX2** — one `__m256` accumulator IS the 8 scalar lanes. Each step is
+//!   a separate multiply then add (`_mm256_mul_ps` + `_mm256_add_ps`, never
+//!   FMA — fusing changes rounding), so lane `j` of the register performs
+//!   the same f32 operations in the same order as scalar lane `j`. The
+//!   reduction extracts the lanes and sums them in index order, and the tail
+//!   is the identical scalar loop.
+//! - **NEON** — two `float32x4` registers hold lanes 0–3 and 4–7; again
+//!   separate `vmulq_f32` + `vaddq_f32` (never `vfmaq`), lanes stored out
+//!   and summed in index order.
+//!
+//! IEEE-754 binary ops are deterministic per (inputs, op, rounding mode), so
+//! SIMD and scalar produce **bitwise identical** results — the dispatch
+//! level is unobservable through any kernel output, and none of the existing
+//! contracts needed re-pinning. That equality is itself property-tested
+//! (`tests/prop_simd_kv.rs`) including tails shorter than one vector.
+//!
+//! Dispatch is resolved once per process (`OnceLock`): `LEAP_SIMD=0` (or
+//! `off`/`scalar`) forces the portable scalar path, mirroring the
+//! `LEAP_THREADS` convention in [`crate::runtime::pool`]; otherwise x86-64
+//! probes AVX2 at runtime and AArch64 uses NEON (baseline on that ISA).
+//! Benches may additionally force the scalar path *after* the probe via
+//! [`force_scalar`] to measure both sides in one process.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Which inner-product implementation the process dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable fixed-order scalar path (the oracle).
+    Scalar,
+    /// x86-64 AVX2 (8 × f32 per register, one register = the 8 lanes).
+    Avx2,
+    /// AArch64 NEON (2 × 4 f32 registers covering the 8 lanes).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable label for metrics / bench JSON ("avx2" | "neon" | "scalar").
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+static PROBED: OnceLock<SimdLevel> = OnceLock::new();
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+fn probe() -> SimdLevel {
+    // LEAP_SIMD=0|off|scalar forces the portable path; unparseable values
+    // warn and fall through to the ISA probe (the LEAP_THREADS convention).
+    if let Ok(v) = std::env::var("LEAP_SIMD") {
+        match v.trim() {
+            "0" | "off" | "scalar" => return SimdLevel::Scalar,
+            "" | "1" | "on" | "auto" => {}
+            other => {
+                eprintln!("leap: ignoring unparseable LEAP_SIMD={other:?} (want 0|off|scalar or 1|on|auto)");
+            }
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::Scalar
+}
+
+/// The dispatch level in effect (probe result, or Scalar under
+/// [`force_scalar`]). Resolved once per process; cheap to call per kernel.
+#[inline]
+pub fn level() -> SimdLevel {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return SimdLevel::Scalar;
+    }
+    *PROBED.get_or_init(probe)
+}
+
+/// The level the ISA probe selected, ignoring any [`force_scalar`] override
+/// (what the host *can* do — reported in bench JSON and `leap serve`).
+pub fn probed_level() -> SimdLevel {
+    *PROBED.get_or_init(probe)
+}
+
+/// Force the scalar path (benches/tests only: lets one process measure and
+/// compare both sides of the dispatch). `force_scalar(false)` restores the
+/// probed level.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Fixed-order f32 dot product, SIMD-dispatched. Bitwise identical to
+/// [`dot_scalar`] at every level.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { dot_neon(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Fixed-order f32 · int8 dot product, SIMD-dispatched. Bitwise identical
+/// to [`dot_q8_scalar`] at every level (i8→f32 conversion is exact).
+#[inline]
+pub fn dot_q8(a: &[f32], b: &[i8]) -> f32 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { dot_q8_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { dot_q8_neon(a, b) },
+        _ => dot_q8_scalar(a, b),
+    }
+}
+
+/// The portable fixed-8-lane scalar dot — the determinism oracle every
+/// vector path must match bitwise.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((lane, &x), &y) in lanes.iter_mut().zip(av).zip(bv) {
+            *lane += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+/// The portable fixed-8-lane scalar q8 dot — the oracle for [`dot_q8`].
+pub fn dot_q8_scalar(a: &[f32], b: &[i8]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((lane, &x), &qv) in lanes.iter_mut().zip(av).zip(bv) {
+            *lane += x * qv as f32;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &qv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * qv as f32;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    // One __m256 accumulator = the 8 scalar lanes. Separate mul+add (no
+    // FMA) keeps per-lane rounding identical to the scalar path.
+    let mut acc = _mm256_setzero_ps();
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        let va = _mm256_loadu_ps(av.as_ptr());
+        let vb = _mm256_loadu_ps(bv.as_ptr());
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_q8_avx2(a: &[f32], b: &[i8]) -> f32 {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_ps();
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        let va = _mm256_loadu_ps(av.as_ptr());
+        // 8 × i8 → 8 × i32 → 8 × f32; integer widening and i8-range
+        // int→float conversion are exact, so this matches `qv as f32`.
+        let vq = _mm_loadl_epi64(bv.as_ptr() as *const __m128i);
+        let vf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(vq));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vf));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    for (&x, &qv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * qv as f32;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    // Two float32x4 registers hold lanes 0–3 and 4–7. Separate mul+add
+    // (never vfmaq) keeps per-lane rounding identical to the scalar path.
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        let a0 = vld1q_f32(av.as_ptr());
+        let a1 = vld1q_f32(av.as_ptr().add(4));
+        let b0 = vld1q_f32(bv.as_ptr());
+        let b1 = vld1q_f32(bv.as_ptr().add(4));
+        acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+        acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+    }
+    let mut lanes = [0.0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_q8_neon(a: &[f32], b: &[i8]) -> f32 {
+    use std::arch::aarch64::*;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        let a0 = vld1q_f32(av.as_ptr());
+        let a1 = vld1q_f32(av.as_ptr().add(4));
+        // 8 × i8 → widen to i16 → i32 halves → f32 (all exact for i8).
+        let q8 = vld1_s8(bv.as_ptr());
+        let q16 = vmovl_s8(q8);
+        let f0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+        let f1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+        acc0 = vaddq_f32(acc0, vmulq_f32(a0, f0));
+        acc1 = vaddq_f32(acc1, vmulq_f32(a1, f1));
+    }
+    let mut lanes = [0.0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut tail = 0.0f32;
+    for (&x, &qv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * qv as f32;
+    }
+    lanes.iter().sum::<f32>() + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i8>) {
+        let mut rng = crate::testutil::SplitMix64::new(seed);
+        let a = rng.normal_vec(n);
+        let b = rng.normal_vec(n);
+        let q: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        (a, b, q)
+    }
+
+    /// The dispatched path matches the scalar oracle bitwise on every
+    /// length, including tails shorter than one vector (0..=9) and
+    /// non-multiple-of-8 lengths.
+    #[test]
+    fn dispatched_matches_scalar_bitwise() {
+        for n in (0..=9).chain([15, 16, 17, 31, 64, 127, 256, 1000]) {
+            let (a, b, q) = vecs(n, 0x5EED + n as u64);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_scalar(&a, &b).to_bits(),
+                "dot diverged from scalar at n={n} (level {:?})",
+                level()
+            );
+            assert_eq!(
+                dot_q8(&a, &q).to_bits(),
+                dot_q8_scalar(&a, &q).to_bits(),
+                "dot_q8 diverged from scalar at n={n} (level {:?})",
+                level()
+            );
+        }
+    }
+
+    /// The scalar oracle itself is the documented 8-lane fixed-order sum.
+    #[test]
+    fn scalar_is_eight_lane_fixed_order() {
+        let (a, b, q) = vecs(21, 7);
+        let mut lanes = [0.0f32; 8];
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate().take(16) {
+            lanes[i % 8] += x * y;
+        }
+        let mut tail = 0.0f32;
+        for (&x, &y) in a[16..].iter().zip(&b[16..]) {
+            tail += x * y;
+        }
+        let want = lanes.iter().sum::<f32>() + tail;
+        assert_eq!(dot_scalar(&a, &b).to_bits(), want.to_bits());
+        // q8: conversion then identical lane structure
+        let qf: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        assert_eq!(dot_q8_scalar(&a, &q).to_bits(), dot_scalar(&a, &qf).to_bits());
+    }
+
+    /// `force_scalar` reroutes dispatch without touching the probed level,
+    /// and restoring it brings the vector path back.
+    #[test]
+    fn force_scalar_round_trip() {
+        let probed = probed_level();
+        force_scalar(true);
+        assert_eq!(level(), SimdLevel::Scalar);
+        let (a, b, _) = vecs(100, 3);
+        let forced = dot(&a, &b);
+        force_scalar(false);
+        assert_eq!(level(), probed);
+        assert_eq!(dot(&a, &b).to_bits(), forced.to_bits(), "levels must agree bitwise");
+    }
+}

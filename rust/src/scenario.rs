@@ -19,7 +19,10 @@
 //! max_batch 8
 //! block_size 4              # KV pool overrides (ref numerics only)
 //! blocks 12
+//! kv_dtype q8               # KV arena storage: f32 (default) | f16 | q8
+//! pool_bytes 8192           # size the pool by bytes (ignored with `blocks`)
 //! expect_min_preemptions 1
+//! expect_max_preemptions 4  # optional upper bound
 //!
 //! session arrive=0 prompt=rand:96:11 gen=8 expect=done
 //! session arrive=0 prompt=rand:12:12 gen=8 seed=5 temp=0.8 top_k=40
@@ -41,7 +44,7 @@ use crate::coordinator::{
     BatchPolicy, EngineConfig, FinishReason, GenerationConfig, Metrics, Numerics, RequestId,
     RequestState, ServingEngine,
 };
-use crate::kvcache::KvCacheConfig;
+use crate::kvcache::{KvCacheConfig, KvDtype};
 use crate::model::ModelPreset;
 use crate::runtime::{KernelMode, NumericsBackend, ReferenceBackend};
 use crate::testutil::SplitMix64;
@@ -138,6 +141,9 @@ pub struct SessionSpec {
 pub struct Expect {
     pub min_preemptions: u64,
     pub min_prefix_hits: u64,
+    /// Upper bound on preemptions (`None` = unchecked). The q8 capacity
+    /// scenarios use this to prove a bigger pool stops thrashing.
+    pub max_preemptions: Option<u64>,
 }
 
 /// A parsed scenario script.
@@ -156,6 +162,14 @@ pub struct Scenario {
     pub block_size: Option<usize>,
     pub blocks: Option<usize>,
     pub prefix_sharing: Option<bool>,
+    /// KV arena storage dtype (`f32` / `f16` / `q8`).
+    pub kv_dtype: Option<KvDtype>,
+    /// Size the pool by a byte budget instead of a block count: the block
+    /// count becomes `pool_bytes / bytes_per_block(dtype)`, so the same
+    /// budget admits ~2×/~4× more blocks at f16/q8 — the capacity
+    /// comparison the `prefix_storm_q8` scenario scripts. Ignored when
+    /// `blocks` is set explicitly.
+    pub pool_bytes: Option<usize>,
     pub expect: Expect,
     pub sessions: Vec<SessionSpec>,
 }
@@ -238,7 +252,8 @@ impl ScenarioReport {
              \"requests_rejected\":{},\"requests_stopped\":{},\"preemptions\":{},\
              \"prefill_tokens\":{},\"prefill_chunks\":{},\"decode_tokens\":{},\
              \"sim_time_ns\":{},\"kv_prefix_hits\":{},\"kv_cow_copies\":{},\
-             \"kv_peak_blocks_used\":{},\"ttft_p50_ns\":{tp50},\"ttft_p99_ns\":{tp99},\
+             \"kv_peak_blocks_used\":{},\"kv_dtype\":\"{}\",\"kv_bytes_per_token\":{},\
+             \"ttft_p50_ns\":{tp50},\"ttft_p99_ns\":{tp99},\
              \"latency_p50_ns\":{lp50},\"latency_p99_ns\":{lp99}}}",
             m.requests_done,
             m.requests_failed,
@@ -252,6 +267,8 @@ impl ScenarioReport {
             m.kv_prefix_hits,
             m.kv_cow_copies,
             m.kv_peak_blocks_used,
+            m.kv_dtype.as_str(),
+            m.kv_bytes_per_token,
         ));
         s.push_str(",\"sessions\":[");
         for (i, r) in self.sessions.iter().enumerate() {
@@ -361,6 +378,8 @@ impl Scenario {
             block_size: None,
             blocks: None,
             prefix_sharing: None,
+            kv_dtype: None,
+            pool_bytes: None,
             expect: Expect::default(),
             sessions: Vec::new(),
         };
@@ -406,8 +425,18 @@ impl Scenario {
                         other => return Err(ctx(format!("prefix_sharing on|off, got '{other}'"))),
                     })
                 }
+                "kv_dtype" => {
+                    sc.kv_dtype = Some(
+                        KvDtype::parse(rest)
+                            .ok_or_else(|| ctx(format!("kv_dtype f32|f16|q8, got '{rest}'")))?,
+                    )
+                }
+                "pool_bytes" => sc.pool_bytes = Some(parse_num(rest).map_err(&ctx)?),
                 "expect_min_preemptions" => {
                     sc.expect.min_preemptions = parse_num(rest).map_err(&ctx)?
+                }
+                "expect_max_preemptions" => {
+                    sc.expect.max_preemptions = Some(parse_num(rest).map_err(&ctx)?)
                 }
                 "expect_min_prefix_hits" => {
                     sc.expect.min_prefix_hits = parse_num(rest).map_err(&ctx)?
@@ -544,8 +573,11 @@ impl Scenario {
                     })?,
                 };
                 let backend = ReferenceBackend::load(&dir)?;
-                let overridden =
-                    self.block_size.is_some() || self.blocks.is_some() || self.prefix_sharing.is_some();
+                let overridden = self.block_size.is_some()
+                    || self.blocks.is_some()
+                    || self.prefix_sharing.is_some()
+                    || self.kv_dtype.is_some()
+                    || self.pool_bytes.is_some();
                 if !overridden {
                     return Ok(Numerics::Backend(Box::new(backend)));
                 }
@@ -554,8 +586,15 @@ impl Scenario {
                 if let Some(bs) = self.block_size {
                     cfg.block_size = bs.max(1);
                 }
+                if let Some(dt) = self.kv_dtype {
+                    cfg.dtype = dt;
+                }
                 if let Some(n) = self.blocks {
                     cfg.n_blocks = n.max(1);
+                } else if let Some(bytes) = self.pool_bytes {
+                    // dtype is already applied above, so the same byte
+                    // budget yields more blocks at f16/q8 than at f32
+                    cfg.n_blocks = cfg.blocks_for_bytes(bytes, meta.n_layers, meta.d_model);
                 }
                 if let Some(ps) = self.prefix_sharing {
                     cfg.prefix_sharing = ps;
@@ -699,6 +738,14 @@ impl Scenario {
                 self.expect.min_prefix_hits, m.kv_prefix_hits
             ));
         }
+        if let Some(maxp) = self.expect.max_preemptions {
+            if m.preemptions > maxp {
+                failures.push(format!(
+                    "expected <= {maxp} preemptions, saw {}",
+                    m.preemptions
+                ));
+            }
+        }
         Ok(ScenarioReport {
             scenario: self.name.clone(),
             numerics: self.numerics,
@@ -745,7 +792,10 @@ numerics synthetic
 model 1b
 chunk 16
 max_batch 4
+kv_dtype q8
+pool_bytes 65536
 expect_min_preemptions 0
+expect_max_preemptions 0
 
 session arrive=0 prompt=rand:40:1 gen=4 expect=done
 session arrive=500 prompt=tokens:1,2,3 gen=2 seed=9 temp=0.8 top_k=8 stop=5,6|7
@@ -759,6 +809,9 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert_eq!(sc.numerics, NumericsKind::Synthetic);
         assert_eq!(sc.chunk, Some(16));
         assert_eq!(sc.max_batch, Some(4));
+        assert_eq!(sc.kv_dtype, Some(KvDtype::Q8));
+        assert_eq!(sc.pool_bytes, Some(65536));
+        assert_eq!(sc.expect.max_preemptions, Some(0));
         assert_eq!(sc.sessions.len(), 3);
         assert_eq!(sc.sessions[0].prompt.len(), 40);
         assert_eq!(sc.sessions[1].arrive_ns, 500);
@@ -771,6 +824,8 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
     fn parse_errors_carry_line_numbers() {
         let err = Scenario::parse("bogus directive\n").unwrap_err().to_string();
         assert!(err.contains("line 1"), "{err}");
+        let err = Scenario::parse("scenario x\nkv_dtype int4\n").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("kv_dtype"), "{err}");
         let err = Scenario::parse("scenario x\nsession prompt=nope:1\n").unwrap_err().to_string();
         assert!(err.contains("line 2"), "{err}");
         // no sessions at all
@@ -818,6 +873,9 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert!(json.contains("\"scenario\":\"demo\""));
         assert!(json.contains("\"passed\":true"));
         assert!(json.contains("\"outcome\":\"rejected\""));
+        // synthetic numerics never pool, so the dtype gauge stays default
+        assert!(json.contains("\"kv_dtype\":\"f32\""));
+        assert!(json.contains("\"kv_bytes_per_token\":0"));
     }
 
     #[test]

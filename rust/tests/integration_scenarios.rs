@@ -82,6 +82,33 @@ fn prefix_storm_scenario_preempts_and_shares() {
     assert!(json.contains("\"preemptions\""));
 }
 
+/// The q8 capacity story (ISSUE 7): the exact byte budget that thrashes
+/// at f32 under 8 sessions (prefix_storm) runs 16 sessions at q8 with
+/// zero preemptions, because 393216 bytes is 12 f32 blocks but 47 q8
+/// blocks on the tiny model's geometry.
+#[test]
+fn prefix_storm_q8_doubles_admitted_sessions_on_the_same_bytes() {
+    let report = load("prefix_storm_q8.scn").run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    assert_eq!(report.metrics.requests_done, 16, "2x the f32 storm's session count");
+    assert_eq!(report.metrics.preemptions, 0, "q8 pool must not thrash under this load");
+    assert!(report.metrics.kv_prefix_hits >= 1, "shared prefix must still hit the cache");
+    // 393216 bytes / (block_size 4 * 2 arenas * 4 layers * (256 + 4) bytes)
+    assert_eq!(report.metrics.kv_blocks_total, 47, "byte budget must quantize to 47 q8 blocks");
+    assert_eq!(
+        report.metrics.kv_bytes_per_token,
+        2 * 4 * (256 + 4),
+        "q8 token cost: both arenas, all layers, d_model + one f32 scale per row"
+    );
+    for s in &report.sessions {
+        assert_eq!(s.outcome, "done", "session {}: must complete", s.index);
+        assert_eq!(s.output.len(), 6, "session {}: full generation budget", s.index);
+    }
+    let json = report.to_json();
+    assert!(json.contains("\"kv_dtype\":\"q8\""));
+    assert!(json.contains("\"kv_bytes_per_token\":2080"));
+}
+
 #[test]
 fn mixed_length_chunking_improves_short_request_ttft() {
     let sc = load("mixed_length.scn");

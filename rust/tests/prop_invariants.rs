@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use leap::arch::{Coord, HwParams, Mesh, TileGeometry};
 use leap::coordinator::{BatchPolicy, EngineConfig, Numerics, ServingEngine};
 use leap::isa::{assemble, disassemble, Cmd, Instruction, Opcode, Program, SelBits};
-use leap::kvcache::{BlockTable, KvCacheConfig, KvStore};
+use leap::kvcache::{BlockTable, KvCacheConfig, KvDtype, KvStore};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
 use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend};
@@ -256,7 +256,12 @@ fn prop_block_pool_no_leak_no_alias_exact_refcounts() {
         let n_layers = rng.range(1, 2);
         let d = 4usize;
         let mut kv = KvStore::new(
-            KvCacheConfig { block_size: bs, n_blocks, prefix_sharing: rng.below(4) != 0 },
+            KvCacheConfig {
+                block_size: bs,
+                n_blocks,
+                prefix_sharing: rng.below(4) != 0,
+                dtype: KvDtype::F32,
+            },
             n_layers,
             d,
         );
@@ -396,13 +401,23 @@ fn prop_preempt_readmit_token_equivalence() {
         let mut paged = ReferenceBackend::load_with_opts(
             &dir,
             KernelMode::Fast,
-            Some(KvCacheConfig { block_size: bs, n_blocks: 64, prefix_sharing: true }),
+            Some(KvCacheConfig {
+                block_size: bs,
+                n_blocks: 64,
+                prefix_sharing: true,
+                dtype: KvDtype::F32,
+            }),
         )
         .map_err(|e| e.to_string())?;
         let mut flat = ReferenceBackend::load_with_opts(
             &dir,
             KernelMode::Fast,
-            Some(KvCacheConfig { block_size: 128, n_blocks: NSESS, prefix_sharing: false }),
+            Some(KvCacheConfig {
+                block_size: 128,
+                n_blocks: NSESS,
+                prefix_sharing: false,
+                dtype: KvDtype::F32,
+            }),
         )
         .map_err(|e| e.to_string())?;
         let v = paged.vocab();

@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use leap::arch::HwParams;
 use leap::coordinator::generation::distribution;
 use leap::coordinator::{BatchPolicy, EngineConfig, GenerationConfig, Numerics, ServingEngine};
-use leap::kvcache::KvCacheConfig;
+use leap::kvcache::{KvCacheConfig, KvDtype};
 use leap::model::ModelPreset;
 use leap::runtime::{KernelMode, ReferenceBackend, WorkerPool};
 use leap::testutil::{forall, Config};
@@ -128,7 +128,8 @@ fn sampled_streams_survive_preemption_replay() {
         (outs, e.metrics.clone())
     };
 
-    let tight = KvCacheConfig { block_size: 4, n_blocks: 12, prefix_sharing: true };
+    let tight =
+        KvCacheConfig { block_size: 4, n_blocks: 12, prefix_sharing: true, dtype: KvDtype::F32 };
     let (tokens_tight, m_tight) = run(Some(tight));
     let (tokens_big, m_big) = run(None);
 

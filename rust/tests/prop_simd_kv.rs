@@ -1,0 +1,241 @@
+//! ISSUE 7 property tests: SIMD dispatch parity, quantized-KV round-trip
+//! error bounds, and the determinism contracts re-proven under every KV
+//! storage dtype.
+//!
+//! The SIMD layer's contract is *bitwise* equality with the scalar
+//! fixed-order 8-lane reduction — not approximate agreement — so the
+//! parity properties compare `f32::to_bits`. The quantized-KV properties
+//! bound the storage error analytically (half-ulp for f16 RNE, half a
+//! quantization step for per-row symmetric q8) and then re-run the
+//! paged==flat / batched==sequential / fast≈naive contracts at f16 and q8,
+//! where the *stored* values differ from f32 but every read of the same
+//! pool must still be deterministic.
+
+use std::path::PathBuf;
+
+use leap::kvcache::store::{f16_to_f32, f32_to_f16};
+use leap::kvcache::{KvCacheConfig, KvDtype, KvStore};
+use leap::runtime::{argmax_row, simd, KernelMode, NumericsBackend, ReferenceBackend};
+use leap::testutil::{forall, Config};
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+/// Tiny-fixture geometry (tests/fixtures/tiny_ref/meta.txt).
+const D_MODEL: usize = 256;
+const S_MAX: usize = 128;
+
+fn cfg_with(block_size: usize, n_blocks: usize, dtype: KvDtype) -> KvCacheConfig {
+    let mut cfg = KvCacheConfig::for_model(D_MODEL, S_MAX);
+    cfg.block_size = block_size;
+    cfg.n_blocks = n_blocks;
+    cfg.dtype = dtype;
+    cfg
+}
+
+/// Prefill one session and run `steps` greedy decode steps, returning every
+/// logits row (prefill's included) for bitwise comparison.
+fn decode_logits(cfg: Option<KvCacheConfig>, mode: KernelMode, steps: usize) -> Vec<Vec<f32>> {
+    let mut b = ReferenceBackend::load_with_opts(fixture_dir(), mode, cfg).expect("fixture loads");
+    let prompt: Vec<i32> = (0..10).map(|i| (i * 29 + 3) % 512).collect();
+    let out = b.prefill(1, &prompt).expect("prefill");
+    let mut tok = argmax_row(&out.logits, 0, b.vocab()) as i32;
+    let mut all = vec![out.logits];
+    for _ in 0..steps {
+        let o = b.decode_step(1, tok).expect("decode");
+        tok = argmax_row(&o.logits, 0, b.vocab()) as i32;
+        all.push(o.logits);
+    }
+    all
+}
+
+fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: step counts differ");
+    for (step, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{what}: step {step} row lengths differ");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: step {step} logit {i}: {p:?} != {q:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_dispatch_matches_scalar_bitwise_over_random_shapes() {
+    forall(Config::cases(300), |rng| {
+        // 0 and sub-lane lengths, exact multiples of 8, and ragged tails
+        let n = rng.range(0, 531);
+        let a = rng.normal_vec(n);
+        let b = rng.normal_vec(n);
+        let d = simd::dot(&a, &b);
+        let s = simd::dot_scalar(&a, &b);
+        if d.to_bits() != s.to_bits() {
+            return Err(format!("n={n}: dispatched dot {d:?} != scalar {s:?}"));
+        }
+        let bq: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+        let dq = simd::dot_q8(&a, &bq);
+        let sq = simd::dot_q8_scalar(&a, &bq);
+        if dq.to_bits() != sq.to_bits() {
+            return Err(format!("n={n}: dispatched dot_q8 {dq:?} != scalar {sq:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f16_round_trip_error_is_within_half_ulp() {
+    forall(Config::cases(500), |rng| {
+        // magnitudes from subnormal territory up to ~1e4 (f16 max is 65504)
+        let x = (rng.normal() * 10f64.powi(rng.range(0, 9) as i32 - 5)) as f32;
+        let y = f16_to_f32(f32_to_f16(x));
+        // RNE: half an ulp relative for normals (2^-11 spacing), half the
+        // subnormal step (2^-25) absolute near zero
+        let tol = (x.abs() / 2048.0).max(3.0e-8) * 1.0001;
+        if (y - x).abs() > tol {
+            return Err(format!("f16 round trip {x:?} -> {y:?} exceeds tol {tol:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_kv_write_read_round_trip_bounds() {
+    forall(Config::cases(120), |rng| {
+        let d = rng.range(1, 96);
+        let bs = rng.range(1, 6);
+        for &dtype in &[KvDtype::F16, KvDtype::Q8] {
+            let mut cfg = KvCacheConfig::for_model(d, 64);
+            cfg.block_size = bs;
+            cfg.n_blocks = 8;
+            cfg.dtype = dtype;
+            let mut s = KvStore::new(cfg, 2, d);
+            let tokens: Vec<i32> = (0..bs as i32).collect();
+            let table = s.build_prefill(&tokens);
+            let b = table.blocks()[0];
+            let scale = 10f64.powi(rng.range(0, 5) as i32 - 2) as f32;
+            let krow: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * scale).collect();
+            let vrow: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * scale).collect();
+            s.write_row(b, 1, 0, &krow, &vrow);
+            let mut kgot = vec![0f32; d];
+            let mut vgot = vec![0f32; d];
+            s.k_view().read_into(s.row_start(b, 1, 0), d, 0, &mut kgot);
+            s.v_view().read_into(s.row_start(b, 1, 0), d, 0, &mut vgot);
+            for (src, got, arena) in [(&krow, &kgot, "K"), (&vrow, &vgot, "V")] {
+                let amax = src.iter().fold(0f32, |m, v| m.max(v.abs()));
+                for (i, (&x, &y)) in src.iter().zip(got.iter()).enumerate() {
+                    let tol = match dtype {
+                        // per-row symmetric q8: half a step of amax/127
+                        KvDtype::Q8 => amax / 127.0 * 0.5001 + 1e-7,
+                        KvDtype::F16 => (x.abs() / 2048.0).max(3.0e-8) * 1.0001,
+                        KvDtype::F32 => 0.0,
+                    };
+                    if (y - x).abs() > tol {
+                        return Err(format!(
+                            "{arena}[{i}] {dtype:?} d={d}: {x:?} -> {y:?} exceeds tol {tol:e}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The paged walk must read back exactly what a flat (one-block-per-session)
+/// layout stores, at every dtype: block boundaries change *where* rows
+/// live, never their quantized bits.
+#[test]
+fn paged_equals_flat_bitwise_at_every_dtype() {
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Q8] {
+        let paged = decode_logits(Some(cfg_with(4, 64, dtype)), KernelMode::Fast, 6);
+        let flat = decode_logits(Some(cfg_with(S_MAX, 8, dtype)), KernelMode::Fast, 6);
+        assert_bitwise(&paged, &flat, &format!("paged vs flat at {}", dtype.as_str()));
+    }
+}
+
+/// The fused flash walk and the retained naive two-pass path read the same
+/// quantized pool, so they must agree to the established fast-vs-naive
+/// tolerance at every dtype.
+#[test]
+fn fast_matches_naive_at_every_dtype() {
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Q8] {
+        let fast = decode_logits(Some(cfg_with(4, 64, dtype)), KernelMode::Fast, 6);
+        let naive = decode_logits(Some(cfg_with(4, 64, dtype)), KernelMode::Naive, 6);
+        assert_eq!(fast.len(), naive.len());
+        for (step, (x, y)) in fast.iter().zip(&naive).enumerate() {
+            for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                assert!(
+                    (p - q).abs() <= 1e-4,
+                    "{}: step {step} logit {i}: fast {p} vs naive {q}",
+                    dtype.as_str()
+                );
+            }
+        }
+    }
+}
+
+/// Batched decode must be bitwise identical to stepping the same sessions
+/// sequentially, at every dtype.
+#[test]
+fn batched_equals_sequential_bitwise_at_every_dtype() {
+    let prompt = |s: i64| -> Vec<i32> { (0..10).map(|i| ((i * 29 + 3 + s * 61) % 512) as i32).collect() };
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Q8] {
+        let label = dtype.as_str();
+        // sequential: one decode_step per session per round
+        let mut seq = ReferenceBackend::load_with_opts(
+            fixture_dir(),
+            KernelMode::Fast,
+            Some(cfg_with(4, 64, dtype)),
+        )
+        .expect("fixture loads");
+        let mut bat = ReferenceBackend::load_with_opts(
+            fixture_dir(),
+            KernelMode::Fast,
+            Some(cfg_with(4, 64, dtype)),
+        )
+        .expect("fixture loads");
+        let mut toks_seq = Vec::new();
+        for s in 0..3u64 {
+            let out = seq.prefill(s, &prompt(s as i64)).expect("prefill");
+            bat.prefill(s, &prompt(s as i64)).expect("prefill");
+            toks_seq.push(argmax_row(&out.logits, 0, seq.vocab()) as i32);
+        }
+        let mut toks_bat = toks_seq.clone();
+        for round in 0..4 {
+            let mut seq_logits = Vec::new();
+            for s in 0..3u64 {
+                let o = seq.decode_step(s, toks_seq[s as usize]).expect("decode");
+                toks_seq[s as usize] = argmax_row(&o.logits, 0, seq.vocab()) as i32;
+                seq_logits.push(o.logits);
+            }
+            let steps: Vec<(u64, i32)> =
+                toks_bat.iter().enumerate().map(|(s, &t)| (s as u64, t)).collect();
+            let outs = bat.decode_batch(&steps).expect("decode_batch");
+            for (s, res) in outs.into_iter().enumerate() {
+                let o = res.expect("step ok");
+                toks_bat[s] = argmax_row(&o.logits, 0, bat.vocab()) as i32;
+                assert_bitwise(
+                    &[seq_logits[s].clone()],
+                    &[o.logits],
+                    &format!("{label}: round {round} session {s} batched vs sequential"),
+                );
+            }
+        }
+    }
+}
+
+/// Flipping the dispatch to forced-scalar mid-process must not change a
+/// single bit of a decode stream — the end-to-end form of the dot-level
+/// parity property (CI also runs the whole suite under `LEAP_SIMD=0`).
+#[test]
+fn forced_scalar_decode_is_bitwise_identical() {
+    let dispatched = decode_logits(None, KernelMode::Fast, 6);
+    simd::force_scalar(true);
+    let scalar = decode_logits(None, KernelMode::Fast, 6);
+    simd::force_scalar(false);
+    assert_bitwise(&dispatched, &scalar, "dispatched vs forced-scalar decode");
+}
