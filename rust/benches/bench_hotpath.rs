@@ -26,6 +26,7 @@ use leap::kvcache::{KvCacheConfig, KvDtype};
 use leap::mapping::{paper_mapping, CostModel};
 use leap::model::ModelPreset;
 use leap::noc::MeshSim;
+use leap::obs::{Tracer, DEFAULT_RING_CAPACITY};
 use leap::runtime::{argmax_row, KernelMode, NumericsBackend, ReferenceBackend, WorkerPool};
 use leap::schedule::{decode_phases, prefill_phases};
 use leap::sim::AnalyticalSim;
@@ -173,6 +174,36 @@ fn batch_ns_per_round(nsessions: usize, rounds: usize, samples: usize) -> f64 {
     best
 }
 
+/// Best-of-`samples` wall ns per generated token of a full engine serve
+/// over the reference fixture, with structured tracing off or on. Tracing
+/// is bitwise-invisible to results (same tokens, same sim clock); this A/B
+/// measures the residual host-side wall cost of the ring-buffer emits.
+fn engine_serve_ns_per_token(trace: bool, requests: usize, gen: usize, samples: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let backend = ReferenceBackend::load_with_mode(fixture_dir(), KernelMode::Fast)
+            .expect("fixture loads");
+        let mut e = ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Tiny,
+            hw: HwParams::default(),
+            policy: BatchPolicy::default(),
+            numerics: Numerics::Backend(Box::new(backend)),
+        })
+        .expect("engine");
+        if trace {
+            e.tracer = Tracer::enabled(DEFAULT_RING_CAPACITY);
+        }
+        for s in 0..requests as u64 {
+            e.submit(fixture_prompt(s), gen).expect("submit");
+        }
+        let t0 = Instant::now();
+        e.run_until_idle().expect("serve");
+        let tokens = e.metrics.decode_tokens.max(1);
+        best = best.min(t0.elapsed().as_nanos() as f64 / tokens as f64);
+    }
+    best
+}
+
 /// Serve a shared-prefix workload through a deliberately tight KV pool and
 /// report the pool gauges (ISSUE 4 satellite): blocks used/free at peak,
 /// prefix-share hit rate, CoW copies, and the preemption count. Returns
@@ -312,6 +343,21 @@ fn decode_throughput_report(smoke: bool) {
     let (q8_bpt, q8_sessions, q8_ns) = (sweep[2].1, sweep[2].2, sweep[2].3);
 
     let kv = kv_pool_pressure_report(smoke);
+
+    // Trace-on/off A/B on a full engine serve: the observability layer's
+    // wall-cost witness (its result-invisibility is a unit-test concern).
+    let (ab_requests, ab_gen) = if smoke { (4, 6) } else { (8, 12) };
+    let ab_samples = samples.min(3);
+    let trace_off_ns = engine_serve_ns_per_token(false, ab_requests, ab_gen, ab_samples);
+    let trace_on_ns = engine_serve_ns_per_token(true, ab_requests, ab_gen, ab_samples);
+    let trace_ratio = trace_on_ns / trace_off_ns;
+    println!("=== engine trace overhead A/B ({ab_requests} reqs × {ab_gen} tokens) ===\n");
+    println!(
+        "traced serve            off {:>10}/tok   on {:>10}/tok   overhead {trace_ratio:.3}x\n",
+        Stats::fmt_ns(trace_off_ns),
+        Stats::fmt_ns(trace_on_ns)
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"hotpath_decode\",\n  \"fixture\": \"tiny_ref\",\n  \
          \"provenance\": \"measured\",\n  \
@@ -346,6 +392,9 @@ fn decode_throughput_report(smoke: bool) {
          \"kv_q8_bytes_per_token\": {q8_bpt},\n  \
          \"kv_q8_max_sessions\": {q8_sessions},\n  \
          \"kv_q8_decode_ns_per_token\": {q8_ns:.1},\n  \
+         \"trace_off_ns_per_token\": {trace_off_ns:.1},\n  \
+         \"trace_on_ns_per_token\": {trace_on_ns:.1},\n  \
+         \"trace_overhead_ratio\": {trace_ratio:.3},\n  \
          \"engine_pool_dispatches\": {},\n  \"engine_pool_parks\": {},\n  \
          \"engine_pool_wakes\": {}\n}}\n",
         1e9 / naive_ns,

@@ -82,8 +82,19 @@ COMMANDS
                (sampling; --temp 0 = greedy. tiny model defaults to the
                 pure-Rust reference backend; xla requires building with
                 `--features xla`)
+               [--trace true] [--trace-ring N] (structured tracing; any
+                trace output flag below also enables it)
+               [--trace-out FILE]   Chrome trace-event JSON (Perfetto/
+                                    chrome://tracing loadable)
+               [--events-out FILE]  JSONL event log, one event per line
+               [--metrics-out FILE] Prometheus text exposition of the
+                                    run's final metrics
   scenario     --script FILE.scn | --suite DIR
                [--json-dir DIR] [--artifacts DIR] [--ab-chunk true]
+               [--trace true] (force tracing even if the script omits
+                `trace on`) [--trace-dir DIR] (write {scenario}.trace.json
+                + {scenario}.events.jsonl per traced scenario; implies
+                --trace)
                (declarative e2e traffic scripts — see rust/scenarios/;
                 --ab-chunk also runs each scenario with chunking off and
                 reports the per-session TTFT comparison)
@@ -177,6 +188,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     // chunked prefill (omit = monolithic) and per-request sampling knobs;
     // --temp 0 (the default) is exact greedy decode
     engine.prefill_chunk = args.options.get("chunk").and_then(|v| v.parse().ok());
+    // Any trace output path implies tracing; --trace true enables it on
+    // its own (counters still print even with nowhere to export).
+    let trace_out = args.options.get("trace-out").map(std::path::PathBuf::from);
+    let events_out = args.options.get("events-out").map(std::path::PathBuf::from);
+    let metrics_out = args.options.get("metrics-out").map(std::path::PathBuf::from);
+    let trace_on = args.get("trace", "false") == "true"
+        || trace_out.is_some()
+        || events_out.is_some();
+    if trace_on {
+        let ring = args.get_usize("trace-ring", crate::obs::DEFAULT_RING_CAPACITY);
+        engine.tracer = crate::obs::Tracer::enabled(ring);
+    }
     let gen_cfg = GenerationConfig {
         max_new_tokens: gen,
         temperature: args.get_f32("temp", 0.0),
@@ -246,6 +269,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             m.pool_threads, m.pool_dispatches, m.pool_parks, m.pool_wakes
         );
     }
+    if engine.tracer.is_enabled() {
+        println!(
+            "trace           : {} events recorded, {} dropped (ring full)",
+            engine.tracer.recorded(),
+            engine.tracer.dropped()
+        );
+    }
+    if let Some(p) = &trace_out {
+        std::fs::write(p, crate::obs::chrome_trace_json(&engine.tracer))
+            .map_err(|e| anyhow::anyhow!("--trace-out {}: {e}", p.display()))?;
+        println!("trace-out       : {}", p.display());
+    }
+    if let Some(p) = &events_out {
+        std::fs::write(p, crate::obs::events_jsonl(&engine.tracer))
+            .map_err(|e| anyhow::anyhow!("--events-out {}: {e}", p.display()))?;
+        println!("events-out      : {}", p.display());
+    }
+    if let Some(p) = &metrics_out {
+        std::fs::write(p, crate::obs::prometheus_text(&engine.metrics))
+            .map_err(|e| anyhow::anyhow!("--metrics-out {}: {e}", p.display()))?;
+        println!("metrics-out     : {}", p.display());
+    }
     Ok(0)
 }
 
@@ -275,10 +320,19 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<i32> {
     if let Some(d) = &json_dir {
         std::fs::create_dir_all(d)?;
     }
+    // --trace-dir implies tracing; --trace true forces it for scripts
+    // that omit `trace on` (tracing is bitwise-invisible, so forcing it
+    // cannot change any expectation verdict)
+    let trace_dir = args.options.get("trace-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &trace_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let force_trace = args.get("trace", "false") == "true" || trace_dir.is_some();
 
     let mut all_passed = true;
     for path in &scripts {
-        let sc = Scenario::load(path)?;
+        let mut sc = Scenario::load(path)?;
+        sc.trace |= force_trace;
         let (report, json, passed) = if ab && sc.chunk.is_some() {
             let (on, off) = sc.run_chunk_ab(artifacts.as_deref())?;
             let json = chunk_ab_json(&on, &off);
@@ -310,6 +364,19 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<i32> {
             let out = d.join(format!("{}{suffix}.json", report.scenario));
             std::fs::write(&out, &json)?;
             println!("     → {}", out.display());
+        }
+        if let (Some(d), Some(trace)) = (&trace_dir, &report.trace) {
+            let chrome = d.join(format!("{}.trace.json", report.scenario));
+            std::fs::write(&chrome, &trace.chrome_json)?;
+            let jsonl = d.join(format!("{}.events.jsonl", report.scenario));
+            std::fs::write(&jsonl, &trace.jsonl)?;
+            println!(
+                "     → {} + {} ({} events, {} dropped)",
+                chrome.display(),
+                jsonl.display(),
+                trace.recorded,
+                trace.dropped
+            );
         }
         all_passed &= passed;
     }
@@ -531,5 +598,50 @@ mod tests {
             .unwrap();
         let cmd = format!("scenario --script {}", script.display());
         assert_eq!(run(&argv(&cmd)).unwrap(), 1);
+    }
+
+    #[test]
+    fn serve_writes_trace_and_metrics_files() {
+        let dir = std::env::temp_dir().join("leap_cli_serve_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("serve.trace.json");
+        let events = dir.join("serve.events.jsonl");
+        let metrics = dir.join("serve.prom");
+        let cmd = format!(
+            "serve --model 1b --numerics synthetic --requests 2 --prompt 8 \
+             --gen 4 --trace-out {} --events-out {} --metrics-out {}",
+            trace.display(),
+            events.display(),
+            metrics.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let chrome = std::fs::read_to_string(&trace).unwrap();
+        assert!(chrome.contains("\"traceEvents\""), "Chrome trace envelope");
+        assert!(chrome.contains("\"finish\""), "lifecycle spans exported");
+        let jsonl = std::fs::read_to_string(&events).unwrap();
+        assert!(jsonl.lines().count() > 0, "JSONL log is non-empty");
+        assert!(jsonl.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+        let prom = std::fs::read_to_string(&metrics).unwrap();
+        assert!(prom.contains("leap_requests_done_total 2"), "prom counters:\n{prom}");
+    }
+
+    #[test]
+    fn scenario_trace_dir_forces_tracing_and_writes_artifacts() {
+        let dir = std::env::temp_dir().join("leap_cli_scn_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let script = dir.join("quiet.scn");
+        // no `trace on` in the script — --trace-dir must force it
+        std::fs::write(
+            &script,
+            "scenario quiet\nnumerics synthetic\nsession prompt=rand:8:5 gen=3\n",
+        )
+        .unwrap();
+        let cmd =
+            format!("scenario --script {} --trace-dir {}", script.display(), dir.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let chrome = std::fs::read_to_string(dir.join("quiet.trace.json")).unwrap();
+        assert!(chrome.contains("\"traceEvents\""));
+        let jsonl = std::fs::read_to_string(dir.join("quiet.events.jsonl")).unwrap();
+        assert!(jsonl.lines().count() > 0);
     }
 }

@@ -137,6 +137,13 @@ impl Batcher {
         &self.running
     }
 
+    /// The head of the wait queue, mutably — the engine stamps
+    /// `t_enqueued_ns` on the request [`Self::preempt`] just pushed there
+    /// (the batcher has no clock of its own).
+    pub fn waiting_front_mut(&mut self) -> Option<&mut Request> {
+        self.waiting.front_mut()
+    }
+
     pub fn running_mut(&mut self) -> &mut [Request] {
         &mut self.running
     }

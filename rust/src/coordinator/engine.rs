@@ -27,6 +27,7 @@ use crate::energy::table2;
 use crate::isa::Npm;
 use crate::kvcache::{AdmissionDecision, AdmissionPolicy};
 use crate::model::ModelPreset;
+use crate::obs::{self, EventKind, Level, Tracer};
 use crate::runtime::{NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
 use crate::sim::AnalyticalSim;
@@ -120,6 +121,20 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+impl SubmitError {
+    /// Stable machine code (trace events, log lines).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Self::EmptyPrompt => "empty_prompt",
+            Self::ZeroMaxNewTokens => "zero_max_new_tokens",
+            Self::PromptTooLong { .. } => "prompt_too_long",
+            Self::ContextTooLong { .. } => "context_too_long",
+            Self::KvNeverFits { .. } => "kv_never_fits",
+            Self::InvalidConfig { .. } => "invalid_config",
+        }
+    }
+}
+
 impl std::error::Error for SubmitError {}
 
 /// What a round's numerics produced for one request: a logits row for the
@@ -162,10 +177,18 @@ pub struct ServingEngine {
     /// Backends without [`NumericsBackend::supports_chunked_prefill`] are
     /// served whole regardless.
     pub prefill_chunk: Option<usize>,
+    /// Structured tracing ([`crate::obs`]). Disabled by default: every
+    /// emit is one predicted branch and the ring owns no memory. Swap in
+    /// [`Tracer::enabled`] before serving to record; tracing never feeds
+    /// back into scheduling or numerics, so token streams are bitwise
+    /// identical either way (`tests/integration_obs.rs`).
+    pub tracer: Tracer,
     numerics: Numerics,
     next_id: RequestId,
     /// Simulated clock, ns.
     now_ns: u64,
+    /// Engine iterations taken (trace span labels).
+    round: u64,
     /// Finished requests awaiting pickup (server replies).
     completed: Vec<Request>,
 }
@@ -186,9 +209,11 @@ impl ServingEngine {
             metrics: Metrics::default(),
             admission: AdmissionPolicy::default(),
             prefill_chunk: None,
+            tracer: Tracer::disabled(),
             numerics: cfg.numerics,
             next_id: 0,
             now_ns: 0,
+            round: 0,
             completed: Vec::new(),
         })
     }
@@ -218,10 +243,19 @@ impl ServingEngine {
             gen.validate().and_then(|()| self.validate_submit(&prompt, gen.max_new_tokens))
         {
             self.metrics.requests_rejected += 1;
+            self.tracer.emit(self.now_ns, None, EventKind::Reject { reason: err.code() });
             return Err(err);
         }
         let id = self.next_id;
         self.next_id += 1;
+        self.tracer.emit(
+            self.now_ns,
+            Some(id),
+            EventKind::Submit {
+                prompt_tokens: prompt.len() as u32,
+                max_new_tokens: gen.max_new_tokens as u32,
+            },
+        );
         self.batcher.submit(Request::with_gen(id, prompt, gen, self.now_ns));
         Ok(id)
     }
@@ -292,13 +326,16 @@ impl ServingEngine {
     }
 
     /// Mark a running request Failed at the current simulated time.
-    fn fail_request(&mut self, id: RequestId) {
+    /// `code` is the stable failure code for the trace (the human-readable
+    /// message already went to stderr at the detection site).
+    fn fail_request(&mut self, id: RequestId, code: &'static str) {
         let now = self.now_ns;
         if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
             r.state = RequestState::Failed;
             r.t_done_ns = Some(now);
         }
         self.metrics.requests_failed += 1;
+        self.tracer.emit(now, Some(id), EventKind::Diag { level: Level::Error, code });
     }
 
     /// Load + swap the NPM with the program for this phase (double-banked).
@@ -317,6 +354,9 @@ impl ServingEngine {
         if self.batcher.is_idle() {
             return Ok(false);
         }
+        self.round += 1;
+        let round_no = self.round;
+        let step_t0_sim = self.now_ns;
 
         // --- admission (block-pool backed) -------------------------------
         // The batcher's caps apply first; then each head-of-queue request
@@ -324,9 +364,10 @@ impl ServingEngine {
         // scratchpad ledger and (when the backend pools KV) the functional
         // pool, with running tallies so one round's admissions don't
         // double-spend blocks none of them has claimed yet.
-        let (_admitted, rejected) = {
+        let (admitted, rejected) = {
             let admission = self.admission;
-            let Self { batcher, kv, numerics, .. } = self;
+            let now = self.now_ns;
+            let Self { batcher, kv, numerics, tracer, .. } = self;
             let mut sim_pending = 0usize;
             // Blocks the sessions already mid-chunked-prefill will still
             // claim before they produce a token: their future chunks must
@@ -358,10 +399,28 @@ impl ServingEngine {
                 // unreserved claim here would starve a later admission's
                 // prefill mid-round
                 if kv.blocks_for(resume_ctx + remaining) > kv.total_blocks() {
+                    tracer.emit(
+                        now,
+                        Some(req.id),
+                        EventKind::AdmissionDecision {
+                            decision: "reject",
+                            need_blocks: kv.blocks_for(resume_ctx + remaining) as u32,
+                            free_blocks: kv.free_blocks() as u32,
+                        },
+                    );
                     return AdmissionDecision::Reject;
                 }
                 let now_need = kv.blocks_for(resume_ctx + 1);
                 if now_need + sim_pending > kv.free_blocks() {
+                    tracer.emit(
+                        now,
+                        Some(req.id),
+                        EventKind::AdmissionDecision {
+                            decision: "queue",
+                            need_blocks: (now_need + sim_pending) as u32,
+                            free_blocks: kv.free_blocks() as u32,
+                        },
+                    );
                     return AdmissionDecision::Queue;
                 }
                 // functional pool: the policy rules on worst-case demand
@@ -374,11 +433,34 @@ impl ServingEngine {
                         let free = stats.blocks_free.saturating_sub(pool_pending);
                         match admission.decide(need, free, stats.blocks_total) {
                             AdmissionDecision::Admit => pool_pending += need,
-                            other => return other,
+                            other => {
+                                tracer.emit(
+                                    now,
+                                    Some(req.id),
+                                    EventKind::AdmissionDecision {
+                                        decision: match other {
+                                            AdmissionDecision::Queue => "queue",
+                                            _ => "reject",
+                                        },
+                                        need_blocks: need as u32,
+                                        free_blocks: free as u32,
+                                    },
+                                );
+                                return other;
+                            }
                         }
                     }
                 }
                 sim_pending += now_need;
+                tracer.emit(
+                    now,
+                    Some(req.id),
+                    EventKind::AdmissionDecision {
+                        decision: "admit",
+                        need_blocks: now_need as u32,
+                        free_blocks: kv.free_blocks() as u32,
+                    },
+                );
                 AdmissionDecision::Admit
             })
         };
@@ -386,7 +468,32 @@ impl ServingEngine {
         for mut req in rejected {
             req.t_done_ns = Some(now);
             self.metrics.requests_failed += 1;
+            self.tracer.emit(
+                now,
+                Some(req.id),
+                EventKind::Finish {
+                    outcome: "failed",
+                    reason: "admission_reject",
+                    output_tokens: req.output.len() as u32,
+                },
+            );
             self.completed.push(req);
+        }
+        // stamp admission times + queue-wait spans for this round's intake
+        for r in self.batcher.running_mut().iter_mut() {
+            if !admitted.contains(&r.id) {
+                continue;
+            }
+            let readmission = r.preemptions > 0;
+            if r.t_admitted_ns.is_none() {
+                r.t_admitted_ns = Some(now);
+            }
+            let begin = r.t_enqueued_ns;
+            self.tracer.emit(
+                begin,
+                Some(r.id),
+                EventKind::Admitted { wait_ns: now.saturating_sub(begin), readmission },
+            );
         }
 
         // --- advance every prefill by one chunk --------------------------
@@ -423,8 +530,12 @@ impl ServingEngine {
             // the first chunk (it has no chunk granularity).
             if prefilled == 0 {
                 if let Err(err) = self.kv.prefill(id, tokens.len()) {
-                    eprintln!("request {id} rejected by the scratchpad ledger: {err:#}");
-                    self.fail_request(id);
+                    obs::stderr_log(
+                        Level::Error,
+                        "scratchpad_reject",
+                        format_args!("request {id} rejected by the scratchpad ledger: {err:#}"),
+                    );
+                    self.fail_request(id, "scratchpad_reject");
                     continue;
                 }
             }
@@ -441,18 +552,29 @@ impl ServingEngine {
             let last = prefilled + chunk_len == tokens.len();
 
             // timing: one program per layer over this chunk's rows
+            let chunk_t0_sim = self.now_ns;
             let layers = self.compiled.shape.n_layers as u64;
             let prog = self.compiled.prefill_program(chunk_len.max(1)).clone();
             let per_layer = self.dispatch(prog)?;
             self.advance(per_layer * layers);
             self.metrics.prefill_tokens += chunk_len as u64;
             self.metrics.prefill_chunks += 1;
+            self.tracer.emit(
+                chunk_t0_sim,
+                Some(id),
+                EventKind::PrefillChunk {
+                    start: prefilled as u32,
+                    len: chunk_len as u32,
+                    last,
+                    dur_ns: self.now_ns - chunk_t0_sim,
+                },
+            );
 
             // numerics — a backend error (e.g. out-of-vocab prompt) fails
             // this request only; the engine and its batch keep serving.
             // `first` is the sampler input for the first generated token
             // (only produced by the last chunk).
-            let first: Option<Option<NextToken>> = match &mut self.numerics {
+            let first: Result<Option<NextToken>, &'static str> = match &mut self.numerics {
                 Numerics::Backend(backend) => {
                     let vocab = backend.vocab();
                     let out = if prefilled == 0 && last {
@@ -466,37 +588,48 @@ impl ServingEngine {
                         // enforce the trait's no-silent-truncation
                         // contract: fewer rows than chunk tokens would
                         // sample the wrong context, so fail the request
-                        Ok(out) if out.rows >= chunk_len => Some(last.then(|| {
+                        Ok(out) if out.rows >= chunk_len => Ok(last.then(|| {
                             NextToken::Row(
                                 out.logits[(chunk_len - 1) * vocab..chunk_len * vocab].to_vec(),
                             )
                         })),
                         Ok(out) => {
-                            eprintln!(
-                                "request {id} rejected: backend returned {} logits rows \
-                                 for a {}-token prefill chunk",
-                                out.rows, chunk_len
+                            obs::stderr_log(
+                                Level::Error,
+                                "prefill_short_rows",
+                                format_args!(
+                                    "request {id} rejected: backend returned {} logits rows \
+                                     for a {}-token prefill chunk",
+                                    out.rows, chunk_len
+                                ),
                             );
                             backend.release(id);
-                            None
+                            Err("prefill_short_rows")
                         }
                         Err(err) => {
-                            eprintln!("request {id} rejected by numerics prefill: {err:#}");
+                            obs::stderr_log(
+                                Level::Error,
+                                "prefill_backend_error",
+                                format_args!("request {id} rejected by numerics prefill: {err:#}"),
+                            );
                             backend.release(id);
-                            None
+                            Err("prefill_backend_error")
                         }
                     }
                 }
-                Numerics::Synthetic { vocab } => Some(last.then(|| {
+                Numerics::Synthetic { vocab } => Ok(last.then(|| {
                     NextToken::Token(
                         (tokens.iter().map(|&t| t as i64).sum::<i64>() % *vocab as i64) as i32,
                     )
                 })),
             };
-            let Some(first) = first else {
-                self.kv.release(id);
-                self.fail_request(id);
-                continue;
+            let first = match first {
+                Ok(first) => first,
+                Err(code) => {
+                    self.kv.release(id);
+                    self.fail_request(id, code);
+                    continue;
+                }
             };
 
             let now = self.now_ns;
@@ -513,8 +646,15 @@ impl ServingEngine {
                 r.state = RequestState::Decoding;
                 // the prefill's token is generation step `output.len()`
                 // (0 for a fresh request, the resume step after preemption)
+                let had_first = r.t_first_token_ns.is_some();
                 let token = next.resolve(r);
                 finished = r.accept_token(token, now);
+                if !had_first {
+                    // saturating: a 1-token stop-sequence match can leave
+                    // the output empty after truncation
+                    let position = r.output.len().saturating_sub(1) as u32;
+                    self.tracer.emit(now, Some(id), EventKind::FirstToken { position });
+                }
             }
             if !finished {
                 if self.kv.can_append(id) {
@@ -537,7 +677,8 @@ impl ServingEngine {
         // one tail block each count a CoW — so this preempts a round
         // early at worst, never a round late.
         {
-            let Self { batcher, kv, numerics, metrics, .. } = self;
+            let now = self.now_ns;
+            let Self { batcher, kv, numerics, metrics, tracer, .. } = self;
             if let Numerics::Backend(backend) = numerics {
                 if backend.kv_pool_stats().is_some() {
                     loop {
@@ -588,9 +729,22 @@ impl ServingEngine {
                         let Some(&victim) = decoding.iter().max() else {
                             break;
                         };
+                        tracer.emit(
+                            now,
+                            Some(victim),
+                            EventKind::Preempt {
+                                demand_blocks: demand as u32,
+                                free_blocks: free as u32,
+                            },
+                        );
                         backend.release(victim);
                         kv.release(victim);
                         batcher.preempt(victim);
+                        // the queue-wait span of the eventual readmission
+                        // begins at this preemption, not at arrival
+                        if let Some(r) = batcher.waiting_front_mut() {
+                            r.t_enqueued_ns = now;
+                        }
                         metrics.preemptions += 1;
                         if decoding.len() <= 1 {
                             break; // nothing left in the round
@@ -613,6 +767,7 @@ impl ServingEngine {
         // the simulated hardware serves requests round-robin). Each
         // request's token lands at the simulated instant its own dispatch
         // completed, same as the pre-batching engine.
+        let round_t0_sim = self.now_ns;
         let mut done_at: Vec<u64> = Vec::with_capacity(round.len());
         for &(_, ctx, _) in &round {
             let layers = self.compiled.shape.n_layers as u64;
@@ -642,7 +797,11 @@ impl ServingEngine {
                     .map(|(&(id, _, _), res)| match res {
                         Ok(out) => (id, Some(NextToken::Row(out.logits))),
                         Err(err) => {
-                            eprintln!("request {id} failed in numerics decode: {err:#}");
+                            obs::stderr_log(
+                                Level::Error,
+                                "decode_backend_error",
+                                format_args!("request {id} failed in numerics decode: {err:#}"),
+                            );
                             (id, None)
                         }
                     })
@@ -654,9 +813,10 @@ impl ServingEngine {
                 .collect(),
         };
 
+        let mut round_tokens = 0u32;
         for ((id, next), now) in next_tokens.into_iter().zip(done_at) {
             let Some(next) = next else {
-                self.fail_request(id);
+                self.fail_request(id, "decode_backend_error");
                 continue;
             };
 
@@ -667,6 +827,7 @@ impl ServingEngine {
             // path). A request its stop sequence or length budget just
             // finished needs no next position.
             self.metrics.decode_tokens += 1;
+            round_tokens += 1;
             let mut finished = false;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 let token = next.resolve(r);
@@ -682,6 +843,18 @@ impl ServingEngine {
                 }
             }
         }
+        if !round.is_empty() {
+            self.tracer.emit(
+                round_t0_sim,
+                None,
+                EventKind::DecodeRound {
+                    round: round_no,
+                    dur_ns: self.now_ns - round_t0_sim,
+                    batch: round.len() as u32,
+                    tokens: round_tokens,
+                },
+            );
+        }
 
         // --- retire -------------------------------------------------------
         for done in self.batcher.retire() {
@@ -689,18 +862,40 @@ impl ServingEngine {
             if let Numerics::Backend(backend) = &mut self.numerics {
                 backend.release(done.id);
             }
+            let (outcome, reason) = if done.state == RequestState::Done {
+                ("done", done.finish.map_or("length", FinishReason::as_str))
+            } else {
+                // the failure code already went out as a Diag event at the
+                // detection site (fail_request)
+                ("failed", "error")
+            };
             if done.state == RequestState::Done {
                 self.metrics.requests_done += 1;
                 if done.finish == Some(FinishReason::Stop) {
                     self.metrics.requests_stopped += 1;
                 }
                 if let Some(l) = done.latency_ns() {
-                    self.metrics.latencies_ns.push(l);
+                    self.metrics.latency.record(l);
                 }
                 if let Some(t) = done.ttft_ns() {
-                    self.metrics.ttft_ns.push(t);
+                    self.metrics.ttft.record(t);
                 }
             }
+            if let (Some(first), Some(end)) = (done.t_first_token_ns, done.t_done_ns) {
+                self.tracer.emit(
+                    first,
+                    Some(done.id),
+                    EventKind::DecodePhase {
+                        dur_ns: end - first,
+                        tokens: done.output.len() as u32,
+                    },
+                );
+            }
+            self.tracer.emit(
+                done.t_done_ns.unwrap_or(self.now_ns),
+                Some(done.id),
+                EventKind::Finish { outcome, reason, output_tokens: done.output.len() as u32 },
+            );
             self.completed.push(done);
         }
 
@@ -708,12 +903,27 @@ impl ServingEngine {
         if let Numerics::Backend(backend) = &self.numerics {
             if let Some(stats) = backend.kv_pool_stats() {
                 self.metrics.observe_kv_pool(&stats);
+                self.tracer.observe_kv_pool(self.now_ns, &stats);
             }
             if let Some(stats) = backend.worker_pool_stats() {
                 self.metrics.observe_worker_pool(&stats);
+                self.tracer.observe_worker_pool(self.now_ns, &stats);
+            }
+            if let Some(lanes) = backend.worker_pool_lane_dispatches() {
+                self.tracer.observe_pool_lanes(self.now_ns, &lanes);
             }
         }
 
+        self.tracer.emit(
+            step_t0_sim,
+            None,
+            EventKind::EngineStep {
+                round: round_no,
+                dur_ns: self.now_ns - step_t0_sim,
+                running: self.batcher.running().len() as u32,
+                waiting: self.batcher.waiting_len() as u32,
+            },
+        );
         self.metrics.host_time_ns += host_t0.elapsed().as_nanos() as u64;
         Ok(true)
     }
@@ -738,6 +948,7 @@ impl ServingEngine {
             tokens: r.output.clone(),
             ttft_ns: r.ttft_ns(),
             latency_ns: r.latency_ns(),
+            timeline: r.timeline(),
             finish: r.finish,
             rejected: None,
         })
@@ -791,12 +1002,12 @@ mod tests {
         let mut e = engine();
         e.submit(vec![5; 32], 8).expect("submit");
         e.run_until_idle().unwrap();
-        assert_eq!(e.metrics.latencies_ns.len(), 1);
-        assert_eq!(e.metrics.ttft_ns.len(), 1);
+        assert_eq!(e.metrics.latency.count(), 1);
+        assert_eq!(e.metrics.ttft.count(), 1);
         let (p50, _) = e.metrics.latency_p50_p99();
         assert!(p50 > 0);
         // TTFT ≤ total latency
-        assert!(e.metrics.ttft_ns[0] <= e.metrics.latencies_ns[0]);
+        assert!(e.metrics.ttft.max() <= e.metrics.latency.max());
     }
 
     #[test]
@@ -906,6 +1117,41 @@ mod tests {
         assert!(err.to_string().contains("top_p"), "unhelpful rendering: {err}");
         assert_eq!(e.metrics.requests_rejected, 1);
         assert!(e.batcher.is_idle(), "rejected requests never queue");
+    }
+
+    #[test]
+    fn tracing_records_lifecycle_and_stays_invisible() {
+        let run = |trace: bool| {
+            let mut e = engine();
+            if trace {
+                e.tracer = Tracer::enabled(1 << 12);
+            }
+            let id = e.submit(vec![2; 32], 6).expect("submit");
+            e.run_until_idle().unwrap();
+            let out = e.take_finished_request(id).unwrap().output;
+            (out, e.metrics.sim_time_ns, e)
+        };
+        let (out_off, sim_off, e_off) = run(false);
+        let (out_on, sim_on, e_on) = run(true);
+        assert_eq!(out_off, out_on, "tracing must not change tokens");
+        assert_eq!(sim_off, sim_on, "tracing must not change simulated time");
+        assert_eq!(e_off.tracer.recorded(), 0);
+        assert!(e_on.tracer.recorded() > 0);
+        let kinds: std::collections::BTreeSet<&str> =
+            e_on.tracer.events().iter().map(|ev| ev.kind.name()).collect();
+        for k in [
+            "submit",
+            "admission",
+            "admitted",
+            "prefill_chunk",
+            "first_token",
+            "decode_round",
+            "decode_phase",
+            "finish",
+            "engine_step",
+        ] {
+            assert!(kinds.contains(k), "missing {k} in {kinds:?}");
+        }
     }
 
     #[test]

@@ -1,4 +1,12 @@
 //! Serving metrics: throughput, latency percentiles, energy, utilisation.
+//!
+//! Latency and TTFT are recorded into fixed 64-bucket log2
+//! [`Histogram`]s, not per-sample vectors: memory stays constant no
+//! matter how many requests a run serves, and the percentile queries are
+//! nearest-rank over the buckets with no cloning or sorting (the
+//! convention is documented on [`crate::obs::histogram`]).
+
+use crate::obs::Histogram;
 
 /// Aggregated serving metrics over one engine run.
 #[derive(Debug, Clone, Default)]
@@ -13,10 +21,10 @@ pub struct Metrics {
     pub energy_j: f64,
     /// Wall-clock time the coordinator itself consumed, ns (host overhead).
     pub host_time_ns: u64,
-    /// Per-request end-to-end latencies (simulated ns).
-    pub latencies_ns: Vec<u64>,
-    /// Per-request time-to-first-token (simulated ns).
-    pub ttft_ns: Vec<u64>,
+    /// Per-request end-to-end latencies (simulated ns), log2-bucketed.
+    pub latency: Histogram,
+    /// Per-request time-to-first-token (simulated ns), log2-bucketed.
+    pub ttft: Histogram,
     /// NPM bank swaps performed.
     pub npm_swaps: u64,
     /// Requests rejected with a typed error at submit (never queued).
@@ -85,26 +93,15 @@ impl Metrics {
         (self.prefill_tokens + self.decode_tokens) as f64 / self.energy_j.max(1e-12)
     }
 
-    fn percentile(sorted: &[u64], p: f64) -> u64 {
-        if sorted.is_empty() {
-            return 0;
-        }
-        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-        sorted[idx]
-    }
-
-    /// (p50, p99) end-to-end latency in simulated ns.
+    /// (p50, p99) end-to-end latency in simulated ns — nearest-rank over
+    /// the log2 histogram, O(buckets), no cloning or sorting.
     pub fn latency_p50_p99(&self) -> (u64, u64) {
-        let mut v = self.latencies_ns.clone();
-        v.sort_unstable();
-        (Self::percentile(&v, 0.5), Self::percentile(&v, 0.99))
+        (self.latency.percentile(0.5), self.latency.percentile(0.99))
     }
 
-    /// (p50, p99) TTFT in simulated ns.
+    /// (p50, p99) TTFT in simulated ns (same convention).
     pub fn ttft_p50_p99(&self) -> (u64, u64) {
-        let mut v = self.ttft_ns.clone();
-        v.sort_unstable();
-        (Self::percentile(&v, 0.5), Self::percentile(&v, 0.99))
+        (self.ttft.percentile(0.5), self.ttft.percentile(0.99))
     }
 
     /// Host-overhead fraction: coordinator wall time / simulated time.
@@ -235,11 +232,16 @@ mod tests {
 
     #[test]
     fn percentiles() {
-        let m = Metrics { latencies_ns: vec![50, 10, 30, 20, 40], ..Default::default() };
+        let mut m = Metrics::default();
+        for v in [50, 10, 30, 20, 40] {
+            m.latency.record(v);
+        }
+        // nearest-rank: rank ceil(0.5·5)=3 → 30, rank ceil(0.99·5)=5 → 50
         let (p50, p99) = m.latency_p50_p99();
         assert_eq!(p50, 30);
         assert_eq!(p99, 50);
         let empty = Metrics::default();
         assert_eq!(empty.latency_p50_p99(), (0, 0));
+        assert_eq!(empty.ttft_p50_p99(), (0, 0));
     }
 }

@@ -23,5 +23,5 @@ pub use engine::{EngineConfig, Numerics, ServingEngine, SubmitError};
 pub use generation::GenerationConfig;
 pub use kv::KvManager;
 pub use metrics::Metrics;
-pub use request::{FinishReason, Request, RequestId, RequestState};
+pub use request::{FinishReason, Request, RequestId, RequestState, TimelineSummary};
 pub use server::{Completion, Server};

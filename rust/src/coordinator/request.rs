@@ -66,6 +66,12 @@ pub struct Request {
     pub t_arrive_ns: u64,
     pub t_first_token_ns: Option<u64>,
     pub t_done_ns: Option<u64>,
+    /// When the request was *first* admitted to the running batch
+    /// (readmissions after preemption don't move it).
+    pub t_admitted_ns: Option<u64>,
+    /// When the request last entered the wait queue: arrival, or the most
+    /// recent preemption. Queue-wait spans in the trace begin here.
+    pub t_enqueued_ns: u64,
 }
 
 impl Request {
@@ -88,6 +94,8 @@ impl Request {
             t_arrive_ns: now_ns,
             t_first_token_ns: None,
             t_done_ns: None,
+            t_admitted_ns: None,
+            t_enqueued_ns: now_ns,
         }
     }
 
@@ -145,6 +153,38 @@ impl Request {
     pub fn latency_ns(&self) -> Option<u64> {
         self.t_done_ns.map(|t| t - self.t_arrive_ns)
     }
+
+    /// Per-phase breakdown of this request's lifetime (simulated ns).
+    pub fn timeline(&self) -> TimelineSummary {
+        TimelineSummary {
+            queue_wait_ns: self.t_admitted_ns.map(|t| t - self.t_arrive_ns),
+            prefill_ns: match (self.t_admitted_ns, self.t_first_token_ns) {
+                (Some(a), Some(f)) => Some(f.saturating_sub(a)),
+                _ => None,
+            },
+            decode_ns: match (self.t_first_token_ns, self.t_done_ns) {
+                (Some(f), Some(d)) => Some(d - f),
+                _ => None,
+            },
+            preemptions: self.preemptions,
+        }
+    }
+}
+
+/// Phase breakdown of one request's lifetime, all in simulated ns.
+///
+/// `queue_wait_ns` is arrival → **first** admission; `prefill_ns` is
+/// first admission → first token; `decode_ns` is first token → terminal
+/// state. Preemption/readmission churn after the first token (the blocks
+/// released, the queue wait, the re-prefill) all lands in `decode_ns` —
+/// the three phases always sum to the end-to-end latency once the
+/// request finishes. Fields are `None` until the phase boundary exists.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimelineSummary {
+    pub queue_wait_ns: Option<u64>,
+    pub prefill_ns: Option<u64>,
+    pub decode_ns: Option<u64>,
+    pub preemptions: u32,
 }
 
 #[cfg(test)]
@@ -192,6 +232,28 @@ mod tests {
         assert_eq!(r.output, vec![7], "matched stop tokens truncated");
         // TTFT was still recorded on the first (kept) token
         assert_eq!(r.ttft_ns(), Some(10));
+    }
+
+    #[test]
+    fn timeline_phases_sum_to_latency() {
+        let mut r = Request::new(4, vec![1, 2], 3, 100);
+        assert_eq!(r.timeline(), TimelineSummary::default());
+        r.t_admitted_ns = Some(140);
+        assert_eq!(r.timeline().queue_wait_ns, Some(40));
+        assert_eq!(r.timeline().prefill_ns, None, "no first token yet");
+        r.accept_token(7, 200);
+        r.accept_token(8, 260);
+        r.preemptions = 1;
+        r.accept_token(9, 400);
+        let t = r.timeline();
+        assert_eq!(t, TimelineSummary {
+            queue_wait_ns: Some(40),
+            prefill_ns: Some(60),
+            decode_ns: Some(200),
+            preemptions: 1,
+        });
+        let sum = t.queue_wait_ns.unwrap() + t.prefill_ns.unwrap() + t.decode_ns.unwrap();
+        assert_eq!(Some(sum), r.latency_ns());
     }
 
     #[test]

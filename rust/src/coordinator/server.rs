@@ -14,7 +14,7 @@ use std::thread::JoinHandle;
 use super::engine::ServingEngine;
 use super::generation::GenerationConfig;
 use super::metrics::Metrics;
-use super::request::{FinishReason, RequestId};
+use super::request::{FinishReason, RequestId, TimelineSummary};
 
 /// A completed request's outputs. A request refused at submit with a typed
 /// [`crate::coordinator::SubmitError`] completes immediately with empty
@@ -25,6 +25,9 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     pub ttft_ns: Option<u64>,
     pub latency_ns: Option<u64>,
+    /// Per-phase lifetime breakdown (queue wait / prefill / decode /
+    /// preemptions); all-`None` for rejected requests, which never ran.
+    pub timeline: TimelineSummary,
     /// Why generation stopped (`None` for rejected/failed requests).
     pub finish: Option<FinishReason>,
     pub rejected: Option<String>,
@@ -102,6 +105,7 @@ impl Server {
                     tokens: Vec::new(),
                     ttft_ns: None,
                     latency_ns: None,
+                    timeline: TimelineSummary::default(),
                     finish: None,
                     rejected: Some(err.to_string()),
                 });
@@ -179,6 +183,12 @@ mod tests {
         let c2 = rx2.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert_eq!(c1.tokens.len(), 4);
         assert_eq!(c2.tokens.len(), 6);
+        // phase breakdown travels with the completion and sums to latency
+        let t = c1.timeline;
+        assert_eq!(
+            Some(t.queue_wait_ns.unwrap() + t.prefill_ns.unwrap() + t.decode_ns.unwrap()),
+            c1.latency_ns
+        );
         let metrics = server.shutdown().unwrap();
         assert_eq!(metrics.requests_done, 2);
     }

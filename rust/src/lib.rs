@@ -45,6 +45,8 @@
 //! - [`coordinator`] — serving engine: request queue, batcher,
 //!   prefill/decode scheduler (chunked prefill), seeded sampler,
 //!   KV-shard manager, metrics.
+//! - [`obs`] — structured tracing + telemetry: typed event ring buffer,
+//!   log2 latency histograms, Chrome-trace/JSONL/Prometheus exporters.
 //! - [`scenario`] — declarative e2e scenario harness: scripted serving
 //!   traffic (`.scn` files) with per-session JSON results.
 //! - [`testutil`] — deterministic PRNG + mini property-testing harness
@@ -62,6 +64,7 @@ pub mod kvcache;
 pub mod mapping;
 pub mod model;
 pub mod noc;
+pub mod obs;
 pub mod partition;
 pub mod pim;
 pub mod runtime;

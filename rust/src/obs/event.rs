@@ -1,0 +1,161 @@
+//! Typed trace records: every observable moment in the serving stack is
+//! one fixed-size, `Copy` [`Event`] — no heap allocation ever happens on
+//! an emit path, which is what lets the tracer promise bitwise
+//! invisibility (the only side effect of recording is a slot write into a
+//! preallocated ring).
+//!
+//! Timestamp semantics: `sim_ns` is the engine's *simulated* clock (the
+//! analytical PIM/NoC timing model — deterministic, identical across
+//! hosts and runs), `host_ns` is wall-clock nanoseconds since the tracer
+//! was constructed (machine-dependent; diagnostics only). Span-shaped
+//! records are emitted when the span *closes* but carry their **begin**
+//! time in `sim_ns` and their length in `dur_ns`; instants have no
+//! duration. `host_ns` is always the host time at the moment of
+//! recording (the close, for spans).
+
+use crate::coordinator::RequestId;
+
+/// Sentinel for events not attributed to any request (engine-wide spans,
+/// pool counters, submit-time rejections that never got an id).
+pub const NO_REQUEST: RequestId = RequestId::MAX;
+
+/// Diagnostic severity for [`EventKind::Diag`] records and
+/// [`super::stderr_log`] lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+        }
+    }
+}
+
+/// One trace record. Fixed-size and `Copy`: recording is a slot write.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Monotone sequence number (total events ever emitted, including any
+    /// later overwritten by ring wrap-around).
+    pub seq: u64,
+    /// Simulated time, ns — begin time for span-shaped kinds.
+    pub sim_ns: u64,
+    /// Host time since tracer construction, ns (recorded at emit).
+    pub host_ns: u64,
+    /// Owning request, or [`NO_REQUEST`].
+    pub req: RequestId,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn request(&self) -> Option<RequestId> {
+        (self.req != NO_REQUEST).then_some(self.req)
+    }
+}
+
+/// The event taxonomy. Span-shaped variants carry `dur_ns` (begin time is
+/// the event's `sim_ns`); everything else is an instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Span: one full engine iteration (admission + prefill chunks + one
+    /// decode round + retire).
+    EngineStep { round: u64, dur_ns: u64, running: u32, waiting: u32 },
+    /// Span: the batched decode round inside one engine step.
+    DecodeRound { round: u64, dur_ns: u64, batch: u32, tokens: u32 },
+    /// Instant: request validated and entered the wait queue.
+    Submit { prompt_tokens: u32, max_new_tokens: u32 },
+    /// Instant: typed refusal at submit (never queued, so no request id).
+    Reject { reason: &'static str },
+    /// Instant: the admission policy ruled on the head-of-queue request.
+    AdmissionDecision { decision: &'static str, need_blocks: u32, free_blocks: u32 },
+    /// Span: time spent in the wait queue before this (re)admission —
+    /// begins at submit or at the preemption that re-enqueued the request.
+    Admitted { wait_ns: u64, readmission: bool },
+    /// Span: one prefill chunk through the backend (`start..start+len` of
+    /// the resume context; `last` chunks produce the first token).
+    PrefillChunk { start: u32, len: u32, last: bool, dur_ns: u64 },
+    /// Instant: the request's first generated token was accepted.
+    FirstToken { position: u32 },
+    /// Instant: pool pressure preempted this request (blocks released,
+    /// re-enqueued at the head of the wait queue).
+    Preempt { demand_blocks: u32, free_blocks: u32 },
+    /// Span: the decode phase, first token → terminal state.
+    DecodePhase { dur_ns: u64, tokens: u32 },
+    /// Instant: terminal outcome (`outcome` is `done`/`failed`; `reason`
+    /// is the finish reason or failure code).
+    Finish { outcome: &'static str, reason: &'static str, output_tokens: u32 },
+    /// Instant: KV pool activity observed this step (deltas against the
+    /// previous observation; `blocks_used` is the absolute gauge).
+    KvDelta { prefix_lookups: u32, prefix_hits: u32, cow_copies: u32, blocks_used: u32 },
+    /// Instant: worker-pool dispatches observed this step (delta).
+    PoolDispatch { dispatches: u32, parks: u32, wakes: u32 },
+    /// Instant: one pool lane's dispatch engagements this step (delta).
+    PoolLane { lane: u8, dispatches: u32 },
+    /// Instant: a leveled diagnostic was raised (the human-readable
+    /// message went to stderr; the trace keeps the machine code).
+    Diag { level: Level, code: &'static str },
+}
+
+impl EventKind {
+    /// Stable machine name (JSONL `kind` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::EngineStep { .. } => "engine_step",
+            EventKind::DecodeRound { .. } => "decode_round",
+            EventKind::Submit { .. } => "submit",
+            EventKind::Reject { .. } => "reject",
+            EventKind::AdmissionDecision { .. } => "admission",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::DecodePhase { .. } => "decode_phase",
+            EventKind::Finish { .. } => "finish",
+            EventKind::KvDelta { .. } => "kv_delta",
+            EventKind::PoolDispatch { .. } => "pool_dispatch",
+            EventKind::PoolLane { .. } => "pool_lane",
+            EventKind::Diag { .. } => "diag",
+        }
+    }
+
+    /// Span length for span-shaped kinds, `None` for instants.
+    pub fn dur_ns(&self) -> Option<u64> {
+        match *self {
+            EventKind::EngineStep { dur_ns, .. }
+            | EventKind::DecodeRound { dur_ns, .. }
+            | EventKind::Admitted { wait_ns: dur_ns, .. }
+            | EventKind::PrefillChunk { dur_ns, .. }
+            | EventKind::DecodePhase { dur_ns, .. } => Some(dur_ns),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_fixed_size_and_copy() {
+        // the emit path's zero-allocation promise rests on Event: Copy;
+        // the size bound keeps the default ring under ~4 MiB
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<Event>();
+        assert!(std::mem::size_of::<Event>() <= 64, "{}", std::mem::size_of::<Event>());
+    }
+
+    #[test]
+    fn span_kinds_report_duration() {
+        let span = EventKind::PrefillChunk { start: 0, len: 8, last: true, dur_ns: 42 };
+        assert_eq!(span.dur_ns(), Some(42));
+        assert_eq!(span.name(), "prefill_chunk");
+        let instant = EventKind::FirstToken { position: 0 };
+        assert_eq!(instant.dur_ns(), None);
+    }
+}

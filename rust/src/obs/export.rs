@@ -1,0 +1,555 @@
+//! Trace and metrics exporters. All output is hand-rendered JSON/text
+//! (no serialization dependency), matching the scenario harness idiom.
+//!
+//! Three formats:
+//! - [`chrome_trace_json`]: Chrome trace-event JSON, loadable in Perfetto
+//!   (<https://ui.perfetto.dev>) or `chrome://tracing`. One timeline
+//!   track per session (`tid = 1000 + request id`), one counter track
+//!   per worker-pool lane, plus the engine track. Timestamps are the
+//!   **simulated** clock in microseconds; the host-ns reading of each
+//!   record rides along in `args`. Span begin/end records are balanced
+//!   by construction (the exporter closes every span it opens).
+//! - [`events_jsonl`]: one JSON object per line per event, `kind`-tagged,
+//!   with every payload field flattened — the grep/jq-friendly form.
+//! - [`prometheus_text`]: Prometheus text exposition of
+//!   [`Metrics`](crate::coordinator::Metrics), including the log2
+//!   latency/TTFT histograms as cumulative `le` buckets.
+
+use std::collections::BTreeMap;
+
+use super::event::{Event, EventKind};
+use super::Tracer;
+use crate::coordinator::Metrics;
+
+/// Engine track id in the Chrome trace.
+const TID_ENGINE: u64 = 1;
+/// Pool-wide dispatch counter track id.
+const TID_POOL: u64 = 2;
+/// Session tracks are `TID_SESSION_BASE + request id`.
+const TID_SESSION_BASE: u64 = 1000;
+/// Per-lane counter tracks are `TID_LANE_BASE + lane`.
+const TID_LANE_BASE: u64 = 2000;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Simulated ns → Chrome `ts` (microseconds, 3 decimals).
+fn ts_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+/// The payload fields of a kind as `"key":value` JSON pairs (no braces),
+/// shared by the JSONL exporter and the Chrome `args` objects.
+fn kind_fields(kind: &EventKind) -> String {
+    match *kind {
+        EventKind::EngineStep { round, dur_ns, running, waiting } => {
+            format!("\"round\":{round},\"dur_ns\":{dur_ns},\"running\":{running},\"waiting\":{waiting}")
+        }
+        EventKind::DecodeRound { round, dur_ns, batch, tokens } => {
+            format!("\"round\":{round},\"dur_ns\":{dur_ns},\"batch\":{batch},\"tokens\":{tokens}")
+        }
+        EventKind::Submit { prompt_tokens, max_new_tokens } => {
+            format!("\"prompt_tokens\":{prompt_tokens},\"max_new_tokens\":{max_new_tokens}")
+        }
+        EventKind::Reject { reason } => format!("\"reason\":\"{}\"", esc(reason)),
+        EventKind::AdmissionDecision { decision, need_blocks, free_blocks } => format!(
+            "\"decision\":\"{}\",\"need_blocks\":{need_blocks},\"free_blocks\":{free_blocks}",
+            esc(decision)
+        ),
+        EventKind::Admitted { wait_ns, readmission } => {
+            format!("\"wait_ns\":{wait_ns},\"readmission\":{readmission}")
+        }
+        EventKind::PrefillChunk { start, len, last, dur_ns } => {
+            format!("\"start\":{start},\"len\":{len},\"last\":{last},\"dur_ns\":{dur_ns}")
+        }
+        EventKind::FirstToken { position } => format!("\"position\":{position}"),
+        EventKind::Preempt { demand_blocks, free_blocks } => {
+            format!("\"demand_blocks\":{demand_blocks},\"free_blocks\":{free_blocks}")
+        }
+        EventKind::DecodePhase { dur_ns, tokens } => {
+            format!("\"dur_ns\":{dur_ns},\"tokens\":{tokens}")
+        }
+        EventKind::Finish { outcome, reason, output_tokens } => format!(
+            "\"outcome\":\"{}\",\"reason\":\"{}\",\"output_tokens\":{output_tokens}",
+            esc(outcome),
+            esc(reason)
+        ),
+        EventKind::KvDelta { prefix_lookups, prefix_hits, cow_copies, blocks_used } => format!(
+            "\"prefix_lookups\":{prefix_lookups},\"prefix_hits\":{prefix_hits},\
+             \"cow_copies\":{cow_copies},\"blocks_used\":{blocks_used}"
+        ),
+        EventKind::PoolDispatch { dispatches, parks, wakes } => {
+            format!("\"dispatches\":{dispatches},\"parks\":{parks},\"wakes\":{wakes}")
+        }
+        EventKind::PoolLane { lane, dispatches } => {
+            format!("\"lane\":{lane},\"dispatches\":{dispatches}")
+        }
+        EventKind::Diag { level, code } => {
+            format!("\"level\":\"{}\",\"code\":\"{}\"", level.as_str(), esc(code))
+        }
+    }
+}
+
+/// JSONL event log: one flattened object per event, in emission order.
+pub fn events_jsonl(tracer: &Tracer) -> String {
+    let mut out = String::new();
+    for ev in tracer.events() {
+        let req = match ev.request() {
+            Some(id) => id.to_string(),
+            None => "null".to_string(),
+        };
+        let fields = kind_fields(&ev.kind);
+        let sep = if fields.is_empty() { "" } else { "," };
+        out.push_str(&format!(
+            "{{\"seq\":{},\"sim_ns\":{},\"host_ns\":{},\"req\":{},\"kind\":\"{}\"{sep}{fields}}}\n",
+            ev.seq,
+            ev.sim_ns,
+            ev.host_ns,
+            req,
+            ev.kind.name()
+        ));
+    }
+    out
+}
+
+/// One span to place on a track (begin/end in simulated ns).
+struct Span {
+    begin: u64,
+    end: u64,
+    seq: u64,
+    name: &'static str,
+    args: String,
+}
+
+/// One non-span record (`ph` is `i` for instants, `C` for counters).
+struct Point {
+    ts: u64,
+    ph: char,
+    name: String,
+    args: String,
+}
+
+#[derive(Default)]
+struct Track {
+    label: String,
+    spans: Vec<Span>,
+    points: Vec<Point>,
+}
+
+/// Emit one track's records in a stack-disciplined order: every `B` gets
+/// a matching `E` on the same track with non-decreasing timestamps, even
+/// for zero-length spans. Spans are assumed properly nested (the engine
+/// emits them that way); improper overlap is defensively truncated at
+/// the next span's begin so balance still holds.
+fn render_track(tid: u64, track: &mut Track, out: &mut Vec<(u64, String)>) {
+    track.spans.sort_by(|a, b| {
+        a.begin.cmp(&b.begin).then(b.end.cmp(&a.end)).then(a.seq.cmp(&b.seq))
+    });
+    let mut recs: Vec<(u64, String)> = Vec::new();
+    let mut stack: Vec<(u64, &'static str)> = Vec::new(); // (end, name)
+    let e_rec = |ts: u64, name: &str| {
+        (ts, format!("{{\"ph\":\"E\",\"ts\":{},\"pid\":1,\"tid\":{tid},\"name\":\"{}\"}}", ts_us(ts), esc(name)))
+    };
+    for s in &track.spans {
+        while let Some(&(end, name)) = stack.last() {
+            if end <= s.begin {
+                recs.push(e_rec(end, name));
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        while let Some(&(end, name)) = stack.last() {
+            // improper overlap: the open span would outlive its parent's
+            // window but end before this one — close it here
+            if end < s.end {
+                recs.push(e_rec(s.begin, name));
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        recs.push((
+            s.begin,
+            format!(
+                "{{\"ph\":\"B\",\"ts\":{},\"pid\":1,\"tid\":{tid},\"name\":\"{}\",\"args\":{{{}}}}}",
+                ts_us(s.begin),
+                esc(s.name),
+                s.args
+            ),
+        ));
+        stack.push((s.end, s.name));
+    }
+    while let Some((end, name)) = stack.pop() {
+        recs.push(e_rec(end, name));
+    }
+    for p in &track.points {
+        recs.push((
+            p.ts,
+            format!(
+                "{{\"ph\":\"{}\",\"ts\":{},\"pid\":1,\"tid\":{tid},\"name\":\"{}\"{},\"args\":{{{}}}}}",
+                p.ph,
+                ts_us(p.ts),
+                esc(&p.name),
+                if p.ph == 'i' { ",\"s\":\"t\"" } else { "" },
+                p.args
+            ),
+        ));
+    }
+    // stable: span records are already in ts order, points too; equal-ts
+    // relative order within the track is preserved
+    recs.sort_by_key(|r| r.0);
+    out.extend(recs);
+}
+
+/// Chrome trace-event JSON over the tracer's surviving events.
+pub fn chrome_trace_json(tracer: &Tracer) -> String {
+    let events = tracer.events();
+    let mut tracks: BTreeMap<u64, Track> = BTreeMap::new();
+    fn track(tracks: &mut BTreeMap<u64, Track>, tid: u64, label: String) {
+        tracks.entry(tid).or_default().label = label;
+    }
+    // cumulative counter series rebuilt from the deltas, in seq order
+    let mut cum_hits = 0u64;
+    let mut cum_cow = 0u64;
+    let mut cum_dispatches = 0u64;
+    let mut cum_lane = [0u64; 64];
+
+    for ev in &events {
+        let host = format!("\"host_ns\":{},\"seq\":{}", ev.host_ns, ev.seq);
+        let sid = ev.request().map(|id| TID_SESSION_BASE + id);
+        match ev.kind {
+            EventKind::EngineStep { dur_ns, .. } | EventKind::DecodeRound { dur_ns, .. } => {
+                track(&mut tracks, TID_ENGINE, "engine".into());
+                let name = match ev.kind {
+                    EventKind::EngineStep { .. } => "step",
+                    _ => "decode round",
+                };
+                tracks.get_mut(&TID_ENGINE).unwrap().spans.push(Span {
+                    begin: ev.sim_ns,
+                    end: ev.sim_ns + dur_ns,
+                    seq: ev.seq,
+                    name,
+                    args: format!("{},{host}", kind_fields(&ev.kind)),
+                });
+            }
+            EventKind::Admitted { wait_ns, .. } => {
+                let tid = sid.unwrap_or(TID_ENGINE);
+                track(&mut tracks, tid, session_label(ev));
+                tracks.get_mut(&tid).unwrap().spans.push(Span {
+                    begin: ev.sim_ns,
+                    end: ev.sim_ns + wait_ns,
+                    seq: ev.seq,
+                    name: "queued",
+                    args: format!("{},{host}", kind_fields(&ev.kind)),
+                });
+            }
+            EventKind::PrefillChunk { dur_ns, .. } | EventKind::DecodePhase { dur_ns, .. } => {
+                let tid = sid.unwrap_or(TID_ENGINE);
+                track(&mut tracks, tid, session_label(ev));
+                let name = match ev.kind {
+                    EventKind::PrefillChunk { .. } => "prefill",
+                    _ => "decode",
+                };
+                tracks.get_mut(&tid).unwrap().spans.push(Span {
+                    begin: ev.sim_ns,
+                    end: ev.sim_ns + dur_ns,
+                    seq: ev.seq,
+                    name,
+                    args: format!("{},{host}", kind_fields(&ev.kind)),
+                });
+            }
+            EventKind::Submit { .. }
+            | EventKind::FirstToken { .. }
+            | EventKind::Preempt { .. }
+            | EventKind::Finish { .. } => {
+                let tid = sid.unwrap_or(TID_ENGINE);
+                track(&mut tracks, tid, session_label(ev));
+                tracks.get_mut(&tid).unwrap().points.push(Point {
+                    ts: ev.sim_ns,
+                    ph: 'i',
+                    name: ev.kind.name().to_string(),
+                    args: format!("{},{host}", kind_fields(&ev.kind)),
+                });
+            }
+            EventKind::Reject { .. }
+            | EventKind::AdmissionDecision { .. }
+            | EventKind::Diag { .. } => {
+                track(&mut tracks, TID_ENGINE, "engine".into());
+                let req_arg = match ev.request() {
+                    Some(id) => format!("\"req\":{id},"),
+                    None => String::new(),
+                };
+                tracks.get_mut(&TID_ENGINE).unwrap().points.push(Point {
+                    ts: ev.sim_ns,
+                    ph: 'i',
+                    name: ev.kind.name().to_string(),
+                    args: format!("{req_arg}{},{host}", kind_fields(&ev.kind)),
+                });
+            }
+            EventKind::KvDelta { prefix_hits, cow_copies, blocks_used, .. } => {
+                track(&mut tracks, TID_ENGINE, "engine".into());
+                cum_hits += prefix_hits as u64;
+                cum_cow += cow_copies as u64;
+                let t = tracks.get_mut(&TID_ENGINE).unwrap();
+                for (name, value) in [
+                    ("kv blocks used", blocks_used as u64),
+                    ("kv prefix hits", cum_hits),
+                    ("kv cow copies", cum_cow),
+                ] {
+                    t.points.push(Point {
+                        ts: ev.sim_ns,
+                        ph: 'C',
+                        name: name.to_string(),
+                        args: format!("\"value\":{value}"),
+                    });
+                }
+            }
+            EventKind::PoolDispatch { dispatches, .. } => {
+                track(&mut tracks, TID_POOL, "pool".into());
+                cum_dispatches += dispatches as u64;
+                tracks.get_mut(&TID_POOL).unwrap().points.push(Point {
+                    ts: ev.sim_ns,
+                    ph: 'C',
+                    name: "pool dispatches".to_string(),
+                    args: format!("\"value\":{cum_dispatches}"),
+                });
+            }
+            EventKind::PoolLane { lane, dispatches } => {
+                let tid = TID_LANE_BASE + lane as u64;
+                track(&mut tracks, tid, format!("pool lane {lane}"));
+                cum_lane[lane as usize] += dispatches as u64;
+                tracks.get_mut(&tid).unwrap().points.push(Point {
+                    ts: ev.sim_ns,
+                    ph: 'C',
+                    name: format!("pool lane {lane}"),
+                    args: format!("\"value\":{}", cum_lane[lane as usize]),
+                });
+            }
+        }
+    }
+
+    // metadata first (names for every used track), then the timeline
+    // records globally stable-sorted by ts — per-track order survives
+    let mut body: Vec<String> = Vec::new();
+    body.push(
+        "{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":1,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"leap\"}}"
+            .to_string(),
+    );
+    for (tid, t) in &tracks {
+        body.push(format!(
+            "{{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(&t.label)
+        ));
+        body.push(format!(
+            "{{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":{tid},\"name\":\"thread_sort_index\",\
+             \"args\":{{\"sort_index\":{tid}}}}}"
+        ));
+    }
+    let mut timeline: Vec<(u64, String)> = Vec::new();
+    let tids: Vec<u64> = tracks.keys().copied().collect();
+    for tid in tids {
+        let mut t = std::mem::take(tracks.get_mut(&tid).unwrap());
+        render_track(tid, &mut t, &mut timeline);
+    }
+    timeline.sort_by_key(|r| r.0);
+    body.extend(timeline.into_iter().map(|(_, j)| j));
+
+    format!(
+        "{{\n\"displayTimeUnit\":\"ms\",\n\"otherData\":{{\"clock\":\"simulated_ns\",\
+         \"recorded\":{},\"dropped\":{}}},\n\"traceEvents\":[\n{}\n]\n}}\n",
+        tracer.recorded(),
+        tracer.dropped(),
+        body.join(",\n")
+    )
+}
+
+fn session_label(ev: &Event) -> String {
+    match ev.request() {
+        Some(id) => format!("session {id}"),
+        None => "engine".to_string(),
+    }
+}
+
+fn push_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn push_gauge(out: &mut String, name: &str, help: &str, v: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+/// Prometheus text exposition of the aggregated serving metrics.
+pub fn prometheus_text(m: &Metrics) -> String {
+    let mut out = String::new();
+    let counters: [(&str, &str, u64); 17] = [
+        ("leap_requests_done_total", "Requests completed.", m.requests_done),
+        ("leap_requests_failed_total", "Requests failed mid-flight.", m.requests_failed),
+        ("leap_requests_rejected_total", "Requests rejected at submit.", m.requests_rejected),
+        (
+            "leap_requests_stopped_total",
+            "Requests finished by a stop-sequence match.",
+            m.requests_stopped,
+        ),
+        ("leap_preemptions_total", "Pool-pressure preemptions.", m.preemptions),
+        ("leap_prefill_tokens_total", "Prompt tokens prefilled.", m.prefill_tokens),
+        ("leap_prefill_chunks_total", "Prefill program dispatches.", m.prefill_chunks),
+        ("leap_decode_tokens_total", "Tokens generated.", m.decode_tokens),
+        ("leap_npm_swaps_total", "NPM bank swaps.", m.npm_swaps),
+        ("leap_sim_time_ns_total", "Simulated compute time, ns.", m.sim_time_ns),
+        ("leap_host_time_ns_total", "Coordinator wall time, ns.", m.host_time_ns),
+        ("leap_kv_prefix_lookups_total", "Prefix-cache probes.", m.kv_prefix_lookups),
+        ("leap_kv_prefix_hits_total", "Prefix-cache hits.", m.kv_prefix_hits),
+        ("leap_kv_cow_copies_total", "Copy-on-write block copies.", m.kv_cow_copies),
+        ("leap_pool_dispatches_total", "Worker-pool parallel dispatches.", m.pool_dispatches),
+        ("leap_pool_parks_total", "Worker park transitions.", m.pool_parks),
+        ("leap_pool_wakes_total", "Worker wake transitions.", m.pool_wakes),
+    ];
+    for (name, help, v) in counters {
+        push_counter(&mut out, name, help, v);
+    }
+    let gauges: [(&str, &str, String); 9] = [
+        ("leap_energy_joules", "Simulated energy, J.", format!("{:.9}", m.energy_j)),
+        ("leap_kv_block_size", "Tokens per KV block.", m.kv_block_size.to_string()),
+        (
+            "leap_kv_bytes_per_token",
+            "Bytes one KV token position occupies.",
+            m.kv_bytes_per_token.to_string(),
+        ),
+        (
+            "leap_kv_blocks_total",
+            "Physical KV blocks in the pool.",
+            m.kv_blocks_total.to_string(),
+        ),
+        (
+            "leap_kv_blocks_used",
+            "KV blocks in use (last observation).",
+            m.kv_blocks_used.to_string(),
+        ),
+        (
+            "leap_kv_peak_blocks_used",
+            "High-water mark of KV blocks in use.",
+            m.kv_peak_blocks_used.to_string(),
+        ),
+        (
+            "leap_kv_shared_blocks",
+            "Blocks shared by >1 session (last observation).",
+            m.kv_shared_blocks.to_string(),
+        ),
+        ("leap_pool_threads", "Worker-pool lanes.", m.pool_threads.to_string()),
+        (
+            "leap_decode_tokens_per_second",
+            "Decode throughput, tokens per simulated second.",
+            format!("{:.3}", m.decode_tokens_per_s()),
+        ),
+    ];
+    for (name, help, v) in &gauges {
+        push_gauge(&mut out, name, help, v);
+    }
+
+    for (name, help, h) in [
+        ("leap_latency_ns", "End-to-end request latency, simulated ns.", &m.latency),
+        ("leap_ttft_ns", "Time to first token, simulated ns.", &m.ttft),
+    ] {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+        let top = h.highest_bucket().unwrap_or(0);
+        let mut cum = 0u64;
+        for (b, &c) in h.bucket_counts().iter().enumerate().take(top + 1) {
+            cum += c;
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                super::Histogram::bucket_upper_bound(b)
+            ));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        out.push_str(&format!("{name}_sum {}\n", h.sum()));
+        out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EventKind, Level, Tracer};
+    use super::*;
+
+    fn sample_tracer() -> Tracer {
+        let mut t = Tracer::enabled(256);
+        t.emit(0, Some(0), EventKind::Submit { prompt_tokens: 8, max_new_tokens: 4 });
+        t.emit(10, None, EventKind::AdmissionDecision { decision: "admit", need_blocks: 2, free_blocks: 12 });
+        t.emit(0, Some(0), EventKind::Admitted { wait_ns: 10, readmission: false });
+        t.emit(10, Some(0), EventKind::PrefillChunk { start: 0, len: 8, last: true, dur_ns: 30 });
+        t.emit(40, Some(0), EventKind::FirstToken { position: 0 });
+        t.emit(60, None, EventKind::KvDelta { prefix_lookups: 2, prefix_hits: 1, cow_copies: 0, blocks_used: 3 });
+        t.emit(60, None, EventKind::PoolLane { lane: 0, dispatches: 4 });
+        t.emit(70, Some(0), EventKind::Preempt { demand_blocks: 3, free_blocks: 1 });
+        t.emit(90, None, EventKind::Diag { level: Level::Warn, code: "test_code" });
+        t.emit(40, Some(0), EventKind::DecodePhase { dur_ns: 60, tokens: 4 });
+        t.emit(100, Some(0), EventKind::Finish { outcome: "done", reason: "length", output_tokens: 4 });
+        t.emit(0, None, EventKind::EngineStep { round: 1, dur_ns: 100, running: 1, waiting: 0 });
+        t
+    }
+
+    #[test]
+    fn jsonl_has_one_flat_object_per_event() {
+        let t = sample_tracer();
+        let text = events_jsonl(&t);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), t.events().len());
+        assert!(lines[0].starts_with("{\"seq\":0,"));
+        assert!(lines[0].contains("\"kind\":\"submit\""));
+        assert!(lines[0].contains("\"prompt_tokens\":8"));
+        assert!(lines[1].contains("\"req\":null"), "engine-wide events carry null req: {}", lines[1]);
+        assert!(text.contains("\"kind\":\"diag\"") && text.contains("\"level\":\"warn\""));
+    }
+
+    #[test]
+    fn chrome_trace_spans_balance_per_track() {
+        let t = sample_tracer();
+        let json = chrome_trace_json(&t);
+        // crude but dependency-free: every B is eventually closed by an E
+        let b = json.matches("\"ph\":\"B\"").count();
+        let e = json.matches("\"ph\":\"E\"").count();
+        assert_eq!(b, e, "unbalanced spans:\n{json}");
+        assert!(b >= 4, "expected step + queued + prefill + decode spans, got {b}");
+        assert!(json.contains("\"name\":\"thread_name\""));
+        assert!(json.contains("\"name\":\"session 0\""));
+        assert!(json.contains("\"name\":\"pool lane 0\""));
+        assert!(json.contains("\"clock\":\"simulated_ns\""));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_consistent() {
+        let mut m = Metrics { requests_done: 3, ..Default::default() };
+        m.latency.record(100);
+        m.latency.record(900);
+        m.ttft.record(40);
+        let text = prometheus_text(&m);
+        assert!(text.contains("leap_requests_done_total 3\n"));
+        assert!(text.contains("# TYPE leap_latency_ns histogram"));
+        assert!(text.contains("leap_latency_ns_count 2\n"));
+        assert!(text.contains("leap_latency_ns_sum 1000\n"));
+        assert!(text.contains("leap_latency_ns_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("leap_ttft_ns_count 1\n"));
+        // every cumulative bucket line is ≤ the total count
+        for line in text.lines().filter(|l| l.starts_with("leap_latency_ns_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v <= 2);
+        }
+    }
+}

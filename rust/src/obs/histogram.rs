@@ -1,0 +1,200 @@
+//! Fixed-footprint log2 latency histograms.
+//!
+//! 64 power-of-two buckets (bucket `i` holds values in `[2^i, 2^(i+1))`,
+//! with 0 folded into bucket 0) replace the previously unbounded
+//! `Vec<u64>` sample stores in [`crate::coordinator::Metrics`]: recording
+//! is O(1), memory is constant regardless of how many requests a run
+//! serves, and percentile queries never clone or sort anything.
+//!
+//! # Percentile convention (nearest-rank)
+//!
+//! `percentile(p)` uses the **nearest-rank** definition: for `n` recorded
+//! samples the rank is `ceil(p · n)` (1-based, clamped to `[1, n]`), and
+//! the result is resolved to the bucket containing that rank. Because a
+//! log2 bucket cannot name every sample it absorbed, the reported value
+//! is the **largest sample observed in that bucket** — an actually
+//! observed value that is ≥ the true nearest-rank sample and within the
+//! same power-of-two bucket (i.e. at most 2× it). With one sample per
+//! bucket the answer is exact.
+
+/// Number of log2 buckets; covers the full `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// A log2-bucketed histogram of `u64` samples (simulated-ns latencies).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    /// Largest sample observed per bucket — the nearest-rank witness.
+    bucket_max: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            counts: [0; BUCKETS],
+            bucket_max: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+/// Bucket index for a value: `floor(log2(v))`, with 0 and 1 in bucket 0.
+fn bucket_of(v: u64) -> usize {
+    if v < 2 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. O(1), no allocation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let b = bucket_of(v);
+        self.counts[b] += 1;
+        self.bucket_max[b] = self.bucket_max[b].max(v);
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile (see module docs). `p` in `[0, 1]`;
+    /// returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (&c, &bmax) in self.counts.iter().zip(self.bucket_max.iter()) {
+            cum += c;
+            if cum >= rank {
+                return bmax;
+            }
+        }
+        self.max
+    }
+
+    /// Per-bucket counts (Prometheus exposition walks these).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Inclusive upper bound of bucket `b` (`u64::MAX` for the last).
+    pub fn bucket_upper_bound(b: usize) -> u64 {
+        if b >= 63 {
+            u64::MAX
+        } else {
+            (2u64 << b) - 1
+        }
+    }
+
+    /// Index of the highest non-empty bucket, if any.
+    pub fn highest_bucket(&self) -> Option<usize> {
+        (0..BUCKETS).rev().find(|&b| self.counts[b] > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn from(vals: &[u64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn empty_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.highest_bucket(), None);
+    }
+
+    #[test]
+    fn nearest_rank_matches_sorted_select_on_distinct_buckets() {
+        // the canonical Metrics fixture: one sample per bucket ⇒ exact
+        let h = from(&[50, 10, 30, 20, 40]);
+        assert_eq!(h.percentile(0.5), 30, "rank ceil(0.5*5)=3 → 30");
+        assert_eq!(h.percentile(0.99), 50, "rank ceil(0.99*5)=5 → 50");
+        assert_eq!(h.percentile(0.0), 10, "rank clamps to 1 → min");
+        assert_eq!(h.percentile(1.0), 50);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 50);
+        assert_eq!(h.sum(), 150);
+    }
+
+    #[test]
+    fn shared_bucket_reports_bucket_max_witness() {
+        // 17 and 30 share bucket [16,32): the p50 of [17, 30, 100] is 30
+        // by nearest rank; the bucket witness IS 30 here (bucket max)
+        let h = from(&[17, 30, 100]);
+        assert_eq!(h.percentile(0.5), 30);
+        // p25 → rank 1 → same bucket → still the bucket max (documented:
+        // within one log2 bucket of the true sample)
+        assert_eq!(h.percentile(0.25), 30);
+    }
+
+    #[test]
+    fn zero_and_extremes_bucket_safely() {
+        let h = from(&[0, 1, u64::MAX]);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.percentile(0.5), 1, "0 and 1 share bucket 0");
+        assert_eq!(Histogram::bucket_upper_bound(0), 1);
+        assert_eq!(Histogram::bucket_upper_bound(1), 3);
+        assert_eq!(Histogram::bucket_upper_bound(63), u64::MAX);
+        assert_eq!(h.highest_bucket(), Some(63));
+    }
+}

@@ -1,0 +1,318 @@
+//! Structured tracing and runtime telemetry (the observability spine).
+//!
+//! Everything the serving stack can report — engine rounds, prefill
+//! chunks, decode rounds, admission rulings, preemption/readmission, KV
+//! copy-on-write and prefix hits, worker-pool dispatch — is captured as
+//! typed [`Event`] records into a preallocated ring buffer owned by the
+//! [`Tracer`]. Two invariants make it safe to leave in the hot path:
+//!
+//! - **Near-zero cost when disabled.** Every emit starts with a branch on
+//!   a plain `bool`; the disabled tracer owns an empty `Vec`, so no ring
+//!   memory exists and no allocation ever happens. The serving loop's
+//!   decode hot path performs *zero extra allocations* either way —
+//!   [`Event`] is `Copy` and recording is a slot write.
+//! - **Bitwise-invisible when enabled.** The tracer only *reads* the
+//!   simulated clock and counters the engine already maintains; it never
+//!   feeds anything back. Token streams, block tables, and every
+//!   determinism contract are bitwise identical with tracing on or off
+//!   (`tests/integration_obs.rs` proves it end to end).
+//!
+//! Timestamps are dual: `sim_ns` (deterministic simulated clock — this is
+//! what the exporters order by) and `host_ns` (wall clock since tracer
+//! construction — diagnostics only). See [`event`] for span semantics.
+//!
+//! Exporters ([`export`]): Chrome trace-event JSON (Perfetto-loadable; one
+//! track per session, one counter track per pool lane), a JSONL event
+//! log, and a Prometheus-style text exposition of
+//! [`crate::coordinator::Metrics`]. The [`Histogram`] here also backs the
+//! metrics' latency/TTFT percentiles (fixed 64-bucket log2, nearest-rank).
+
+pub mod event;
+pub mod export;
+pub mod histogram;
+
+pub use event::{Event, EventKind, Level, NO_REQUEST};
+pub use export::{chrome_trace_json, events_jsonl, prometheus_text};
+pub use histogram::Histogram;
+
+use std::time::Instant;
+
+use crate::coordinator::RequestId;
+use crate::kvcache::PoolStats;
+use crate::runtime::WorkerPoolStats;
+
+/// Default ring capacity (events). 64Ki × ≤64 B ≈ 4 MiB, preallocated
+/// once at enable time.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// Render a leveled diagnostic to stderr in the machine-parseable shape
+/// `leap[<level>] <code>: <message>` (one line; `code` is a stable
+/// snake_case identifier, the message is for humans). This is the *only*
+/// sanctioned way runtime code writes to stderr.
+pub fn stderr_log(level: Level, code: &str, msg: std::fmt::Arguments<'_>) {
+    eprintln!("leap[{}] {code}: {msg}", level.as_str());
+}
+
+/// The event recorder: a preallocated ring of [`Event`] slots.
+///
+/// When full, the oldest record is overwritten (`dropped()` counts how
+/// many were lost); `seq` numbers stay globally monotone so consumers can
+/// detect the gap. Construct with [`Tracer::disabled`] (the engine
+/// default — emits are a single predicted branch) or [`Tracer::enabled`].
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    cap: usize,
+    ring: Vec<Event>,
+    /// Write cursor once the ring has wrapped (oldest slot).
+    next: usize,
+    /// Total events ever emitted (= next `seq`).
+    seq: u64,
+    host_t0: Instant,
+    // Cumulative-counter shadows for delta events (the pool/KV layers
+    // expose monotone totals; the trace wants per-step activity).
+    last_prefix_lookups: u64,
+    last_prefix_hits: u64,
+    last_cow_copies: u64,
+    last_dispatches: u64,
+    last_parks: u64,
+    last_wakes: u64,
+    last_lanes: [u64; 64],
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl Tracer {
+    /// The no-op tracer: no ring memory, every emit is one branch.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            cap: 0,
+            ring: Vec::new(),
+            next: 0,
+            seq: 0,
+            host_t0: Instant::now(),
+            last_prefix_lookups: 0,
+            last_prefix_hits: 0,
+            last_cow_copies: 0,
+            last_dispatches: 0,
+            last_parks: 0,
+            last_wakes: 0,
+            last_lanes: [0; 64],
+        }
+    }
+
+    /// A recording tracer with a ring of `capacity` slots, preallocated
+    /// here — the emit path never grows it.
+    pub fn enabled(capacity: usize) -> Self {
+        let cap = capacity.max(16);
+        Self { enabled: true, cap, ring: Vec::with_capacity(cap), ..Self::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event. Disabled: a single branch. Enabled: one
+    /// `Instant` read and one slot write — never an allocation.
+    #[inline]
+    pub fn emit(&mut self, sim_ns: u64, req: Option<RequestId>, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ev = Event {
+            seq: self.seq,
+            sim_ns,
+            host_ns: self.host_t0.elapsed().as_nanos() as u64,
+            req: req.unwrap_or(NO_REQUEST),
+            kind,
+        };
+        if self.ring.len() < self.cap {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.seq += 1;
+    }
+
+    /// Record a [`EventKind::Diag`] event *and* render the human message
+    /// to stderr (the stderr line appears whether or not tracing is on —
+    /// diagnostics must not vanish when the ring does).
+    pub fn diag(
+        &mut self,
+        sim_ns: u64,
+        level: Level,
+        code: &'static str,
+        req: Option<RequestId>,
+        msg: std::fmt::Arguments<'_>,
+    ) {
+        stderr_log(level, code, msg);
+        self.emit(sim_ns, req, EventKind::Diag { level, code });
+    }
+
+    /// Total events emitted (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.seq - self.ring.len() as u64
+    }
+
+    /// Surviving events in emission (`seq`) order.
+    pub fn events(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        if self.ring.len() == self.cap && self.cap > 0 {
+            out.extend_from_slice(&self.ring[self.next..]);
+            out.extend_from_slice(&self.ring[..self.next]);
+        } else {
+            out.extend_from_slice(&self.ring);
+        }
+        out
+    }
+
+    /// Observe a cumulative KV-pool snapshot; emits a
+    /// [`EventKind::KvDelta`] if anything moved since the last call.
+    pub fn observe_kv_pool(&mut self, sim_ns: u64, s: &PoolStats) {
+        if !self.enabled {
+            return;
+        }
+        let lookups = s.prefix_lookups.saturating_sub(self.last_prefix_lookups);
+        let hits = s.prefix_hits.saturating_sub(self.last_prefix_hits);
+        let cow = s.cow_copies.saturating_sub(self.last_cow_copies);
+        self.last_prefix_lookups = s.prefix_lookups;
+        self.last_prefix_hits = s.prefix_hits;
+        self.last_cow_copies = s.cow_copies;
+        if lookups > 0 || hits > 0 || cow > 0 {
+            self.emit(
+                sim_ns,
+                None,
+                EventKind::KvDelta {
+                    prefix_lookups: lookups as u32,
+                    prefix_hits: hits as u32,
+                    cow_copies: cow as u32,
+                    blocks_used: s.blocks_used as u32,
+                },
+            );
+        }
+    }
+
+    /// Observe a cumulative worker-pool snapshot; emits a
+    /// [`EventKind::PoolDispatch`] delta if the pool moved.
+    pub fn observe_worker_pool(&mut self, sim_ns: u64, s: &WorkerPoolStats) {
+        if !self.enabled {
+            return;
+        }
+        let dispatches = s.dispatches.saturating_sub(self.last_dispatches);
+        let parks = s.parks.saturating_sub(self.last_parks);
+        let wakes = s.wakes.saturating_sub(self.last_wakes);
+        self.last_dispatches = s.dispatches;
+        self.last_parks = s.parks;
+        self.last_wakes = s.wakes;
+        if dispatches > 0 || parks > 0 || wakes > 0 {
+            self.emit(
+                sim_ns,
+                None,
+                EventKind::PoolDispatch {
+                    dispatches: dispatches as u32,
+                    parks: parks as u32,
+                    wakes: wakes as u32,
+                },
+            );
+        }
+    }
+
+    /// Observe cumulative per-lane dispatch counters; emits one
+    /// [`EventKind::PoolLane`] delta per lane that moved.
+    pub fn observe_pool_lanes(&mut self, sim_ns: u64, lanes: &[u64; 64]) {
+        if !self.enabled {
+            return;
+        }
+        for (lane, (&now, last)) in lanes.iter().zip(self.last_lanes.iter_mut()).enumerate() {
+            let delta = now.saturating_sub(*last);
+            *last = now;
+            if delta > 0 {
+                self.emit(
+                    sim_ns,
+                    None,
+                    EventKind::PoolLane { lane: lane as u8, dispatches: delta as u32 },
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_owns_no_ring() {
+        let mut t = Tracer::disabled();
+        assert_eq!(t.ring.capacity(), 0, "disabled tracer must not preallocate");
+        t.emit(1, None, EventKind::FirstToken { position: 0 });
+        t.diag(2, Level::Info, "test_diag", None, format_args!("ignored"));
+        assert_eq!(t.recorded(), 0);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_overwriting_oldest_and_counts_drops() {
+        let mut t = Tracer::enabled(16);
+        for i in 0..40u64 {
+            t.emit(i, Some(7), EventKind::FirstToken { position: i as u32 });
+        }
+        assert_eq!(t.recorded(), 40);
+        assert_eq!(t.dropped(), 24);
+        let evs = t.events();
+        assert_eq!(evs.len(), 16);
+        // survivors are the newest 24..40, in seq order
+        assert_eq!(evs[0].seq, 24);
+        assert_eq!(evs[15].seq, 39);
+        assert!(evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+        assert_eq!(evs[0].request(), Some(7));
+    }
+
+    #[test]
+    fn kv_and_pool_observations_emit_deltas_not_totals() {
+        let mut t = Tracer::enabled(64);
+        let snap = |lookups, hits, cow, used| PoolStats {
+            prefix_lookups: lookups,
+            prefix_hits: hits,
+            cow_copies: cow,
+            blocks_used: used,
+            ..Default::default()
+        };
+        t.observe_kv_pool(10, &snap(4, 2, 1, 9));
+        t.observe_kv_pool(20, &snap(4, 2, 1, 9)); // quiet: no event
+        t.observe_kv_pool(30, &snap(6, 3, 1, 7));
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(
+            evs[1].kind,
+            EventKind::KvDelta { prefix_lookups: 2, prefix_hits: 1, cow_copies: 0, blocks_used: 7 }
+        );
+
+        let mut lanes = [0u64; 64];
+        lanes[0] = 5;
+        lanes[3] = 2;
+        t.observe_pool_lanes(40, &lanes);
+        lanes[3] = 6;
+        t.observe_pool_lanes(50, &lanes);
+        let evs = t.events();
+        let lane_evs: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::PoolLane { lane, dispatches } => Some((e.sim_ns, lane, dispatches)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lane_evs, vec![(40, 0, 5), (40, 3, 2), (50, 3, 4)]);
+    }
+}

@@ -142,6 +142,15 @@ pub trait NumericsBackend {
     fn worker_pool_stats(&self) -> Option<super::pool::WorkerPoolStats> {
         None
     }
+
+    /// Cumulative dispatch engagements per worker-pool lane (index =
+    /// lane; slots past the pool's lane count stay zero). `None` = no
+    /// pool. The tracer diffs successive snapshots into per-lane
+    /// [`crate::obs::EventKind::PoolLane`] activity, one counter track per
+    /// lane in the Chrome trace.
+    fn worker_pool_lane_dispatches(&self) -> Option<[u64; 64]> {
+        None
+    }
 }
 
 /// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.

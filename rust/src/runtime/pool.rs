@@ -38,6 +38,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs::{stderr_log, Level};
+
 /// Minimum multiply-accumulate count a tile band should amortise; a kernel
 /// stays serial below 2× this. Far lower than the old per-call
 /// `std::thread::scope` threshold (1 << 21): waking a resident, spinning
@@ -98,6 +100,12 @@ struct Shared {
     dispatches: AtomicU64,
     parks: AtomicU64,
     wakes: AtomicU64,
+    /// Dispatch engagements per lane (lane L was one of the active bands).
+    /// 64 slots — the same bound the parked bitmask imposes on lanes. The
+    /// dispatcher bumps these, one relaxed add per engaged lane per
+    /// dispatch: a handful of uncontended adds per decode layer, invisible
+    /// next to the tile work itself.
+    lane_dispatches: [AtomicU64; 64],
 }
 
 // SAFETY: the `UnsafeCell<Option<Job>>` is the only non-Sync field; its
@@ -149,9 +157,12 @@ impl WorkerPool {
         if let Ok(v) = std::env::var("LEAP_THREADS") {
             match v.trim().parse::<usize>() {
                 Ok(n) => return n.max(1),
-                Err(_) => eprintln!(
-                    "leap worker pool: ignoring unparseable LEAP_THREADS={v:?}; \
-                     using the hardware default"
+                Err(_) => stderr_log(
+                    Level::Warn,
+                    "pool_threads_env",
+                    format_args!(
+                        "ignoring unparseable LEAP_THREADS={v:?}; using the hardware default"
+                    ),
                 ),
             }
         }
@@ -174,6 +185,7 @@ impl WorkerPool {
             dispatches: AtomicU64::new(0),
             parks: AtomicU64::new(0),
             wakes: AtomicU64::new(0),
+            lane_dispatches: std::array::from_fn(|_| AtomicU64::new(0)),
         });
         let workers = (1..threads)
             .map(|lane| {
@@ -211,6 +223,12 @@ impl WorkerPool {
             parks: self.shared.parks.load(Ordering::Relaxed),
             wakes: self.shared.wakes.load(Ordering::Relaxed),
         }
+    }
+
+    /// Cumulative dispatch engagements per lane (index = lane; lane 0 is
+    /// the dispatching thread's band). Slots past `threads()` stay zero.
+    pub fn lane_dispatches(&self) -> [u64; 64] {
+        std::array::from_fn(|i| self.shared.lane_dispatches[i].load(Ordering::Relaxed))
     }
 
     /// Run `f` over `range` split into at most `threads()` contiguous
@@ -266,6 +284,9 @@ impl WorkerPool {
         // all uses.
         unsafe { *self.shared.job.get() = Some(Job { f: erase(jobref) }) };
         let epoch = self.shared.dispatches.fetch_add(1, Ordering::Relaxed) + 1;
+        for c in &self.shared.lane_dispatches[..lanes] {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
         self.shared.epoch_lanes.store((epoch << 16) | lanes as u64, Ordering::Release);
         // Wake parked workers — but only if one of the lanes THIS dispatch
         // engages is parked. The mask is read under the lock the workers
@@ -373,7 +394,11 @@ fn worker_main(shared: &Shared, lane: usize) {
             // dispatcher's post-barrier check observes it and re-raises —
             // a band panic must not silently leave its output unwritten.
             shared.panicked.store(true, Ordering::Relaxed);
-            eprintln!("leap worker pool: tile closure panicked on lane {lane}");
+            stderr_log(
+                Level::Error,
+                "pool_band_panic",
+                format_args!("tile closure panicked on worker pool lane {lane}"),
+            );
         }
         shared.done.fetch_add(1, Ordering::Release);
     }
@@ -612,6 +637,23 @@ mod tests {
         assert_eq!(s.threads, 3);
         assert_eq!(s.workers, 2);
         assert_eq!(s.dispatches, 0);
+    }
+
+    #[test]
+    fn lane_dispatch_counters_track_engagement() {
+        let pool = WorkerPool::with_threads(4);
+        assert_eq!(pool.lane_dispatches(), [0u64; 64]);
+        // width-2 dispatch engages lanes 0 and 1 only
+        pool.run_tiles_bounded(0..100, 2, |_r| {});
+        // full-width dispatch engages all four lanes
+        pool.run_tiles(0..100, |_r| {});
+        let lanes = pool.lane_dispatches();
+        assert_eq!(&lanes[..4], &[2, 2, 1, 1]);
+        assert!(lanes[4..].iter().all(|&c| c == 0), "unengaged lanes stay zero");
+        // serial fallback (single tile) never dispatches and never counts
+        let serial = WorkerPool::with_threads(1);
+        serial.run_tiles(0..100, |_r| {});
+        assert_eq!(serial.lane_dispatches(), [0u64; 64]);
     }
 
     #[test]

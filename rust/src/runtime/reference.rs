@@ -1058,6 +1058,10 @@ impl NumericsBackend for ReferenceBackend {
     fn worker_pool_stats(&self) -> Option<WorkerPoolStats> {
         Some(self.pool.stats())
     }
+
+    fn worker_pool_lane_dispatches(&self) -> Option<[u64; 64]> {
+        Some(self.pool.lane_dispatches())
+    }
 }
 
 #[cfg(test)]

@@ -69,7 +69,13 @@ fn probe() -> SimdLevel {
             "0" | "off" | "scalar" => return SimdLevel::Scalar,
             "" | "1" | "on" | "auto" => {}
             other => {
-                eprintln!("leap: ignoring unparseable LEAP_SIMD={other:?} (want 0|off|scalar or 1|on|auto)");
+                crate::obs::stderr_log(
+                    crate::obs::Level::Warn,
+                    "simd_env",
+                    format_args!(
+                        "ignoring unparseable LEAP_SIMD={other:?} (want 0|off|scalar or 1|on|auto)"
+                    ),
+                );
             }
         }
     }

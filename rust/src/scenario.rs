@@ -23,6 +23,8 @@
 //! pool_bytes 8192           # size the pool by bytes (ignored with `blocks`)
 //! expect_min_preemptions 1
 //! expect_max_preemptions 4  # optional upper bound
+//! expect_max_queue_wait_ns 900000   # per-session queue-wait ceiling
+//! trace on                  # record a structured trace of the run
 //!
 //! session arrive=0 prompt=rand:96:11 gen=8 expect=done
 //! session arrive=0 prompt=rand:12:12 gen=8 seed=5 temp=0.8 top_k=40
@@ -42,10 +44,11 @@ use std::path::{Path, PathBuf};
 use crate::arch::HwParams;
 use crate::coordinator::{
     BatchPolicy, EngineConfig, FinishReason, GenerationConfig, Metrics, Numerics, RequestId,
-    RequestState, ServingEngine,
+    RequestState, ServingEngine, TimelineSummary,
 };
 use crate::kvcache::{KvCacheConfig, KvDtype};
 use crate::model::ModelPreset;
+use crate::obs::{chrome_trace_json, events_jsonl, Tracer, DEFAULT_RING_CAPACITY};
 use crate::runtime::{KernelMode, NumericsBackend, ReferenceBackend};
 use crate::testutil::SplitMix64;
 
@@ -144,6 +147,9 @@ pub struct Expect {
     /// Upper bound on preemptions (`None` = unchecked). The q8 capacity
     /// scenarios use this to prove a bigger pool stops thrashing.
     pub max_preemptions: Option<u64>,
+    /// Upper bound on any completed session's queue wait (arrival →
+    /// first admission), simulated ns.
+    pub max_queue_wait_ns: Option<u64>,
 }
 
 /// A parsed scenario script.
@@ -170,6 +176,10 @@ pub struct Scenario {
     /// comparison the `prefix_storm_q8` scenario scripts. Ignored when
     /// `blocks` is set explicitly.
     pub pool_bytes: Option<usize>,
+    /// Record a structured trace of the run (`trace on`); the report then
+    /// carries [`TraceArtifacts`]. Tracing is bitwise-invisible to the
+    /// run itself, so expectations behave identically either way.
+    pub trace: bool,
     pub expect: Expect,
     pub sessions: Vec<SessionSpec>,
 }
@@ -191,8 +201,26 @@ pub struct SessionResult {
     pub ttft_ns: Option<u64>,
     pub latency_ns: Option<u64>,
     pub preemptions: u32,
+    /// Per-phase lifetime breakdown (queue wait / prefill / decode);
+    /// all-`None` for rejected sessions.
+    pub timeline: TimelineSummary,
     /// Did the outcome match the script's `expect=`?
     pub expect_ok: bool,
+}
+
+/// Rendered trace exports of one traced scenario run (`trace on`, or the
+/// CLI's `--trace` override). The report JSON carries only the summary
+/// counts; the rendered documents are for the CLI to write as artifacts.
+#[derive(Debug, Clone)]
+pub struct TraceArtifacts {
+    /// Chrome trace-event JSON (Perfetto-loadable).
+    pub chrome_json: String,
+    /// One JSON object per event, newline-delimited.
+    pub jsonl: String,
+    /// Total events emitted.
+    pub recorded: u64,
+    /// Events lost to ring wrap-around.
+    pub dropped: u64,
 }
 
 /// One full scenario run: per-session results + engine metrics +
@@ -204,6 +232,8 @@ pub struct ScenarioReport {
     pub chunk: Option<usize>,
     pub sessions: Vec<SessionResult>,
     pub metrics: Metrics,
+    /// Rendered trace exports (`None` when tracing was off).
+    pub trace: Option<TraceArtifacts>,
     /// Human-readable expectation failures (empty = passed).
     pub expect_failures: Vec<String>,
 }
@@ -301,10 +331,21 @@ impl ScenarioReport {
             }
             push_kv_opt_u64(&mut s, "ttft_ns", r.ttft_ns);
             push_kv_opt_u64(&mut s, "latency_ns", r.latency_ns);
+            push_kv_opt_u64(&mut s, "queue_wait_ns", r.timeline.queue_wait_ns);
+            push_kv_opt_u64(&mut s, "prefill_ns", r.timeline.prefill_ns);
+            push_kv_opt_u64(&mut s, "decode_ns", r.timeline.decode_ns);
             s.push_str(&format!(",\"preemptions\":{},\"expect_ok\":{}", r.preemptions, r.expect_ok));
             s.push('}');
         }
-        s.push_str("]}");
+        s.push(']');
+        match &self.trace {
+            Some(t) => s.push_str(&format!(
+                ",\"trace\":{{\"recorded\":{},\"dropped\":{}}}",
+                t.recorded, t.dropped
+            )),
+            None => s.push_str(",\"trace\":null"),
+        }
+        s.push('}');
         s
     }
 }
@@ -380,6 +421,7 @@ impl Scenario {
             prefix_sharing: None,
             kv_dtype: None,
             pool_bytes: None,
+            trace: false,
             expect: Expect::default(),
             sessions: Vec::new(),
         };
@@ -432,6 +474,13 @@ impl Scenario {
                     )
                 }
                 "pool_bytes" => sc.pool_bytes = Some(parse_num(rest).map_err(&ctx)?),
+                "trace" => {
+                    sc.trace = match rest {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        other => return Err(ctx(format!("trace on|off, got '{other}'"))),
+                    }
+                }
                 "expect_min_preemptions" => {
                     sc.expect.min_preemptions = parse_num(rest).map_err(&ctx)?
                 }
@@ -440,6 +489,9 @@ impl Scenario {
                 }
                 "expect_min_prefix_hits" => {
                     sc.expect.min_prefix_hits = parse_num(rest).map_err(&ctx)?
+                }
+                "expect_max_queue_wait_ns" => {
+                    sc.expect.max_queue_wait_ns = Some(parse_num(rest).map_err(&ctx)?)
                 }
                 "session" => {
                     sc.sessions.push(Self::parse_session(rest).map_err(|e| ctx(e.to_string()))?)
@@ -617,6 +669,17 @@ impl Scenario {
         chunk: Option<usize>,
         artifacts: Option<&Path>,
     ) -> anyhow::Result<ScenarioReport> {
+        self.run_with_opts(chunk, self.trace, artifacts)
+    }
+
+    /// Run with explicit chunk and tracing overrides (the CLI's `--trace`
+    /// flag forces tracing on for an untraced script).
+    pub fn run_with_opts(
+        &self,
+        chunk: Option<usize>,
+        trace: bool,
+        artifacts: Option<&Path>,
+    ) -> anyhow::Result<ScenarioReport> {
         let numerics = self.build_numerics(artifacts)?;
         let vocab = match &numerics {
             Numerics::Backend(b) => b.vocab(),
@@ -636,6 +699,9 @@ impl Scenario {
             numerics,
         })?;
         engine.prefill_chunk = chunk;
+        if trace {
+            engine.tracer = Tracer::enabled(DEFAULT_RING_CAPACITY);
+        }
 
         // submissions in arrival order (stable: ties stay in script order)
         let mut order: Vec<usize> = (0..self.sessions.len()).collect();
@@ -681,6 +747,7 @@ impl Scenario {
                     ttft_ns: None,
                     latency_ns: None,
                     preemptions: 0,
+                    timeline: TimelineSummary::default(),
                     expect_ok: spec.expect == Expectation::Rejected,
                 },
                 Ok(id) => match engine.take_finished_request(id) {
@@ -696,6 +763,7 @@ impl Scenario {
                             latency_ns: req.latency_ns(),
                             finish: req.finish,
                             preemptions: req.preemptions,
+                            timeline: req.timeline(),
                             output: req.output,
                             expect_ok: outcome == spec.expect.as_str(),
                         }
@@ -711,6 +779,7 @@ impl Scenario {
                         ttft_ns: None,
                         latency_ns: None,
                         preemptions: 0,
+                        timeline: TimelineSummary::default(),
                         expect_ok: spec.expect == Expectation::Failed,
                     },
                 },
@@ -746,12 +815,32 @@ impl Scenario {
                 ));
             }
         }
+        if let Some(maxw) = self.expect.max_queue_wait_ns {
+            for r in &sessions {
+                if let Some(w) = r.timeline.queue_wait_ns {
+                    if w > maxw {
+                        failures.push(format!(
+                            "session {}: queue wait {w} ns exceeds \
+                             expect_max_queue_wait_ns {maxw}",
+                            r.index
+                        ));
+                    }
+                }
+            }
+        }
+        let trace_out = engine.tracer.is_enabled().then(|| TraceArtifacts {
+            chrome_json: chrome_trace_json(&engine.tracer),
+            jsonl: events_jsonl(&engine.tracer),
+            recorded: engine.tracer.recorded(),
+            dropped: engine.tracer.dropped(),
+        });
         Ok(ScenarioReport {
             scenario: self.name.clone(),
             numerics: self.numerics,
             chunk,
             sessions,
             metrics: engine.metrics.clone(),
+            trace: trace_out,
             expect_failures: failures,
         })
     }
@@ -794,8 +883,10 @@ chunk 16
 max_batch 4
 kv_dtype q8
 pool_bytes 65536
+trace on
 expect_min_preemptions 0
 expect_max_preemptions 0
+expect_max_queue_wait_ns 100000000
 
 session arrive=0 prompt=rand:40:1 gen=4 expect=done
 session arrive=500 prompt=tokens:1,2,3 gen=2 seed=9 temp=0.8 top_k=8 stop=5,6|7
@@ -811,7 +902,9 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert_eq!(sc.max_batch, Some(4));
         assert_eq!(sc.kv_dtype, Some(KvDtype::Q8));
         assert_eq!(sc.pool_bytes, Some(65536));
+        assert!(sc.trace);
         assert_eq!(sc.expect.max_preemptions, Some(0));
+        assert_eq!(sc.expect.max_queue_wait_ns, Some(100_000_000));
         assert_eq!(sc.sessions.len(), 3);
         assert_eq!(sc.sessions[0].prompt.len(), 40);
         assert_eq!(sc.sessions[1].arrive_ns, 500);
@@ -876,6 +969,48 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         // synthetic numerics never pool, so the dtype gauge stays default
         assert!(json.contains("\"kv_dtype\":\"f32\""));
         assert!(json.contains("\"kv_bytes_per_token\":0"));
+        // per-session phase breakdowns travel in the session objects
+        assert!(json.contains("\"queue_wait_ns\":"));
+        assert!(json.contains("\"prefill_ns\":"));
+        assert!(json.contains("\"decode_ns\":"));
+        // `trace on` produced artifacts and the summary counts
+        let trace = report.trace.as_ref().expect("trace on");
+        assert!(trace.recorded > 0);
+        assert!(trace.chrome_json.contains("\"traceEvents\""));
+        assert!(trace.jsonl.lines().count() > 0);
+        assert!(json.contains("\"trace\":{\"recorded\":"));
+    }
+
+    #[test]
+    fn tracing_is_invisible_to_the_report() {
+        let sc = Scenario::parse(SCRIPT).unwrap();
+        let traced = sc.run_with_opts(sc.chunk, true, None).unwrap();
+        let untraced = sc.run_with_opts(sc.chunk, false, None).unwrap();
+        assert!(untraced.trace.is_none());
+        for (a, b) in traced.sessions.iter().zip(&untraced.sessions) {
+            assert_eq!(a.output, b.output, "tracing must not change tokens");
+            assert_eq!(a.ttft_ns, b.ttft_ns);
+            assert_eq!(a.latency_ns, b.latency_ns);
+            assert_eq!(a.timeline, b.timeline);
+        }
+        assert_eq!(traced.metrics.sim_time_ns, untraced.metrics.sim_time_ns);
+    }
+
+    #[test]
+    fn queue_wait_ceiling_failure_is_reported() {
+        // max_batch 1 forces session 1 to queue behind session 0's whole
+        // generation; a 0 ns ceiling must flag that wait
+        let text = "scenario qw\nnumerics synthetic\nmax_batch 1\n\
+                    expect_max_queue_wait_ns 0\n\
+                    session arrive=0 prompt=rand:8:1 gen=2 expect=done\n\
+                    session arrive=0 prompt=rand:8:2 gen=2 expect=done\n";
+        let sc = Scenario::parse(text).unwrap();
+        let report = sc.run(None).unwrap();
+        assert!(
+            report.expect_failures.iter().any(|f| f.contains("queue wait")),
+            "expected a queue-wait failure, got {:?}",
+            report.expect_failures
+        );
     }
 
     #[test]

@@ -2,12 +2,15 @@
 //!
 //! The image's crate registry is offline, so `proptest`/`quickcheck` are
 //! unavailable; this module provides the subset we need: a SplitMix64 PRNG
-//! (stable across platforms), value generators, and a `forall` driver that
-//! reports the failing seed + case for reproduction.
+//! (stable across platforms), value generators, a `forall` driver that
+//! reports the failing seed + case for reproduction, and a strict JSON
+//! reader ([`json::Json`]) for checking the hand-rolled writers.
 
+pub mod json;
 pub mod prop;
 pub mod rng;
 
+pub use json::Json;
 pub use prop::{forall, Config};
 pub use rng::SplitMix64;
 

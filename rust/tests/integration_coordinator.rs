@@ -28,7 +28,7 @@ fn mixed_workload_completes() {
     assert_eq!(e.metrics.requests_done, 12);
     assert_eq!(e.metrics.decode_tokens, expected_decode);
     assert_eq!(e.kv.live_requests(), 0);
-    assert_eq!(e.metrics.latencies_ns.len(), 12);
+    assert_eq!(e.metrics.latency.count(), 12);
 }
 
 #[test]

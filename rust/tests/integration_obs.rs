@@ -1,0 +1,200 @@
+//! Observability e2e (ISSUE 8): the structured-tracing layer must be
+//! bitwise-invisible to serving results, and its exported documents must
+//! be well-formed against an independent reader — the Chrome trace with
+//! balanced, name-matched B/E stacks and monotone per-track timestamps,
+//! the JSONL log round-tripping every surviving ring event, and the
+//! per-session timeline phases summing to the reported latency.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use leap::obs::{chrome_trace_json, events_jsonl, EventKind, Tracer};
+use leap::scenario::Scenario;
+use leap::testutil::Json;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+const SYNTH_SCRIPT: &str = "\
+scenario obs_synth
+numerics synthetic
+chunk 16
+max_batch 2
+session arrive=0 prompt=rand:40:1 gen=6 expect=done
+session arrive=0 prompt=rand:8:2 gen=4 expect=done
+session arrive=500 prompt=rand:12:3 gen=3 expect=done
+";
+
+/// Parse a report JSON and drop the `trace` summary — the only key that
+/// may legitimately differ between a traced and an untraced run.
+fn report_sans_trace(json: &str) -> Json {
+    let parsed = Json::parse(json).expect("report JSON parses");
+    let mut obj = parsed.as_obj().expect("report is an object").clone();
+    obj.remove("trace");
+    Json::Obj(obj)
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_to_the_scenario_report() {
+    let sc = Scenario::parse(SYNTH_SCRIPT).unwrap();
+    let traced = sc.run_with_opts(sc.chunk, true, None).unwrap();
+    let untraced = sc.run_with_opts(sc.chunk, false, None).unwrap();
+    assert_eq!(
+        report_sans_trace(&traced.to_json()),
+        report_sans_trace(&untraced.to_json()),
+        "tracing changed the report"
+    );
+    let t = traced.trace.as_ref().expect("traced run carries artifacts");
+    assert!(t.recorded > 0);
+    let parsed = Json::parse(&traced.to_json()).unwrap();
+    assert!(parsed.get("trace").unwrap().get("recorded").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(Json::parse(&untraced.to_json()).unwrap().get("trace"), Some(&Json::Null));
+}
+
+/// The committed `prefix_storm.scn` (the scenario CI validates and
+/// uploads) must produce a Chrome trace an independent parser accepts:
+/// every `B` closed by a name-matched `E` on the same track, per-track
+/// timestamps monotone, a `thread_name` for every used track, and one
+/// session track per request.
+#[test]
+fn prefix_storm_chrome_trace_is_well_formed() {
+    let sc = Scenario::load(scenarios_dir().join("prefix_storm.scn")).unwrap();
+    assert!(sc.trace, "prefix_storm.scn must script `trace on` for the CI artifact");
+    let report = sc.run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    let trace = report.trace.as_ref().expect("traced scenario carries artifacts");
+
+    let doc = Json::parse(&trace.chrome_json).expect("Chrome trace JSON parses");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let mut named_tids: Vec<u64> = Vec::new();
+    let mut used_tids: Vec<u64> = Vec::new();
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("every record has ph");
+        let tid = ev.get("tid").and_then(Json::as_u64).expect("every record has tid");
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("every record has ts");
+        let name = ev.get("name").and_then(Json::as_str).expect("every record has name");
+        if ph == "M" {
+            if name == "thread_name" {
+                named_tids.push(tid);
+            }
+            continue;
+        }
+        used_tids.push(tid);
+        let prev = last_ts.insert(tid, ts).unwrap_or(f64::MIN);
+        assert!(ts >= prev, "tid {tid}: ts went backwards ({prev} -> {ts})");
+        match ph {
+            "B" => stacks.entry(tid).or_default().push(name.to_string()),
+            "E" => {
+                let open = stacks
+                    .get_mut(&tid)
+                    .and_then(|s| s.pop())
+                    .unwrap_or_else(|| panic!("tid {tid}: E '{name}' with no open span"));
+                assert_eq!(open, name, "tid {tid}: E closes the wrong span");
+            }
+            "i" | "C" => {}
+            other => panic!("unexpected phase '{other}'"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid}: unclosed spans {stack:?}");
+    }
+    for tid in &used_tids {
+        assert!(named_tids.contains(tid), "tid {tid} used without thread_name metadata");
+    }
+    // one timeline track per session: the storm admits 8 requests
+    let sessions = named_tids.iter().filter(|&&t| (1000..2000).contains(&t)).count();
+    assert_eq!(sessions, 8, "expected one session track per request");
+}
+
+#[test]
+fn jsonl_round_trips_through_an_independent_parser() {
+    let mut t = Tracer::enabled(64);
+    t.emit(0, Some(3), EventKind::Submit { prompt_tokens: 8, max_new_tokens: 4 });
+    t.emit(10, Some(3), EventKind::Admitted { wait_ns: 10, readmission: false });
+    t.emit(10, Some(3), EventKind::PrefillChunk { start: 0, len: 8, last: true, dur_ns: 30 });
+    t.emit(40, None, EventKind::EngineStep { round: 1, dur_ns: 40, running: 1, waiting: 0 });
+    t.emit(90, Some(3), EventKind::Finish { outcome: "done", reason: "length", output_tokens: 4 });
+
+    let text = events_jsonl(&t);
+    let events = t.events();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for (line, ev) in lines.iter().zip(&events) {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e}\n{line}"));
+        assert_eq!(j.get("seq").unwrap().as_u64(), Some(ev.seq));
+        assert_eq!(j.get("sim_ns").unwrap().as_u64(), Some(ev.sim_ns));
+        assert_eq!(j.get("host_ns").unwrap().as_u64(), Some(ev.host_ns));
+        match ev.request() {
+            Some(id) => assert_eq!(j.get("req").unwrap().as_u64(), Some(id)),
+            None => assert_eq!(j.get("req"), Some(&Json::Null)),
+        }
+        assert_eq!(j.get("kind").unwrap().as_str(), Some(ev.kind.name()));
+    }
+    // spot-check one flattened payload field survived the round trip
+    let first = Json::parse(lines[0]).unwrap();
+    assert_eq!(first.get("prompt_tokens").unwrap().as_u64(), Some(8));
+}
+
+#[test]
+fn ring_wrap_keeps_newest_events_and_counts_drops() {
+    let mut t = Tracer::enabled(16);
+    for i in 0..40u64 {
+        t.emit(i * 100, None, EventKind::EngineStep { round: i, dur_ns: 50, running: 0, waiting: 0 });
+    }
+    assert_eq!(t.recorded(), 40);
+    assert_eq!(t.dropped(), 24);
+    let events = t.events();
+    assert_eq!(events.len(), 16);
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (24..40).collect::<Vec<u64>>(), "ring keeps the newest, in seq order");
+
+    // a wrapped ring still exports a parseable, balanced Chrome trace
+    // whose drop count is advertised in the envelope
+    let doc = Json::parse(&chrome_trace_json(&t)).unwrap();
+    let (mut b, mut e) = (0, 0);
+    for ev in doc.get("traceEvents").and_then(Json::as_arr).unwrap() {
+        match ev.get("ph").and_then(Json::as_str) {
+            Some("B") => b += 1,
+            Some("E") => e += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(b, 16);
+    assert_eq!(b, e);
+    assert_eq!(doc.get("otherData").unwrap().get("dropped").unwrap().as_u64(), Some(24));
+}
+
+#[test]
+fn session_timeline_phases_sum_to_latency_in_the_report_json() {
+    let sc = Scenario::parse(SYNTH_SCRIPT).unwrap();
+    let report = sc.run(None).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    let doc = Json::parse(&report.to_json()).unwrap();
+    let sessions = doc.get("sessions").and_then(Json::as_arr).unwrap();
+    assert_eq!(sessions.len(), 3);
+    let mut queued = 0u64;
+    for s in sessions {
+        assert_eq!(s.get("outcome").unwrap().as_str(), Some("done"));
+        let latency = s.get("latency_ns").unwrap().as_u64().unwrap();
+        let queue_wait = s.get("queue_wait_ns").unwrap().as_u64().unwrap();
+        let prefill = s.get("prefill_ns").unwrap().as_u64().unwrap();
+        let decode = s.get("decode_ns").unwrap().as_u64().unwrap();
+        assert_eq!(
+            queue_wait + prefill + decode,
+            latency,
+            "timeline phases must account for the whole latency"
+        );
+        queued += queue_wait;
+    }
+    // max_batch 2 with three concurrent-ish arrivals: someone waited
+    assert!(queued > 0, "expected nonzero queue wait under max_batch 2");
+}

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Structural validator for exported Chrome trace-event JSON.
+
+CI runs this over every ``*.trace.json`` the scenario suite writes (see
+``leap scenario --trace-dir``); it is the independent check that the
+hand-rolled exporter emits documents Perfetto/chrome://tracing will
+actually load. Checks, per file:
+
+- top level is an object with a non-empty ``traceEvents`` array;
+- every record carries ``ph``, ``ts``, ``pid``, ``tid``, ``name``;
+- per track (``tid``), timestamps are monotone non-decreasing;
+- per track, ``B``/``E`` records balance as a stack and every ``E``
+  names the span it closes (Perfetto rejects mismatches);
+- every track that carries timeline records has ``thread_name``
+  metadata;
+- at least one per-session track exists (tid in [1000, 2000) — the
+  exporter's session-track band).
+
+Exit status: 0 if every file passes, 1 otherwise (with one line per
+violation). Usage: ``validate_trace.py TRACE.json [TRACE.json ...]``.
+"""
+
+import json
+import sys
+
+SESSION_TID_LO = 1000
+SESSION_TID_HI = 2000
+KNOWN_PHASES = {"B", "E", "i", "C", "M"}
+
+
+def validate(path):
+    """Return a list of violation strings for one trace file."""
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: missing or empty traceEvents array"]
+
+    named_tids = set()
+    used_tids = set()
+    stacks = {}  # tid -> [open span names]
+    last_ts = {}  # tid -> last timestamp seen
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        missing = [k for k in ("ph", "ts", "pid", "tid", "name") if k not in ev]
+        if missing:
+            errors.append(f"{where}: missing fields {missing}")
+            continue
+        ph, tid, ts, name = ev["ph"], ev["tid"], ev["ts"], ev["name"]
+        if ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            if name == "thread_name":
+                named_tids.add(tid)
+            continue
+        used_tids.add(tid)
+        if ts < last_ts.get(tid, float("-inf")):
+            errors.append(
+                f"{where}: tid {tid} timestamp went backwards "
+                f"({last_ts[tid]} -> {ts})"
+            )
+        last_ts[tid] = ts
+        if ph == "B":
+            stacks.setdefault(tid, []).append(name)
+        elif ph == "E":
+            stack = stacks.setdefault(tid, [])
+            if not stack:
+                errors.append(f"{where}: tid {tid} E {name!r} with no open span")
+            elif stack[-1] != name:
+                errors.append(
+                    f"{where}: tid {tid} E {name!r} closes open span "
+                    f"{stack[-1]!r}"
+                )
+                stack.pop()
+            else:
+                stack.pop()
+
+    for tid, stack in sorted(stacks.items()):
+        if stack:
+            errors.append(f"{path}: tid {tid} ends with unclosed spans {stack}")
+    for tid in sorted(used_tids - named_tids):
+        errors.append(f"{path}: tid {tid} has records but no thread_name metadata")
+    if not any(SESSION_TID_LO <= t < SESSION_TID_HI for t in used_tids):
+        errors.append(f"{path}: no per-session track (tid in [1000, 2000))")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv[1:]:
+        errors = validate(path)
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"FAIL {e}")
+        else:
+            print(f"OK   {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
