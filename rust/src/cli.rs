@@ -89,6 +89,22 @@ COMMANDS
                [--events-out FILE]  JSONL event log, one event per line
                [--metrics-out FILE] Prometheus text exposition of the
                                     run's final metrics
+               [--journal DIR] (crash-safe session journal: every submit/
+                admit/token/preempt/finish is appended to DIR and
+                periodically compacted into a checkpoint; replay with
+                `leap recover`) [--checkpoint-every N] [--fsync always|
+                never] (journal durability; default never)
+               [--spill DIR|true] (spill preempted sessions' KV blocks to
+                disk and restore them at readmission instead of
+                re-prefilling — oversubscription mode; bare --spill uses
+                <journal>/spill; enables spill-aware admission)
+  recover      --journal DIR [--model tiny --numerics ref|synthetic
+               --artifacts DIR --kv-dtype ... --chunk N  (match the
+                crashed run's engine flags)]
+               (rebuild sessions from checkpoint + journal tail, print
+                finished streams, continue unfinished ones — with the
+                reference backend bitwise-identically to the lost run —
+                and re-journal the continuation into DIR)
   scenario     --script FILE.scn | --suite DIR
                [--json-dir DIR] [--artifacts DIR] [--ab-chunk true]
                [--trace true] (force tracing even if the script omits
@@ -113,6 +129,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     let args = Args::parse(argv);
     match args.command.as_str() {
         "serve" => cmd_serve(&args),
+        "recover" => cmd_recover(&args),
         "scenario" => cmd_scenario(&args),
         "simulate" => cmd_simulate(&args),
         "map-explore" => cmd_map_explore(&args),
@@ -133,11 +150,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     }
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+/// Build a serving engine from the shared engine knobs (--model,
+/// --numerics, --artifacts, --kv-dtype, --chunk) — `serve` and `recover`
+/// must agree on these for recovery to continue the same numerics.
+fn build_engine(args: &Args) -> anyhow::Result<ServingEngine> {
     let preset = args.model()?;
-    let n_requests = args.get_usize("requests", 8);
-    let prompt_len = args.get_usize("prompt", 64);
-    let gen = args.get_usize("gen", 32);
     let default_numerics = if preset == ModelPreset::Tiny { "ref" } else { "synthetic" };
     let which = args.get("numerics", default_numerics);
     let artifacts = || -> anyhow::Result<std::path::PathBuf> {
@@ -185,9 +202,46 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         policy: BatchPolicy::default(),
         numerics,
     })?;
-    // chunked prefill (omit = monolithic) and per-request sampling knobs;
-    // --temp 0 (the default) is exact greedy decode
+    // chunked prefill (omit = monolithic)
     engine.prefill_chunk = args.options.get("chunk").and_then(|v| v.parse().ok());
+    Ok(engine)
+}
+
+/// Wire the durability flags (--journal, --checkpoint-every, --fsync,
+/// --spill) into an engine. When recovering, call
+/// [`crate::persist::reconstruct`] *before* this: `Journal::create`
+/// truncates the directory's previous journal.
+fn attach_durability(engine: &mut ServingEngine, args: &Args) -> anyhow::Result<()> {
+    use crate::persist::{FsyncPolicy, Journal, SpillStore, DEFAULT_CHECKPOINT_EVERY};
+    let journal_dir = args.options.get("journal").map(std::path::PathBuf::from);
+    if let Some(dir) = &journal_dir {
+        let fsync_arg = args.get("fsync", "never");
+        let fsync = FsyncPolicy::parse(&fsync_arg)
+            .ok_or_else(|| anyhow::anyhow!("--fsync {fsync_arg}: expected always or never"))?;
+        let every = args.get_u64("checkpoint-every", DEFAULT_CHECKPOINT_EVERY);
+        engine.journal = Some(Journal::create(dir, fsync, every)?);
+    }
+    if let Some(spec) = args.options.get("spill") {
+        let dir = if spec == "true" {
+            journal_dir.as_ref().map(|d| d.join("spill")).ok_or_else(|| {
+                anyhow::anyhow!("bare --spill needs --journal DIR (or pass --spill DIR)")
+            })?
+        } else {
+            std::path::PathBuf::from(spec)
+        };
+        engine.spill = Some(SpillStore::create(&dir)?);
+        engine.admission.spill_aware = true;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    let preset = args.model()?;
+    let n_requests = args.get_usize("requests", 8);
+    let prompt_len = args.get_usize("prompt", 64);
+    let gen = args.get_usize("gen", 32);
+    let mut engine = build_engine(args)?;
+    attach_durability(&mut engine, args)?;
     // Any trace output path implies tracing; --trace true enables it on
     // its own (counters still print even with nowhere to export).
     let trace_out = args.options.get("trace-out").map(std::path::PathBuf::from);
@@ -260,6 +314,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
             m.preemptions
         );
     }
+    if m.kv_spills > 0 || m.sessions_recovered > 0 {
+        println!(
+            "kv spill        : {} spills / {} blocks ({} B written, {} B read), \
+             {} sessions recovered",
+            m.kv_spills,
+            m.kv_spilled_blocks,
+            m.spill_bytes_written,
+            m.spill_bytes_read,
+            m.sessions_recovered
+        );
+    }
     // Naive-mode (and LEAP_THREADS=1) backends hold a lane-less stub pool
     // that never dispatches — only report a pool that can actually engage.
     if m.pool_threads > 1 || m.pool_dispatches > 0 {
@@ -292,6 +357,65 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         println!("metrics-out     : {}", p.display());
     }
     Ok(0)
+}
+
+fn cmd_recover(args: &Args) -> anyhow::Result<i32> {
+    let dir = std::path::PathBuf::from(
+        args.options
+            .get("journal")
+            .ok_or_else(|| anyhow::anyhow!("recover needs --journal DIR"))?,
+    );
+    let state = crate::persist::reconstruct(&dir)?;
+    println!(
+        "journal         : {} sessions ({} unfinished), checkpoint covers {}, \
+         {} tail records{}",
+        state.sessions.len(),
+        state.unfinished().count(),
+        state.checkpoint_covers,
+        state.replay_events,
+        if state.torn_tail { ", torn tail (crash mid-write)" } else { "" }
+    );
+    let mut engine = build_engine(args)?;
+    // re-journal the continuation into the same directory — safe only
+    // because reconstruct() above already read the crashed history
+    attach_durability(&mut engine, args)?;
+    engine.metrics.recovery_replay_events = state.replay_events;
+    let mut resumed = Vec::new();
+    for s in &state.sessions {
+        if s.finished {
+            let status = if s.failed { "failed, journaled" } else { "done, journaled" };
+            println!("session {:>4}    : [{status}] {}", s.id, join_tokens(&s.output));
+        } else {
+            match engine.resubmit_recovered(s.prompt.clone(), s.gen.clone(), s.output.clone()) {
+                Ok(id) => resumed.push((s.id, id)),
+                Err(err) => println!("session {:>4}    : resubmit rejected: {err}", s.id),
+            }
+        }
+    }
+    engine.run_until_idle()?;
+    for (orig, id) in resumed {
+        match engine.take_finished_request(id) {
+            Some(r) => {
+                let status = if r.state == crate::coordinator::RequestState::Done {
+                    "recovered"
+                } else {
+                    "failed"
+                };
+                println!("session {orig:>4}    : [{status}] {}", join_tokens(&r.output));
+            }
+            None => println!("session {orig:>4}    : lost after resubmit"),
+        }
+    }
+    let m = &engine.metrics;
+    println!(
+        "recovered       : {} sessions continued, {} replay records, {} decode tokens",
+        m.sessions_recovered, m.recovery_replay_events, m.decode_tokens
+    );
+    Ok(0)
+}
+
+fn join_tokens(tokens: &[i32]) -> String {
+    tokens.iter().map(i32::to_string).collect::<Vec<_>>().join(",")
 }
 
 fn cmd_scenario(args: &Args) -> anyhow::Result<i32> {
@@ -623,6 +747,35 @@ mod tests {
         assert!(jsonl.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
         let prom = std::fs::read_to_string(&metrics).unwrap();
         assert!(prom.contains("leap_requests_done_total 2"), "prom counters:\n{prom}");
+    }
+
+    #[test]
+    fn serve_journal_then_recover_reports_finished_streams() {
+        let dir = std::env::temp_dir().join("leap_cli_recover_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let jdir = dir.join("journal");
+        let cmd = format!(
+            "serve --model 1b --numerics synthetic --requests 3 --prompt 8 --gen 4 \
+             --journal {} --checkpoint-every 5 --fsync always",
+            jdir.display()
+        );
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let state = crate::persist::reconstruct(&jdir).unwrap();
+        assert_eq!(state.sessions.len(), 3, "every request journaled");
+        assert!(state.sessions.iter().all(|s| s.finished), "clean run journals all finishes");
+        assert!(state.checkpoint_covers >= 5, "--checkpoint-every 5 compacted");
+        // recover replays the journal and reports the finished streams
+        let cmd = format!("recover --journal {} --model 1b --numerics synthetic", jdir.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        // a bogus fsync policy is a typed error
+        let cmd = format!("serve --model 1b --numerics synthetic --requests 1 --prompt 4 \
+             --gen 2 --journal {} --fsync sometimes", jdir.display());
+        assert!(run(&argv(&cmd)).is_err());
+        // bare --spill without --journal is a typed error too
+        assert!(run(&argv("serve --model 1b --numerics synthetic --requests 1 \
+             --prompt 4 --gen 2 --spill")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -28,12 +28,13 @@ use crate::isa::Npm;
 use crate::kvcache::{AdmissionDecision, AdmissionPolicy};
 use crate::model::ModelPreset;
 use crate::obs::{self, EventKind, Level, Tracer};
+use crate::persist::{Journal, JournalRecord, SpillStore};
 use crate::runtime::{NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
 use crate::sim::AnalyticalSim;
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::generation::{sample, GenerationConfig};
+use super::generation::{match_stop, sample, GenerationConfig};
 use super::kv::KvManager;
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, RequestId, RequestState};
@@ -157,6 +158,21 @@ impl NextToken {
     }
 }
 
+/// Append one record to the journal, if journaling is on. A free function
+/// so partially-borrowed engine scopes can call it; a failed write
+/// degrades durability, not serving: log and keep going.
+fn journal_rec(journal: &mut Option<Journal>, rec: JournalRecord) {
+    if let Some(j) = journal.as_mut() {
+        if let Err(err) = j.record(&rec) {
+            obs::stderr_log(
+                Level::Warn,
+                "journal_write_error",
+                format_args!("journal append failed (durability degraded): {err:#}"),
+            );
+        }
+    }
+}
+
 /// The serving engine.
 pub struct ServingEngine {
     pub compiled: CompiledModel,
@@ -183,6 +199,13 @@ pub struct ServingEngine {
     /// back into scheduling or numerics, so token streams are bitwise
     /// identical either way (`tests/integration_obs.rs`).
     pub tracer: Tracer,
+    /// Crash-safe session journal ([`crate::persist`]). `None` (default)
+    /// = durability off: no file I/O, no clones on the submit path.
+    pub journal: Option<Journal>,
+    /// KV spill-to-disk store: preempted sessions write their cached rows
+    /// to a per-session file and readmission restores them — zero
+    /// re-prefilled tokens. `None` (default) = the recompute discipline.
+    pub spill: Option<SpillStore>,
     numerics: Numerics,
     next_id: RequestId,
     /// Simulated clock, ns.
@@ -210,6 +233,8 @@ impl ServingEngine {
             admission: AdmissionPolicy::default(),
             prefill_chunk: None,
             tracer: Tracer::disabled(),
+            journal: None,
+            spill: None,
             numerics: cfg.numerics,
             next_id: 0,
             now_ns: 0,
@@ -256,7 +281,93 @@ impl ServingEngine {
                 max_new_tokens: gen.max_new_tokens as u32,
             },
         );
+        if self.journal.is_some() {
+            journal_rec(
+                &mut self.journal,
+                JournalRecord::Submit { id, prompt: prompt.clone(), gen: gen.clone() },
+            );
+        }
         self.batcher.submit(Request::with_gen(id, prompt, gen, self.now_ns));
+        Ok(id)
+    }
+
+    /// Re-enter one session recovered from a journal
+    /// ([`crate::persist::reconstruct`]): validate like a fresh submit,
+    /// journal the known history into *this* engine's journal (if any),
+    /// and either finish the stream immediately (the crash cut between
+    /// the terminal token and its `Finish` record — the termination rules
+    /// are re-applied here) or queue it to continue decoding. With the
+    /// reference backend the continuation is bitwise-identical to the
+    /// uninterrupted run: the sampler is counter-based per `(seed, step)`
+    /// and re-prefilling `prompt ++ emitted` reproduces the exact logits
+    /// the lost process would have seen next.
+    pub fn resubmit_recovered(
+        &mut self,
+        prompt: Vec<i32>,
+        gen: GenerationConfig,
+        emitted: Vec<i32>,
+    ) -> Result<RequestId, SubmitError> {
+        if let Err(err) =
+            gen.validate().and_then(|()| self.validate_submit(&prompt, gen.max_new_tokens))
+        {
+            self.metrics.requests_rejected += 1;
+            self.tracer.emit(self.now_ns, None, EventKind::Reject { reason: err.code() });
+            return Err(err);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = self.now_ns;
+        self.metrics.sessions_recovered += 1;
+        self.tracer.emit(
+            now,
+            Some(id),
+            EventKind::Recovered {
+                prompt_tokens: prompt.len() as u32,
+                tokens: emitted.len() as u32,
+            },
+        );
+        if self.journal.is_some() {
+            journal_rec(
+                &mut self.journal,
+                JournalRecord::Submit { id, prompt: prompt.clone(), gen: gen.clone() },
+            );
+            for &t in &emitted {
+                journal_rec(&mut self.journal, JournalRecord::Token { id, token: t });
+            }
+        }
+        let mut req = Request::with_gen(id, prompt, gen, now);
+        req.output = emitted;
+        if !req.output.is_empty() {
+            req.t_first_token_ns = Some(now);
+        }
+        if let Some(n) = match_stop(&req.output, &req.gen.stop) {
+            req.output.truncate(req.output.len() - n);
+            req.finish_with(FinishReason::Stop, now);
+        } else if req.output.len() >= req.gen.max_new_tokens {
+            req.finish_with(FinishReason::Length, now);
+        }
+        if req.is_finished() {
+            self.metrics.requests_done += 1;
+            if req.finish == Some(FinishReason::Stop) {
+                self.metrics.requests_stopped += 1;
+            }
+            journal_rec(
+                &mut self.journal,
+                JournalRecord::Finish { id, failed: false, output_len: req.output.len() as u64 },
+            );
+            self.tracer.emit(
+                now,
+                Some(id),
+                EventKind::Finish {
+                    outcome: "done",
+                    reason: req.finish.map_or("length", FinishReason::as_str),
+                    output_tokens: req.output.len() as u32,
+                },
+            );
+            self.completed.push(req);
+            return Ok(id);
+        }
+        self.batcher.submit(req);
         Ok(id)
     }
 
@@ -468,6 +579,17 @@ impl ServingEngine {
         for mut req in rejected {
             req.t_done_ns = Some(now);
             self.metrics.requests_failed += 1;
+            journal_rec(
+                &mut self.journal,
+                JournalRecord::Finish {
+                    id: req.id,
+                    failed: true,
+                    output_len: req.output.len() as u64,
+                },
+            );
+            if let Some(store) = self.spill.as_mut() {
+                store.discard(req.id);
+            }
             self.tracer.emit(
                 now,
                 Some(req.id),
@@ -484,6 +606,7 @@ impl ServingEngine {
             if !admitted.contains(&r.id) {
                 continue;
             }
+            journal_rec(&mut self.journal, JournalRecord::Admit { id: r.id });
             let readmission = r.preemptions > 0;
             if r.t_admitted_ns.is_none() {
                 r.t_admitted_ns = Some(now);
@@ -539,6 +662,72 @@ impl ServingEngine {
                     continue;
                 }
             }
+            // --- spill restore ---------------------------------------
+            // A readmitted preemption victim whose KV rows went to disk
+            // replays the file into the pool instead of re-prefilling.
+            // The image holds `prompt ++ output[..len-1]` rows — the last
+            // generated token never entered the cache — so a valid image
+            // has exactly one row fewer than the resume context. Any
+            // failure (corrupt file, pool too tight, shape drift) falls
+            // through to the normal re-prefill below: spilling is an
+            // optimisation, never a correctness dependency.
+            if prefilled == 0 {
+                if let Some((img, bytes)) = self.take_spill(id) {
+                    let rows = img.rows;
+                    let restored = rows + 1 == tokens.len()
+                        && match &mut self.numerics {
+                            Numerics::Backend(backend) => {
+                                match backend.kv_restore(id, &tokens[..rows], &img) {
+                                    Ok(()) => true,
+                                    Err(err) => {
+                                        obs::stderr_log(
+                                            Level::Warn,
+                                            "spill_restore_error",
+                                            format_args!(
+                                                "restore of request {id} failed; \
+                                                 re-prefilling: {err:#}"
+                                            ),
+                                        );
+                                        false
+                                    }
+                                }
+                            }
+                            Numerics::Synthetic { .. } => false,
+                        };
+                    if restored {
+                        // simulated disk-read cost (8 bytes/ns + one seek),
+                        // charged to this request's clock like any dispatch
+                        let t0 = self.now_ns;
+                        let dur = bytes / 8 + 1;
+                        self.now_ns += dur;
+                        self.metrics.sim_time_ns += dur;
+                        self.metrics.spill_bytes_read += bytes;
+                        let blocks = match &self.numerics {
+                            Numerics::Backend(backend) => {
+                                backend.kv_admit_demand(rows).unwrap_or(0)
+                            }
+                            Numerics::Synthetic { .. } => 0,
+                        } as u32;
+                        self.tracer.emit(
+                            t0,
+                            Some(id),
+                            EventKind::Restore { blocks, bytes, dur_ns: dur },
+                        );
+                        if let Some(r) =
+                            self.batcher.running_mut().iter_mut().find(|r| r.id == id)
+                        {
+                            r.prefilled = tokens.len();
+                            r.state = RequestState::Decoding;
+                            r.restore_ns += dur;
+                        }
+                        // no token resolves this step — the decode round
+                        // below feeds `output.last()` exactly as the
+                        // uninterrupted run's next round would have
+                        continue;
+                    }
+                }
+            }
+
             let chunked = chunk_cfg.is_some()
                 && match &self.numerics {
                     Numerics::Backend(backend) => backend.supports_chunked_prefill(),
@@ -648,6 +837,7 @@ impl ServingEngine {
                 // (0 for a fresh request, the resume step after preemption)
                 let had_first = r.t_first_token_ns.is_some();
                 let token = next.resolve(r);
+                journal_rec(&mut self.journal, JournalRecord::Token { id, token });
                 finished = r.accept_token(token, now);
                 if !had_first {
                     // saturating: a 1-token stop-sequence match can leave
@@ -678,7 +868,7 @@ impl ServingEngine {
         // early at worst, never a round late.
         {
             let now = self.now_ns;
-            let Self { batcher, kv, numerics, metrics, tracer, .. } = self;
+            let Self { batcher, kv, numerics, metrics, tracer, journal, spill, .. } = self;
             if let Numerics::Backend(backend) = numerics {
                 if backend.kv_pool_stats().is_some() {
                     loop {
@@ -737,6 +927,36 @@ impl ServingEngine {
                                 free_blocks: free as u32,
                             },
                         );
+                        journal_rec(journal, JournalRecord::Preempt { id: victim });
+                        // spill the victim's KV rows before releasing them:
+                        // readmission then restores from disk instead of
+                        // re-prefilling. A failed write just logs — the
+                        // recompute path is always there to fall back on.
+                        if let Some(store) = spill.as_mut() {
+                            if let Some(img) = backend.kv_spill(victim) {
+                                let blocks = backend.kv_admit_demand(img.rows).unwrap_or(0);
+                                match store.write(victim, &img) {
+                                    Ok(bytes) => {
+                                        metrics.kv_spills += 1;
+                                        metrics.kv_spilled_blocks += blocks as u64;
+                                        metrics.spill_bytes_written += bytes;
+                                        tracer.emit(
+                                            now,
+                                            Some(victim),
+                                            EventKind::Spill { blocks: blocks as u32, bytes },
+                                        );
+                                    }
+                                    Err(err) => obs::stderr_log(
+                                        Level::Warn,
+                                        "spill_write_error",
+                                        format_args!(
+                                            "spill of request {victim} failed \
+                                             (will re-prefill): {err:#}"
+                                        ),
+                                    ),
+                                }
+                            }
+                        }
                         backend.release(victim);
                         kv.release(victim);
                         batcher.preempt(victim);
@@ -831,6 +1051,7 @@ impl ServingEngine {
             let mut finished = false;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 let token = next.resolve(r);
+                journal_rec(&mut self.journal, JournalRecord::Token { id, token });
                 finished = r.accept_token(token, now);
             }
             if !finished {
@@ -861,6 +1082,19 @@ impl ServingEngine {
             self.kv.release(done.id);
             if let Numerics::Backend(backend) = &mut self.numerics {
                 backend.release(done.id);
+            }
+            journal_rec(
+                &mut self.journal,
+                JournalRecord::Finish {
+                    id: done.id,
+                    failed: done.state != RequestState::Done,
+                    output_len: done.output.len() as u64,
+                },
+            );
+            // a session that finished while a spill file was pending (e.g.
+            // failed before readmission) must not leave the file behind
+            if let Some(store) = self.spill.as_mut() {
+                store.discard(done.id);
             }
             let (outcome, reason) = if done.state == RequestState::Done {
                 ("done", done.finish.map_or("length", FinishReason::as_str))
@@ -926,6 +1160,26 @@ impl ServingEngine {
         );
         self.metrics.host_time_ns += host_t0.elapsed().as_nanos() as u64;
         Ok(true)
+    }
+
+    /// Pop the spill image (and its on-disk byte count) waiting for `id`,
+    /// if any. Corrupt files are logged and dropped — the caller falls
+    /// back to re-prefill.
+    fn take_spill(&mut self, id: RequestId) -> Option<(crate::kvcache::SpillImage, u64)> {
+        let store = self.spill.as_mut()?;
+        let before = store.bytes_read;
+        match store.take(id) {
+            Ok(Some(img)) => Some((img, store.bytes_read - before)),
+            Ok(None) => None,
+            Err(err) => {
+                obs::stderr_log(
+                    Level::Warn,
+                    "spill_read_error",
+                    format_args!("spill file of request {id} unreadable; re-prefilling: {err:#}"),
+                );
+                None
+            }
+        }
     }
 
     /// Drive until every request completes; returns completed requests.

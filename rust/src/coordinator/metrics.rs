@@ -39,6 +39,21 @@ pub struct Metrics {
     /// `requests_done`).
     pub requests_stopped: u64,
 
+    // --- durability: spill-to-disk + crash recovery ---------------------
+    /// Preemptions whose KV rows were written to a spill file (subset of
+    /// `preemptions`; the rest were recompute-on-readmit).
+    pub kv_spills: u64,
+    /// KV blocks spilled to disk, cumulative over all spills.
+    pub kv_spilled_blocks: u64,
+    /// Bytes written to spill files.
+    pub spill_bytes_written: u64,
+    /// Bytes read back from spill files at readmission restore.
+    pub spill_bytes_read: u64,
+    /// Sessions rebuilt from a journal (`Engine::resubmit_recovered`).
+    pub sessions_recovered: u64,
+    /// Journal records replayed during recovery.
+    pub recovery_replay_events: u64,
+
     // --- paged-KV pool gauges (zero when the backend does not pool) -----
     /// Tokens per physical KV block.
     pub kv_block_size: usize,
@@ -182,6 +197,7 @@ mod tests {
             prefix_lookups: 8,
             prefix_hits: 6,
             cow_copies: 1,
+            spilled_blocks: 0,
         });
         // a later, quieter snapshot must not lower the peak
         m.observe_kv_pool(&PoolStats {
@@ -196,6 +212,7 @@ mod tests {
             prefix_lookups: 10,
             prefix_hits: 7,
             cow_copies: 2,
+            spilled_blocks: 0,
         });
         assert_eq!(m.kv_blocks_used, 2);
         assert_eq!(m.kv_dtype.as_str(), "q8");

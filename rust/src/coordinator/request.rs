@@ -60,6 +60,11 @@ pub struct Request {
     pub prefilled: usize,
     /// How many times this request has been preempted.
     pub preemptions: u32,
+    /// Simulated ns spent restoring spilled KV from disk at readmissions
+    /// (zero unless the engine runs a spill store). Restores happen after
+    /// the first token by construction, so the timeline carves this out
+    /// of the decode span.
+    pub restore_ns: u64,
     /// Set exactly once, when the request transitions to `Done`.
     pub finish: Option<FinishReason>,
     /// Simulated clock (ns) when the request arrived / prefilled / finished.
@@ -90,6 +95,7 @@ impl Request {
             output: Vec::new(),
             prefilled: 0,
             preemptions: 0,
+            restore_ns: 0,
             finish: None,
             t_arrive_ns: now_ns,
             t_first_token_ns: None,
@@ -163,9 +169,10 @@ impl Request {
                 _ => None,
             },
             decode_ns: match (self.t_first_token_ns, self.t_done_ns) {
-                (Some(f), Some(d)) => Some(d - f),
+                (Some(f), Some(d)) => Some((d - f).saturating_sub(self.restore_ns)),
                 _ => None,
             },
+            restore_ns: self.restore_ns,
             preemptions: self.preemptions,
         }
     }
@@ -174,16 +181,20 @@ impl Request {
 /// Phase breakdown of one request's lifetime, all in simulated ns.
 ///
 /// `queue_wait_ns` is arrival → **first** admission; `prefill_ns` is
-/// first admission → first token; `decode_ns` is first token → terminal
-/// state. Preemption/readmission churn after the first token (the blocks
-/// released, the queue wait, the re-prefill) all lands in `decode_ns` —
-/// the three phases always sum to the end-to-end latency once the
-/// request finishes. Fields are `None` until the phase boundary exists.
+/// first admission → first token; `restore_ns` is the simulated disk
+/// time spill-restore readmissions spent replaying KV (zero without a
+/// spill store); `decode_ns` is first token → terminal state minus the
+/// restores. Preemption/readmission churn after the first token (the
+/// blocks released, the queue wait, any re-prefill) all lands in
+/// `decode_ns` — the four phases always sum to the end-to-end latency
+/// once the request finishes. Optional fields are `None` until the phase
+/// boundary exists.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TimelineSummary {
     pub queue_wait_ns: Option<u64>,
     pub prefill_ns: Option<u64>,
     pub decode_ns: Option<u64>,
+    pub restore_ns: u64,
     pub preemptions: u32,
 }
 
@@ -244,15 +255,22 @@ mod tests {
         r.accept_token(7, 200);
         r.accept_token(8, 260);
         r.preemptions = 1;
+        // a spill-restore readmission spent 30 simulated ns on disk I/O:
+        // it carves out of the decode span, keeping the sum pinned
+        r.restore_ns = 30;
         r.accept_token(9, 400);
         let t = r.timeline();
         assert_eq!(t, TimelineSummary {
             queue_wait_ns: Some(40),
             prefill_ns: Some(60),
-            decode_ns: Some(200),
+            decode_ns: Some(170),
+            restore_ns: 30,
             preemptions: 1,
         });
-        let sum = t.queue_wait_ns.unwrap() + t.prefill_ns.unwrap() + t.decode_ns.unwrap();
+        let sum = t.queue_wait_ns.unwrap()
+            + t.prefill_ns.unwrap()
+            + t.restore_ns
+            + t.decode_ns.unwrap();
         assert_eq!(Some(sum), r.latency_ns());
     }
 

@@ -30,11 +30,16 @@ pub struct AdmissionPolicy {
     /// Keep at least this many blocks free after admitting (headroom so
     /// one decode round of boundary crossings doesn't immediately preempt).
     pub watermark_blocks: usize,
+    /// Preempted KV spills to disk instead of being recomputed. Preemption
+    /// then costs one disk round-trip, not a re-prefill, so the watermark
+    /// headroom is waived and the pool runs oversubscribed at full
+    /// occupancy — the point of the spill store.
+    pub spill_aware: bool,
 }
 
 impl Default for AdmissionPolicy {
     fn default() -> Self {
-        Self { reserve_output: false, watermark_blocks: 1 }
+        Self { reserve_output: false, watermark_blocks: 1, spill_aware: false }
     }
 }
 
@@ -58,11 +63,10 @@ impl AdmissionPolicy {
     /// every block — otherwise a request sized at exactly the pool could
     /// queue forever behind its own watermark.
     pub fn decide(&self, need_blocks: usize, free: usize, total: usize) -> AdmissionDecision {
+        let watermark = if self.spill_aware { 0 } else { self.watermark_blocks };
         if need_blocks > total {
             AdmissionDecision::Reject
-        } else if need_blocks + self.watermark_blocks <= free
-            || (free == total && need_blocks <= free)
-        {
+        } else if need_blocks + watermark <= free || (free == total && need_blocks <= free) {
             AdmissionDecision::Admit
         } else {
             AdmissionDecision::Queue
@@ -76,7 +80,7 @@ mod tests {
 
     #[test]
     fn decide_three_ways() {
-        let p = AdmissionPolicy { reserve_output: false, watermark_blocks: 1 };
+        let p = AdmissionPolicy { reserve_output: false, watermark_blocks: 1, spill_aware: false };
         assert_eq!(p.decide(4, 8, 16), AdmissionDecision::Admit);
         assert_eq!(p.decide(8, 8, 16), AdmissionDecision::Queue); // watermark
         assert_eq!(p.decide(17, 16, 16), AdmissionDecision::Reject);
@@ -89,8 +93,19 @@ mod tests {
     fn reserve_modes() {
         let optimistic = AdmissionPolicy::default();
         assert_eq!(optimistic.reserve_tokens(10, 5), 10);
-        let conservative = AdmissionPolicy { reserve_output: true, watermark_blocks: 0 };
+        let conservative =
+            AdmissionPolicy { reserve_output: true, watermark_blocks: 0, spill_aware: false };
         assert_eq!(conservative.reserve_tokens(10, 5), 14);
         assert_eq!(conservative.reserve_tokens(10, 0), 10);
+    }
+
+    #[test]
+    fn spill_aware_waives_the_watermark() {
+        let p = AdmissionPolicy { spill_aware: true, ..AdmissionPolicy::default() };
+        // watermark_blocks = 1, but spilling makes preemption cheap:
+        // a request that exactly fills the free blocks is admitted
+        assert_eq!(p.decide(8, 8, 16), AdmissionDecision::Admit);
+        assert_eq!(p.decide(9, 8, 16), AdmissionDecision::Queue);
+        assert_eq!(p.decide(17, 16, 16), AdmissionDecision::Reject);
     }
 }

@@ -53,6 +53,9 @@ pub struct PoolStats {
     pub prefix_hits: u64,
     /// Copy-on-write block copies performed.
     pub cow_copies: u64,
+    /// Blocks whose content currently lives in spill files instead of the
+    /// pool (oversubscription beyond `blocks_total`).
+    pub spilled_blocks: usize,
 }
 
 impl PoolStats {
@@ -84,6 +87,10 @@ pub struct BlockLedger {
     prefix_lookups: u64,
     prefix_hits: u64,
     cow_copies: u64,
+    /// Blocks whose content is parked in spill files right now. Pure
+    /// accounting — the blocks themselves were released back to the free
+    /// list when their session was preempted.
+    spilled_blocks: usize,
 }
 
 impl BlockLedger {
@@ -99,6 +106,7 @@ impl BlockLedger {
             prefix_lookups: 0,
             prefix_hits: 0,
             cow_copies: 0,
+            spilled_blocks: 0,
         }
     }
 
@@ -237,6 +245,23 @@ impl BlockLedger {
         self.cow_copies += 1;
     }
 
+    /// Record that `n` blocks' worth of KV rows moved to spill files
+    /// (their pool blocks are free again; the state lives on disk).
+    pub fn note_spill(&mut self, n: usize) {
+        self.spilled_blocks += n;
+    }
+
+    /// Record that `n` spilled blocks' rows were restored into the pool
+    /// (or their session finished while spilled and the file was dropped).
+    pub fn note_restore(&mut self, n: usize) {
+        self.spilled_blocks = self.spilled_blocks.saturating_sub(n);
+    }
+
+    /// Blocks currently parked in spill files.
+    pub fn spilled_blocks(&self) -> usize {
+        self.spilled_blocks
+    }
+
     /// Occupancy/sharing snapshot (`block_size`/`dtype`/`bytes_per_token`
     /// left at defaults — the owning pool fills them in).
     pub fn stats(&self) -> PoolStats {
@@ -252,6 +277,7 @@ impl BlockLedger {
             prefix_lookups: self.prefix_lookups,
             prefix_hits: self.prefix_hits,
             cow_copies: self.cow_copies,
+            spilled_blocks: self.spilled_blocks,
         }
     }
 }
@@ -352,6 +378,23 @@ mod tests {
         // b's release must NOT evict c's legitimate {parent: a2, [2]} entry
         assert!(l.release(b));
         assert_eq!(l.lookup_retain(&key(Some(a2), &[2])), Some(c));
+    }
+
+    #[test]
+    fn spill_accounting_is_a_pure_gauge() {
+        let mut l = BlockLedger::new(4);
+        let a = l.alloc().unwrap();
+        l.note_spill(3);
+        assert_eq!(l.spilled_blocks(), 3);
+        assert_eq!(l.stats().spilled_blocks, 3);
+        l.note_restore(2);
+        assert_eq!(l.spilled_blocks(), 1);
+        // over-restore saturates instead of wrapping
+        l.note_restore(5);
+        assert_eq!(l.spilled_blocks(), 0);
+        // the gauge never touches block occupancy
+        assert_eq!(l.used_blocks(), 1);
+        l.release(a);
     }
 
     #[test]

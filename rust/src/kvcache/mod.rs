@@ -15,7 +15,9 @@
 //!   backend, with copy-on-write prefix sharing.
 //! - [`admission`] — [`AdmissionPolicy`]: admit/queue/reject against
 //!   actual free blocks; the engine preempts (release + re-queue +
-//!   re-prefill) when decode growth outruns the pool.
+//!   re-prefill) when decode growth outruns the pool. With spill-aware
+//!   admission ([`crate::persist::SpillStore`]), preempted KV rows move
+//!   to disk ([`SpillImage`]) instead of being recomputed.
 
 pub mod admission;
 pub mod ledger;
@@ -23,4 +25,4 @@ pub mod store;
 
 pub use admission::{AdmissionDecision, AdmissionPolicy};
 pub use ledger::{BlockId, BlockLedger, PoolStats, PrefixKey};
-pub use store::{BlockTable, KvCacheConfig, KvDtype, KvStore, KvView};
+pub use store::{BlockTable, KvCacheConfig, KvDtype, KvStore, KvView, SpillImage};

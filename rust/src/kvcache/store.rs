@@ -28,7 +28,7 @@
 //! ([`crate::arch::TileGeometry::shard_rows`]) — the granularity at which
 //! the simulated hardware shards the KV cache across routers (§IV-C).
 
-use anyhow::Context;
+use anyhow::{ensure, Context};
 
 use crate::arch::{HwParams, TileGeometry};
 
@@ -230,6 +230,63 @@ impl KvView<'_> {
     }
 }
 
+/// A dtype-preserving snapshot of one session's KV rows, `[pos][layer][d]`
+/// row-major. `k`/`v` hold the *stored* representation as little-endian
+/// element bytes (f32 words, f16 halfwords, or raw q8 cells); q8 also
+/// carries one scale per `(pos, layer)` row so a restore never re-rounds.
+/// This is what the spill store serializes on preemption and what
+/// [`KvStore::write_raw_rows`] replays back into the pool bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillImage {
+    pub dtype: KvDtype,
+    pub n_layers: usize,
+    pub d: usize,
+    /// Token positions captured.
+    pub rows: usize,
+    /// K rows, `rows × n_layers × d` elements as stored bytes.
+    pub k: Vec<u8>,
+    /// V rows, same layout.
+    pub v: Vec<u8>,
+    /// q8 per-row scales (`rows × n_layers`), empty for f32/f16.
+    pub k_scales: Vec<f32>,
+    pub v_scales: Vec<f32>,
+}
+
+impl SpillImage {
+    /// Stored bytes per element for `dtype` (scales excluded).
+    pub fn elem_bytes(dtype: KvDtype) -> usize {
+        match dtype {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Q8 => 1,
+        }
+    }
+
+    /// Check the byte/scale array lengths against the declared shape.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let want = self.rows * self.n_layers * self.d * Self::elem_bytes(self.dtype);
+        ensure!(
+            self.k.len() == want && self.v.len() == want,
+            "spill image arrays ({}K/{}V bytes) don't match shape ({} rows × {} layers × d={} {:?} = {want})",
+            self.k.len(),
+            self.v.len(),
+            self.rows,
+            self.n_layers,
+            self.d,
+            self.dtype,
+        );
+        let scales = if self.dtype == KvDtype::Q8 { self.rows * self.n_layers } else { 0 };
+        ensure!(
+            self.k_scales.len() == scales && self.v_scales.len() == scales,
+            "spill image scales ({}K/{}V) don't match {:?} expectation ({scales})",
+            self.k_scales.len(),
+            self.v_scales.len(),
+            self.dtype,
+        );
+        Ok(())
+    }
+}
+
 /// Owned, dtype-tagged arena storage. Quantization happens once at
 /// [`KvArena::write_row`]; copy-on-write moves the stored representation
 /// (and q8 scales) verbatim, so a CoW never re-rounds values.
@@ -281,6 +338,50 @@ impl KvArena {
                 for (qc, &x) in q[o..o + d].iter_mut().zip(src) {
                     *qc = (x * inv).round().clamp(-127.0, 127.0) as i8;
                 }
+            }
+        }
+    }
+
+    /// Append the stored `d`-wide row at element offset `o` to `bytes`
+    /// (little-endian element bytes); q8 also pushes the row scale.
+    fn export_row(&self, o: usize, d: usize, bytes: &mut Vec<u8>, scales: &mut Vec<f32>) {
+        match self {
+            Self::F32(a) => {
+                for &x in &a[o..o + d] {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Self::F16(a) => {
+                for &h in &a[o..o + d] {
+                    bytes.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+            Self::Q8 { q, s } => {
+                bytes.extend(q[o..o + d].iter().map(|&c| c as u8));
+                scales.push(s[o / d]);
+            }
+        }
+    }
+
+    /// Write one exported row back verbatim at element offset `o` —
+    /// the exact inverse of [`Self::export_row`], no re-quantization.
+    fn import_row(&mut self, o: usize, d: usize, bytes: &[u8], scale: f32) {
+        match self {
+            Self::F32(a) => {
+                for (x, w) in a[o..o + d].iter_mut().zip(bytes.chunks_exact(4)) {
+                    *x = f32::from_le_bytes(w.try_into().unwrap());
+                }
+            }
+            Self::F16(a) => {
+                for (h, w) in a[o..o + d].iter_mut().zip(bytes.chunks_exact(2)) {
+                    *h = u16::from_le_bytes(w.try_into().unwrap());
+                }
+            }
+            Self::Q8 { q, s } => {
+                for (c, &b) in q[o..o + d].iter_mut().zip(bytes) {
+                    *c = b as i8;
+                }
+                s[o / d] = scale;
             }
         }
     }
@@ -369,6 +470,18 @@ impl KvStore {
 
     pub fn free_blocks(&self) -> usize {
         self.ledger.free_blocks()
+    }
+
+    /// Spill-gauge passthrough: `blocks` worth of content just left the
+    /// pool for a spill file (see [`super::ledger::BlockLedger::note_spill`]).
+    pub fn note_spilled(&mut self, blocks: usize) {
+        self.ledger.note_spill(blocks);
+    }
+
+    /// Spill-gauge passthrough: `blocks` worth of spilled content was
+    /// restored into (or abandoned to) the pool.
+    pub fn note_restored(&mut self, blocks: usize) {
+        self.ledger.note_restore(blocks);
     }
 
     /// Bytes one token position occupies across both arenas and all layers.
@@ -550,6 +663,75 @@ impl KvStore {
             }
             parent = Some(b);
         }
+    }
+
+    /// Snapshot the first `rows` token positions of `table` into a
+    /// dtype-preserving [`SpillImage`]. Reads shared blocks too (safe —
+    /// read-only), so the image always covers the full position range and
+    /// restores bit-exactly regardless of how a later table re-shares.
+    pub fn extract_rows(&self, table: &BlockTable, rows: usize) -> SpillImage {
+        assert!(rows <= table.len, "extract_rows past table end ({rows} > {})", table.len);
+        let cap = rows * self.n_layers * self.d * SpillImage::elem_bytes(self.cfg.dtype);
+        let mut img = SpillImage {
+            dtype: self.cfg.dtype,
+            n_layers: self.n_layers,
+            d: self.d,
+            rows,
+            k: Vec::with_capacity(cap),
+            v: Vec::with_capacity(cap),
+            k_scales: Vec::new(),
+            v_scales: Vec::new(),
+        };
+        for pos in 0..rows {
+            let b = table.blocks[pos / self.cfg.block_size];
+            let row = pos % self.cfg.block_size;
+            for layer in 0..self.n_layers {
+                let o = self.off(b, layer) + row * self.d;
+                self.k.export_row(o, self.d, &mut img.k, &mut img.k_scales);
+                self.v.export_row(o, self.d, &mut img.v, &mut img.v_scales);
+            }
+        }
+        img
+    }
+
+    /// Replay a [`SpillImage`] into `table` verbatim. Positions the prefix
+    /// cache already resolved (`[0, shared_prefix)`) are skipped — those
+    /// blocks are live shared state and hold identical bytes anyway; the
+    /// rest must sit in privately-owned blocks (freshly grown, or CoW'd by
+    /// [`Self::grow`]). `table` must cover at least `image.rows` positions.
+    pub fn write_raw_rows(&mut self, table: &BlockTable, image: &SpillImage) -> anyhow::Result<()> {
+        image.validate()?;
+        ensure!(
+            image.dtype == self.cfg.dtype && image.n_layers == self.n_layers && image.d == self.d,
+            "spill image shape ({:?}, {} layers, d={}) doesn't match pool ({:?}, {} layers, d={})",
+            image.dtype,
+            image.n_layers,
+            image.d,
+            self.cfg.dtype,
+            self.n_layers,
+            self.d,
+        );
+        ensure!(
+            image.rows <= table.len,
+            "spill image covers {} rows but the table holds {}",
+            image.rows,
+            table.len,
+        );
+        let rb = self.d * SpillImage::elem_bytes(image.dtype);
+        for pos in table.shared_prefix..image.rows {
+            let b = table.blocks[pos / self.cfg.block_size];
+            debug_assert!(!self.ledger.is_shared(b), "restore into a shared KV block");
+            let row = pos % self.cfg.block_size;
+            for layer in 0..self.n_layers {
+                let o = self.off(b, layer) + row * self.d;
+                let idx = pos * self.n_layers + layer;
+                let ks = image.k_scales.get(idx).copied().unwrap_or(0.0);
+                let vs = image.v_scales.get(idx).copied().unwrap_or(0.0);
+                self.k.import_row(o, self.d, &image.k[idx * rb..(idx + 1) * rb], ks);
+                self.v.import_row(o, self.d, &image.v[idx * rb..(idx + 1) * rb], vs);
+            }
+        }
+        Ok(())
     }
 
     /// Release every block a table holds (refcount-decrement; physical
@@ -796,6 +978,61 @@ mod tests {
             s.k_view().read_into(rs, 4, 2, &mut half);
             assert_eq!(half, [kout[2], kout[3]]);
         }
+    }
+
+    #[test]
+    fn spill_extract_restore_roundtrip_bitwise_all_dtypes() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Q8] {
+            let mut s = store_with_dtype(4, 16, dtype);
+            let tokens = [1, 2, 3, 4, 5, 6, 7];
+            let t = prefill(&mut s, &tokens, 0.25);
+            let img = s.extract_rows(&t, tokens.len());
+            img.validate().unwrap();
+            assert_eq!(img.rows, 7);
+            s.release_table(t);
+            // sole owner released → prefix cache purged → fully private
+            let mut t2 = s.build_prefill(&tokens);
+            assert_eq!(t2.shared_prefix(), 0);
+            s.grow(&mut t2, tokens.len()).unwrap();
+            s.write_raw_rows(&t2, &img).unwrap();
+            let img2 = s.extract_rows(&t2, tokens.len());
+            assert_eq!(img, img2, "{dtype:?} restore must be bitwise");
+            s.release_table(t2);
+        }
+    }
+
+    #[test]
+    fn restore_skips_live_shared_prefix_rows() {
+        let mut s = store(2, 16);
+        let a = prefill(&mut s, &[1, 2, 3, 4, 5], 1.0);
+        let img = s.extract_rows(&a, 5);
+        // a stays live; a restore of the same prompt re-shares every chunk
+        let mut b = s.build_prefill(&[1, 2, 3, 4, 5]);
+        assert_eq!(b.shared_prefix(), 5);
+        s.write_raw_rows(&b, &img).unwrap();
+        // shared bytes untouched and already identical to the image
+        assert_eq!(s.extract_rows(&b, 5), img);
+        // a partially-shared restore fills only the private tail
+        s.grow(&mut b, 1).unwrap();
+        s.release_table(a);
+        s.release_table(b);
+    }
+
+    #[test]
+    fn mismatched_spill_image_is_rejected() {
+        let mut s = store_with_dtype(2, 8, KvDtype::F16);
+        let t = prefill(&mut s, &[1, 2, 3], 0.0);
+        let mut img = s.extract_rows(&t, 3);
+        // dtype mismatch against an f32 pool
+        let mut f32_pool = store(2, 8);
+        let t32 = prefill(&mut f32_pool, &[1, 2, 3], 0.0);
+        assert!(f32_pool.write_raw_rows(&t32, &img).is_err());
+        f32_pool.release_table(t32);
+        // truncated byte array fails validate()
+        img.k.pop();
+        assert!(img.validate().is_err());
+        assert!(s.write_raw_rows(&t, &img).is_err());
+        s.release_table(t);
     }
 
     #[test]

@@ -47,6 +47,10 @@
 //!   KV-shard manager, metrics.
 //! - [`obs`] — structured tracing + telemetry: typed event ring buffer,
 //!   log2 latency histograms, Chrome-trace/JSONL/Prometheus exporters.
+//! - [`persist`] — durability: append-only session event journal with
+//!   checkpoint compaction (crash recovery resumes token streams
+//!   bitwise-identically) and per-session KV spill files that let the
+//!   pool oversubscribe past its byte budget without re-prefill.
 //! - [`scenario`] — declarative e2e scenario harness: scripted serving
 //!   traffic (`.scn` files) with per-session JSON results.
 //! - [`testutil`] — deterministic PRNG + mini property-testing harness
@@ -66,6 +70,7 @@ pub mod model;
 pub mod noc;
 pub mod obs;
 pub mod partition;
+pub mod persist;
 pub mod pim;
 pub mod runtime;
 pub mod scenario;

@@ -85,6 +85,16 @@ pub enum EventKind {
     /// Instant: pool pressure preempted this request (blocks released,
     /// re-enqueued at the head of the wait queue).
     Preempt { demand_blocks: u32, free_blocks: u32 },
+    /// Instant: the preempted request's KV rows were written to a spill
+    /// file instead of being discarded (readmission restores, no
+    /// re-prefill).
+    Spill { blocks: u32, bytes: u64 },
+    /// Span: readmission replayed the request's spill file back into the
+    /// pool (`dur_ns` is the simulated disk-read cost).
+    Restore { blocks: u32, bytes: u64, dur_ns: u64 },
+    /// Instant: this request was rebuilt from a journal after a crash
+    /// (`tokens` already emitted before the cut).
+    Recovered { prompt_tokens: u32, tokens: u32 },
     /// Span: the decode phase, first token → terminal state.
     DecodePhase { dur_ns: u64, tokens: u32 },
     /// Instant: terminal outcome (`outcome` is `done`/`failed`; `reason`
@@ -115,6 +125,9 @@ impl EventKind {
             EventKind::PrefillChunk { .. } => "prefill_chunk",
             EventKind::FirstToken { .. } => "first_token",
             EventKind::Preempt { .. } => "preempt",
+            EventKind::Spill { .. } => "spill",
+            EventKind::Restore { .. } => "restore",
+            EventKind::Recovered { .. } => "recovered",
             EventKind::DecodePhase { .. } => "decode_phase",
             EventKind::Finish { .. } => "finish",
             EventKind::KvDelta { .. } => "kv_delta",
@@ -131,6 +144,7 @@ impl EventKind {
             | EventKind::DecodeRound { dur_ns, .. }
             | EventKind::Admitted { wait_ns: dur_ns, .. }
             | EventKind::PrefillChunk { dur_ns, .. }
+            | EventKind::Restore { dur_ns, .. }
             | EventKind::DecodePhase { dur_ns, .. } => Some(dur_ns),
             _ => None,
         }
@@ -157,5 +171,9 @@ mod tests {
         assert_eq!(span.name(), "prefill_chunk");
         let instant = EventKind::FirstToken { position: 0 };
         assert_eq!(instant.dur_ns(), None);
+        // restore is a span (simulated disk read); spill is an instant
+        assert_eq!(EventKind::Restore { blocks: 2, bytes: 256, dur_ns: 33 }.dur_ns(), Some(33));
+        assert_eq!(EventKind::Spill { blocks: 2, bytes: 256 }.dur_ns(), None);
+        assert_eq!(EventKind::Recovered { prompt_tokens: 4, tokens: 2 }.name(), "recovered");
     }
 }

@@ -79,6 +79,15 @@ fn kind_fields(kind: &EventKind) -> String {
         EventKind::Preempt { demand_blocks, free_blocks } => {
             format!("\"demand_blocks\":{demand_blocks},\"free_blocks\":{free_blocks}")
         }
+        EventKind::Spill { blocks, bytes } => {
+            format!("\"blocks\":{blocks},\"bytes\":{bytes}")
+        }
+        EventKind::Restore { blocks, bytes, dur_ns } => {
+            format!("\"blocks\":{blocks},\"bytes\":{bytes},\"dur_ns\":{dur_ns}")
+        }
+        EventKind::Recovered { prompt_tokens, tokens } => {
+            format!("\"prompt_tokens\":{prompt_tokens},\"tokens\":{tokens}")
+        }
         EventKind::DecodePhase { dur_ns, tokens } => {
             format!("\"dur_ns\":{dur_ns},\"tokens\":{tokens}")
         }
@@ -257,11 +266,14 @@ pub fn chrome_trace_json(tracer: &Tracer) -> String {
                     args: format!("{},{host}", kind_fields(&ev.kind)),
                 });
             }
-            EventKind::PrefillChunk { dur_ns, .. } | EventKind::DecodePhase { dur_ns, .. } => {
+            EventKind::PrefillChunk { dur_ns, .. }
+            | EventKind::Restore { dur_ns, .. }
+            | EventKind::DecodePhase { dur_ns, .. } => {
                 let tid = sid.unwrap_or(TID_ENGINE);
                 track(&mut tracks, tid, session_label(ev));
                 let name = match ev.kind {
                     EventKind::PrefillChunk { .. } => "prefill",
+                    EventKind::Restore { .. } => "restore",
                     _ => "decode",
                 };
                 tracks.get_mut(&tid).unwrap().spans.push(Span {
@@ -275,6 +287,8 @@ pub fn chrome_trace_json(tracer: &Tracer) -> String {
             EventKind::Submit { .. }
             | EventKind::FirstToken { .. }
             | EventKind::Preempt { .. }
+            | EventKind::Spill { .. }
+            | EventKind::Recovered { .. }
             | EventKind::Finish { .. } => {
                 let tid = sid.unwrap_or(TID_ENGINE);
                 track(&mut tracks, tid, session_label(ev));
@@ -397,7 +411,7 @@ fn push_gauge(out: &mut String, name: &str, help: &str, v: &str) {
 /// Prometheus text exposition of the aggregated serving metrics.
 pub fn prometheus_text(m: &Metrics) -> String {
     let mut out = String::new();
-    let counters: [(&str, &str, u64); 17] = [
+    let counters: [(&str, &str, u64); 23] = [
         ("leap_requests_done_total", "Requests completed.", m.requests_done),
         ("leap_requests_failed_total", "Requests failed mid-flight.", m.requests_failed),
         ("leap_requests_rejected_total", "Requests rejected at submit.", m.requests_rejected),
@@ -419,6 +433,16 @@ pub fn prometheus_text(m: &Metrics) -> String {
         ("leap_pool_dispatches_total", "Worker-pool parallel dispatches.", m.pool_dispatches),
         ("leap_pool_parks_total", "Worker park transitions.", m.pool_parks),
         ("leap_pool_wakes_total", "Worker wake transitions.", m.pool_wakes),
+        ("leap_kv_spills_total", "Preempted sessions spilled to disk.", m.kv_spills),
+        ("leap_kv_spilled_blocks_total", "KV blocks written to spill files.", m.kv_spilled_blocks),
+        ("leap_spill_bytes_written_total", "Bytes written to spill files.", m.spill_bytes_written),
+        ("leap_spill_bytes_read_total", "Bytes restored from spill files.", m.spill_bytes_read),
+        ("leap_sessions_recovered_total", "Sessions rebuilt from a journal.", m.sessions_recovered),
+        (
+            "leap_recovery_replay_events_total",
+            "Journal records replayed at recovery.",
+            m.recovery_replay_events,
+        ),
     ];
     for (name, help, v) in counters {
         push_counter(&mut out, name, help, v);
@@ -498,6 +522,8 @@ mod tests {
         t.emit(60, None, EventKind::KvDelta { prefix_lookups: 2, prefix_hits: 1, cow_copies: 0, blocks_used: 3 });
         t.emit(60, None, EventKind::PoolLane { lane: 0, dispatches: 4 });
         t.emit(70, Some(0), EventKind::Preempt { demand_blocks: 3, free_blocks: 1 });
+        t.emit(70, Some(0), EventKind::Spill { blocks: 3, bytes: 480 });
+        t.emit(80, Some(0), EventKind::Restore { blocks: 3, bytes: 480, dur_ns: 5 });
         t.emit(90, None, EventKind::Diag { level: Level::Warn, code: "test_code" });
         t.emit(40, Some(0), EventKind::DecodePhase { dur_ns: 60, tokens: 4 });
         t.emit(100, Some(0), EventKind::Finish { outcome: "done", reason: "length", output_tokens: 4 });
@@ -526,7 +552,9 @@ mod tests {
         let b = json.matches("\"ph\":\"B\"").count();
         let e = json.matches("\"ph\":\"E\"").count();
         assert_eq!(b, e, "unbalanced spans:\n{json}");
-        assert!(b >= 4, "expected step + queued + prefill + decode spans, got {b}");
+        assert!(b >= 5, "expected step + queued + prefill + restore + decode spans, got {b}");
+        assert!(json.contains("\"name\":\"restore\""), "restore span on the session track");
+        assert!(json.contains("\"name\":\"spill\""), "spill instant on the session track");
         assert!(json.contains("\"name\":\"thread_name\""));
         assert!(json.contains("\"name\":\"session 0\""));
         assert!(json.contains("\"name\":\"pool lane 0\""));
@@ -535,12 +563,15 @@ mod tests {
 
     #[test]
     fn prometheus_exposition_is_consistent() {
-        let mut m = Metrics { requests_done: 3, ..Default::default() };
+        let mut m = Metrics { requests_done: 3, kv_spills: 2, sessions_recovered: 1, ..Default::default() };
         m.latency.record(100);
         m.latency.record(900);
         m.ttft.record(40);
         let text = prometheus_text(&m);
         assert!(text.contains("leap_requests_done_total 3\n"));
+        assert!(text.contains("leap_kv_spills_total 2\n"));
+        assert!(text.contains("leap_sessions_recovered_total 1\n"));
+        assert!(text.contains("leap_spill_bytes_written_total 0\n"));
         assert!(text.contains("# TYPE leap_latency_ns histogram"));
         assert!(text.contains("leap_latency_ns_count 2\n"));
         assert!(text.contains("leap_latency_ns_sum 1000\n"));

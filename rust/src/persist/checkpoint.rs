@@ -1,0 +1,195 @@
+//! Periodic compaction of the event journal into one atomic snapshot.
+//!
+//! A checkpoint is the full session state the journal's first `covers`
+//! records would rebuild: one [`SessionSnapshot`] per session ever
+//! submitted (finished sessions included — recovery reports their streams
+//! too). Recovery is then *snapshot + tail replay*: load the checkpoint,
+//! skip `covers` journal records, apply the rest. The journal itself is
+//! never truncated — skipping by count has no crash window, where a
+//! truncate racing the checkpoint rename could double-apply or lose
+//! records.
+//!
+//! The file is written tmp-then-rename (atomic on POSIX), checksummed as
+//! a whole; a corrupt or missing checkpoint degrades to full journal
+//! replay, never to an error.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::coordinator::{GenerationConfig, RequestId};
+
+use super::eventlog::{fnv1a, get_gen, put_gen, Dec, Enc};
+
+/// Checkpoint filename inside a journal directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.bin";
+const TMP_FILE: &str = "checkpoint.tmp";
+const MAGIC: &[u8; 8] = b"LEAPCKP1";
+
+/// Everything needed to re-create one session after a crash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub gen: GenerationConfig,
+    /// Tokens emitted (post-truncation once `finished`).
+    pub output: Vec<i32>,
+    /// Reached a terminal state before the snapshot/crash.
+    pub finished: bool,
+    /// Terminal state was a failure (admission reject, KV exhaustion).
+    pub failed: bool,
+}
+
+impl SessionSnapshot {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.id);
+        e.tokens(&self.prompt);
+        put_gen(e, &self.gen);
+        e.tokens(&self.output);
+        e.u8(u8::from(self.finished) | (u8::from(self.failed) << 1));
+    }
+
+    fn decode(d: &mut Dec<'_>) -> anyhow::Result<Self> {
+        let id = d.u64()?;
+        let prompt = d.tokens()?;
+        let gen = get_gen(d)?;
+        let output = d.tokens()?;
+        let flags = d.u8()?;
+        Ok(Self { id, prompt, gen, output, finished: flags & 1 != 0, failed: flags & 2 != 0 })
+    }
+}
+
+/// One compacted snapshot of the journal's prefix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Journal records this snapshot already reflects — replay skips them.
+    pub covers: u64,
+    pub sessions: Vec<SessionSnapshot>,
+}
+
+impl Checkpoint {
+    /// Atomically (tmp + fsync + rename) write into `dir`.
+    pub fn write(&self, dir: &Path) -> anyhow::Result<()> {
+        let mut e = Enc::new();
+        e.u64(self.covers);
+        e.u32(self.sessions.len() as u32);
+        for s in &self.sessions {
+            s.encode(&mut e);
+        }
+        let payload = e.into_inner();
+        let tmp = dir.join(TMP_FILE);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(payload.len() as u32).to_le_bytes())?;
+        f.write_all(&fnv1a(&payload).to_le_bytes())?;
+        f.write_all(&payload)?;
+        // the rename must only ever expose a fully durable file
+        f.sync_data().context("checkpoint fsync")?;
+        drop(f);
+        std::fs::rename(&tmp, dir.join(CHECKPOINT_FILE)).context("checkpoint rename")?;
+        Ok(())
+    }
+
+    /// Load from `dir`. `None` on missing, short, or corrupt files —
+    /// recovery then falls back to full journal replay.
+    pub fn load(dir: &Path) -> Option<Checkpoint> {
+        let bytes = std::fs::read(dir.join(CHECKPOINT_FILE)).ok()?;
+        if bytes.len() < 16 || &bytes[..8] != MAGIC {
+            return None;
+        }
+        let len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let want = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        if bytes.len() != 16 + len {
+            return None;
+        }
+        let payload = &bytes[16..];
+        if fnv1a(payload) != want {
+            return None;
+        }
+        let mut d = Dec::new(payload);
+        let covers = d.u64().ok()?;
+        let n = d.u32().ok()?;
+        let mut sessions = Vec::with_capacity(n.min(1 << 20) as usize);
+        for _ in 0..n {
+            sessions.push(SessionSnapshot::decode(&mut d).ok()?);
+        }
+        d.done().ok()?;
+        Some(Checkpoint { covers, sessions })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            covers: 17,
+            sessions: vec![
+                SessionSnapshot {
+                    id: 0,
+                    prompt: vec![1, 2, 3],
+                    gen: GenerationConfig::greedy(4),
+                    output: vec![7, 8],
+                    finished: false,
+                    failed: false,
+                },
+                SessionSnapshot {
+                    id: 1,
+                    prompt: vec![9],
+                    gen: GenerationConfig {
+                        temperature: 0.7,
+                        seed: 3,
+                        stop: vec![vec![2]],
+                        ..GenerationConfig::greedy(8)
+                    },
+                    output: vec![4, 5, 6],
+                    finished: true,
+                    failed: true,
+                },
+            ],
+        }
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("leap_checkpoint_tests").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_load_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let ck = sample();
+        ck.write(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir), Some(ck));
+        // the tmp file never survives a successful write
+        assert!(!dir.join(TMP_FILE).exists());
+    }
+
+    #[test]
+    fn missing_and_corrupt_load_as_none() {
+        let dir = tmp_dir("corrupt");
+        assert_eq!(Checkpoint::load(&dir), None);
+        sample().write(&dir).unwrap();
+        let mut bytes = std::fs::read(dir.join(CHECKPOINT_FILE)).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(dir.join(CHECKPOINT_FILE), &bytes).unwrap();
+        assert_eq!(Checkpoint::load(&dir), None, "flipped payload bit must fail the checksum");
+        // short file
+        std::fs::write(dir.join(CHECKPOINT_FILE), b"LEAPCKP1").unwrap();
+        assert_eq!(Checkpoint::load(&dir), None);
+    }
+
+    #[test]
+    fn rewrite_replaces_previous() {
+        let dir = tmp_dir("rewrite");
+        sample().write(&dir).unwrap();
+        let ck2 = Checkpoint { covers: 99, sessions: Vec::new() };
+        ck2.write(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir), Some(ck2));
+    }
+}

@@ -1,0 +1,499 @@
+//! Append-only binary event journal (the write-ahead log of the
+//! durability subsystem).
+//!
+//! Every record is framed `[u32 len][u32 fnv1a(payload)][payload]`, all
+//! little-endian. Appends are a single buffered write (plus an `fsync`
+//! under [`FsyncPolicy::Always`]); replay walks frames from the start and
+//! stops cleanly at the first frame that is short, fails its checksum, or
+//! does not decode — the torn-tail discipline: a crash mid-write loses at
+//! most the record being written, never the prefix.
+//!
+//! The journal is never truncated in place. Compaction is handled one
+//! level up ([`super::Checkpoint`] records how many journal records it
+//! *covers*; replay skips that prefix), which avoids the classic
+//! truncate-after-checkpoint crash window entirely at the cost of an
+//! unbounded file between recoveries.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::coordinator::{GenerationConfig, RequestId};
+
+/// Durability/latency trade-off per append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// `fsync` after every record: a crash loses nothing acknowledged.
+    Always,
+    /// No explicit sync (OS page cache decides): fastest, loses the
+    /// unsynced tail on power failure — replay tolerates that as a torn
+    /// tail. The default for tests and CI (tmpfs-friendly).
+    #[default]
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "always" | "on" | "true" => Some(FsyncPolicy::Always),
+            "never" | "off" | "false" => Some(FsyncPolicy::Never),
+            _ => None,
+        }
+    }
+}
+
+/// One durable lifecycle record. Mirrors the tracer's decision points but
+/// carries the *data* recovery needs (the tracer keeps only counters).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// Request validated and queued, with everything needed to re-run it.
+    Submit { id: RequestId, prompt: Vec<i32>, gen: GenerationConfig },
+    /// Request entered the running batch.
+    Admit { id: RequestId },
+    /// One generated token was accepted (pre-truncation: a stop-sequence
+    /// match is recorded by the later `Finish`'s `output_len`).
+    Token { id: RequestId, token: i32 },
+    /// Pool pressure pushed the request back to the wait queue.
+    Preempt { id: RequestId },
+    /// Terminal state. `output_len` is the post-truncation output length
+    /// (stop-sequence tokens journaled as `Token`s are cut back here).
+    Finish { id: RequestId, failed: bool, output_len: u64 },
+}
+
+/// 32-bit FNV-1a over a byte slice (the frame checksum).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Little-endian byte-stream encoder for journal/checkpoint/spill payloads.
+#[derive(Debug, Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        // bit pattern, not value: NaN payloads and -0.0 survive roundtrip
+        self.u32(v.to_bits());
+    }
+
+    pub fn tokens(&mut self, toks: &[i32]) {
+        self.u32(toks.len() as u32);
+        for &t in toks {
+            self.i32(t);
+        }
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Matching decoder. Every read is bounds-checked and length-capped so a
+/// corrupt frame fails cleanly instead of attempting a giant allocation.
+#[derive(Debug)]
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Upper bound on any decoded collection length (tokens, stop sequences).
+/// Checksummed frames make a bad length unlikely; this is defence in depth.
+const MAX_LEN: u32 = 1 << 24;
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "payload truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> anyhow::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn tokens(&mut self) -> anyhow::Result<Vec<i32>> {
+        let n = self.u32()?;
+        ensure!(n <= MAX_LEN, "token list length {n} implausible");
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.i32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> anyhow::Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn done(&self) -> anyhow::Result<()> {
+        ensure!(self.pos == self.buf.len(), "{} trailing payload bytes", self.buf.len() - self.pos);
+        Ok(())
+    }
+}
+
+pub(crate) fn put_gen(e: &mut Enc, g: &GenerationConfig) {
+    e.u64(g.max_new_tokens as u64);
+    e.f32(g.temperature);
+    e.u64(g.top_k as u64);
+    e.f32(g.top_p);
+    e.f32(g.repetition_penalty);
+    e.u64(g.seed);
+    e.u32(g.stop.len() as u32);
+    for s in &g.stop {
+        e.tokens(s);
+    }
+}
+
+pub(crate) fn get_gen(d: &mut Dec<'_>) -> anyhow::Result<GenerationConfig> {
+    let max_new_tokens = d.u64()? as usize;
+    let temperature = d.f32()?;
+    let top_k = d.u64()? as usize;
+    let top_p = d.f32()?;
+    let repetition_penalty = d.f32()?;
+    let seed = d.u64()?;
+    let n_stop = d.u32()?;
+    ensure!(n_stop <= MAX_LEN, "stop count {n_stop} implausible");
+    let mut stop = Vec::with_capacity(n_stop as usize);
+    for _ in 0..n_stop {
+        stop.push(d.tokens()?);
+    }
+    Ok(GenerationConfig { max_new_tokens, temperature, top_k, top_p, repetition_penalty, stop, seed })
+}
+
+const TAG_SUBMIT: u8 = 1;
+const TAG_ADMIT: u8 = 2;
+const TAG_TOKEN: u8 = 3;
+const TAG_PREEMPT: u8 = 4;
+const TAG_FINISH: u8 = 5;
+
+impl JournalRecord {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            JournalRecord::Submit { id, prompt, gen } => {
+                e.u8(TAG_SUBMIT);
+                e.u64(*id);
+                e.tokens(prompt);
+                put_gen(&mut e, gen);
+            }
+            JournalRecord::Admit { id } => {
+                e.u8(TAG_ADMIT);
+                e.u64(*id);
+            }
+            JournalRecord::Token { id, token } => {
+                e.u8(TAG_TOKEN);
+                e.u64(*id);
+                e.i32(*token);
+            }
+            JournalRecord::Preempt { id } => {
+                e.u8(TAG_PREEMPT);
+                e.u64(*id);
+            }
+            JournalRecord::Finish { id, failed, output_len } => {
+                e.u8(TAG_FINISH);
+                e.u64(*id);
+                e.u8(u8::from(*failed));
+                e.u64(*output_len);
+            }
+        }
+        e.into_inner()
+    }
+
+    pub(crate) fn decode(payload: &[u8]) -> anyhow::Result<Self> {
+        let mut d = Dec::new(payload);
+        let rec = match d.u8()? {
+            TAG_SUBMIT => JournalRecord::Submit {
+                id: d.u64()?,
+                prompt: d.tokens()?,
+                gen: get_gen(&mut d)?,
+            },
+            TAG_ADMIT => JournalRecord::Admit { id: d.u64()? },
+            TAG_TOKEN => JournalRecord::Token { id: d.u64()?, token: d.i32()? },
+            TAG_PREEMPT => JournalRecord::Preempt { id: d.u64()? },
+            TAG_FINISH => JournalRecord::Finish {
+                id: d.u64()?,
+                failed: d.u8()? != 0,
+                output_len: d.u64()?,
+            },
+            tag => bail!("unknown journal record tag {tag}"),
+        };
+        d.done()?;
+        Ok(rec)
+    }
+}
+
+/// What [`EventLog::replay`] saw while walking the file.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Records decoded successfully.
+    pub records: u64,
+    /// Replay stopped early at a short / checksum-failed / undecodable
+    /// frame (a crash mid-append — expected, not an error).
+    pub torn_tail: bool,
+    /// Bytes consumed by the valid prefix.
+    pub bytes_valid: u64,
+}
+
+/// The append handle over one journal file.
+#[derive(Debug)]
+pub struct EventLog {
+    file: File,
+    path: PathBuf,
+    fsync: FsyncPolicy,
+}
+
+impl EventLog {
+    /// Create (truncating any existing file).
+    pub fn create(path: &Path, fsync: FsyncPolicy) -> anyhow::Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        Ok(Self { file, path: path.to_path_buf(), fsync })
+    }
+
+    /// Open for appending, keeping existing records.
+    pub fn open_append(path: &Path, fsync: FsyncPolicy) -> anyhow::Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Self { file, path: path.to_path_buf(), fsync })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one framed record (one `write` syscall; `fsync` per policy).
+    pub fn append(&mut self, rec: &JournalRecord) -> anyhow::Result<()> {
+        let payload = rec.encode();
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("append to journal {}", self.path.display()))?;
+        if self.fsync == FsyncPolicy::Always {
+            self.file.sync_data().context("journal fsync")?;
+        }
+        Ok(())
+    }
+
+    /// Replay every decodable record from the start of `path`, stopping
+    /// cleanly at a torn tail. A missing file replays as empty (a journal
+    /// directory that never recorded anything).
+    pub fn replay(path: &Path) -> anyhow::Result<(Vec<JournalRecord>, ReplayStats)> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("read journal {}", path.display())),
+        };
+        let mut recs = Vec::new();
+        let mut stats = ReplayStats::default();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            if pos + 8 > bytes.len() {
+                stats.torn_tail = true;
+                break;
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let want = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            if len > bytes.len() - pos - 8 {
+                stats.torn_tail = true;
+                break;
+            }
+            let payload = &bytes[pos + 8..pos + 8 + len];
+            if fnv1a(payload) != want {
+                stats.torn_tail = true;
+                break;
+            }
+            match JournalRecord::decode(payload) {
+                Ok(rec) => recs.push(rec),
+                Err(_) => {
+                    // checksum passed but the payload is not a record we
+                    // understand — treat like a torn tail rather than
+                    // guessing at the remainder of the file
+                    stats.torn_tail = true;
+                    break;
+                }
+            }
+            pos += 8 + len;
+            stats.records += 1;
+            stats.bytes_valid = pos as u64;
+        }
+        Ok((recs, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<JournalRecord> {
+        let gen = GenerationConfig {
+            max_new_tokens: 6,
+            temperature: 0.8,
+            top_k: 12,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            stop: vec![vec![5, 6], vec![9]],
+            seed: 0xBEEF,
+        };
+        vec![
+            JournalRecord::Submit { id: 0, prompt: vec![1, 2, 3], gen },
+            JournalRecord::Admit { id: 0 },
+            JournalRecord::Token { id: 0, token: 42 },
+            JournalRecord::Preempt { id: 0 },
+            JournalRecord::Token { id: 0, token: -1 },
+            JournalRecord::Finish { id: 0, failed: false, output_len: 1 },
+        ]
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("leap_eventlog_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_every_variant() {
+        for rec in sample_records() {
+            let back = JournalRecord::decode(&rec.encode()).unwrap();
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let path = tmp("roundtrip.bin");
+        let mut log = EventLog::create(&path, FsyncPolicy::Never).unwrap();
+        for rec in sample_records() {
+            log.append(&rec).unwrap();
+        }
+        drop(log);
+        let (recs, stats) = EventLog::replay(&path).unwrap();
+        assert_eq!(recs, sample_records());
+        assert!(!stats.torn_tail);
+        assert_eq!(stats.records, 6);
+    }
+
+    #[test]
+    fn torn_tail_keeps_valid_prefix() {
+        let path = tmp("torn.bin");
+        let mut log = EventLog::create(&path, FsyncPolicy::Never).unwrap();
+        for rec in sample_records() {
+            log.append(&rec).unwrap();
+        }
+        drop(log);
+        let full = std::fs::read(&path).unwrap();
+        // cut at every byte boundary: replay must never error, and the
+        // decoded prefix must match the original record sequence
+        for cut in 0..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (recs, stats) = EventLog::replay(&path).unwrap();
+            assert!(recs.len() <= 6);
+            assert_eq!(recs[..], sample_records()[..recs.len()]);
+            if cut < full.len() && stats.bytes_valid < cut as u64 {
+                assert!(stats.torn_tail, "cut {cut} left undecodable bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_checksum_stops_replay() {
+        let path = tmp("corrupt.bin");
+        let mut log = EventLog::create(&path, FsyncPolicy::Always).unwrap();
+        for rec in sample_records() {
+            log.append(&rec).unwrap();
+        }
+        drop(log);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload byte of the third frame
+        let mut pos = 0usize;
+        for _ in 0..2 {
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 8 + len;
+        }
+        bytes[pos + 9] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (recs, stats) = EventLog::replay(&path).unwrap();
+        assert_eq!(recs.len(), 2, "replay stops at the corrupt frame");
+        assert!(stats.torn_tail);
+        assert_eq!(recs[..], sample_records()[..2]);
+    }
+
+    #[test]
+    fn open_append_extends_existing_log() {
+        let path = tmp("extend.bin");
+        let recs = sample_records();
+        let mut log = EventLog::create(&path, FsyncPolicy::Never).unwrap();
+        log.append(&recs[0]).unwrap();
+        drop(log);
+        let mut log = EventLog::open_append(&path, FsyncPolicy::Never).unwrap();
+        log.append(&recs[1]).unwrap();
+        drop(log);
+        let (got, _) = EventLog::replay(&path).unwrap();
+        assert_eq!(got, recs[..2]);
+    }
+
+    #[test]
+    fn fsync_policy_parse() {
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("off"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+    }
+}

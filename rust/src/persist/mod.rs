@@ -1,0 +1,330 @@
+//! Durability subsystem: crash-safe session journal, checkpoint
+//! compaction, and KV spill-to-disk oversubscription.
+//!
+//! Three layers, composed by the serving engine:
+//!
+//! - [`eventlog`] — [`EventLog`]: the append-only, checksummed binary WAL
+//!   of session lifecycle records (submit/admit/token/preempt/finish),
+//!   torn-tail tolerant on replay, fsync policy configurable.
+//! - [`checkpoint`] — [`Checkpoint`]: periodic compaction of the journal
+//!   into one atomic snapshot, so recovery is snapshot + tail replay
+//!   instead of full-history replay. The journal is never truncated; the
+//!   snapshot records how many journal records it `covers` and replay
+//!   skips them (no truncate-vs-rename crash window).
+//! - [`spill`] — [`SpillStore`]: on preemption the engine writes the
+//!   session's KV rows (stored representation verbatim, q8 scales
+//!   included) to a per-session file; readmission restores them into the
+//!   pool and resumes decode with zero re-prefilled tokens.
+//!
+//! [`Journal`] ties log + tracker + checkpointing together: `record()`
+//! appends, folds the record into the in-memory [`SessionTracker`], and
+//! auto-checkpoints every `checkpoint_every` records. [`reconstruct`]
+//! rebuilds session state from a journal directory after a crash; the
+//! engine's `resubmit_recovered` then continues each unfinished stream —
+//! bitwise-identically, because the sampler is counter-based per
+//! `(seed, step)` and the reference backend's prefill of
+//! `prompt ++ emitted` reproduces the exact logits the crashed process
+//! would have seen next.
+
+pub mod checkpoint;
+pub mod eventlog;
+pub mod spill;
+
+pub use checkpoint::{Checkpoint, SessionSnapshot, CHECKPOINT_FILE};
+pub use eventlog::{EventLog, FsyncPolicy, JournalRecord, ReplayStats};
+pub use spill::SpillStore;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::RequestId;
+
+/// Journal filename inside a journal directory.
+pub const JOURNAL_FILE: &str = "journal.bin";
+
+/// Default records between automatic checkpoints.
+pub const DEFAULT_CHECKPOINT_EVERY: u64 = 256;
+
+/// In-memory fold of journal records into per-session state — the same
+/// fold recovery replays, run incrementally so a checkpoint is a pure
+/// serialization of this struct.
+#[derive(Debug, Default)]
+pub struct SessionTracker {
+    sessions: HashMap<RequestId, SessionSnapshot>,
+    /// First-seen order (= submission order; ids are monotone).
+    order: Vec<RequestId>,
+}
+
+impl SessionTracker {
+    /// Seed one session from a loaded checkpoint (replaces any duplicate).
+    pub fn seed(&mut self, snap: SessionSnapshot) {
+        if !self.sessions.contains_key(&snap.id) {
+            self.order.push(snap.id);
+        }
+        self.sessions.insert(snap.id, snap);
+    }
+
+    /// Fold one journal record. Unknown-session records are ignored (a
+    /// checkpoint-covered prefix can reference sessions the tail repeats).
+    pub fn apply(&mut self, rec: &JournalRecord) {
+        match rec {
+            JournalRecord::Submit { id, prompt, gen } => self.seed(SessionSnapshot {
+                id: *id,
+                prompt: prompt.clone(),
+                gen: gen.clone(),
+                output: Vec::new(),
+                finished: false,
+                failed: false,
+            }),
+            JournalRecord::Admit { .. } | JournalRecord::Preempt { .. } => {}
+            JournalRecord::Token { id, token } => {
+                if let Some(s) = self.sessions.get_mut(id) {
+                    s.output.push(*token);
+                }
+            }
+            JournalRecord::Finish { id, failed, output_len } => {
+                if let Some(s) = self.sessions.get_mut(id) {
+                    s.finished = true;
+                    s.failed = *failed;
+                    // stop-sequence truncation happened after the last
+                    // Token record; the terminal record carries the
+                    // authoritative length
+                    s.output.truncate(*output_len as usize);
+                }
+            }
+        }
+    }
+
+    /// All sessions in submission order.
+    pub fn snapshots(&self) -> Vec<SessionSnapshot> {
+        self.order.iter().map(|id| self.sessions[id].clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+/// The engine-facing durability handle: WAL + incremental tracker +
+/// automatic checkpoint compaction, rooted in one directory.
+#[derive(Debug)]
+pub struct Journal {
+    log: EventLog,
+    tracker: SessionTracker,
+    dir: PathBuf,
+    checkpoint_every: u64,
+    /// Records reflected by the on-disk checkpoint.
+    covered: u64,
+    /// Records appended to the journal (total, including covered).
+    appended: u64,
+}
+
+impl Journal {
+    /// Start a fresh journal in `dir` (truncates any previous journal and
+    /// removes its checkpoint — call [`reconstruct`] *first* to recover).
+    pub fn create(dir: &Path, fsync: FsyncPolicy, checkpoint_every: u64) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("create journal dir {}: {e}", dir.display()))?;
+        let _ = std::fs::remove_file(dir.join(CHECKPOINT_FILE));
+        let log = EventLog::create(&dir.join(JOURNAL_FILE), fsync)?;
+        Ok(Self {
+            log,
+            tracker: SessionTracker::default(),
+            dir: dir.to_path_buf(),
+            checkpoint_every: checkpoint_every.max(1),
+            covered: 0,
+            appended: 0,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Total records appended this process (the crash-test kill counter).
+    pub fn records_appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Append + fold one record; auto-checkpoint when the uncovered tail
+    /// reaches `checkpoint_every` records.
+    pub fn record(&mut self, rec: &JournalRecord) -> anyhow::Result<()> {
+        self.log.append(rec)?;
+        self.tracker.apply(rec);
+        self.appended += 1;
+        if self.appended - self.covered >= self.checkpoint_every {
+            self.write_checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// Force a checkpoint of the current tracker state.
+    pub fn write_checkpoint(&mut self) -> anyhow::Result<()> {
+        let ck = Checkpoint { covers: self.appended, sessions: self.tracker.snapshots() };
+        ck.write(&self.dir)?;
+        self.covered = self.appended;
+        Ok(())
+    }
+}
+
+/// Session state rebuilt from a journal directory after a crash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveredState {
+    /// Every session the journal knows, in submission order (finished
+    /// ones included — their streams are complete and reportable).
+    pub sessions: Vec<SessionSnapshot>,
+    /// Journal records replayed beyond the checkpoint.
+    pub replay_events: u64,
+    /// The journal ended in a torn/corrupt frame (expected after a crash
+    /// mid-write; the valid prefix was still recovered).
+    pub torn_tail: bool,
+    /// Records the loaded checkpoint covered (0 = no usable checkpoint).
+    pub checkpoint_covers: u64,
+}
+
+impl RecoveredState {
+    /// Sessions that still need serving (not finished at the crash).
+    pub fn unfinished(&self) -> impl Iterator<Item = &SessionSnapshot> {
+        self.sessions.iter().filter(|s| !s.finished)
+    }
+}
+
+/// Rebuild session state from `dir`: load the checkpoint if one is
+/// usable, then replay the journal tail past it. A missing journal
+/// recovers as empty; a corrupt checkpoint degrades to full replay.
+pub fn reconstruct(dir: &Path) -> anyhow::Result<RecoveredState> {
+    let mut tracker = SessionTracker::default();
+    let mut skip = 0u64;
+    if let Some(ck) = Checkpoint::load(dir) {
+        skip = ck.covers;
+        for s in ck.sessions {
+            tracker.seed(s);
+        }
+    }
+    let (records, stats) = EventLog::replay(&dir.join(JOURNAL_FILE))?;
+    // With fsync off, a crash can lose journal writes the checkpoint
+    // already reflects (records < covers): the checkpoint alone is then
+    // the most complete consistent state, and the skip simply drains.
+    let mut replayed = 0u64;
+    for rec in records.iter().skip(skip as usize) {
+        tracker.apply(rec);
+        replayed += 1;
+    }
+    Ok(RecoveredState {
+        sessions: tracker.snapshots(),
+        replay_events: replayed,
+        torn_tail: stats.torn_tail,
+        checkpoint_covers: skip,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenerationConfig;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("leap_persist_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn script(journal: &mut Journal) {
+        let recs = [
+            JournalRecord::Submit { id: 0, prompt: vec![1, 2], gen: GenerationConfig::greedy(3) },
+            JournalRecord::Submit { id: 1, prompt: vec![3], gen: GenerationConfig::greedy(2) },
+            JournalRecord::Admit { id: 0 },
+            JournalRecord::Token { id: 0, token: 10 },
+            JournalRecord::Admit { id: 1 },
+            JournalRecord::Token { id: 1, token: 20 },
+            JournalRecord::Preempt { id: 1 },
+            JournalRecord::Token { id: 0, token: 11 },
+            JournalRecord::Token { id: 0, token: 12 },
+            JournalRecord::Finish { id: 0, failed: false, output_len: 3 },
+        ];
+        for r in &recs {
+            journal.record(r).unwrap();
+        }
+    }
+
+    #[test]
+    fn reconstruct_equals_tracker_state() {
+        let dir = tmp_dir("basic");
+        let mut j = Journal::create(&dir, FsyncPolicy::Never, 1000).unwrap();
+        script(&mut j);
+        drop(j);
+        let state = reconstruct(&dir).unwrap();
+        assert!(!state.torn_tail);
+        assert_eq!(state.checkpoint_covers, 0, "no checkpoint at every=1000");
+        assert_eq!(state.replay_events, 10);
+        assert_eq!(state.sessions.len(), 2);
+        assert_eq!(state.sessions[0].output, vec![10, 11, 12]);
+        assert!(state.sessions[0].finished && !state.sessions[0].failed);
+        assert_eq!(state.sessions[1].output, vec![20]);
+        assert!(!state.sessions[1].finished);
+        assert_eq!(state.unfinished().count(), 1);
+    }
+
+    #[test]
+    fn checkpoint_plus_tail_equals_full_replay() {
+        let full_dir = tmp_dir("full");
+        let ck_dir = tmp_dir("compacted");
+        let mut a = Journal::create(&full_dir, FsyncPolicy::Never, 1000).unwrap();
+        let mut b = Journal::create(&ck_dir, FsyncPolicy::Never, 4).unwrap();
+        script(&mut a);
+        script(&mut b);
+        drop((a, b));
+        let full = reconstruct(&full_dir).unwrap();
+        let compact = reconstruct(&ck_dir).unwrap();
+        assert_eq!(compact.sessions, full.sessions, "compaction must not change recovery");
+        assert!(compact.checkpoint_covers >= 4, "auto-checkpoint fired");
+        assert!(compact.replay_events < full.replay_events, "tail replay is shorter");
+    }
+
+    #[test]
+    fn finish_truncates_stop_matched_tokens() {
+        let dir = tmp_dir("stop_trunc");
+        let mut j = Journal::create(&dir, FsyncPolicy::Never, 1000).unwrap();
+        j.record(&JournalRecord::Submit {
+            id: 0,
+            prompt: vec![1],
+            gen: GenerationConfig::greedy(8),
+        })
+        .unwrap();
+        for t in [5, 6, 7] {
+            j.record(&JournalRecord::Token { id: 0, token: t }).unwrap();
+        }
+        // a stop match truncated the last two tokens
+        j.record(&JournalRecord::Finish { id: 0, failed: false, output_len: 1 }).unwrap();
+        drop(j);
+        let state = reconstruct(&dir).unwrap();
+        assert_eq!(state.sessions[0].output, vec![5]);
+    }
+
+    #[test]
+    fn create_truncates_previous_journal_and_checkpoint() {
+        let dir = tmp_dir("truncate");
+        let mut j = Journal::create(&dir, FsyncPolicy::Never, 2).unwrap();
+        script(&mut j);
+        drop(j);
+        assert!(dir.join(CHECKPOINT_FILE).exists());
+        let j = Journal::create(&dir, FsyncPolicy::Never, 1000).unwrap();
+        drop(j);
+        let state = reconstruct(&dir).unwrap();
+        assert!(state.sessions.is_empty(), "fresh journal starts empty");
+        assert_eq!(state.checkpoint_covers, 0);
+    }
+
+    #[test]
+    fn empty_dir_reconstructs_empty() {
+        let dir = tmp_dir("empty");
+        let state = reconstruct(&dir).unwrap();
+        assert!(state.sessions.is_empty());
+        assert!(!state.torn_tail);
+    }
+}

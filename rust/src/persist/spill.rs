@@ -1,0 +1,277 @@
+//! Per-session KV spill files: preemption writes the session's cached
+//! rows to disk instead of discarding them, readmission restores them
+//! into the pool and resumes decode with **zero re-prefilled tokens**.
+//!
+//! The payload is the pool's stored representation verbatim — f32/f16
+//! element bytes, or q8 quantised rows *with their per-row scales* — so a
+//! restore is bit-exact for every [`KvDtype`] (re-quantising a
+//! dequantised q8 row would not be). Spill files are a cache, not a
+//! durability promise: losing one merely costs a re-prefill, so writes
+//! are never fsynced and [`SpillStore::create`] wipes leftovers from a
+//! previous process.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context};
+
+use crate::kvcache::{KvDtype, SpillImage};
+use crate::runtime::SessionId;
+
+use super::eventlog::{fnv1a, Dec, Enc};
+
+const MAGIC: &[u8; 8] = b"LEAPSPL1";
+
+fn dtype_code(dt: KvDtype) -> u8 {
+    match dt {
+        KvDtype::F32 => 0,
+        KvDtype::F16 => 1,
+        KvDtype::Q8 => 2,
+    }
+}
+
+fn dtype_from(code: u8) -> Option<KvDtype> {
+    match code {
+        0 => Some(KvDtype::F32),
+        1 => Some(KvDtype::F16),
+        2 => Some(KvDtype::Q8),
+        _ => None,
+    }
+}
+
+/// Directory of `session_<id>.kv` spill files plus transfer counters.
+#[derive(Debug)]
+pub struct SpillStore {
+    dir: PathBuf,
+    /// Sessions with a live spill file (in-memory: spills never outlive
+    /// the process usefully — the pool they came from is gone).
+    live: HashSet<SessionId>,
+    pub spills: u64,
+    pub restores: u64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl SpillStore {
+    /// Create the store, wiping any spill files a dead process left.
+    pub fn create(dir: &Path) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create spill dir {}", dir.display()))?;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().is_some_and(|x| x == "kv") {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            live: HashSet::new(),
+            spills: 0,
+            restores: 0,
+            bytes_written: 0,
+            bytes_read: 0,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, id: SessionId) -> PathBuf {
+        self.dir.join(format!("session_{id}.kv"))
+    }
+
+    /// Does this session have a spill image waiting to restore?
+    pub fn has(&self, id: SessionId) -> bool {
+        self.live.contains(&id)
+    }
+
+    /// Live spill files right now.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Write one session's image; returns the file size in bytes.
+    pub fn write(&mut self, id: SessionId, img: &SpillImage) -> anyhow::Result<u64> {
+        ensure!(
+            img.k_scales.len() == img.v_scales.len(),
+            "asymmetric scale arrays ({} k, {} v)",
+            img.k_scales.len(),
+            img.v_scales.len()
+        );
+        let mut e = Enc::new();
+        e.u8(dtype_code(img.dtype));
+        e.u32(img.n_layers as u32);
+        e.u32(img.d as u32);
+        e.u64(img.rows as u64);
+        e.u64(img.k.len() as u64);
+        e.u64(img.v.len() as u64);
+        e.u32(img.k_scales.len() as u32);
+        e.bytes(&img.k);
+        e.bytes(&img.v);
+        for &s in img.k_scales.iter().chain(img.v_scales.iter()) {
+            e.f32(s);
+        }
+        let payload = e.into_inner();
+        let mut frame = Vec::with_capacity(payload.len() + 16);
+        frame.extend_from_slice(MAGIC);
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let path = self.path_of(id);
+        std::fs::write(&path, &frame)
+            .with_context(|| format!("write spill {}", path.display()))?;
+        self.live.insert(id);
+        self.spills += 1;
+        self.bytes_written += frame.len() as u64;
+        Ok(frame.len() as u64)
+    }
+
+    /// Read back and delete one session's image. `Ok(None)` when the
+    /// session was never spilled; `Err` on a corrupt file (the caller
+    /// falls back to re-prefill — the file is deleted either way).
+    pub fn take(&mut self, id: SessionId) -> anyhow::Result<Option<SpillImage>> {
+        if !self.live.remove(&id) {
+            return Ok(None);
+        }
+        let path = self.path_of(id);
+        let result = Self::read_image(&path);
+        let _ = std::fs::remove_file(&path);
+        let (img, bytes) = result?;
+        self.restores += 1;
+        self.bytes_read += bytes;
+        Ok(Some(img))
+    }
+
+    /// Drop a session's spill file without reading it (the session
+    /// finished or failed while spilled).
+    pub fn discard(&mut self, id: SessionId) {
+        if self.live.remove(&id) {
+            let _ = std::fs::remove_file(self.path_of(id));
+        }
+    }
+
+    fn read_image(path: &Path) -> anyhow::Result<(SpillImage, u64)> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read spill {}", path.display()))?;
+        ensure!(bytes.len() >= 20 && &bytes[..8] == MAGIC, "bad spill magic/size");
+        let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let want = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        ensure!(bytes.len() == 20 + len, "spill length mismatch");
+        let payload = &bytes[20..];
+        ensure!(fnv1a(payload) == want, "spill checksum mismatch");
+        let mut d = Dec::new(payload);
+        let dtype = dtype_from(d.u8()?).context("unknown spill dtype")?;
+        let n_layers = d.u32()? as usize;
+        let dim = d.u32()? as usize;
+        let rows = d.u64()? as usize;
+        let k_len = d.u64()? as usize;
+        let v_len = d.u64()? as usize;
+        let n_scales = d.u32()? as usize;
+        let k = d.bytes(k_len)?;
+        let v = d.bytes(v_len)?;
+        let mut k_scales = Vec::with_capacity(n_scales);
+        for _ in 0..n_scales {
+            k_scales.push(d.f32()?);
+        }
+        let mut v_scales = Vec::with_capacity(n_scales);
+        for _ in 0..n_scales {
+            v_scales.push(d.f32()?);
+        }
+        d.done()?;
+        let img = SpillImage { dtype, n_layers, d: dim, rows, k, v, k_scales, v_scales };
+        img.validate()?;
+        Ok((img, bytes.len() as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("leap_spill_tests").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample(dtype: KvDtype) -> SpillImage {
+        let (n_layers, d, rows) = (2usize, 4usize, 3usize);
+        let elems = rows * n_layers * d;
+        let elem_bytes = match dtype {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Q8 => 1,
+        };
+        let scales = if dtype == KvDtype::Q8 { rows * n_layers } else { 0 };
+        SpillImage {
+            dtype,
+            n_layers,
+            d,
+            rows,
+            k: (0..elems * elem_bytes).map(|i| i as u8).collect(),
+            v: (0..elems * elem_bytes).map(|i| (i * 3) as u8).collect(),
+            k_scales: (0..scales).map(|i| i as f32 * 0.5).collect(),
+            v_scales: (0..scales).map(|i| i as f32 * 0.25).collect(),
+        }
+    }
+
+    #[test]
+    fn write_take_roundtrip_all_dtypes() {
+        let dir = tmp_dir("roundtrip");
+        let mut store = SpillStore::create(&dir).unwrap();
+        for (i, dtype) in [KvDtype::F32, KvDtype::F16, KvDtype::Q8].into_iter().enumerate() {
+            let img = sample(dtype);
+            let id = i as SessionId;
+            let bytes = store.write(id, &img).unwrap();
+            assert!(store.has(id));
+            assert!(bytes > 0);
+            let back = store.take(id).unwrap().unwrap();
+            assert_eq!(back, img, "bitwise roundtrip for {dtype:?}");
+            assert!(!store.has(id));
+        }
+        assert_eq!(store.spills, 3);
+        assert_eq!(store.restores, 3);
+        assert_eq!(store.bytes_written, store.bytes_read);
+    }
+
+    #[test]
+    fn take_unspilled_is_none_and_discard_removes_file() {
+        let dir = tmp_dir("none");
+        let mut store = SpillStore::create(&dir).unwrap();
+        assert!(store.take(7).unwrap().is_none());
+        store.write(7, &sample(KvDtype::F32)).unwrap();
+        let path = store.path_of(7);
+        assert!(path.exists());
+        store.discard(7);
+        assert!(!path.exists());
+        assert!(store.take(7).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_spill_errors_and_is_deleted() {
+        let dir = tmp_dir("corrupt");
+        let mut store = SpillStore::create(&dir).unwrap();
+        store.write(1, &sample(KvDtype::Q8)).unwrap();
+        let path = store.path_of(1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.take(1).unwrap_err().to_string().contains("checksum"));
+        assert!(!path.exists(), "corrupt file must not linger");
+    }
+
+    #[test]
+    fn create_wipes_leftovers() {
+        let dir = tmp_dir("wipe");
+        let mut store = SpillStore::create(&dir).unwrap();
+        store.write(3, &sample(KvDtype::F16)).unwrap();
+        let path = store.path_of(3);
+        drop(store);
+        assert!(path.exists(), "files survive the process (simulated crash)");
+        let store = SpillStore::create(&dir).unwrap();
+        assert!(!path.exists(), "a fresh store starts clean");
+        assert!(!store.has(3));
+    }
+}

@@ -134,6 +134,30 @@ pub trait NumericsBackend {
         None
     }
 
+    /// Extract the session's stored KV rows as a dtype-preserving
+    /// [`crate::kvcache::SpillImage`] (`None` = unpooled backend or
+    /// unknown session — the caller falls back to discard + re-prefill).
+    /// Called immediately before [`Self::release`] on a preemption with
+    /// spill enabled; the session's state afterwards is unchanged.
+    fn kv_spill(&mut self, _session: SessionId) -> Option<crate::kvcache::SpillImage> {
+        None
+    }
+
+    /// Re-create `session` from a spill image without running the model:
+    /// rebuild the block table over `tokens` (re-sharing any cached
+    /// prefix), replay the image's rows verbatim, and leave the session
+    /// exactly as a real prefill of `tokens` would have
+    /// (`image.rows == tokens.len()`). On `Err` the backend must hold no
+    /// trace of the session — the caller re-prefills instead.
+    fn kv_restore(
+        &mut self,
+        _session: SessionId,
+        _tokens: &[i32],
+        _image: &crate::kvcache::SpillImage,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("backend does not support KV spill/restore")
+    }
+
     /// Snapshot of the backend's resident worker pool (`None` = this
     /// backend computes inline / has no persistent pool). Dispatch and
     /// park/wake counters feed the serving metrics; the dispatch counter

@@ -51,7 +51,7 @@ use std::path::Path;
 
 use anyhow::{ensure, Context};
 
-use crate::kvcache::{BlockTable, KvCacheConfig, KvDtype, KvStore, PoolStats};
+use crate::kvcache::{BlockTable, KvCacheConfig, KvDtype, KvStore, PoolStats, SpillImage};
 
 use super::backend::{ArtifactMeta, BatchResults, NumericsBackend, SessionId, StepOutput};
 use super::kernels::{
@@ -1053,6 +1053,77 @@ impl NumericsBackend for ReferenceBackend {
 
     fn kv_admit_demand(&self, tokens: usize) -> Option<usize> {
         Some(self.kv.config().blocks_for(tokens))
+    }
+
+    /// Snapshot the session's cached rows (all `pos` forwarded positions,
+    /// shared-prefix blocks included — reading them is refcount-safe) in
+    /// the pool's stored representation. The session itself is untouched;
+    /// the engine calls [`Self::release`] right after.
+    fn kv_spill(&mut self, session: SessionId) -> Option<SpillImage> {
+        let sess = self.sessions.get(&session)?;
+        if sess.pos == 0 {
+            return None;
+        }
+        let img = self.kv.extract_rows(&sess.table, sess.pos);
+        let blocks = self.kv.config().blocks_for(img.rows);
+        self.kv.note_spilled(blocks);
+        Some(img)
+    }
+
+    /// Rebuild `session` from a spill image without running the model:
+    /// re-resolve the prefix cache over `tokens` (restored sessions
+    /// re-share exactly like a real prefill), replay the image's bytes
+    /// into the private blocks, and seal — leaving KV state bitwise
+    /// identical to a prefill of `tokens`. On any failure the partial
+    /// table is released and the backend holds no trace of the session.
+    fn kv_restore(
+        &mut self,
+        session: SessionId,
+        tokens: &[i32],
+        image: &SpillImage,
+    ) -> anyhow::Result<()> {
+        ensure!(!tokens.is_empty(), "empty restore token stream");
+        ensure!(
+            image.rows == tokens.len(),
+            "spill image covers {} rows but the resume stream has {} tokens",
+            image.rows,
+            tokens.len()
+        );
+        ensure!(
+            tokens.len() <= self.model.meta.s_max,
+            "restore of {} tokens exceeds the model window s_max={}",
+            tokens.len(),
+            self.model.meta.s_max
+        );
+        if let Some(old) = self.sessions.remove(&session) {
+            self.kv.release_table(old.table);
+        }
+        let mut table = self.kv.build_prefill(tokens);
+        let new = tokens.len() - table.len();
+        let restore = (|| {
+            let demand = self.kv.grow_demand(&table, new);
+            ensure!(
+                demand <= self.kv.free_blocks(),
+                "KV block pool exhausted: restore needs {demand} free blocks, {} available",
+                self.kv.free_blocks()
+            );
+            self.kv.grow(&mut table, new)?;
+            self.kv.write_raw_rows(&table, image)
+        })();
+        match restore {
+            Ok(()) => {
+                self.kv.seal_prefill(&table, tokens);
+                self.sessions
+                    .insert(session, RefSession { table, pos: tokens.len(), prompt: Vec::new() });
+                let blocks = self.kv.config().blocks_for(tokens.len());
+                self.kv.note_restored(blocks);
+                Ok(())
+            }
+            Err(e) => {
+                self.kv.release_table(table);
+                Err(e)
+            }
+        }
     }
 
     fn worker_pool_stats(&self) -> Option<WorkerPoolStats> {

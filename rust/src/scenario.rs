@@ -24,7 +24,11 @@
 //! expect_min_preemptions 1
 //! expect_max_preemptions 4  # optional upper bound
 //! expect_max_queue_wait_ns 900000   # per-session queue-wait ceiling
+//! expect_max_spills 0       # optional KV-spill ceiling
+//! expect_recovered 0        # exact sessions_recovered count
 //! trace on                  # record a structured trace of the run
+//! journal on                # crash-safe session journal (scratch dir)
+//! spill on                  # spill preempted KV to disk; spill-aware admission
 //!
 //! session arrive=0 prompt=rand:96:11 gen=8 expect=done
 //! session arrive=0 prompt=rand:12:12 gen=8 seed=5 temp=0.8 top_k=40
@@ -49,6 +53,7 @@ use crate::coordinator::{
 use crate::kvcache::{KvCacheConfig, KvDtype};
 use crate::model::ModelPreset;
 use crate::obs::{chrome_trace_json, events_jsonl, Tracer, DEFAULT_RING_CAPACITY};
+use crate::persist::{FsyncPolicy, Journal, SpillStore, DEFAULT_CHECKPOINT_EVERY};
 use crate::runtime::{KernelMode, NumericsBackend, ReferenceBackend};
 use crate::testutil::SplitMix64;
 
@@ -150,6 +155,11 @@ pub struct Expect {
     /// Upper bound on any completed session's queue wait (arrival →
     /// first admission), simulated ns.
     pub max_queue_wait_ns: Option<u64>,
+    /// Upper bound on KV spills (`None` = unchecked). `Some(0)` pins a
+    /// scenario that must never touch the spill path.
+    pub max_spills: Option<u64>,
+    /// Exact expected `sessions_recovered` count (`None` = unchecked).
+    pub recovered: Option<u64>,
 }
 
 /// A parsed scenario script.
@@ -180,6 +190,14 @@ pub struct Scenario {
     /// carries [`TraceArtifacts`]. Tracing is bitwise-invisible to the
     /// run itself, so expectations behave identically either way.
     pub trace: bool,
+    /// Journal the run (`journal on`): session lifecycle records go to a
+    /// per-run scratch directory (wiped after the run). Journaling is
+    /// bitwise-invisible to token streams.
+    pub journal: bool,
+    /// Spill preempted KV to disk (`spill on`): readmissions restore
+    /// instead of re-prefilling, and admission runs spill-aware
+    /// (watermark waived — the oversubscription mode).
+    pub spill: bool,
     pub expect: Expect,
     pub sessions: Vec<SessionSpec>,
 }
@@ -283,6 +301,8 @@ impl ScenarioReport {
              \"prefill_tokens\":{},\"prefill_chunks\":{},\"decode_tokens\":{},\
              \"sim_time_ns\":{},\"kv_prefix_hits\":{},\"kv_cow_copies\":{},\
              \"kv_peak_blocks_used\":{},\"kv_dtype\":\"{}\",\"kv_bytes_per_token\":{},\
+             \"kv_spills\":{},\"kv_spilled_blocks\":{},\"spill_bytes_written\":{},\
+             \"spill_bytes_read\":{},\"sessions_recovered\":{},\"recovery_replay_events\":{},\
              \"ttft_p50_ns\":{tp50},\"ttft_p99_ns\":{tp99},\
              \"latency_p50_ns\":{lp50},\"latency_p99_ns\":{lp99}}}",
             m.requests_done,
@@ -299,6 +319,12 @@ impl ScenarioReport {
             m.kv_peak_blocks_used,
             m.kv_dtype.as_str(),
             m.kv_bytes_per_token,
+            m.kv_spills,
+            m.kv_spilled_blocks,
+            m.spill_bytes_written,
+            m.spill_bytes_read,
+            m.sessions_recovered,
+            m.recovery_replay_events,
         ));
         s.push_str(",\"sessions\":[");
         for (i, r) in self.sessions.iter().enumerate() {
@@ -334,6 +360,7 @@ impl ScenarioReport {
             push_kv_opt_u64(&mut s, "queue_wait_ns", r.timeline.queue_wait_ns);
             push_kv_opt_u64(&mut s, "prefill_ns", r.timeline.prefill_ns);
             push_kv_opt_u64(&mut s, "decode_ns", r.timeline.decode_ns);
+            s.push_str(&format!(",\"restore_ns\":{}", r.timeline.restore_ns));
             s.push_str(&format!(",\"preemptions\":{},\"expect_ok\":{}", r.preemptions, r.expect_ok));
             s.push('}');
         }
@@ -422,6 +449,8 @@ impl Scenario {
             kv_dtype: None,
             pool_bytes: None,
             trace: false,
+            journal: false,
+            spill: false,
             expect: Expect::default(),
             sessions: Vec::new(),
         };
@@ -481,6 +510,20 @@ impl Scenario {
                         other => return Err(ctx(format!("trace on|off, got '{other}'"))),
                     }
                 }
+                "journal" => {
+                    sc.journal = match rest {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        other => return Err(ctx(format!("journal on|off, got '{other}'"))),
+                    }
+                }
+                "spill" => {
+                    sc.spill = match rest {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        other => return Err(ctx(format!("spill on|off, got '{other}'"))),
+                    }
+                }
                 "expect_min_preemptions" => {
                     sc.expect.min_preemptions = parse_num(rest).map_err(&ctx)?
                 }
@@ -492,6 +535,12 @@ impl Scenario {
                 }
                 "expect_max_queue_wait_ns" => {
                     sc.expect.max_queue_wait_ns = Some(parse_num(rest).map_err(&ctx)?)
+                }
+                "expect_max_spills" => {
+                    sc.expect.max_spills = Some(parse_num(rest).map_err(&ctx)?)
+                }
+                "expect_recovered" => {
+                    sc.expect.recovered = Some(parse_num(rest).map_err(&ctx)?)
                 }
                 "session" => {
                     sc.sessions.push(Self::parse_session(rest).map_err(|e| ctx(e.to_string()))?)
@@ -702,6 +751,31 @@ impl Scenario {
         if trace {
             engine.tracer = Tracer::enabled(DEFAULT_RING_CAPACITY);
         }
+        // Durability knobs live in a per-run scratch directory so parallel
+        // test runs never collide; it is wiped once the report is built.
+        let mut scratch: Option<PathBuf> = None;
+        if self.journal || self.spill {
+            static SCRATCH_SEQ: std::sync::atomic::AtomicU64 =
+                std::sync::atomic::AtomicU64::new(0);
+            let dir = std::env::temp_dir().join(format!(
+                "leap_scn_{}_{}",
+                std::process::id(),
+                SCRATCH_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            ));
+            std::fs::create_dir_all(&dir)?;
+            if self.journal {
+                engine.journal = Some(Journal::create(
+                    &dir.join("journal"),
+                    FsyncPolicy::Never,
+                    DEFAULT_CHECKPOINT_EVERY,
+                )?);
+            }
+            if self.spill {
+                engine.spill = Some(SpillStore::create(&dir.join("spill"))?);
+                engine.admission.spill_aware = true;
+            }
+            scratch = Some(dir);
+        }
 
         // submissions in arrival order (stable: ties stay in script order)
         let mut order: Vec<usize> = (0..self.sessions.len()).collect();
@@ -828,13 +902,26 @@ impl Scenario {
                 }
             }
         }
+        if let Some(maxs) = self.expect.max_spills {
+            if m.kv_spills > maxs {
+                failures.push(format!("expected <= {maxs} KV spills, saw {}", m.kv_spills));
+            }
+        }
+        if let Some(rec) = self.expect.recovered {
+            if m.sessions_recovered != rec {
+                failures.push(format!(
+                    "expected exactly {rec} recovered sessions, saw {}",
+                    m.sessions_recovered
+                ));
+            }
+        }
         let trace_out = engine.tracer.is_enabled().then(|| TraceArtifacts {
             chrome_json: chrome_trace_json(&engine.tracer),
             jsonl: events_jsonl(&engine.tracer),
             recorded: engine.tracer.recorded(),
             dropped: engine.tracer.dropped(),
         });
-        Ok(ScenarioReport {
+        let report = ScenarioReport {
             scenario: self.name.clone(),
             numerics: self.numerics,
             chunk,
@@ -842,7 +929,13 @@ impl Scenario {
             metrics: engine.metrics.clone(),
             trace: trace_out,
             expect_failures: failures,
-        })
+        };
+        // Close the journal/spill files before wiping the scratch dir.
+        drop(engine);
+        if let Some(dir) = scratch {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        Ok(report)
     }
 
     /// Run the chunk-on/off A/B: the scripted chunk size vs monolithic
@@ -884,9 +977,13 @@ max_batch 4
 kv_dtype q8
 pool_bytes 65536
 trace on
+journal on
+spill on
 expect_min_preemptions 0
 expect_max_preemptions 0
 expect_max_queue_wait_ns 100000000
+expect_max_spills 0
+expect_recovered 0
 
 session arrive=0 prompt=rand:40:1 gen=4 expect=done
 session arrive=500 prompt=tokens:1,2,3 gen=2 seed=9 temp=0.8 top_k=8 stop=5,6|7
@@ -903,8 +1000,12 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert_eq!(sc.kv_dtype, Some(KvDtype::Q8));
         assert_eq!(sc.pool_bytes, Some(65536));
         assert!(sc.trace);
+        assert!(sc.journal);
+        assert!(sc.spill);
         assert_eq!(sc.expect.max_preemptions, Some(0));
         assert_eq!(sc.expect.max_queue_wait_ns, Some(100_000_000));
+        assert_eq!(sc.expect.max_spills, Some(0));
+        assert_eq!(sc.expect.recovered, Some(0));
         assert_eq!(sc.sessions.len(), 3);
         assert_eq!(sc.sessions[0].prompt.len(), 40);
         assert_eq!(sc.sessions[1].arrive_ns, 500);
@@ -973,6 +1074,15 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert!(json.contains("\"queue_wait_ns\":"));
         assert!(json.contains("\"prefill_ns\":"));
         assert!(json.contains("\"decode_ns\":"));
+        assert!(json.contains("\"restore_ns\":0"));
+        // durability counters ride in the metrics block (all zero here:
+        // synthetic numerics never spill and nothing was recovered)
+        assert!(json.contains("\"kv_spills\":0"));
+        assert!(json.contains("\"kv_spilled_blocks\":0"));
+        assert!(json.contains("\"spill_bytes_written\":0"));
+        assert!(json.contains("\"spill_bytes_read\":0"));
+        assert!(json.contains("\"sessions_recovered\":0"));
+        assert!(json.contains("\"recovery_replay_events\":0"));
         // `trace on` produced artifacts and the summary counts
         let trace = report.trace.as_ref().expect("trace on");
         assert!(trace.recorded > 0);

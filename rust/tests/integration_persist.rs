@@ -1,0 +1,250 @@
+//! Durability e2e (ISSUE 9): kill the engine at arbitrary journal-record
+//! indices, rebuild state from checkpoint + tail replay, and continue
+//! every unfinished session in a fresh engine — the completed token
+//! streams must be bitwise-identical to an uninterrupted run (the
+//! counter-based sampler and the reference backend's deterministic
+//! numerics make this exact, not approximate). Plus: torn-tail and
+//! corrupt-frame journals recover their valid prefix, and q8 spill
+//! restore is bitwise-invisible versus a pool that never spills.
+
+use std::path::{Path, PathBuf};
+
+use leap::arch::HwParams;
+use leap::coordinator::{
+    BatchPolicy, EngineConfig, GenerationConfig, Numerics, RequestState, ServingEngine,
+};
+use leap::model::ModelPreset;
+use leap::persist::{reconstruct, FsyncPolicy, Journal, JOURNAL_FILE};
+use leap::runtime::ReferenceBackend;
+use leap::scenario::Scenario;
+use leap::testutil::SplitMix64;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+fn engine() -> ServingEngine {
+    let backend = ReferenceBackend::load(&fixture_dir()).unwrap();
+    ServingEngine::new(EngineConfig {
+        preset: ModelPreset::Tiny,
+        hw: HwParams::default(),
+        policy: BatchPolicy::default(),
+        numerics: Numerics::Backend(Box::new(backend)),
+    })
+    .unwrap()
+}
+
+/// A mixed workload: greedy, seeded-sampled, and stop-sequence sessions
+/// (recovery must re-apply every termination rule identically).
+fn workload() -> Vec<(Vec<i32>, GenerationConfig)> {
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    let mut prompt =
+        |len: usize| -> Vec<i32> { (0..len).map(|_| rng.below(50) as i32 + 1).collect() };
+    vec![
+        (prompt(12), GenerationConfig::greedy(6)),
+        (
+            prompt(5),
+            GenerationConfig { temperature: 0.8, top_k: 8, seed: 5, ..GenerationConfig::greedy(8) },
+        ),
+        (
+            prompt(9),
+            GenerationConfig { stop: vec![vec![3], vec![7, 7]], ..GenerationConfig::greedy(7) },
+        ),
+        (
+            prompt(16),
+            GenerationConfig {
+                temperature: 0.7,
+                top_p: 0.9,
+                seed: 11,
+                ..GenerationConfig::greedy(5)
+            },
+        ),
+    ]
+}
+
+/// The uninterrupted run's token streams, in submission order.
+fn baseline() -> Vec<Vec<i32>> {
+    let mut e = engine();
+    let ids: Vec<_> = workload().into_iter().map(|(p, g)| e.submit_with(p, g).unwrap()).collect();
+    e.run_until_idle().unwrap();
+    ids.into_iter()
+        .map(|id| {
+            let r = e.take_finished_request(id).expect("baseline session finishes");
+            assert_eq!(r.state, RequestState::Done);
+            r.output
+        })
+        .collect()
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("leap_persist_e2e")
+        .join(format!("{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run the journaled workload until the journal holds `kill` records,
+/// then drop the engine cold (no shutdown checkpoint) — the crash.
+fn run_and_crash(dir: &Path, kill: u64) {
+    let mut e = engine();
+    e.journal = Some(Journal::create(dir, FsyncPolicy::Never, 7).unwrap());
+    for (p, g) in workload() {
+        e.submit_with(p, g).unwrap();
+    }
+    loop {
+        if e.journal.as_ref().unwrap().records_appended() >= kill {
+            break;
+        }
+        if !e.step().unwrap() {
+            break;
+        }
+    }
+}
+
+/// Reconstruct from `dir` and finish every session in a fresh engine;
+/// every stream (already-finished and continued alike) must equal the
+/// baseline stream for that submission index.
+fn recover_and_compare(dir: &Path, base: &[Vec<i32>], tag: &str) {
+    let state = reconstruct(dir).unwrap();
+    assert_eq!(state.sessions.len(), base.len(), "{tag}: every Submit was journaled up-front");
+    let mut fresh = engine();
+    let mut resumed = Vec::new();
+    for (i, s) in state.sessions.iter().enumerate() {
+        if s.finished {
+            assert!(!s.failed, "{tag}: session {i} failed");
+            assert_eq!(s.output, base[i], "{tag}: finished stream {i} diverged");
+        } else {
+            let id = fresh
+                .resubmit_recovered(s.prompt.clone(), s.gen.clone(), s.output.clone())
+                .unwrap();
+            resumed.push((i, id));
+        }
+    }
+    let n_resumed = resumed.len() as u64;
+    fresh.run_until_idle().unwrap();
+    for (i, id) in resumed {
+        let r = fresh.take_finished_request(id).expect("recovered session finishes");
+        assert_eq!(r.state, RequestState::Done, "{tag}: session {i} must complete");
+        assert_eq!(r.output, base[i], "{tag}: recovered stream {i} diverged");
+    }
+    assert_eq!(fresh.metrics.sessions_recovered, n_resumed);
+}
+
+/// The crash-recovery property: for kill points spanning the whole
+/// journal (including mid-checkpoint and past-the-end), replaying
+/// checkpoint + tail into a fresh engine reproduces every token stream
+/// bit for bit.
+#[test]
+fn crash_replay_streams_are_bitwise_identical() {
+    let base = baseline();
+
+    // discover the journal length of a full run (kill point past the end)
+    let full_dir = scratch("full");
+    run_and_crash(&full_dir, u64::MAX);
+    let full_state = reconstruct(&full_dir).unwrap();
+    assert!(full_state.sessions.iter().all(|s| s.finished), "uninterrupted run finished all");
+    assert!(
+        full_state.checkpoint_covers > 0,
+        "checkpoint_every=7 must have compacted at least once"
+    );
+    recover_and_compare(&full_dir, &base, "kill@end");
+    let total = full_state.checkpoint_covers + full_state.replay_events;
+    assert!(total > 12, "workload too small to exercise kill points ({total} records)");
+    let _ = std::fs::remove_dir_all(&full_dir);
+
+    // deterministic "random" kill points across the record range, plus
+    // the edges: before any step, and one record past a checkpoint
+    let mut rng = SplitMix64::new(0xDEAD_BEEF);
+    let mut kills = vec![1, 4, 8, total - 1];
+    kills.extend((0..5).map(|_| 1 + rng.below(total)));
+    for kill in kills {
+        let dir = scratch(&format!("kill_{kill}"));
+        run_and_crash(&dir, kill);
+        recover_and_compare(&dir, &base, &format!("kill@{kill}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A crash mid-write leaves a torn final frame: replay must keep the
+/// valid prefix, flag the tear, and recovery still completes every
+/// stream exactly.
+#[test]
+fn torn_tail_journal_recovers_the_valid_prefix() {
+    use std::io::Write;
+    let base = baseline();
+    let dir = scratch("torn");
+    run_and_crash(&dir, u64::MAX);
+    let mut f =
+        std::fs::OpenOptions::new().append(true).open(dir.join(JOURNAL_FILE)).unwrap();
+    // a partial frame: a length prefix promising far more than exists
+    f.write_all(&[0xFF, 0xFF, 0xFF, 0x7F, 0xAB, 0xCD]).unwrap();
+    drop(f);
+    let state = reconstruct(&dir).unwrap();
+    assert!(state.torn_tail, "appended garbage must read as a torn tail");
+    recover_and_compare(&dir, &base, "torn");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupt byte mid-journal fails that frame's checksum: replay stops
+/// there (a shorter but consistent history) and recovery continues the
+/// surviving sessions to the same streams.
+#[test]
+fn corrupt_frame_truncates_replay_but_recovery_still_matches() {
+    let base = baseline();
+    let dir = scratch("corrupt");
+    run_and_crash(&dir, u64::MAX);
+    let path = dir.join(JOURNAL_FILE);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() * 3 / 4;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let state = reconstruct(&dir).unwrap();
+    assert!(state.torn_tail, "checksum mismatch must stop replay");
+    // the checkpoint (written before the corrupted region or not) plus
+    // the surviving prefix is still a consistent history: all four
+    // sessions exist and every stream completes identically
+    recover_and_compare(&dir, &base, "corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Spill-restore is bitwise-invisible at q8: the same sessions on an
+/// oversubscribed 16-block q8 pool (spilling) and a roomy 64-block pool
+/// (never spilling) produce identical token streams, and the spilling
+/// run never re-prefills a token.
+#[test]
+fn q8_spill_restore_is_bitwise_invisible() {
+    const SESSIONS: &str = "\
+session arrive=0 prompt=rand:8:41 gen=6 expect=done
+session arrive=0 prompt=rand:8:42 gen=6 seed=5 temp=0.8 top_k=8 expect=done
+session arrive=0 prompt=rand:8:43 gen=6 expect=done
+session arrive=0 prompt=rand:8:44 gen=6 seed=9 temp=0.7 top_p=0.9 expect=done
+session arrive=0 prompt=rand:8:45 gen=6 expect=done
+session arrive=0 prompt=rand:8:46 gen=6 expect=done
+session arrive=0 prompt=rand:8:47 gen=6 expect=done
+session arrive=0 prompt=rand:8:48 gen=6 expect=done
+";
+    let tight = format!(
+        "scenario q8_tight\nnumerics ref\nkv_dtype q8\nblock_size 4\nblocks 16\n\
+         prefix_sharing off\nmax_batch 16\nmax_total_ctx 100000\nspill on\n\
+         expect_min_preemptions 1\n{SESSIONS}"
+    );
+    let roomy = format!(
+        "scenario q8_roomy\nnumerics ref\nkv_dtype q8\nblock_size 4\nblocks 64\n\
+         prefix_sharing off\nmax_batch 16\nmax_total_ctx 100000\n\
+         expect_max_preemptions 0\n{SESSIONS}"
+    );
+    let tight = Scenario::parse(&tight).unwrap().run(Some(&fixture_dir())).unwrap();
+    let roomy = Scenario::parse(&roomy).unwrap().run(Some(&fixture_dir())).unwrap();
+    assert!(tight.passed(), "tight failures: {:?}", tight.expect_failures);
+    assert!(roomy.passed(), "roomy failures: {:?}", roomy.expect_failures);
+    assert!(tight.metrics.kv_spills >= 1, "16-block pool must spill");
+    assert_eq!(roomy.metrics.kv_spills, 0);
+    assert_eq!(
+        tight.metrics.prefill_tokens, roomy.metrics.prefill_tokens,
+        "spill-restore must never re-prefill"
+    );
+    for (a, b) in tight.sessions.iter().zip(&roomy.sessions) {
+        assert_eq!(a.output, b.output, "session {}: spilling changed tokens", a.index);
+    }
+}
