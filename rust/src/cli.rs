@@ -14,6 +14,7 @@ use std::collections::HashMap;
 
 use crate::arch::{HwParams, TileGeometry};
 use crate::baselines::GpuModel;
+use crate::coordinator::generation::DEFAULT_PRIORITY;
 use crate::coordinator::{BatchPolicy, EngineConfig, GenerationConfig, Numerics, ServingEngine};
 use crate::energy::{AreaBreakdown, MacroArea};
 use crate::mapping::explore;
@@ -98,13 +99,26 @@ COMMANDS
                 disk and restore them at readmission instead of
                 re-prefilling — oversubscription mode; bare --spill uses
                 <journal>/spill; enables spill-aware admission)
+               [--fault-plan SPEC] (deterministic fault injection, e.g.
+                'seed=7; site=journal_write at=3 mode=transient times=2';
+                sites: journal_write spill_write spill_read lane_panic
+                lane_stall block_alloc — see README 'Failure semantics')
+               [--ttft-deadline-ns N] [--total-deadline-ns N] (per-request
+                SLO deadlines on the simulated clock; an elapsed deadline
+                aborts the request with a typed timeout, never a hang)
+               [--priority N] (0-255 shedding class, default 100; under
+                overload lower classes are shed first)
+               [--max-waiting N] (overload cap on the wait queue; excess
+                requests are shed lowest-priority-first, typed outcome)
   recover      --journal DIR [--model tiny --numerics ref|synthetic
                --artifacts DIR --kv-dtype ... --chunk N  (match the
                 crashed run's engine flags)]
                (rebuild sessions from checkpoint + journal tail, print
                 finished streams, continue unfinished ones — with the
                 reference backend bitwise-identically to the lost run —
-                and re-journal the continuation into DIR)
+                and re-journal the continuation into DIR. A missing DIR
+                is a typed error; an empty or torn-tail-only journal
+                prints 'nothing to recover' and exits 0)
   scenario     --script FILE.scn | --suite DIR
                [--json-dir DIR] [--artifacts DIR] [--ab-chunk true]
                [--trace true] (force tracing even if the script omits
@@ -242,6 +256,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
     let gen = args.get_usize("gen", 32);
     let mut engine = build_engine(args)?;
     attach_durability(&mut engine, args)?;
+    if let Some(spec) = args.options.get("fault-plan") {
+        engine.faults = crate::faults::FaultPlan::parse(spec)?;
+    }
+    if let Some(cap) = args.options.get("max-waiting") {
+        let cap = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--max-waiting {cap}: expected a queue depth"))?;
+        engine.overload.max_waiting = Some(cap);
+    }
     // Any trace output path implies tracing; --trace true enables it on
     // its own (counters still print even with nowhere to export).
     let trace_out = args.options.get("trace-out").map(std::path::PathBuf::from);
@@ -262,6 +285,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         repetition_penalty: args.get_f32("rep", 1.0),
         stop: Vec::new(),
         seed: args.get_u64("seed", 0),
+        ttft_deadline_ns: args.options.get("ttft-deadline-ns").and_then(|v| v.parse().ok()),
+        total_deadline_ns: args.options.get("total-deadline-ns").and_then(|v| v.parse().ok()),
+        priority: args.get_usize("priority", DEFAULT_PRIORITY as usize) as u8,
     };
     for i in 0..n_requests {
         let prompt: Vec<i32> =
@@ -281,6 +307,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
         "requests done   : {} (failed {}, rejected {})",
         m.requests_done, m.requests_failed, m.requests_rejected
     );
+    if m.requests_timeout > 0 || m.requests_shed > 0 {
+        println!(
+            "slo             : {} timed out, {} shed under overload",
+            m.requests_timeout, m.requests_shed
+        );
+    }
+    if m.faults_injected > 0 {
+        println!(
+            "faults injected : {} ({} persist retries, {} lane deaths)",
+            m.faults_injected, m.persist_retries, m.pool_lane_deaths
+        );
+    }
     println!("prefill tokens  : {} ({} chunks)", m.prefill_tokens, m.prefill_chunks);
     println!("decode tokens   : {}", m.decode_tokens);
     println!("sim time        : {:.3} s", m.sim_time_ns as f64 * 1e-9);
@@ -365,7 +403,21 @@ fn cmd_recover(args: &Args) -> anyhow::Result<i32> {
             .get("journal")
             .ok_or_else(|| anyhow::anyhow!("recover needs --journal DIR"))?,
     );
+    // Typed pre-flight: a missing/non-directory path is a clear error
+    // before any replay machinery runs.
+    crate::persist::check_journal_dir(&dir)?;
     let state = crate::persist::reconstruct(&dir)?;
+    if state.sessions.is_empty() {
+        // An empty journal (or one holding only a torn tail from a crash
+        // mid-first-write) is a clean no-op, not a failure.
+        let torn = if state.torn_tail {
+            " (torn tail only — crash before the first complete record)"
+        } else {
+            ""
+        };
+        println!("nothing to recover: journal at {} holds no sessions{torn}", dir.display());
+        return Ok(0);
+    }
     println!(
         "journal         : {} sessions ({} unfinished), checkpoint covers {}, \
          {} tail records{}",
@@ -776,6 +828,47 @@ mod tests {
         assert!(run(&argv("serve --model 1b --numerics synthetic --requests 1 \
              --prompt 4 --gen 2 --spill")).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_preflight_missing_dir_typed_empty_dir_clean_exit() {
+        let dir = std::env::temp_dir().join("leap_cli_recover_preflight_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        // missing directory → typed error naming the path
+        let cmd = format!("recover --journal {} --model 1b --numerics synthetic", dir.display());
+        let err = run(&argv(&cmd)).unwrap_err();
+        assert!(err.to_string().contains("does not exist"), "{err}");
+        // empty directory → "nothing to recover", exit 0
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        // torn-tail-only journal (crash before the first complete record)
+        // → still nothing to recover, exit 0
+        std::fs::write(dir.join(crate::persist::JOURNAL_FILE), [1u8, 2, 3]).unwrap();
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_fault_plan_and_slo_flags_wire_through() {
+        // permanent block_alloc fault: every admission fails typed, the
+        // queue drains, and the run still exits 0 (typed, not a crash)
+        let cmd = "serve --model 1b --numerics synthetic --requests 2 --prompt 8 \
+                   --gen 4 --fault-plan site=block_alloc --max-waiting 8";
+        assert_eq!(run(&argv(cmd)).unwrap(), 0);
+        // a malformed plan is a typed error at startup
+        assert!(run(&argv(
+            "serve --model 1b --numerics synthetic --requests 1 --fault-plan site=warp_core"
+        ))
+        .is_err());
+        // an immediate TTFT deadline times every request out, typed
+        let cmd = "serve --model 1b --numerics synthetic --requests 2 --prompt 8 \
+                   --gen 4 --ttft-deadline-ns 0 --priority 5";
+        assert_eq!(run(&argv(cmd)).unwrap(), 0);
+        // a bogus overload cap is a typed error
+        assert!(run(&argv(
+            "serve --model 1b --numerics synthetic --requests 1 --max-waiting lots"
+        ))
+        .is_err());
     }
 
     #[test]

@@ -152,6 +152,30 @@ impl Batcher {
         self.waiting.len()
     }
 
+    /// The wait queue in order (head first) — read-only, for the engine's
+    /// deadline sweep and overload shedder to pick victims.
+    pub fn waiting(&self) -> impl Iterator<Item = &Request> {
+        self.waiting.iter()
+    }
+
+    /// Remove every waiting request matching `pred`, preserving FCFS order
+    /// among the survivors. Returns the extracted requests in queue order.
+    /// Deadline timeouts and load shedding abort through this without
+    /// disturbing admission order for everyone else.
+    pub fn extract_waiting(&mut self, mut pred: impl FnMut(&Request) -> bool) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.waiting.len());
+        for req in self.waiting.drain(..) {
+            if pred(&req) {
+                out.push(req);
+            } else {
+                kept.push_back(req);
+            }
+        }
+        self.waiting = kept;
+        out
+    }
+
     pub fn is_idle(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
     }
@@ -251,6 +275,19 @@ mod tests {
             AdmissionDecision::Admit
         });
         assert_eq!(adm, vec![1]);
+    }
+
+    #[test]
+    fn extract_waiting_preserves_survivor_order() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..5 {
+            b.submit(req(i, 2, 2));
+        }
+        let out = b.extract_waiting(|r| r.id % 2 == 1);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.waiting().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert!(b.extract_waiting(|_| false).is_empty());
+        assert_eq!(b.waiting_len(), 3);
     }
 
     #[test]

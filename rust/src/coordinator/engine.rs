@@ -18,18 +18,32 @@
 //! on readmission their prompt plus already-generated tokens are
 //! re-prefilled (the vLLM recompute discipline), which greedy decode makes
 //! token-equivalent to never having been preempted.
+//!
+//! Robustness: the engine consults a seeded [`FaultPlan`] at every
+//! persistence/pool call site (deterministic chaos testing), enforces
+//! per-request SLO deadlines (`ttft_deadline_ns` / `total_deadline_ns` →
+//! typed [`FinishReason::Timeout`]), and sheds the lowest-priority waiters
+//! under overload ([`OverloadPolicy`] → typed [`FinishReason::Shed`]).
+//! Every faulted or late request ends in a typed outcome; sessions the
+//! fault never touched finish bitwise-identically to the fault-free run
+//! (`tests/integration_chaos.rs`).
+
+// Typed-error discipline on the serving path: panicking on I/O or lock
+// state here would take the whole engine down with every live session.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use std::time::Instant;
 
 use crate::arch::{HwParams, TileGeometry};
 use crate::compiler::{Compiler, CompiledModel};
 use crate::energy::table2;
+use crate::faults::{FaultPlan, FaultSite};
 use crate::isa::Npm;
 use crate::kvcache::{AdmissionDecision, AdmissionPolicy};
 use crate::model::ModelPreset;
 use crate::obs::{self, EventKind, Level, Tracer};
 use crate::persist::{Journal, JournalRecord, SpillStore};
-use crate::runtime::{NumericsBackend, ReferenceBackend};
+use crate::runtime::{LaneFault, NumericsBackend, ReferenceBackend};
 use crate::sim::analytical::WAVEFRONT_MACROS;
 use crate::sim::AnalyticalSim;
 
@@ -158,17 +172,77 @@ impl NextToken {
     }
 }
 
-/// Append one record to the journal, if journaling is on. A free function
-/// so partially-borrowed engine scopes can call it; a failed write
-/// degrades durability, not serving: log and keep going.
-fn journal_rec(journal: &mut Option<Journal>, rec: JournalRecord) {
-    if let Some(j) = journal.as_mut() {
-        if let Err(err) = j.record(&rec) {
-            obs::stderr_log(
-                Level::Warn,
-                "journal_write_error",
-                format_args!("journal append failed (durability degraded): {err:#}"),
-            );
+/// Graceful-overload knobs: shedding from the wait queue by priority
+/// class when it grows past a bound. Shedding never touches the running
+/// batch and never starves: a waiter aged past `age_exempt_ns` is exempt,
+/// so a low-priority request that already waited its share cannot be
+/// victimised forever by a stream of high-priority arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverloadPolicy {
+    /// Shed the wait queue down to this depth each step (`None`, the
+    /// default, never sheds).
+    pub max_waiting: Option<usize>,
+    /// Waiters at least this old (simulated ns since last enqueue) are
+    /// shed-exempt.
+    pub age_exempt_ns: u64,
+}
+
+impl Default for OverloadPolicy {
+    fn default() -> Self {
+        Self { max_waiting: None, age_exempt_ns: 1_000_000 }
+    }
+}
+
+/// Bounded retries for transient persistence I/O before degrading.
+const PERSIST_RETRY_LIMIT: u32 = 3;
+
+/// Append one record to the journal, if journaling is on. Transient write
+/// failures (real or injected by the fault plan) are retried up to
+/// [`PERSIST_RETRY_LIMIT`] times; a write that still fails degrades
+/// durability, not serving — the journal is dropped (read-only degraded
+/// mode: no further appends are attempted) and the engine keeps going. A
+/// free function so partially-borrowed engine scopes can call it.
+fn journal_rec(
+    journal: &mut Option<Journal>,
+    faults: &mut FaultPlan,
+    persist_retries: &mut u64,
+    rec: JournalRecord,
+) {
+    if journal.is_none() {
+        return;
+    }
+    let mut attempt = 0u32;
+    loop {
+        let res = match faults.check(FaultSite::JournalWrite) {
+            Some(_) => Err(anyhow::anyhow!("injected journal-write fault (plan)")),
+            None => match journal.as_mut() {
+                Some(j) => j.record(&rec),
+                None => return,
+            },
+        };
+        match res {
+            Ok(()) => return,
+            Err(err) if attempt < PERSIST_RETRY_LIMIT => {
+                attempt += 1;
+                *persist_retries += 1;
+                obs::stderr_log(
+                    Level::Warn,
+                    "journal_write_retry",
+                    format_args!("journal append failed (attempt {attempt}): {err:#}"),
+                );
+            }
+            Err(err) => {
+                obs::stderr_log(
+                    Level::Error,
+                    "journal_write_error",
+                    format_args!(
+                        "journal append still failing after {PERSIST_RETRY_LIMIT} retries; \
+                         journaling disabled (read-only degraded mode): {err:#}"
+                    ),
+                );
+                *journal = None;
+                return;
+            }
         }
     }
 }
@@ -206,6 +280,11 @@ pub struct ServingEngine {
     /// to a per-session file and readmission restores them — zero
     /// re-prefilled tokens. `None` (default) = the recompute discipline.
     pub spill: Option<SpillStore>,
+    /// Deterministic fault schedule ([`crate::faults`]). Empty (default)
+    /// = every site consult is one `is_empty` branch and nothing injects.
+    pub faults: FaultPlan,
+    /// Overload shedding policy (default: never shed).
+    pub overload: OverloadPolicy,
     numerics: Numerics,
     next_id: RequestId,
     /// Simulated clock, ns.
@@ -214,6 +293,9 @@ pub struct ServingEngine {
     round: u64,
     /// Finished requests awaiting pickup (server replies).
     completed: Vec<Request>,
+    /// Per-site injection counters at the last step's end — the deltas
+    /// become [`EventKind::FaultInjected`] trace events.
+    last_fault_counts: [u64; 6],
 }
 
 impl ServingEngine {
@@ -235,11 +317,14 @@ impl ServingEngine {
             tracer: Tracer::disabled(),
             journal: None,
             spill: None,
+            faults: FaultPlan::none(),
+            overload: OverloadPolicy::default(),
             numerics: cfg.numerics,
             next_id: 0,
             now_ns: 0,
             round: 0,
             completed: Vec::new(),
+            last_fault_counts: [0; 6],
         })
     }
 
@@ -284,6 +369,8 @@ impl ServingEngine {
         if self.journal.is_some() {
             journal_rec(
                 &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
                 JournalRecord::Submit { id, prompt: prompt.clone(), gen: gen.clone() },
             );
         }
@@ -329,10 +416,17 @@ impl ServingEngine {
         if self.journal.is_some() {
             journal_rec(
                 &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
                 JournalRecord::Submit { id, prompt: prompt.clone(), gen: gen.clone() },
             );
             for &t in &emitted {
-                journal_rec(&mut self.journal, JournalRecord::Token { id, token: t });
+                journal_rec(
+                    &mut self.journal,
+                    &mut self.faults,
+                    &mut self.metrics.persist_retries,
+                    JournalRecord::Token { id, token: t },
+                );
             }
         }
         let mut req = Request::with_gen(id, prompt, gen, now);
@@ -353,6 +447,8 @@ impl ServingEngine {
             }
             journal_rec(
                 &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
                 JournalRecord::Finish { id, failed: false, output_len: req.output.len() as u64 },
             );
             self.tracer.emit(
@@ -449,6 +545,57 @@ impl ServingEngine {
         self.tracer.emit(now, Some(id), EventKind::Diag { level: Level::Error, code });
     }
 
+    /// Retire a request aborted while still in the wait queue (deadline
+    /// timeout or overload shed): journal the terminal record, emit the
+    /// typed event, count it, and surface it to `completed`. Timed-out and
+    /// shed requests are *not* counted as `requests_failed` and never
+    /// enter the latency/TTFT histograms — they are a separate, typed
+    /// population. The request held no KV blocks, so nothing is released;
+    /// a pending spill file (preempted then aborted) is discarded.
+    fn finish_queued_abort(&mut self, req: Request) {
+        let now = self.now_ns;
+        journal_rec(
+            &mut self.journal,
+            &mut self.faults,
+            &mut self.metrics.persist_retries,
+            JournalRecord::Finish { id: req.id, failed: true, output_len: req.output.len() as u64 },
+        );
+        if let Some(store) = self.spill.as_mut() {
+            store.discard(req.id);
+        }
+        let waited = now.saturating_sub(req.t_enqueued_ns);
+        let (outcome, reason) = match req.finish {
+            Some(FinishReason::Timeout) => {
+                self.metrics.requests_timeout += 1;
+                self.tracer.emit(
+                    now,
+                    Some(req.id),
+                    EventKind::Timeout {
+                        waited_ns: waited,
+                        output_tokens: req.output.len() as u32,
+                    },
+                );
+                ("timeout", "deadline")
+            }
+            Some(FinishReason::Shed) => {
+                self.metrics.requests_shed += 1;
+                self.tracer.emit(
+                    now,
+                    Some(req.id),
+                    EventKind::Shed { priority: req.gen.priority, waited_ns: waited },
+                );
+                ("shed", "overload")
+            }
+            _ => ("failed", "error"),
+        };
+        self.tracer.emit(
+            now,
+            Some(req.id),
+            EventKind::Finish { outcome, reason, output_tokens: req.output.len() as u32 },
+        );
+        self.completed.push(req);
+    }
+
     /// Load + swap the NPM with the program for this phase (double-banked).
     fn dispatch(&mut self, prog: crate::isa::Program) -> anyhow::Result<u64> {
         let cycles = prog.controller_cycles();
@@ -469,6 +616,84 @@ impl ServingEngine {
         let round_no = self.round;
         let step_t0_sim = self.now_ns;
 
+        // --- SLO deadline sweep ------------------------------------------
+        // Waiting requests past a deadline abort in place: a TTFT deadline
+        // that elapses in the queue times out *without ever being
+        // prefilled* — it never claims a block, never perturbs the batch.
+        // Running requests past their total deadline (or still without a
+        // first token past their TTFT deadline) are aborted here and
+        // collected by the retire loop below, before this step's decode
+        // round — they cost no further compute.
+        {
+            let now = self.now_ns;
+            let over = |r: &Request| {
+                let ttft_over = r.t_first_token_ns.is_none()
+                    && r.gen
+                        .ttft_deadline_ns
+                        .is_some_and(|d| now >= r.t_arrive_ns.saturating_add(d));
+                let total_over = r
+                    .gen
+                    .total_deadline_ns
+                    .is_some_and(|d| now >= r.t_arrive_ns.saturating_add(d));
+                ttft_over || total_over
+            };
+            for mut req in self.batcher.extract_waiting(|r| over(r)) {
+                req.abort_with(FinishReason::Timeout, now);
+                self.finish_queued_abort(req);
+            }
+            let late: Vec<RequestId> = self
+                .batcher
+                .running()
+                .iter()
+                .filter(|r| !r.is_finished() && over(r))
+                .map(|r| r.id)
+                .collect();
+            for id in late {
+                if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
+                    r.abort_with(FinishReason::Timeout, now);
+                }
+            }
+        }
+
+        // --- overload shedding -------------------------------------------
+        // Trim the wait queue to the policy bound: lowest priority class
+        // first, youngest arrival within a class. Aged waiters are exempt
+        // (no starvation); when everyone left is exempt, stop shedding.
+        if let Some(cap) = self.overload.max_waiting {
+            while self.batcher.waiting_len() > cap {
+                let now = self.now_ns;
+                let exempt_ns = self.overload.age_exempt_ns;
+                let victim = self
+                    .batcher
+                    .waiting()
+                    .filter(|r| now.saturating_sub(r.t_enqueued_ns) < exempt_ns)
+                    .min_by_key(|r| (r.gen.priority, std::cmp::Reverse(r.id)))
+                    .map(|r| r.id);
+                let Some(vid) = victim else {
+                    break; // every waiter is aged-exempt
+                };
+                for mut req in self.batcher.extract_waiting(|r| r.id == vid) {
+                    req.abort_with(FinishReason::Shed, now);
+                    self.finish_queued_abort(req);
+                }
+            }
+        }
+
+        // --- fault plan: arm worker-lane faults for this step ------------
+        // Consulted once per step (the plan's `at=` counts engine steps for
+        // these sites); the armed lane fires inside its next engagement.
+        if !self.faults.is_empty() {
+            for (site, kind) in
+                [(FaultSite::LanePanic, LaneFault::Panic), (FaultSite::LaneStall, LaneFault::Stall)]
+            {
+                if let Some(rule) = self.faults.check(site) {
+                    if let Numerics::Backend(backend) = &mut self.numerics {
+                        backend.inject_lane_fault(rule.lane, kind);
+                    }
+                }
+            }
+        }
+
         // --- admission (block-pool backed) -------------------------------
         // The batcher's caps apply first; then each head-of-queue request
         // is judged against the actual free blocks of the simulated
@@ -478,7 +703,7 @@ impl ServingEngine {
         let (admitted, rejected) = {
             let admission = self.admission;
             let now = self.now_ns;
-            let Self { batcher, kv, numerics, tracer, .. } = self;
+            let Self { batcher, kv, numerics, tracer, faults, .. } = self;
             let mut sim_pending = 0usize;
             // Blocks the sessions already mid-chunked-prefill will still
             // claim before they produce a token: their future chunks must
@@ -500,6 +725,22 @@ impl ServingEngine {
                     .sum();
             }
             batcher.admit_with(|req| {
+                // injected block-ledger allocation failure: the request is
+                // rejected with a typed outcome (bounded — each consult
+                // rules on one request, so a permanent fault drains the
+                // queue as typed failures, never a livelock)
+                if faults.check(FaultSite::BlockAlloc).is_some() {
+                    tracer.emit(
+                        now,
+                        Some(req.id),
+                        EventKind::AdmissionDecision {
+                            decision: "reject",
+                            need_blocks: 0,
+                            free_blocks: kv.free_blocks() as u32,
+                        },
+                    );
+                    return AdmissionDecision::Reject;
+                }
                 let resume_ctx = req.ctx_len(); // prompt + generated (resume)
                 let remaining = req.max_new_tokens() - req.output.len();
                 // simulated scratchpad: reject what can never fit (the
@@ -581,6 +822,8 @@ impl ServingEngine {
             self.metrics.requests_failed += 1;
             journal_rec(
                 &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
                 JournalRecord::Finish {
                     id: req.id,
                     failed: true,
@@ -606,7 +849,12 @@ impl ServingEngine {
             if !admitted.contains(&r.id) {
                 continue;
             }
-            journal_rec(&mut self.journal, JournalRecord::Admit { id: r.id });
+            journal_rec(
+                &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
+                JournalRecord::Admit { id: r.id },
+            );
             let readmission = r.preemptions > 0;
             if r.t_admitted_ns.is_none() {
                 r.t_admitted_ns = Some(now);
@@ -642,7 +890,11 @@ impl ServingEngine {
             .collect();
         for id in prefilling {
             let (tokens, prefilled) = {
-                let r = self.batcher.running().iter().find(|r| r.id == id).unwrap();
+                // a request the deadline sweep aborted between collection
+                // and here is simply skipped (the retire loop owns it)
+                let Some(r) = self.batcher.running().iter().find(|r| r.id == id) else {
+                    continue;
+                };
                 let mut t = r.prompt.clone();
                 t.extend_from_slice(&r.output);
                 (t, r.prefilled)
@@ -837,7 +1089,12 @@ impl ServingEngine {
                 // (0 for a fresh request, the resume step after preemption)
                 let had_first = r.t_first_token_ns.is_some();
                 let token = next.resolve(r);
-                journal_rec(&mut self.journal, JournalRecord::Token { id, token });
+                journal_rec(
+                    &mut self.journal,
+                    &mut self.faults,
+                    &mut self.metrics.persist_retries,
+                    JournalRecord::Token { id, token },
+                );
                 finished = r.accept_token(token, now);
                 if !had_first {
                     // saturating: a 1-token stop-sequence match can leave
@@ -868,7 +1125,7 @@ impl ServingEngine {
         // early at worst, never a round late.
         {
             let now = self.now_ns;
-            let Self { batcher, kv, numerics, metrics, tracer, journal, spill, .. } = self;
+            let Self { batcher, kv, numerics, metrics, tracer, journal, spill, faults, .. } = self;
             if let Numerics::Backend(backend) = numerics {
                 if backend.kv_pool_stats().is_some() {
                     loop {
@@ -927,33 +1184,64 @@ impl ServingEngine {
                                 free_blocks: free as u32,
                             },
                         );
-                        journal_rec(journal, JournalRecord::Preempt { id: victim });
+                        journal_rec(
+                            journal,
+                            faults,
+                            &mut metrics.persist_retries,
+                            JournalRecord::Preempt { id: victim },
+                        );
                         // spill the victim's KV rows before releasing them:
                         // readmission then restores from disk instead of
-                        // re-prefilling. A failed write just logs — the
-                        // recompute path is always there to fall back on.
+                        // re-prefilling. Transient write failures (real or
+                        // injected) retry; a write that still fails just
+                        // logs — the recompute path is always there to
+                        // fall back on.
                         if let Some(store) = spill.as_mut() {
                             if let Some(img) = backend.kv_spill(victim) {
                                 let blocks = backend.kv_admit_demand(img.rows).unwrap_or(0);
-                                match store.write(victim, &img) {
-                                    Ok(bytes) => {
-                                        metrics.kv_spills += 1;
-                                        metrics.kv_spilled_blocks += blocks as u64;
-                                        metrics.spill_bytes_written += bytes;
-                                        tracer.emit(
-                                            now,
-                                            Some(victim),
-                                            EventKind::Spill { blocks: blocks as u32, bytes },
-                                        );
+                                let mut attempt = 0u32;
+                                let wrote = loop {
+                                    let res = if faults.check(FaultSite::SpillWrite).is_some() {
+                                        Err(anyhow::anyhow!("injected spill-write fault"))
+                                    } else {
+                                        store.write(victim, &img)
+                                    };
+                                    match res {
+                                        Ok(bytes) => break Some(bytes),
+                                        Err(err) if attempt < PERSIST_RETRY_LIMIT => {
+                                            attempt += 1;
+                                            metrics.persist_retries += 1;
+                                            obs::stderr_log(
+                                                Level::Warn,
+                                                "spill_write_retry",
+                                                format_args!(
+                                                    "spill of request {victim} failed \
+                                                     (attempt {attempt}): {err:#}"
+                                                ),
+                                            );
+                                        }
+                                        Err(err) => {
+                                            obs::stderr_log(
+                                                Level::Warn,
+                                                "spill_write_error",
+                                                format_args!(
+                                                    "spill of request {victim} failed \
+                                                     (will re-prefill): {err:#}"
+                                                ),
+                                            );
+                                            break None;
+                                        }
                                     }
-                                    Err(err) => obs::stderr_log(
-                                        Level::Warn,
-                                        "spill_write_error",
-                                        format_args!(
-                                            "spill of request {victim} failed \
-                                             (will re-prefill): {err:#}"
-                                        ),
-                                    ),
+                                };
+                                if let Some(bytes) = wrote {
+                                    metrics.kv_spills += 1;
+                                    metrics.kv_spilled_blocks += blocks as u64;
+                                    metrics.spill_bytes_written += bytes;
+                                    tracer.emit(
+                                        now,
+                                        Some(victim),
+                                        EventKind::Spill { blocks: blocks as u32, bytes },
+                                    );
                                 }
                             }
                         }
@@ -1051,7 +1339,12 @@ impl ServingEngine {
             let mut finished = false;
             if let Some(r) = self.batcher.running_mut().iter_mut().find(|r| r.id == id) {
                 let token = next.resolve(r);
-                journal_rec(&mut self.journal, JournalRecord::Token { id, token });
+                journal_rec(
+                    &mut self.journal,
+                    &mut self.faults,
+                    &mut self.metrics.persist_retries,
+                    JournalRecord::Token { id, token },
+                );
                 finished = r.accept_token(token, now);
             }
             if !finished {
@@ -1085,6 +1378,8 @@ impl ServingEngine {
             }
             journal_rec(
                 &mut self.journal,
+                &mut self.faults,
+                &mut self.metrics.persist_retries,
                 JournalRecord::Finish {
                     id: done.id,
                     failed: done.state != RequestState::Done,
@@ -1099,9 +1394,30 @@ impl ServingEngine {
             let (outcome, reason) = if done.state == RequestState::Done {
                 ("done", done.finish.map_or("length", FinishReason::as_str))
             } else {
-                // the failure code already went out as a Diag event at the
-                // detection site (fail_request)
-                ("failed", "error")
+                match done.finish {
+                    // aborted mid-flight by the deadline sweep: a typed
+                    // outcome, kept out of requests_failed and the
+                    // latency/TTFT histograms
+                    Some(FinishReason::Timeout) => {
+                        self.metrics.requests_timeout += 1;
+                        self.tracer.emit(
+                            done.t_done_ns.unwrap_or(self.now_ns),
+                            Some(done.id),
+                            EventKind::Timeout {
+                                waited_ns: done
+                                    .t_done_ns
+                                    .unwrap_or(self.now_ns)
+                                    .saturating_sub(done.t_arrive_ns),
+                                output_tokens: done.output.len() as u32,
+                            },
+                        );
+                        ("timeout", "deadline")
+                    }
+                    Some(FinishReason::Shed) => ("shed", "overload"),
+                    // the failure code already went out as a Diag event at
+                    // the detection site (fail_request)
+                    _ => ("failed", "error"),
+                }
             };
             if done.state == RequestState::Done {
                 self.metrics.requests_done += 1;
@@ -1148,6 +1464,46 @@ impl ServingEngine {
             }
         }
 
+        // --- fault accounting --------------------------------------------
+        if !self.faults.is_empty() {
+            let counts = self.faults.injected_counts();
+            for (i, site) in FaultSite::ALL.iter().enumerate() {
+                let delta = counts[i] - self.last_fault_counts[i];
+                if delta > 0 {
+                    self.tracer.emit(
+                        self.now_ns,
+                        None,
+                        EventKind::FaultInjected { site: site.as_str(), count: delta as u32 },
+                    );
+                }
+            }
+            self.last_fault_counts = counts;
+            self.metrics.faults_injected = self.faults.injected_total();
+        }
+
+        // A step that moved the clock nowhere but still has waiters can
+        // only be waiting for a deadline (e.g. an idle engine holding a
+        // queued request whose TTFT budget has not elapsed yet): jump the
+        // clock to the earliest pending deadline so the sweep fires next
+        // step instead of spinning at +0 ns.
+        if self.now_ns == step_t0_sim
+            && self.batcher.running().is_empty()
+            && self.batcher.waiting_len() > 0
+        {
+            let next_deadline = self
+                .batcher
+                .waiting()
+                .filter_map(|r| {
+                    let ttft = r.gen.ttft_deadline_ns.map(|d| r.t_arrive_ns.saturating_add(d));
+                    let total = r.gen.total_deadline_ns.map(|d| r.t_arrive_ns.saturating_add(d));
+                    [ttft, total].into_iter().flatten().min()
+                })
+                .min();
+            if let Some(ns) = next_deadline {
+                self.advance_clock_to(ns);
+            }
+        }
+
         self.tracer.emit(
             step_t0_sim,
             None,
@@ -1163,21 +1519,45 @@ impl ServingEngine {
     }
 
     /// Pop the spill image (and its on-disk byte count) waiting for `id`,
-    /// if any. Corrupt files are logged and dropped — the caller falls
-    /// back to re-prefill.
+    /// if any. Transient read failures (real or injected by the fault
+    /// plan) retry up to [`PERSIST_RETRY_LIMIT`] times; a file that stays
+    /// unreadable is logged and dropped — the caller falls back to
+    /// re-prefill (spilling is an optimisation, never a correctness
+    /// dependency).
     fn take_spill(&mut self, id: RequestId) -> Option<(crate::kvcache::SpillImage, u64)> {
-        let store = self.spill.as_mut()?;
+        let Self { spill, faults, metrics, .. } = self;
+        let store = spill.as_mut()?;
         let before = store.bytes_read;
-        match store.take(id) {
-            Ok(Some(img)) => Some((img, store.bytes_read - before)),
-            Ok(None) => None,
-            Err(err) => {
-                obs::stderr_log(
-                    Level::Warn,
-                    "spill_read_error",
-                    format_args!("spill file of request {id} unreadable; re-prefilling: {err:#}"),
-                );
-                None
+        let mut attempt = 0u32;
+        loop {
+            let res = match faults.check(FaultSite::SpillRead) {
+                Some(_) => Err(anyhow::anyhow!("injected spill-read fault (plan)")),
+                None => store.take(id),
+            };
+            match res {
+                Ok(Some(img)) => return Some((img, store.bytes_read - before)),
+                Ok(None) => return None,
+                Err(err) if attempt < PERSIST_RETRY_LIMIT => {
+                    attempt += 1;
+                    metrics.persist_retries += 1;
+                    obs::stderr_log(
+                        Level::Warn,
+                        "spill_read_retry",
+                        format_args!(
+                            "spill file of request {id} unreadable (attempt {attempt}): {err:#}"
+                        ),
+                    );
+                }
+                Err(err) => {
+                    obs::stderr_log(
+                        Level::Warn,
+                        "spill_read_error",
+                        format_args!(
+                            "spill file of request {id} unreadable; re-prefilling: {err:#}"
+                        ),
+                    );
+                    return None;
+                }
             }
         }
     }
@@ -1199,6 +1579,7 @@ impl ServingEngine {
         let r = self.completed.swap_remove(idx);
         Some(super::server::Completion {
             id: r.id,
+            outcome: r.outcome_str(),
             tokens: r.output.clone(),
             ttft_ns: r.ttft_ns(),
             latency_ns: r.latency_ns(),
@@ -1428,5 +1809,142 @@ mod tests {
         }
         e.run_until_idle().unwrap();
         assert!(e.compiled.cache_hits > e.compiled.cache_misses);
+    }
+
+    #[test]
+    fn ttft_deadline_in_queue_times_out_without_prefill() {
+        // max_batch = 0: the request can never be admitted, so its TTFT
+        // deadline elapses in the queue. The livelock guard jumps the
+        // idle clock to the deadline (run_until_idle must terminate) and
+        // the sweep aborts it typed — never prefilled, never counted as
+        // failed, absent from the latency/TTFT histograms.
+        let mut e = engine();
+        e.batcher.policy.max_batch = 0;
+        e.tracer = Tracer::enabled(256);
+        let gen = GenerationConfig { ttft_deadline_ns: Some(10), ..GenerationConfig::greedy(4) };
+        let id = e.submit_with(vec![1; 8], gen).expect("submit");
+        e.run_until_idle().unwrap();
+        let r = e.take_finished_request(id).unwrap();
+        assert_eq!(r.outcome_str(), "timeout");
+        assert_eq!(r.finish, Some(FinishReason::Timeout));
+        assert!(r.output.is_empty());
+        assert_eq!(e.metrics.prefill_tokens, 0, "a queue timeout is never prefilled");
+        assert_eq!(e.metrics.requests_timeout, 1);
+        assert_eq!(e.metrics.requests_failed, 0, "timeout is typed, not a failure");
+        assert_eq!(e.metrics.requests_done, 0);
+        assert_eq!(e.metrics.latency.count(), 0);
+        assert_eq!(e.metrics.ttft.count(), 0);
+        let kinds: Vec<&str> = e.tracer.events().iter().map(|ev| ev.kind.name()).collect();
+        assert!(kinds.contains(&"timeout"), "missing timeout event in {kinds:?}");
+        assert!(!kinds.contains(&"prefill_chunk"));
+    }
+
+    #[test]
+    fn total_deadline_aborts_mid_decode_typed() {
+        let mut e = engine();
+        let gen = GenerationConfig {
+            total_deadline_ns: Some(1), // elapses after the first step
+            ..GenerationConfig::greedy(1000)
+        };
+        let id = e.submit_with(vec![1; 16], gen).expect("submit");
+        e.run_until_idle().unwrap();
+        let r = e.take_finished_request(id).unwrap();
+        assert_eq!(r.outcome_str(), "timeout");
+        assert!(!r.output.is_empty(), "the pre-deadline tokens are kept");
+        assert!(r.output.len() < 1000);
+        assert_eq!(e.metrics.requests_timeout, 1);
+        assert_eq!(e.metrics.requests_failed, 0);
+        assert_eq!(e.kv.live_requests(), 0, "aborted request released its KV");
+    }
+
+    #[test]
+    fn deadlines_do_not_disturb_on_time_neighbors() {
+        let run = |with_deadline: bool| {
+            let mut e = engine();
+            let a = e.submit(vec![2; 32], 8).expect("submit");
+            let gen = GenerationConfig {
+                total_deadline_ns: with_deadline.then_some(1),
+                ..GenerationConfig::greedy(1000)
+            };
+            let b = e.submit_with(vec![3; 32], gen).expect("submit");
+            e.run_until_idle().unwrap();
+            (e.take_finished_request(a).unwrap().output, b)
+        };
+        let (on_time_base, _) = run(false);
+        let (on_time_chaos, _) = run(true);
+        assert_eq!(
+            on_time_base, on_time_chaos,
+            "a neighbor's timeout must be bitwise-invisible to on-time sessions"
+        );
+    }
+
+    #[test]
+    fn overload_sheds_lowest_priority_youngest_first() {
+        let mut e = engine();
+        e.batcher.policy.max_batch = 1;
+        e.overload = OverloadPolicy { max_waiting: Some(1), age_exempt_ns: 1_000_000 };
+        e.tracer = Tracer::enabled(256);
+        let sub = |e: &mut ServingEngine, priority: u8| {
+            e.submit_with(
+                vec![1; 8],
+                GenerationConfig { priority, ..GenerationConfig::greedy(2) },
+            )
+            .expect("submit")
+        };
+        let a = sub(&mut e, 5);
+        let b = sub(&mut e, 1);
+        let c = sub(&mut e, 9);
+        e.run_until_idle().unwrap();
+        // step 1 sheds down to one waiter before admission: the lowest
+        // class (b, priority 1) goes first, then the lower of the rest (a)
+        assert_eq!(e.take_finished_request(b).unwrap().outcome_str(), "shed");
+        assert_eq!(e.take_finished_request(a).unwrap().outcome_str(), "shed");
+        assert_eq!(e.take_finished_request(c).unwrap().outcome_str(), "done");
+        assert_eq!(e.metrics.requests_shed, 2);
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.requests_failed, 0);
+        let kinds: Vec<&str> = e.tracer.events().iter().map(|ev| ev.kind.name()).collect();
+        assert_eq!(kinds.iter().filter(|&&k| k == "shed").count(), 2);
+    }
+
+    #[test]
+    fn aged_waiters_are_shed_exempt() {
+        let mut e = engine();
+        e.batcher.policy.max_batch = 0; // nothing ever admits
+        e.overload = OverloadPolicy { max_waiting: Some(0), age_exempt_ns: 50 };
+        e.submit(vec![1; 4], 2).expect("submit");
+        e.advance_clock_to(100); // the waiter is now 100 ns old: exempt
+        assert!(e.step().unwrap());
+        assert_eq!(e.metrics.requests_shed, 0, "aged waiters are never shed");
+        assert_eq!(e.batcher.waiting_len(), 1);
+    }
+
+    #[test]
+    fn block_alloc_fault_rejects_typed_and_bounded() {
+        let mut e = engine();
+        e.faults =
+            crate::faults::FaultPlan::parse("site=block_alloc at=1 mode=transient times=1")
+                .unwrap();
+        let a = e.submit(vec![1; 8], 2).expect("submit");
+        let b = e.submit(vec![2; 8], 2).expect("submit");
+        e.run_until_idle().unwrap();
+        assert_eq!(e.take_finished_request(a).unwrap().outcome_str(), "failed");
+        assert_eq!(e.take_finished_request(b).unwrap().outcome_str(), "done");
+        assert_eq!(e.metrics.requests_failed, 1);
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.faults_injected, 1);
+    }
+
+    #[test]
+    fn permanent_block_alloc_fault_drains_typed_never_hangs() {
+        let mut e = engine();
+        e.faults = crate::faults::FaultPlan::parse("site=block_alloc at=1").unwrap();
+        for i in 0..4 {
+            e.submit(vec![1 + i; 8], 2).expect("submit");
+        }
+        e.run_until_idle().unwrap(); // must terminate
+        assert_eq!(e.metrics.requests_failed, 4, "every admission rejected, typed");
+        assert_eq!(e.metrics.requests_done, 0);
+        assert!(e.batcher.is_idle());
     }
 }

@@ -22,6 +22,10 @@ use crate::testutil::SplitMix64;
 
 use super::engine::SubmitError;
 
+/// Default priority class: mid-scale, so callers can express both "more
+/// important" and "less important" without touching every submit site.
+pub const DEFAULT_PRIORITY: u8 = 100;
+
 /// Per-request sampling/termination knobs. [`Default`] is greedy decode
 /// with 16 tokens — byte-identical to the pre-sampling engine behaviour.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +51,18 @@ pub struct GenerationConfig {
     pub stop: Vec<Vec<i32>>,
     /// Seed of the counter-based per-step RNG.
     pub seed: u64,
+    /// SLO: abort with [`super::request::FinishReason::Timeout`] if the
+    /// first token has not been produced within this many simulated ns of
+    /// arrival. A queued request whose TTFT deadline elapses is timed out
+    /// without ever being prefilled. `None` = no deadline.
+    pub ttft_deadline_ns: Option<u64>,
+    /// SLO: abort with a typed `Timeout` if the request has not reached a
+    /// terminal state within this many simulated ns of arrival.
+    pub total_deadline_ns: Option<u64>,
+    /// Priority class for overload shedding: higher is more important.
+    /// Under queue pressure the engine sheds the *lowest* class first
+    /// (ties: youngest first), with aging so no class starves.
+    pub priority: u8,
 }
 
 impl Default for GenerationConfig {
@@ -67,6 +83,9 @@ impl GenerationConfig {
             repetition_penalty: 1.0,
             stop: Vec::new(),
             seed: 0,
+            ttft_deadline_ns: None,
+            total_deadline_ns: None,
+            priority: DEFAULT_PRIORITY,
         }
     }
 

@@ -54,6 +54,20 @@ pub struct Metrics {
     /// Journal records replayed during recovery.
     pub recovery_replay_events: u64,
 
+    // --- robustness: SLOs, overload shedding, fault injection -----------
+    /// Requests aborted with a typed `Timeout` (TTFT or total deadline
+    /// elapsed). Not counted in `requests_failed` or the latency
+    /// histograms — a timed-out stream is an SLO outcome, not a sample.
+    pub requests_timeout: u64,
+    /// Requests aborted with a typed `Shed` by the overload policy.
+    pub requests_shed: u64,
+    /// Persist-I/O retries after a transient failure (journal or spill).
+    pub persist_retries: u64,
+    /// Faults the active `FaultPlan` injected (all sites, cumulative).
+    pub faults_injected: u64,
+    /// Worker-pool lanes that died to an isolated panic (cumulative).
+    pub pool_lane_deaths: u64,
+
     // --- paged-KV pool gauges (zero when the backend does not pool) -----
     /// Tokens per physical KV block.
     pub kv_block_size: usize,
@@ -147,6 +161,7 @@ impl Metrics {
         self.pool_dispatches = s.dispatches;
         self.pool_parks = s.parks;
         self.pool_wakes = s.wakes;
+        self.pool_lane_deaths = s.lane_deaths;
     }
 
     /// Fraction of prefix-cache probes that hit (0 when never probed).
@@ -233,6 +248,8 @@ mod tests {
             dispatches: 12,
             parks: 2,
             wakes: 2,
+            lane_deaths: 0,
+            dead_lanes: 0,
         });
         m.observe_worker_pool(&WorkerPoolStats {
             threads: 4,
@@ -240,11 +257,14 @@ mod tests {
             dispatches: 40,
             parks: 5,
             wakes: 5,
+            lane_deaths: 1,
+            dead_lanes: 0b100,
         });
         assert_eq!(m.pool_threads, 4);
         assert_eq!(m.pool_dispatches, 40, "cumulative counter: overwrite, not add");
         assert_eq!(m.pool_parks, 5);
         assert_eq!(m.pool_wakes, 5);
+        assert_eq!(m.pool_lane_deaths, 1);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{EngineConfig, Numerics, ServingEngine, SubmitError};
+pub use engine::{EngineConfig, Numerics, OverloadPolicy, ServingEngine, SubmitError};
 pub use generation::GenerationConfig;
 pub use kv::KvManager;
 pub use metrics::Metrics;

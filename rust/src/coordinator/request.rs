@@ -31,6 +31,12 @@ pub enum FinishReason {
     /// The paged KV pool could not hold another token and the request was
     /// finished early with what it had.
     KvExhausted,
+    /// An SLO deadline (`ttft_deadline_ns` or `total_deadline_ns`) elapsed
+    /// before the request finished; it was aborted with a typed outcome.
+    Timeout,
+    /// Load shedding at admission evicted the request under overload
+    /// (lowest priority class first).
+    Shed,
 }
 
 impl FinishReason {
@@ -40,6 +46,8 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::Stop => "stop",
             FinishReason::KvExhausted => "kv_exhausted",
+            FinishReason::Timeout => "timeout",
+            FinishReason::Shed => "shed",
         }
     }
 }
@@ -147,6 +155,28 @@ impl Request {
         self.t_done_ns = Some(now_ns);
         if self.finish.is_none() {
             self.finish = Some(reason);
+        }
+    }
+
+    /// Transition to `Failed` with a typed abort reason (deadline timeout,
+    /// load shed). The reason is set once; the terminal timestamp always.
+    pub fn abort_with(&mut self, reason: FinishReason, now_ns: u64) {
+        self.state = RequestState::Failed;
+        self.t_done_ns = Some(now_ns);
+        if self.finish.is_none() {
+            self.finish = Some(reason);
+        }
+    }
+
+    /// Stable outcome string for reports and scenario JSON: `"done"` for a
+    /// normally-finished request, the typed abort name (`"timeout"`,
+    /// `"shed"`) for SLO/overload aborts, `"failed"` otherwise.
+    pub fn outcome_str(&self) -> &'static str {
+        match (self.state, self.finish) {
+            (RequestState::Done, _) => "done",
+            (_, Some(FinishReason::Timeout)) => "timeout",
+            (_, Some(FinishReason::Shed)) => "shed",
+            _ => "failed",
         }
     }
 
@@ -272,6 +302,28 @@ mod tests {
             + t.restore_ns
             + t.decode_ns.unwrap();
         assert_eq!(Some(sum), r.latency_ns());
+    }
+
+    #[test]
+    fn abort_with_sets_typed_outcome_once() {
+        let mut r = Request::new(5, vec![1], 4, 0);
+        assert_eq!(r.outcome_str(), "failed", "waiting requests report failed if aborted");
+        r.abort_with(FinishReason::Timeout, 90);
+        assert_eq!(r.state, RequestState::Failed);
+        assert_eq!(r.finish, Some(FinishReason::Timeout));
+        assert_eq!(r.outcome_str(), "timeout");
+        assert_eq!(r.latency_ns(), Some(90));
+        // reason is finish-once — a later abort can't overwrite it
+        r.abort_with(FinishReason::Shed, 120);
+        assert_eq!(r.finish, Some(FinishReason::Timeout));
+        assert_eq!(r.outcome_str(), "timeout");
+
+        let mut s = Request::new(6, vec![1], 4, 0);
+        s.abort_with(FinishReason::Shed, 10);
+        assert_eq!(s.outcome_str(), "shed");
+        let mut d = Request::new(7, vec![1], 1, 0);
+        d.accept_token(3, 5);
+        assert_eq!(d.outcome_str(), "done");
     }
 
     #[test]

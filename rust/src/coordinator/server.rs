@@ -22,6 +22,11 @@ use super::request::{FinishReason, RequestId, TimelineSummary};
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: RequestId,
+    /// Typed terminal outcome: `"done"`, `"rejected"`, `"failed"`,
+    /// `"timeout"` (SLO deadline), or `"shed"` (overload policy). Every
+    /// submitted request receives exactly one completion carrying one of
+    /// these — including requests still in flight at shutdown.
+    pub outcome: &'static str,
     pub tokens: Vec<i32>,
     pub ttft_ns: Option<u64>,
     pub latency_ns: Option<u64>,
@@ -102,6 +107,7 @@ impl Server {
             Err(err) => {
                 let _ = reply.send(Completion {
                     id: RequestId::MAX,
+                    outcome: "rejected",
                     tokens: Vec::new(),
                     ttft_ns: None,
                     latency_ns: None,
@@ -232,5 +238,147 @@ mod tests {
         assert_eq!(metrics.requests_done, 1);
         let c = rx.try_recv().unwrap();
         assert_eq!(c.tokens.len(), 8);
+        assert_eq!(c.outcome, "done");
+    }
+
+    /// Shutdown mid-decode under overload + SLO pressure (ISSUE 10):
+    /// every receiver gets exactly one typed completion — done, shed, or
+    /// timed out — and the per-outcome counts reconcile with the final
+    /// metrics. No receiver hangs (the recv timeouts are the bound).
+    #[test]
+    fn shutdown_under_load_delivers_every_completion_typed() {
+        let server = Server::spawn(|| {
+            let mut engine = ServingEngine::new(EngineConfig {
+                preset: ModelPreset::Llama1B,
+                hw: HwParams::default(),
+                policy: BatchPolicy { max_batch: 1, ..BatchPolicy::default() },
+                numerics: Numerics::Synthetic { vocab: 1000 },
+            })?;
+            engine.overload.max_waiting = Some(2);
+            Ok(engine)
+        })
+        .unwrap();
+        let mut rxs = Vec::new();
+        // one long-running request holds the single batch slot...
+        rxs.push(server.submit(vec![1; 48], 16));
+        // ...an impossible TTFT deadline that must time out in queue...
+        rxs.push(server.submit_with(
+            vec![2; 16],
+            GenerationConfig { ttft_deadline_ns: Some(0), ..GenerationConfig::greedy(4) },
+        ));
+        // ...and a burst of queued work across two shedding classes
+        for i in 0..6u8 {
+            rxs.push(server.submit_with(
+                vec![3; 8],
+                GenerationConfig { priority: 1 + (i % 2), ..GenerationConfig::greedy(2) },
+            ));
+        }
+        // shut down while all of that is still in flight
+        let metrics = server.shutdown().unwrap();
+        let mut done = 0u64;
+        let mut timeout = 0u64;
+        let mut shed = 0u64;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let c = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("receiver {i} hung at shutdown: {e}"));
+            match c.outcome {
+                "done" => {
+                    done += 1;
+                    assert!(!c.tokens.is_empty(), "request {i}: done with no tokens");
+                }
+                "timeout" => {
+                    timeout += 1;
+                    assert!(c.tokens.is_empty(), "request {i}: queue timeouts never decode");
+                }
+                "shed" => {
+                    shed += 1;
+                    assert!(c.tokens.is_empty(), "request {i}: shed requests never decode");
+                }
+                other => panic!("request {i}: untyped outcome '{other}'"),
+            }
+        }
+        assert_eq!(done + timeout + shed, 8, "every receiver answered exactly once");
+        assert!(timeout >= 1, "the zero-ns TTFT deadline must fire");
+        assert_eq!(metrics.requests_done, done);
+        assert_eq!(metrics.requests_timeout, timeout);
+        assert_eq!(metrics.requests_shed, shed);
+    }
+
+    /// Shutdown arriving mid-chunked-prefill drains cleanly: the long
+    /// prompt finishes its remaining chunks during the drain and both
+    /// clients get full typed completions.
+    #[test]
+    fn shutdown_mid_chunked_prefill_drains_cleanly() {
+        let server = Server::spawn(|| {
+            let mut engine = ServingEngine::new(EngineConfig {
+                preset: ModelPreset::Llama1B,
+                hw: HwParams::default(),
+                policy: BatchPolicy::default(),
+                numerics: Numerics::Synthetic { vocab: 1000 },
+            })?;
+            engine.prefill_chunk = Some(16);
+            Ok(engine)
+        })
+        .unwrap();
+        let long = server.submit(vec![4; 96], 4);
+        let short = server.submit(vec![5; 8], 2);
+        let metrics = server.shutdown().unwrap();
+        let c_long = long.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let c_short = short.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c_long.outcome, "done");
+        assert_eq!(c_long.tokens.len(), 4);
+        assert_eq!(c_short.outcome, "done");
+        assert_eq!(c_short.tokens.len(), 2);
+        assert_eq!(metrics.requests_done, 2);
+        assert_eq!(metrics.prefill_chunks, 7, "ceil(96/16) + ceil(8/16) dispatches");
+    }
+
+    /// Shutdown under load with a live journal: the drain retires every
+    /// session, and replaying the journal afterwards reconstructs all of
+    /// them finished with the exact streams the clients received.
+    #[test]
+    fn shutdown_with_journal_reconstructs_finished_sessions() {
+        let dir = std::env::temp_dir().join(format!("leap_server_journal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let jdir = dir.clone();
+        let server = Server::spawn(move || {
+            let mut engine = ServingEngine::new(EngineConfig {
+                preset: ModelPreset::Llama1B,
+                hw: HwParams::default(),
+                policy: BatchPolicy::default(),
+                numerics: Numerics::Synthetic { vocab: 1000 },
+            })?;
+            engine.journal = Some(crate::persist::Journal::create(
+                &jdir,
+                crate::persist::FsyncPolicy::Never,
+                crate::persist::DEFAULT_CHECKPOINT_EVERY,
+            )?);
+            Ok(engine)
+        })
+        .unwrap();
+        let rxs: Vec<_> = (0..3).map(|i| server.submit(vec![i + 1; 24], 4 + i as usize)).collect();
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.requests_done, 3);
+        let tokens: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| {
+                let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+                assert_eq!(c.outcome, "done");
+                c.tokens
+            })
+            .collect();
+        let state = crate::persist::reconstruct(&dir).unwrap();
+        assert!(!state.torn_tail, "clean shutdown leaves no torn tail");
+        assert_eq!(state.sessions.len(), 3);
+        assert_eq!(state.unfinished().count(), 0, "drained shutdown retires everything");
+        let mut sessions = state.sessions.clone();
+        sessions.sort_by_key(|s| s.id);
+        for (s, t) in sessions.iter().zip(&tokens) {
+            assert!(s.finished && !s.failed);
+            assert_eq!(&s.output, t, "journal stream diverged from the delivered completion");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,356 @@
+//! Deterministic fault injection: a seeded, schedule-driven [`FaultPlan`]
+//! the serving engine consults at every injectable call site.
+//!
+//! The plan is a list of [`FaultRule`]s, each naming a [`FaultSite`] and
+//! the 1-based call count at which it starts firing. Whether a given call
+//! injects is a pure function of `(seed, site, count)` — no wall clock, no
+//! OS randomness — so a faulted run is exactly reproducible and a chaos
+//! test can diff it bitwise against the fault-free baseline. Sites cover
+//! the engine's failure surface:
+//!
+//! - `journal_write` — the WAL append in [`crate::persist::Journal`]
+//! - `spill_write` / `spill_read` — KV spill-to-disk I/O
+//! - `lane_panic` / `lane_stall` — worker-pool lane faults (armed through
+//!   [`crate::runtime::NumericsBackend::inject_lane_fault`], consulted
+//!   once per engine step)
+//! - `block_alloc` — allocation failure in the KV block ledger at
+//!   admission (the faulted request is rejected with a typed outcome)
+//!
+//! Plan syntax (CLI `serve --fault-plan`, scenario `fault` directive):
+//! `;`-separated clauses of whitespace-separated `k=v` fields, e.g.
+//!
+//! ```text
+//! seed=7; site=journal_write at=3 mode=transient times=2; site=lane_panic lane=1
+//! ```
+//!
+//! `mode=permanent` (default) fires from call `at` onward; `transient`
+//! fires for `times` calls then recovers. `at=seeded` derives the firing
+//! call from the plan seed and the site index — still pure and
+//! reproducible, but varied across seeds for fuzz-style chaos sweeps.
+
+use crate::testutil::SplitMix64;
+
+/// An injectable call site in the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// One append to the crash-safe session journal.
+    JournalWrite,
+    /// One KV image write to the spill store (at preemption).
+    SpillWrite,
+    /// One KV image read from the spill store (at readmission).
+    SpillRead,
+    /// Arm a worker-pool lane to panic at its next engagement.
+    LanePanic,
+    /// Arm a worker-pool lane to stall (bounded busy-wait) once.
+    LaneStall,
+    /// One KV block-ledger admission decision fails allocation.
+    BlockAlloc,
+}
+
+impl FaultSite {
+    /// Every site, in wire/index order.
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::JournalWrite,
+        FaultSite::SpillWrite,
+        FaultSite::SpillRead,
+        FaultSite::LanePanic,
+        FaultSite::LaneStall,
+        FaultSite::BlockAlloc,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::JournalWrite => "journal_write",
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::LanePanic => "lane_panic",
+            FaultSite::LaneStall => "lane_stall",
+            FaultSite::BlockAlloc => "block_alloc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        FaultSite::ALL.into_iter().find(|site| site.as_str() == s)
+    }
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            FaultSite::JournalWrite => 0,
+            FaultSite::SpillWrite => 1,
+            FaultSite::SpillRead => 2,
+            FaultSite::LanePanic => 3,
+            FaultSite::LaneStall => 4,
+            FaultSite::BlockAlloc => 5,
+        }
+    }
+}
+
+/// How long a rule keeps firing once its call count is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Fire for `times` consecutive calls, then recover (the transient
+    /// I/O error a bounded retry should ride out).
+    Transient { times: u32 },
+    /// Fire on every call from `at` onward (the device that stays dead).
+    Permanent,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    /// 1-based call count at which the rule starts firing.
+    pub at: u64,
+    pub mode: FaultMode,
+    /// Worker-pool lane for `lane_panic` / `lane_stall` (ignored by the
+    /// I/O sites; lane 0 is the dispatching thread and is clamped to 1
+    /// by the pool, which cannot kill its caller).
+    pub lane: usize,
+}
+
+impl FaultRule {
+    fn fires(&self, count: u64) -> bool {
+        match self.mode {
+            FaultMode::Permanent => count >= self.at,
+            FaultMode::Transient { times } => {
+                count >= self.at && count < self.at + u64::from(times)
+            }
+        }
+    }
+}
+
+/// A parsed, counting fault schedule. [`FaultPlan::check`] is the single
+/// decision point: it increments the per-site call counter and reports
+/// whether this call injects. An empty plan (the default) never injects
+/// and costs one `Vec::is_empty` branch per site consult.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Plan seed: folded into `at=seeded` rules; recorded for provenance.
+    pub seed: u64,
+    rules: Vec<FaultRule>,
+    counts: [u64; 6],
+    injected: [u64; 6],
+}
+
+impl FaultPlan {
+    /// A plan that never injects.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Count one call at `site`; return the firing rule if this call
+    /// injects. Pure in `(seed, site, count)`: replaying the same call
+    /// sequence injects at exactly the same points.
+    pub fn check(&mut self, site: FaultSite) -> Option<FaultRule> {
+        if self.rules.is_empty() {
+            return None;
+        }
+        let i = site.index();
+        self.counts[i] += 1;
+        let count = self.counts[i];
+        let rule = self.rules.iter().find(|r| r.site == site && r.fires(count)).copied();
+        if rule.is_some() {
+            self.injected[i] += 1;
+        }
+        rule
+    }
+
+    /// Calls counted at `site` so far.
+    pub fn site_count(&self, site: FaultSite) -> u64 {
+        self.counts[site.index()]
+    }
+
+    /// Injections fired at `site` so far.
+    pub fn injected_at(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()]
+    }
+
+    /// Total injections fired across every site.
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    /// Per-site injection counters, indexed like [`FaultSite::ALL`].
+    pub fn injected_counts(&self) -> [u64; 6] {
+        self.injected
+    }
+
+    /// Parse a plan spec (see the module docs for the syntax).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan::default();
+        // Two passes so `seed=` applies to `at=seeded` rules regardless of
+        // clause order.
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if let Some(v) = clause.strip_prefix("seed=") {
+                if !clause.contains(char::is_whitespace) {
+                    plan.seed = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault plan: bad seed '{v}'"))?;
+                }
+            }
+        }
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if clause.starts_with("seed=") && !clause.contains(char::is_whitespace) {
+                continue; // consumed by the first pass
+            }
+            let mut site = None;
+            let mut at_raw: Option<String> = None;
+            let mut mode_raw: Option<String> = None;
+            let mut times: u32 = 1;
+            let mut lane: usize = 1;
+            for field in clause.split_whitespace() {
+                let (k, v) = field.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("fault plan: field '{field}' is not key=value")
+                })?;
+                match k {
+                    "site" => {
+                        site = Some(FaultSite::parse(v).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "fault plan: unknown site '{v}' (journal_write, spill_write, \
+                                 spill_read, lane_panic, lane_stall, block_alloc)"
+                            )
+                        })?)
+                    }
+                    "at" => at_raw = Some(v.to_string()),
+                    "mode" => mode_raw = Some(v.to_string()),
+                    "times" => {
+                        times = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("fault plan: bad times '{v}'"))?
+                    }
+                    "lane" => {
+                        lane = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("fault plan: bad lane '{v}'"))?
+                    }
+                    other => anyhow::bail!("fault plan: unknown field '{other}' in '{clause}'"),
+                }
+            }
+            let site = site
+                .ok_or_else(|| anyhow::anyhow!("fault plan: clause '{clause}' needs site="))?;
+            let at = match at_raw.as_deref() {
+                None => 1,
+                Some("seeded") => seeded_at(plan.seed, site),
+                Some(v) => v
+                    .parse::<u64>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| anyhow::anyhow!("fault plan: bad at '{v}' (1-based)"))?,
+            };
+            let mode = match mode_raw.as_deref() {
+                None | Some("permanent") => FaultMode::Permanent,
+                Some("transient") => FaultMode::Transient { times: times.max(1) },
+                Some(other) => {
+                    anyhow::bail!("fault plan: mode permanent|transient, got '{other}'")
+                }
+            };
+            plan.rules.push(FaultRule { site, at, mode, lane });
+        }
+        anyhow::ensure!(!plan.rules.is_empty(), "fault plan '{spec}' has no rules");
+        Ok(plan)
+    }
+}
+
+/// The `at=seeded` schedule: a pure function of (seed, site) landing in
+/// call counts 1..=16.
+fn seeded_at(seed: u64, site: FaultSite) -> u64 {
+    let mut rng = SplitMix64::new(seed ^ ((site.index() as u64 + 1) * 0x9E37_79B9_7F4A_7C15));
+    1 + rng.below(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_injects_and_counts_nothing() {
+        let mut p = FaultPlan::none();
+        for _ in 0..100 {
+            assert!(p.check(FaultSite::JournalWrite).is_none());
+        }
+        assert_eq!(p.injected_total(), 0);
+        assert_eq!(p.site_count(FaultSite::JournalWrite), 0, "empty plan skips counting");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_schedules() {
+        let p = FaultPlan::parse(
+            "seed=9; site=journal_write at=3 mode=transient times=2; \
+             site=lane_panic at=1 lane=2",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.rules().len(), 2);
+        assert_eq!(p.rules()[0].site, FaultSite::JournalWrite);
+        assert_eq!(p.rules()[0].at, 3);
+        assert_eq!(p.rules()[0].mode, FaultMode::Transient { times: 2 });
+        assert_eq!(p.rules()[1].site, FaultSite::LanePanic);
+        assert_eq!(p.rules()[1].lane, 2);
+        assert_eq!(p.rules()[1].mode, FaultMode::Permanent);
+    }
+
+    #[test]
+    fn transient_fires_exactly_times_then_recovers() {
+        let mut p = FaultPlan::parse("site=spill_read at=2 mode=transient times=3").unwrap();
+        let fired: Vec<bool> =
+            (0..8).map(|_| p.check(FaultSite::SpillRead).is_some()).collect();
+        assert_eq!(fired, [false, true, true, true, false, false, false, false]);
+        assert_eq!(p.injected_at(FaultSite::SpillRead), 3);
+        assert_eq!(p.site_count(FaultSite::SpillRead), 8);
+    }
+
+    #[test]
+    fn permanent_fires_from_at_onward() {
+        let mut p = FaultPlan::parse("site=journal_write at=3").unwrap();
+        let fired: Vec<bool> =
+            (0..5).map(|_| p.check(FaultSite::JournalWrite).is_some()).collect();
+        assert_eq!(fired, [false, false, true, true, true]);
+        // other sites are untouched
+        assert!(p.check(FaultSite::SpillWrite).is_none());
+    }
+
+    #[test]
+    fn checks_are_reproducible_across_identical_plans() {
+        let spec = "seed=5; site=spill_write at=seeded mode=transient times=1";
+        let mut a = FaultPlan::parse(spec).unwrap();
+        let mut b = FaultPlan::parse(spec).unwrap();
+        let fa: Vec<bool> = (0..32).map(|_| a.check(FaultSite::SpillWrite).is_some()).collect();
+        let fb: Vec<bool> = (0..32).map(|_| b.check(FaultSite::SpillWrite).is_some()).collect();
+        assert_eq!(fa, fb, "injection is a pure function of (seed, site, count)");
+        assert_eq!(fa.iter().filter(|&&x| x).count(), 1, "seeded transient fires once");
+    }
+
+    #[test]
+    fn seeded_at_varies_with_seed_but_not_call_order() {
+        let a = seeded_at(1, FaultSite::LanePanic);
+        let b = seeded_at(1, FaultSite::LanePanic);
+        assert_eq!(a, b);
+        assert!((1..=16).contains(&a));
+        let different: Vec<u64> = (0..16).map(|s| seeded_at(s, FaultSite::LanePanic)).collect();
+        assert!(different.iter().any(|&x| x != a), "seed must move the schedule");
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("site=warp_core").is_err());
+        assert!(FaultPlan::parse("site=journal_write at=0").is_err());
+        assert!(FaultPlan::parse("site=journal_write mode=flaky").is_err());
+        assert!(FaultPlan::parse("site=journal_write bogus=1").is_err());
+        assert!(FaultPlan::parse("at=1").is_err(), "clause without a site");
+    }
+}

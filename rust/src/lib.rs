@@ -47,6 +47,10 @@
 //!   KV-shard manager, metrics.
 //! - [`obs`] — structured tracing + telemetry: typed event ring buffer,
 //!   log2 latency histograms, Chrome-trace/JSONL/Prometheus exporters.
+//! - [`faults`] — deterministic fault injection: a seeded, schedule-driven
+//!   `FaultPlan` (pure function of seed × site × call count) the engine
+//!   consults at every injectable call site — journal/spill I/O, worker
+//!   lanes, block allocation — so chaos runs are exactly reproducible.
 //! - [`persist`] — durability: append-only session event journal with
 //!   checkpoint compaction (crash recovery resumes token streams
 //!   bitwise-identically) and per-session KV spill files that let the
@@ -63,6 +67,7 @@ pub mod cli;
 pub mod compiler;
 pub mod coordinator;
 pub mod energy;
+pub mod faults;
 pub mod isa;
 pub mod kvcache;
 pub mod mapping;

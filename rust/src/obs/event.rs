@@ -110,6 +110,18 @@ pub enum EventKind {
     /// Instant: a leveled diagnostic was raised (the human-readable
     /// message went to stderr; the trace keeps the machine code).
     Diag { level: Level, code: &'static str },
+    /// Instant: the active fault plan injected a fault at a site this step
+    /// (`count` = injections at that site this step).
+    FaultInjected { site: &'static str, count: u32 },
+    /// Instant: an SLO deadline elapsed and the request was aborted with a
+    /// typed `Timeout` outcome.
+    Timeout { waited_ns: u64, output_tokens: u32 },
+    /// Instant: the overload policy shed this request at admission
+    /// (lowest priority class first).
+    Shed { priority: u8, waited_ns: u64 },
+    /// Instant: a worker-pool lane died to an isolated panic; its bands
+    /// re-tile onto the surviving lanes from now on.
+    LaneDead { lane: u8 },
 }
 
 impl EventKind {
@@ -134,6 +146,10 @@ impl EventKind {
             EventKind::PoolDispatch { .. } => "pool_dispatch",
             EventKind::PoolLane { .. } => "pool_lane",
             EventKind::Diag { .. } => "diag",
+            EventKind::FaultInjected { .. } => "fault",
+            EventKind::Timeout { .. } => "timeout",
+            EventKind::Shed { .. } => "shed",
+            EventKind::LaneDead { .. } => "lane_dead",
         }
     }
 

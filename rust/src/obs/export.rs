@@ -109,6 +109,16 @@ fn kind_fields(kind: &EventKind) -> String {
         EventKind::Diag { level, code } => {
             format!("\"level\":\"{}\",\"code\":\"{}\"", level.as_str(), esc(code))
         }
+        EventKind::FaultInjected { site, count } => {
+            format!("\"site\":\"{}\",\"count\":{count}", esc(site))
+        }
+        EventKind::Timeout { waited_ns, output_tokens } => {
+            format!("\"waited_ns\":{waited_ns},\"output_tokens\":{output_tokens}")
+        }
+        EventKind::Shed { priority, waited_ns } => {
+            format!("\"priority\":{priority},\"waited_ns\":{waited_ns}")
+        }
+        EventKind::LaneDead { lane } => format!("\"lane\":{lane}"),
     }
 }
 
@@ -289,6 +299,8 @@ pub fn chrome_trace_json(tracer: &Tracer) -> String {
             | EventKind::Preempt { .. }
             | EventKind::Spill { .. }
             | EventKind::Recovered { .. }
+            | EventKind::Timeout { .. }
+            | EventKind::Shed { .. }
             | EventKind::Finish { .. } => {
                 let tid = sid.unwrap_or(TID_ENGINE);
                 track(&mut tracks, tid, session_label(ev));
@@ -301,6 +313,8 @@ pub fn chrome_trace_json(tracer: &Tracer) -> String {
             }
             EventKind::Reject { .. }
             | EventKind::AdmissionDecision { .. }
+            | EventKind::FaultInjected { .. }
+            | EventKind::LaneDead { .. }
             | EventKind::Diag { .. } => {
                 track(&mut tracks, TID_ENGINE, "engine".into());
                 let req_arg = match ev.request() {
@@ -411,7 +425,7 @@ fn push_gauge(out: &mut String, name: &str, help: &str, v: &str) {
 /// Prometheus text exposition of the aggregated serving metrics.
 pub fn prometheus_text(m: &Metrics) -> String {
     let mut out = String::new();
-    let counters: [(&str, &str, u64); 23] = [
+    let counters: [(&str, &str, u64); 28] = [
         ("leap_requests_done_total", "Requests completed.", m.requests_done),
         ("leap_requests_failed_total", "Requests failed mid-flight.", m.requests_failed),
         ("leap_requests_rejected_total", "Requests rejected at submit.", m.requests_rejected),
@@ -442,6 +456,19 @@ pub fn prometheus_text(m: &Metrics) -> String {
             "leap_recovery_replay_events_total",
             "Journal records replayed at recovery.",
             m.recovery_replay_events,
+        ),
+        ("leap_requests_timeout_total", "Requests aborted by an SLO deadline.", m.requests_timeout),
+        ("leap_requests_shed_total", "Requests shed by the overload policy.", m.requests_shed),
+        (
+            "leap_persist_retries_total",
+            "Transient persistence I/O failures retried.",
+            m.persist_retries,
+        ),
+        ("leap_faults_injected_total", "Faults injected by the active plan.", m.faults_injected),
+        (
+            "leap_pool_lane_deaths_total",
+            "Worker-pool lanes retired after an isolated panic.",
+            m.pool_lane_deaths,
         ),
     ];
     for (name, help, v) in counters {

@@ -78,6 +78,9 @@ pub struct Tracer {
     last_parks: u64,
     last_wakes: u64,
     last_lanes: [u64; 64],
+    /// Dead-lane mask at the previous observation (newly-set bits emit
+    /// one [`EventKind::LaneDead`] each).
+    last_dead_lanes: u64,
 }
 
 impl Default for Tracer {
@@ -103,6 +106,7 @@ impl Tracer {
             last_parks: 0,
             last_wakes: 0,
             last_lanes: [0; 64],
+            last_dead_lanes: 0,
         }
     }
 
@@ -225,6 +229,15 @@ impl Tracer {
                     wakes: wakes as u32,
                 },
             );
+        }
+        let newly_dead = s.dead_lanes & !self.last_dead_lanes;
+        self.last_dead_lanes = s.dead_lanes;
+        if newly_dead != 0 {
+            for lane in 0..64u8 {
+                if newly_dead & (1u64 << lane) != 0 {
+                    self.emit(sim_ns, None, EventKind::LaneDead { lane });
+                }
+            }
         }
     }
 

@@ -99,8 +99,12 @@ impl Checkpoint {
         if bytes.len() < 16 || &bytes[..8] != MAGIC {
             return None;
         }
-        let len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-        let want = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let mut len4 = [0u8; 4];
+        len4.copy_from_slice(&bytes[8..12]);
+        let len = u32::from_le_bytes(len4) as usize;
+        let mut want4 = [0u8; 4];
+        want4.copy_from_slice(&bytes[12..16]);
+        let want = u32::from_le_bytes(want4);
         if bytes.len() != 16 + len {
             return None;
         }

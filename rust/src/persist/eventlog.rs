@@ -149,15 +149,20 @@ impl<'a> Dec<'a> {
     }
 
     pub fn u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
     }
 
     pub fn i32(&mut self) -> anyhow::Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn f32(&mut self) -> anyhow::Result<f32> {
@@ -191,6 +196,11 @@ pub(crate) fn put_gen(e: &mut Enc, g: &GenerationConfig) {
     e.f32(g.top_p);
     e.f32(g.repetition_penalty);
     e.u64(g.seed);
+    // Option<u64> deadlines as a u64::MAX sentinel (a deadline of u64::MAX
+    // simulated ns is indistinguishable from "none" anyway)
+    e.u64(g.ttft_deadline_ns.unwrap_or(u64::MAX));
+    e.u64(g.total_deadline_ns.unwrap_or(u64::MAX));
+    e.u8(g.priority);
     e.u32(g.stop.len() as u32);
     for s in &g.stop {
         e.tokens(s);
@@ -204,13 +214,27 @@ pub(crate) fn get_gen(d: &mut Dec<'_>) -> anyhow::Result<GenerationConfig> {
     let top_p = d.f32()?;
     let repetition_penalty = d.f32()?;
     let seed = d.u64()?;
+    let ttft = d.u64()?;
+    let total = d.u64()?;
+    let priority = d.u8()?;
     let n_stop = d.u32()?;
     ensure!(n_stop <= MAX_LEN, "stop count {n_stop} implausible");
     let mut stop = Vec::with_capacity(n_stop as usize);
     for _ in 0..n_stop {
         stop.push(d.tokens()?);
     }
-    Ok(GenerationConfig { max_new_tokens, temperature, top_k, top_p, repetition_penalty, stop, seed })
+    Ok(GenerationConfig {
+        max_new_tokens,
+        temperature,
+        top_k,
+        top_p,
+        repetition_penalty,
+        stop,
+        seed,
+        ttft_deadline_ns: (ttft != u64::MAX).then_some(ttft),
+        total_deadline_ns: (total != u64::MAX).then_some(total),
+        priority,
+    })
 }
 
 const TAG_SUBMIT: u8 = 1;
@@ -342,6 +366,11 @@ impl EventLog {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => return Err(e).with_context(|| format!("read journal {}", path.display())),
         };
+        fn le_u32(b: &[u8]) -> u32 {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(&b[..4]);
+            u32::from_le_bytes(a)
+        }
         let mut recs = Vec::new();
         let mut stats = ReplayStats::default();
         let mut pos = 0usize;
@@ -350,8 +379,8 @@ impl EventLog {
                 stats.torn_tail = true;
                 break;
             }
-            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
-            let want = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            let len = le_u32(&bytes[pos..pos + 4]) as usize;
+            let want = le_u32(&bytes[pos + 4..pos + 8]);
             if len > bytes.len() - pos - 8 {
                 stats.torn_tail = true;
                 break;
@@ -392,6 +421,9 @@ mod tests {
             repetition_penalty: 1.1,
             stop: vec![vec![5, 6], vec![9]],
             seed: 0xBEEF,
+            ttft_deadline_ns: Some(5_000),
+            total_deadline_ns: None,
+            priority: 7,
         };
         vec![
             JournalRecord::Submit { id: 0, prompt: vec![1, 2, 3], gen },

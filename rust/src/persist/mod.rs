@@ -26,6 +26,11 @@
 //! `prompt ++ emitted` reproduces the exact logits the crashed process
 //! would have seen next.
 
+// Durability code must never panic on an I/O result: every fallible path
+// returns a typed error the engine degrades on (journal read-only, spill
+// re-prefill fallback). Tests keep their unwraps.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod checkpoint;
 pub mod eventlog;
 pub mod spill;
@@ -193,6 +198,44 @@ impl RecoveredState {
     }
 }
 
+/// Typed pre-flight errors for `leap recover`: the cases where recovery
+/// cannot even start, reported as one clear message instead of a panic or
+/// an anyhow chain. (An *empty* journal directory is not an error — it
+/// recovers as "nothing to recover".)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecoverError {
+    /// The journal directory does not exist.
+    DirMissing(PathBuf),
+    /// The journal path exists but is not a directory.
+    NotADirectory(PathBuf),
+}
+
+impl std::fmt::Display for RecoverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoverError::DirMissing(p) => {
+                write!(f, "journal directory {} does not exist", p.display())
+            }
+            RecoverError::NotADirectory(p) => {
+                write!(f, "journal path {} is not a directory", p.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for RecoverError {}
+
+/// Pre-flight check for recovery: the journal dir must exist and be a
+/// directory. Emptiness is *not* checked — an empty dir reconstructs to
+/// zero sessions, which callers report as "nothing to recover".
+pub fn check_journal_dir(dir: &Path) -> Result<(), RecoverError> {
+    match std::fs::metadata(dir) {
+        Ok(m) if m.is_dir() => Ok(()),
+        Ok(_) => Err(RecoverError::NotADirectory(dir.to_path_buf())),
+        Err(_) => Err(RecoverError::DirMissing(dir.to_path_buf())),
+    }
+}
+
 /// Rebuild session state from `dir`: load the checkpoint if one is
 /// usable, then replay the journal tail past it. A missing journal
 /// recovers as empty; a corrupt checkpoint degrades to full replay.
@@ -326,5 +369,17 @@ mod tests {
         let state = reconstruct(&dir).unwrap();
         assert!(state.sessions.is_empty());
         assert!(!state.torn_tail);
+    }
+
+    #[test]
+    fn check_journal_dir_is_typed() {
+        let dir = tmp_dir("preflight");
+        assert_eq!(check_journal_dir(&dir), Ok(()));
+        let missing = dir.join("nope");
+        assert_eq!(check_journal_dir(&missing), Err(RecoverError::DirMissing(missing.clone())));
+        assert!(check_journal_dir(&missing).unwrap_err().to_string().contains("does not exist"));
+        let file = dir.join("plain_file");
+        std::fs::write(&file, b"x").unwrap();
+        assert_eq!(check_journal_dir(&file), Err(RecoverError::NotADirectory(file)));
     }
 }

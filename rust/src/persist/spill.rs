@@ -155,8 +155,12 @@ impl SpillStore {
         let bytes =
             std::fs::read(path).with_context(|| format!("read spill {}", path.display()))?;
         ensure!(bytes.len() >= 20 && &bytes[..8] == MAGIC, "bad spill magic/size");
-        let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-        let want = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let mut len8 = [0u8; 8];
+        len8.copy_from_slice(&bytes[8..16]);
+        let len = u64::from_le_bytes(len8) as usize;
+        let mut want4 = [0u8; 4];
+        want4.copy_from_slice(&bytes[16..20]);
+        let want = u32::from_le_bytes(want4);
         ensure!(bytes.len() == 20 + len, "spill length mismatch");
         let payload = &bytes[20..];
         ensure!(fnv1a(payload) == want, "spill checksum mismatch");

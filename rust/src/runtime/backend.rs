@@ -175,6 +175,12 @@ pub trait NumericsBackend {
     fn worker_pool_lane_dispatches(&self) -> Option<[u64; 64]> {
         None
     }
+
+    /// Arm a one-shot [`super::pool::LaneFault`] on the backend's worker
+    /// pool (the engine's fault-injection hook). No-op for backends
+    /// without a resident pool — a fault plan targeting lanes then simply
+    /// never fires, which keeps chaos scenarios runnable everywhere.
+    fn inject_lane_fault(&mut self, _lane: usize, _fault: super::pool::LaneFault) {}
 }
 
 /// Greedy argmax over one `[vocab]`-wide row of a `[rows, vocab]` buffer.

@@ -38,6 +38,6 @@ pub use backend::{
 #[cfg(feature = "xla")]
 pub use engine::{Engine, PjrtBackend};
 pub use leapbin::{DType, Tensor};
-pub use pool::{WorkerPool, WorkerPoolStats};
+pub use pool::{LaneFault, WorkerPool, WorkerPoolStats};
 pub use reference::{KernelMode, ReferenceBackend, ReferenceModel};
 pub use simd::SimdLevel;

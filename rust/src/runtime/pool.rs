@@ -30,6 +30,20 @@
 //! **Not reentrant.** A dispatch mutex serialises concurrent `run_tiles`
 //! callers; calling `run_tiles` from *inside* a tile closure deadlocks.
 //! Kernels never nest dispatches.
+//!
+//! **Panic isolation.** A tile closure that panics on a resident worker
+//! does not poison the pool or abort the process: the lane is marked
+//! *dead* (the worker thread exits), and the dispatcher re-runs the dead
+//! lane's band inline after the barrier — tile writes are pure functions
+//! of their inputs, so the re-run produces bitwise-identical output and
+//! every non-faulted caller is unaffected. Dead lanes stay dead; later
+//! dispatches fold their bands onto the dispatching thread up front. A
+//! closure that panics *deterministically* panics again on the inline
+//! re-run and propagates to the caller — a genuine bug is never silently
+//! swallowed. [`WorkerPool::inject_lane_fault`] arms a one-shot
+//! [`LaneFault`] (panic or bounded stall) on a lane for the fault-injection
+//! harness; injected panics are consumed before the re-run, so a chaos run
+//! degrades the pool without corrupting results.
 
 use std::cell::UnsafeCell;
 use std::marker::PhantomData;
@@ -85,11 +99,24 @@ struct Shared {
     /// it); read by active workers only between the epoch publication and
     /// their `done` increment.
     job: UnsafeCell<Option<Job>>,
-    /// A tile closure panicked on a resident worker this epoch; the
-    /// dispatcher re-raises after the barrier so a band panic is never
-    /// silently swallowed (parity with the caller's own band, and with the
-    /// old `std::thread::scope` behaviour).
-    panicked: AtomicBool,
+    /// Lanes whose worker panicked during the *current* epoch (bit = lane).
+    /// Set (with the matching `dead_lanes` bit) before the worker's final
+    /// `done` increment, so the dispatcher's post-barrier swap observes it;
+    /// the dispatcher then re-runs those bands inline.
+    panicked_lanes: AtomicU64,
+    /// Lanes permanently dead (worker thread exited after a panic). Read
+    /// by the dispatcher at the top of every dispatch — the prior
+    /// dispatch's `done` barrier orders the relaxed load after the
+    /// worker's store — to size the barrier and pre-fold dead bands onto
+    /// the dispatching thread.
+    dead_lanes: AtomicU64,
+    /// One-shot injected-panic arm mask (fault injection): a worker whose
+    /// bit is set panics at its next engaged dispatch, consuming the bit.
+    armed_panic: AtomicU64,
+    /// One-shot injected-stall arm mask: bounded yields, then proceed.
+    armed_stall: AtomicU64,
+    /// Cumulative lane deaths (counted by the dispatcher, once per lane).
+    lane_deaths: AtomicU64,
     /// Bitmask of worker lanes blocked on `wake` (bit = lane index; guards
     /// the condvar handshake). A mask rather than a count so a dispatch
     /// can skip the notify entirely when only lanes it does not engage are
@@ -128,6 +155,22 @@ pub struct WorkerPoolStats {
     pub parks: u64,
     /// Wake transitions: a parked worker resumed for a dispatch/shutdown.
     pub wakes: u64,
+    /// Lanes that died to an isolated tile-closure panic (cumulative).
+    pub lane_deaths: u64,
+    /// Bitmask of currently-dead lanes (bit = lane index).
+    pub dead_lanes: u64,
+}
+
+/// A one-shot fault to arm on a worker lane (the fault-injection harness's
+/// window into the pool). Consumed at the lane's next engaged dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneFault {
+    /// The lane panics, dies, and its band re-tiles onto the dispatcher
+    /// (isolated — callers still get full, bitwise-identical output).
+    Panic,
+    /// The lane stalls for a bounded number of yields, then proceeds — a
+    /// slow lane, not a dead one. Output is unaffected.
+    Stall,
 }
 
 /// A persistent, parkable worker pool with fixed tile ownership. Spawned
@@ -179,7 +222,11 @@ impl WorkerPool {
             done: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             job: UnsafeCell::new(None),
-            panicked: AtomicBool::new(false),
+            panicked_lanes: AtomicU64::new(0),
+            dead_lanes: AtomicU64::new(0),
+            armed_panic: AtomicU64::new(0),
+            armed_stall: AtomicU64::new(0),
+            lane_deaths: AtomicU64::new(0),
             parked: Mutex::new(0u64),
             wake: Condvar::new(),
             dispatches: AtomicU64::new(0),
@@ -222,7 +269,25 @@ impl WorkerPool {
             dispatches: self.shared.dispatches.load(Ordering::Relaxed),
             parks: self.shared.parks.load(Ordering::Relaxed),
             wakes: self.shared.wakes.load(Ordering::Relaxed),
+            lane_deaths: self.shared.lane_deaths.load(Ordering::Relaxed),
+            dead_lanes: self.shared.dead_lanes.load(Ordering::Relaxed),
         }
+    }
+
+    /// Arm a one-shot [`LaneFault`] on worker lane `lane` (clamped into
+    /// the pool's worker range; no-op on a serial pool, which has no
+    /// worker lanes to fault). Deterministic: the fault fires at the
+    /// lane's next engaged dispatch, exactly once.
+    pub fn inject_lane_fault(&self, lane: usize, fault: LaneFault) {
+        if self.workers.is_empty() {
+            return;
+        }
+        let lane = lane.clamp(1, self.threads - 1);
+        let bit = 1u64 << lane;
+        match fault {
+            LaneFault::Panic => self.shared.armed_panic.fetch_or(bit, Ordering::Relaxed),
+            LaneFault::Stall => self.shared.armed_stall.fetch_or(bit, Ordering::Relaxed),
+        };
     }
 
     /// Cumulative dispatch engagements per lane (index = lane; lane 0 is
@@ -273,10 +338,18 @@ impl WorkerPool {
         // after its barrier; the critical section protects no data
         // invariant, so recover instead of bricking the backend.
         let _serialised = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
-        // Clear any panic flag a previous dispatch left behind (its own
-        // band-0 panic can unwind past the post-barrier check below) so a
-        // stale flag never fails a healthy dispatch.
-        self.shared.panicked.store(false, Ordering::Relaxed);
+        // Lanes already dead before this dispatch: the previous dispatch's
+        // `done` barrier orders this relaxed load after the dying worker's
+        // store. Their bands fold onto the dispatching thread below; band
+        // boundaries never move, so output stays bitwise-identical.
+        let dead = self.shared.dead_lanes.load(Ordering::Relaxed);
+        // A dispatch that unwound from its own band 0 can leave panicked
+        // bits unswept; fold them into the death count now so a stale bit
+        // never mis-sizes a healthy dispatch.
+        let stale = self.shared.panicked_lanes.swap(0, Ordering::Relaxed);
+        if stale != 0 {
+            self.shared.lane_deaths.fetch_add(u64::from(stale.count_ones()), Ordering::Relaxed);
+        }
         self.shared.done.store(0, Ordering::Relaxed);
         // SAFETY: lifetime erasure only. The `WaitGuard` below blocks this
         // frame (even on unwind) until every active worker has run the
@@ -301,13 +374,38 @@ impl WorkerPool {
                 self.shared.wake.notify_all();
             }
         }
-        // Only the active lanes are on the barrier: workers with
-        // `lane >= lanes` skip the epoch without touching `job` or `done`.
-        let guard = WaitGuard { shared: &self.shared, active_workers: lanes - 1 };
+        // Only the LIVE active lanes are on the barrier: workers with
+        // `lane >= lanes` skip the epoch without touching `job` or `done`,
+        // and dead lanes have no worker thread to check in at all.
+        let live_workers = (1..lanes).filter(|l| dead & (1u64 << l) == 0).count();
+        let guard = WaitGuard { shared: &self.shared, active_workers: live_workers };
         run_lane(0);
-        drop(guard); // blocks until all active workers are done
-        if self.shared.panicked.swap(false, Ordering::Relaxed) {
-            panic!("worker pool: a tile closure panicked on a resident worker");
+        // Pre-dead lanes' bands, inline, in lane order — same tile
+        // ownership, same writes, so results stay bitwise-identical.
+        for lane in 1..lanes {
+            if dead & (1u64 << lane) != 0 {
+                run_lane(lane);
+            }
+        }
+        drop(guard); // blocks until all live active workers are done
+        // Lanes that died THIS dispatch: count them, then re-run their
+        // bands inline. Tile writes are pure functions of their inputs, so
+        // the re-run is idempotent; a *deterministic* closure panic fires
+        // again here and propagates to the caller (never swallowed), while
+        // an injected one was consumed and the re-run completes clean.
+        let newly = self.shared.panicked_lanes.swap(0, Ordering::Relaxed);
+        if newly != 0 {
+            self.shared.lane_deaths.fetch_add(u64::from(newly.count_ones()), Ordering::Relaxed);
+            for lane in 1..lanes {
+                if newly & (1u64 << lane) != 0 {
+                    stderr_log(
+                        Level::Warn,
+                        "pool_lane_dead",
+                        format_args!("lane {lane} dead after band panic; band re-tiled inline"),
+                    );
+                    run_lane(lane);
+                }
+            }
         }
     }
 }
@@ -381,24 +479,43 @@ fn worker_main(shared: &Shared, lane: usize) {
             continue;
         }
         spins = 0;
+        let lane_bit = 1u64 << lane;
         // SAFETY: the dispatcher wrote `job` before the (release)
         // publication this thread (acquire-)observed, and overwrites it
         // only after every active worker increments `done` below.
         let job = unsafe { (*shared.job.get()).expect("epoch published without a job") };
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Injected faults fire inside the unwind boundary, so an armed
+            // panic exercises exactly the real band-panic path. Both arms
+            // are one-shot: consume our bit before acting.
+            if shared.armed_stall.fetch_and(!lane_bit, Ordering::Relaxed) & lane_bit != 0 {
+                // bounded slow-lane stall, then proceed normally — the
+                // barrier absorbs the delay, output is unaffected
+                for _ in 0..64 {
+                    std::thread::yield_now();
+                }
+            }
+            if shared.armed_panic.fetch_and(!lane_bit, Ordering::Relaxed) & lane_bit != 0 {
+                panic!("injected lane panic (fault plan)");
+            }
             // SAFETY: see `Job` — valid until the `done` increment.
             (unsafe { &*job.f })(lane);
         }));
         if run.is_err() {
-            // Flag before the `done` increment (release) so the
-            // dispatcher's post-barrier check observes it and re-raises —
-            // a band panic must not silently leave its output unwritten.
-            shared.panicked.store(true, Ordering::Relaxed);
+            // Mark this lane dead and flag the epoch BEFORE the (release)
+            // `done` increment, so the dispatcher's post-barrier sweep and
+            // every later dispatch observe both. Then exit the thread: a
+            // lane that panicked once is retired, its bands fold onto the
+            // dispatcher from now on.
+            shared.panicked_lanes.fetch_or(lane_bit, Ordering::Relaxed);
+            shared.dead_lanes.fetch_or(lane_bit, Ordering::Relaxed);
             stderr_log(
                 Level::Error,
                 "pool_band_panic",
-                format_args!("tile closure panicked on worker pool lane {lane}"),
+                format_args!("tile closure panicked on worker pool lane {lane}; lane retired"),
             );
+            shared.done.fetch_add(1, Ordering::Release);
+            return;
         }
         shared.done.fetch_add(1, Ordering::Release);
     }
@@ -657,19 +774,59 @@ mod tests {
     }
 
     #[test]
-    fn worker_panic_propagates_and_pool_survives() {
+    fn worker_panic_is_isolated_band_retiled_lane_dies() {
+        // A closure that panics exactly ONCE, on the first touch of band 1
+        // (a transient fault): lane 1 dies, the dispatcher re-runs the band
+        // inline, and the caller still gets full bitwise-correct coverage.
+        let pool = WorkerPool::with_threads(4);
+        let n = 1000usize;
+        let band = n.div_ceil(4);
+        let fired = std::sync::atomic::AtomicBool::new(false);
+        let mut out = vec![0u8; n];
+        {
+            let s = SharedSliceMut::new(&mut out);
+            pool.run_tiles(0..n, |r| {
+                if r.start == band && !fired.swap(true, Ordering::Relaxed) {
+                    panic!("tile boom (once)");
+                }
+                for i in r {
+                    unsafe { s.write(i, 1) };
+                }
+            });
+        }
+        assert!(out.iter().all(|&v| v == 1), "dead lane's band re-tiled: full coverage");
+        let s = pool.stats();
+        assert_eq!(s.lane_deaths, 1);
+        assert_eq!(s.dead_lanes, 0b10, "lane 1 retired");
+        // the pool stays serviceable, dead band pre-folded onto band 0
+        let mut out2 = vec![0u8; 512];
+        {
+            let s2 = SharedSliceMut::new(&mut out2);
+            pool.run_tiles(0..512, |r| {
+                for i in r {
+                    unsafe { s2.write(i, 2) };
+                }
+            });
+        }
+        assert!(out2.iter().all(|&v| v == 2), "pool must keep working after a lane death");
+        assert_eq!(pool.stats().lane_deaths, 1, "no double-counting");
+    }
+
+    #[test]
+    fn deterministic_panic_still_propagates_to_caller() {
+        // A closure that ALWAYS panics off band 0 panics again on the
+        // inline re-run — a genuine bug is never silently swallowed.
         let pool = WorkerPool::with_threads(4);
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             pool.run_tiles(0..1000, |r| {
-                // band 0 (the dispatcher's) is fine; worker bands panic
                 if r.start > 0 {
                     panic!("tile boom");
                 }
             });
         }));
-        assert!(res.is_err(), "a worker-band panic must propagate to the dispatcher");
-        // the pool must remain serviceable afterwards (no poisoned locks,
-        // no stuck barrier, panicked flag cleared)
+        assert!(res.is_err(), "a deterministic band panic must reach the dispatcher");
+        // all worker lanes died; the pool degrades to dispatcher-only but
+        // still yields full coverage (no poisoned locks, no stuck barrier)
         let mut out = vec![0u8; 512];
         {
             let s = SharedSliceMut::new(&mut out);
@@ -680,6 +837,68 @@ mod tests {
             });
         }
         assert!(out.iter().all(|&v| v == 1), "pool must keep working after a panic");
+        assert_eq!(pool.stats().dead_lanes, 0b1110, "all three worker lanes retired");
+    }
+
+    #[test]
+    fn injected_lane_panic_is_consumed_and_isolated() {
+        let pool = WorkerPool::with_threads(4);
+        pool.inject_lane_fault(1, LaneFault::Panic);
+        let mut out = vec![0u8; 1000];
+        {
+            let s = SharedSliceMut::new(&mut out);
+            pool.run_tiles(0..1000, |r| {
+                for i in r {
+                    unsafe { s.write(i, 1) };
+                }
+            });
+        }
+        assert!(out.iter().all(|&v| v == 1), "injected panic is invisible in the output");
+        let s = pool.stats();
+        assert_eq!(s.lane_deaths, 1);
+        assert_eq!(s.dead_lanes, 0b10);
+    }
+
+    #[test]
+    fn injected_stall_is_bitwise_invisible() {
+        let pool = WorkerPool::with_threads(2);
+        let run = |pool: &WorkerPool| {
+            let mut out = vec![0f32; 256];
+            {
+                let s = SharedSliceMut::new(&mut out);
+                pool.run_tiles(0..256, |r| {
+                    let band = unsafe { s.borrow_range(r.clone()) };
+                    for (o, i) in band.iter_mut().zip(r) {
+                        *o = (i as f32).sin() * 1.5;
+                    }
+                });
+            }
+            out
+        };
+        let a = run(&pool);
+        pool.inject_lane_fault(1, LaneFault::Stall);
+        let b = run(&pool);
+        assert_eq!(a, b, "a stalled lane delays, never changes, the output");
+        assert_eq!(pool.stats().lane_deaths, 0, "stall is not a death");
+        assert_eq!(pool.stats().dead_lanes, 0);
+    }
+
+    #[test]
+    fn inject_on_serial_pool_is_a_noop() {
+        let pool = WorkerPool::with_threads(1);
+        pool.inject_lane_fault(0, LaneFault::Panic);
+        pool.inject_lane_fault(5, LaneFault::Stall);
+        let mut out = vec![0u8; 64];
+        {
+            let s = SharedSliceMut::new(&mut out);
+            pool.run_tiles(0..64, |r| {
+                for i in r {
+                    unsafe { s.write(i, 1) };
+                }
+            });
+        }
+        assert!(out.iter().all(|&v| v == 1));
+        assert_eq!(pool.stats().lane_deaths, 0);
     }
 
     #[test]

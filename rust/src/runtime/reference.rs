@@ -1133,6 +1133,10 @@ impl NumericsBackend for ReferenceBackend {
     fn worker_pool_lane_dispatches(&self) -> Option<[u64; 64]> {
         Some(self.pool.lane_dispatches())
     }
+
+    fn inject_lane_fault(&mut self, lane: usize, fault: crate::runtime::pool::LaneFault) {
+        self.pool.inject_lane_fault(lane, fault);
+    }
 }
 
 #[cfg(test)]

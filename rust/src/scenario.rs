@@ -29,10 +29,17 @@
 //! trace on                  # record a structured trace of the run
 //! journal on                # crash-safe session journal (scratch dir)
 //! spill on                  # spill preempted KV to disk; spill-aware admission
+//! fault site=spill_read at=1 mode=transient times=2   # fault plan (see
+//!                           # crate::faults; repeat the directive to add
+//!                           # clauses, or join clauses with ';')
+//! max_waiting 4             # overload cap: shed the lowest-priority
+//!                           # waiters beyond this queue depth
 //!
 //! session arrive=0 prompt=rand:96:11 gen=8 expect=done
 //! session arrive=0 prompt=rand:12:12 gen=8 seed=5 temp=0.8 top_k=40
 //! session arrive=0 prompt=prefix:8:21+2:31 gen=6 stop=3,4|9
+//! session arrive=0 prompt=rand:8:3 gen=4 deadline_ttft_ns=100 expect=timeout
+//! session arrive=0 prompt=rand:8:4 gen=4 priority=1 expect=shed
 //! ```
 //!
 //! Prompt specs: `tokens:1,2,3` (literal ids), `rand:LEN:SEED`
@@ -48,7 +55,7 @@ use std::path::{Path, PathBuf};
 use crate::arch::HwParams;
 use crate::coordinator::{
     BatchPolicy, EngineConfig, FinishReason, GenerationConfig, Metrics, Numerics, RequestId,
-    RequestState, ServingEngine, TimelineSummary,
+    ServingEngine, TimelineSummary,
 };
 use crate::kvcache::{KvCacheConfig, KvDtype};
 use crate::model::ModelPreset;
@@ -122,6 +129,10 @@ pub enum Expectation {
     Rejected,
     /// Admitted but fails or is dropped by the engine.
     Failed,
+    /// Aborted with a typed SLO-deadline timeout.
+    Timeout,
+    /// Shed by the overload policy (priority-based, at admission).
+    Shed,
 }
 
 impl Expectation {
@@ -130,6 +141,8 @@ impl Expectation {
             Expectation::Done => "done",
             Expectation::Rejected => "rejected",
             Expectation::Failed => "failed",
+            Expectation::Timeout => "timeout",
+            Expectation::Shed => "shed",
         }
     }
 }
@@ -198,6 +211,12 @@ pub struct Scenario {
     /// instead of re-prefilling, and admission runs spill-aware
     /// (watermark waived — the oversubscription mode).
     pub spill: bool,
+    /// Raw fault-plan clauses from `fault` directives (joined with `;`
+    /// and parsed by [`crate::faults::FaultPlan::parse`] at run time).
+    pub fault: Option<String>,
+    /// Overload cap on the wait queue (`max_waiting N`): excess waiters
+    /// are shed lowest-priority-first with a typed outcome.
+    pub max_waiting: Option<usize>,
     pub expect: Expect,
     pub sessions: Vec<SessionSpec>,
 }
@@ -209,7 +228,7 @@ pub struct SessionResult {
     pub index: usize,
     /// Engine request id (`None` when rejected at submit).
     pub id: Option<RequestId>,
-    /// `"done"`, `"rejected"`, or `"failed"`.
+    /// `"done"`, `"rejected"`, `"failed"`, `"timeout"`, or `"shed"`.
     pub outcome: &'static str,
     /// Rendered [`crate::coordinator::SubmitError`] for rejections.
     pub rejected: Option<String>,
@@ -297,7 +316,9 @@ impl ScenarioReport {
         let (lp50, lp99) = m.latency_p50_p99();
         s.push_str(&format!(
             ",\"metrics\":{{\"requests_done\":{},\"requests_failed\":{},\
-             \"requests_rejected\":{},\"requests_stopped\":{},\"preemptions\":{},\
+             \"requests_rejected\":{},\"requests_stopped\":{},\"requests_timeout\":{},\
+             \"requests_shed\":{},\"faults_injected\":{},\"persist_retries\":{},\
+             \"preemptions\":{},\
              \"prefill_tokens\":{},\"prefill_chunks\":{},\"decode_tokens\":{},\
              \"sim_time_ns\":{},\"kv_prefix_hits\":{},\"kv_cow_copies\":{},\
              \"kv_peak_blocks_used\":{},\"kv_dtype\":\"{}\",\"kv_bytes_per_token\":{},\
@@ -309,6 +330,10 @@ impl ScenarioReport {
             m.requests_failed,
             m.requests_rejected,
             m.requests_stopped,
+            m.requests_timeout,
+            m.requests_shed,
+            m.faults_injected,
+            m.persist_retries,
             m.preemptions,
             m.prefill_tokens,
             m.prefill_chunks,
@@ -451,6 +476,8 @@ impl Scenario {
             trace: false,
             journal: false,
             spill: false,
+            fault: None,
+            max_waiting: None,
             expect: Expect::default(),
             sessions: Vec::new(),
         };
@@ -524,6 +551,18 @@ impl Scenario {
                         other => return Err(ctx(format!("spill on|off, got '{other}'"))),
                     }
                 }
+                "fault" => {
+                    // Validate eagerly for a line-numbered error; the raw
+                    // clause text is kept and re-parsed per run (each run
+                    // owns its own counting plan state).
+                    let joined = match &sc.fault {
+                        Some(prev) => format!("{prev}; {rest}"),
+                        None => rest.to_string(),
+                    };
+                    crate::faults::FaultPlan::parse(&joined).map_err(|e| ctx(e.to_string()))?;
+                    sc.fault = Some(joined);
+                }
+                "max_waiting" => sc.max_waiting = Some(parse_num(rest).map_err(&ctx)?),
                 "expect_min_preemptions" => {
                     sc.expect.min_preemptions = parse_num(rest).map_err(&ctx)?
                 }
@@ -572,6 +611,13 @@ impl Scenario {
                 "top_p" => spec.gen.top_p = parse_f32(v)?,
                 "rep" => spec.gen.repetition_penalty = parse_f32(v)?,
                 "seed" => spec.gen.seed = parse_num(v).map_err(anyhow::Error::msg)?,
+                "deadline_ttft_ns" => {
+                    spec.gen.ttft_deadline_ns = Some(parse_num(v).map_err(anyhow::Error::msg)?)
+                }
+                "deadline_total_ns" => {
+                    spec.gen.total_deadline_ns = Some(parse_num(v).map_err(anyhow::Error::msg)?)
+                }
+                "priority" => spec.gen.priority = parse_num(v).map_err(anyhow::Error::msg)?,
                 "stop" => {
                     spec.gen.stop = v
                         .split('|')
@@ -591,7 +637,11 @@ impl Scenario {
                         "done" => Expectation::Done,
                         "rejected" => Expectation::Rejected,
                         "failed" => Expectation::Failed,
-                        other => anyhow::bail!("expect done|rejected|failed, got '{other}'"),
+                        "timeout" => Expectation::Timeout,
+                        "shed" => Expectation::Shed,
+                        other => anyhow::bail!(
+                            "expect done|rejected|failed|timeout|shed, got '{other}'"
+                        ),
                     }
                 }
                 other => anyhow::bail!("unknown session field '{other}'"),
@@ -751,6 +801,10 @@ impl Scenario {
         if trace {
             engine.tracer = Tracer::enabled(DEFAULT_RING_CAPACITY);
         }
+        if let Some(spec) = &self.fault {
+            engine.faults = crate::faults::FaultPlan::parse(spec)?;
+        }
+        engine.overload.max_waiting = self.max_waiting;
         // Durability knobs live in a per-run scratch directory so parallel
         // test runs never collide; it is wiped once the report is built.
         let mut scratch: Option<PathBuf> = None;
@@ -826,7 +880,7 @@ impl Scenario {
                 },
                 Ok(id) => match engine.take_finished_request(id) {
                     Some(req) => {
-                        let outcome = if req.state == RequestState::Done { "done" } else { "failed" };
+                        let outcome = req.outcome_str();
                         SessionResult {
                             index: i,
                             id: Some(id),
@@ -1131,6 +1185,51 @@ session arrive=0 prompt=rand:4:2 gen=0 expect=rejected
         assert!(!report.passed());
         assert!(report.expect_failures[0].contains("session 0"));
         assert!(report.to_json().contains("\"passed\":false"));
+    }
+
+    #[test]
+    fn fault_directive_joins_clauses_and_errors_carry_lines() {
+        let text = "scenario f\nnumerics synthetic\n\
+                    fault site=journal_write at=2\n\
+                    fault site=spill_read at=1 mode=transient times=1\n\
+                    max_waiting 4\n\
+                    session prompt=rand:4:1 gen=2 deadline_total_ns=5000 priority=7\n";
+        let sc = Scenario::parse(text).unwrap();
+        assert_eq!(
+            sc.fault.as_deref(),
+            Some("site=journal_write at=2; site=spill_read at=1 mode=transient times=1")
+        );
+        assert_eq!(sc.max_waiting, Some(4));
+        assert_eq!(sc.sessions[0].gen.total_deadline_ns, Some(5000));
+        assert_eq!(sc.sessions[0].gen.priority, 7);
+        let bad = "scenario x\nfault site=warp_core\nsession prompt=rand:4:1 gen=2\n";
+        let err = Scenario::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Scenario::parse("scenario x\nsession prompt=rand:4:1 gen=2 expect=maybe\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timeout|shed"), "{err}");
+    }
+
+    #[test]
+    fn chaos_directives_drive_typed_outcomes() {
+        // one admission fault + one overload shed + one queue timeout,
+        // each landing on the scripted session with a typed outcome
+        let text = "scenario chaos\nnumerics synthetic\nmax_batch 1\nmax_waiting 1\n\
+                    fault site=block_alloc at=1 mode=transient times=1\n\
+                    session arrive=0 prompt=rand:8:1 gen=2 expect=failed\n\
+                    session arrive=0 prompt=rand:8:2 gen=2 priority=1 expect=shed\n\
+                    session arrive=0 prompt=rand:8:3 gen=2 deadline_ttft_ns=0 expect=timeout\n";
+        let sc = Scenario::parse(text).unwrap();
+        let report = sc.run(None).unwrap();
+        assert!(report.passed(), "failures: {:?}", report.expect_failures);
+        assert_eq!(report.sessions[0].outcome, "failed");
+        assert_eq!(report.sessions[1].outcome, "shed");
+        assert_eq!(report.sessions[2].outcome, "timeout");
+        let json = report.to_json();
+        assert!(json.contains("\"requests_timeout\":1"), "{json}");
+        assert!(json.contains("\"requests_shed\":1"), "{json}");
+        assert!(json.contains("\"faults_injected\":1"), "{json}");
     }
 
     #[test]

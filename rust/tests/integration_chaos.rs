@@ -1,0 +1,245 @@
+//! Chaos e2e (ISSUE 10): a matrix of single-site fault plans over an
+//! oversubscribed spill workload. The pinned property: under any plan,
+//! sessions the fault does not kill finish with token streams bitwise
+//! identical to the fault-free run, every faulted session ends in a
+//! *typed* terminal outcome, and the run always terminates (these tests
+//! completing is itself the no-hang bound). Plus the SLO pins: a TTFT
+//! deadline that elapses in queue times the session out without it ever
+//! being prefilled, and deadline enforcement — with tracing on — is
+//! bitwise-invisible to sessions that do not time out.
+
+use std::path::PathBuf;
+
+use leap::arch::HwParams;
+use leap::coordinator::{
+    BatchPolicy, EngineConfig, GenerationConfig, Numerics, RequestState, ServingEngine,
+};
+use leap::faults::{FaultPlan, FaultSite};
+use leap::model::ModelPreset;
+use leap::runtime::{KernelMode, ReferenceBackend, WorkerPool};
+use leap::scenario::Scenario;
+use leap::testutil::SplitMix64;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ref")
+}
+
+/// The matrix workload: eight independent sessions on a 16-block pool
+/// with journal + spill on, so every injectable I/O site is actually
+/// exercised (preemption guarantees spill writes and restore reads).
+fn chaos_script(fault_lines: &str) -> String {
+    format!(
+        "scenario chaos_matrix\nnumerics ref\nblock_size 4\nblocks 16\n\
+         prefix_sharing off\nmax_batch 16\nmax_total_ctx 100000\n\
+         journal on\nspill on\n{fault_lines}\
+         session arrive=0 prompt=rand:8:41 gen=6\n\
+         session arrive=0 prompt=rand:8:42 gen=6 seed=5 temp=0.8 top_k=8\n\
+         session arrive=0 prompt=rand:8:43 gen=6\n\
+         session arrive=0 prompt=rand:8:44 gen=6 seed=9 temp=0.7 top_p=0.9\n\
+         session arrive=0 prompt=rand:8:45 gen=6\n\
+         session arrive=0 prompt=rand:8:46 gen=6\n\
+         session arrive=0 prompt=rand:8:47 gen=6\n\
+         session arrive=0 prompt=rand:8:48 gen=6\n"
+    )
+}
+
+fn run_chaos(fault_lines: &str) -> leap::scenario::ScenarioReport {
+    Scenario::parse(&chaos_script(fault_lines))
+        .unwrap()
+        .run(Some(&fixture_dir()))
+        .unwrap()
+}
+
+/// The chaos property, swept over one plan per site (transient and
+/// permanent flavors, plus a seeded schedule): non-faulted sessions are
+/// bitwise identical to the baseline, outcomes are typed, and identical
+/// plans reproduce identical runs.
+#[test]
+fn single_site_fault_matrix_is_typed_bounded_and_deterministic() {
+    let baseline = run_chaos("");
+    assert!(baseline.passed(), "baseline failures: {:?}", baseline.expect_failures);
+    assert_eq!(baseline.metrics.faults_injected, 0);
+
+    let plans = [
+        "site=journal_write at=1 mode=permanent",
+        "site=journal_write at=2 mode=transient times=2",
+        "site=spill_write at=1 mode=permanent",
+        "site=spill_write at=1 mode=transient times=1",
+        "site=spill_read at=1 mode=permanent",
+        "site=spill_read at=1 mode=transient times=2",
+        "site=lane_panic at=1 lane=1",
+        "site=lane_stall at=1 lane=2",
+        "site=block_alloc at=1 mode=transient times=1",
+        "seed=7; site=spill_write at=seeded mode=transient times=1",
+    ];
+    for plan in plans {
+        let fault_lines = format!("fault {plan}\n");
+        let report = run_chaos(&fault_lines);
+        // every session reaches a typed terminal outcome — no hangs, no
+        // aborts (the scenario runner returning at all bounds the run)
+        for s in &report.sessions {
+            assert!(
+                matches!(s.outcome, "done" | "failed"),
+                "plan '{plan}': session {} ended '{}'",
+                s.index,
+                s.outcome
+            );
+        }
+        // the pinned determinism claim: completed sessions match the
+        // fault-free streams bit for bit
+        for (a, b) in report.sessions.iter().zip(&baseline.sessions) {
+            if a.outcome == "done" {
+                assert_eq!(a.output, b.output, "plan '{plan}': session {} diverged", a.index);
+            }
+        }
+        // only block_alloc may kill a session (one typed admission
+        // failure); every I/O and lane site must degrade, not kill
+        let failed = report.sessions.iter().filter(|s| s.outcome == "failed").count();
+        if plan.contains("block_alloc") {
+            assert_eq!(failed, 1, "plan '{plan}': exactly the faulted admission dies");
+        } else {
+            assert_eq!(failed, 0, "plan '{plan}': fault must degrade, not kill");
+        }
+        // transient persist faults at sites this traffic provably hits
+        // (journal records every lifecycle; the pool preempts, so spill
+        // writes/reads happen) must ride the bounded retry
+        let expects_retry = matches!(
+            plan,
+            "site=journal_write at=2 mode=transient times=2"
+                | "site=spill_write at=1 mode=transient times=1"
+                | "site=spill_read at=1 mode=transient times=2"
+        );
+        if expects_retry {
+            assert!(
+                report.metrics.persist_retries >= 1,
+                "plan '{plan}': transient persist faults ride the bounded retry"
+            );
+        }
+        // replaying the identical plan reproduces the run exactly
+        let again = run_chaos(&fault_lines);
+        assert_eq!(again.metrics.faults_injected, report.metrics.faults_injected);
+        for (a, b) in report.sessions.iter().zip(&again.sessions) {
+            assert_eq!(a.outcome, b.outcome, "plan '{plan}': rerun outcome drifted");
+            assert_eq!(a.output, b.output, "plan '{plan}': rerun stream drifted");
+        }
+    }
+}
+
+/// SLO pin 1: a TTFT deadline that elapses while the request is still
+/// queued yields a typed timeout without the request ever being
+/// prefilled — and its on-time neighbors are bitwise untouched.
+#[test]
+fn queued_ttft_timeout_never_prefills_and_neighbors_are_untouched() {
+    let with_deadline = "scenario ddl\nnumerics ref\nmax_batch 1\nmax_total_ctx 100000\n\
+                         session arrive=0 prompt=rand:12:61 gen=6 expect=done\n\
+                         session arrive=0 prompt=rand:12:62 gen=6 deadline_ttft_ns=1 expect=timeout\n\
+                         session arrive=0 prompt=rand:12:63 gen=6 expect=done\n";
+    let without = with_deadline.replace(" deadline_ttft_ns=1 expect=timeout", " expect=done");
+    let timed = Scenario::parse(with_deadline).unwrap().run(Some(&fixture_dir())).unwrap();
+    let free = Scenario::parse(&without).unwrap().run(Some(&fixture_dir())).unwrap();
+    assert!(timed.passed(), "failures: {:?}", timed.expect_failures);
+    assert!(free.passed(), "failures: {:?}", free.expect_failures);
+    assert_eq!(timed.metrics.requests_timeout, 1);
+    assert_eq!(timed.sessions[1].outcome, "timeout");
+    assert!(timed.sessions[1].output.is_empty(), "queue timeouts never decode");
+    // only the two surviving 12-token prompts were prefilled — the
+    // timed-out session never touched the backend
+    assert_eq!(timed.metrics.prefill_tokens, 24);
+    assert_eq!(free.metrics.prefill_tokens, 36);
+    for i in [0usize, 2] {
+        assert_eq!(
+            timed.sessions[i].output, free.sessions[i].output,
+            "session {i}: a neighbor's timeout changed its stream"
+        );
+    }
+}
+
+/// SLO pin 2: deadline enforcement with tracing enabled is
+/// bitwise-invisible — same outcomes, same streams, same simulated
+/// clock as the untraced run, timeout victim included.
+#[test]
+fn deadline_enforcement_is_bitwise_invisible_under_tracing() {
+    let text = "scenario ddl_trace\nnumerics ref\nmax_batch 1\nmax_total_ctx 100000\n\
+                session arrive=0 prompt=rand:12:61 gen=6 expect=done\n\
+                session arrive=0 prompt=rand:12:62 gen=6 deadline_ttft_ns=1 expect=timeout\n\
+                session arrive=0 prompt=rand:12:63 gen=6 deadline_total_ns=90000000000 expect=done\n";
+    let sc = Scenario::parse(text).unwrap();
+    let traced = sc.run_with_opts(None, true, Some(&fixture_dir())).unwrap();
+    let untraced = sc.run_with_opts(None, false, Some(&fixture_dir())).unwrap();
+    assert!(traced.passed(), "failures: {:?}", traced.expect_failures);
+    assert!(untraced.passed(), "failures: {:?}", untraced.expect_failures);
+    for (a, b) in traced.sessions.iter().zip(&untraced.sessions) {
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.output, b.output, "session {}: tracing changed tokens", a.index);
+        assert_eq!(a.ttft_ns, b.ttft_ns);
+        assert_eq!(a.latency_ns, b.latency_ns);
+    }
+    assert_eq!(traced.metrics.sim_time_ns, untraced.metrics.sim_time_ns);
+    // the trace actually recorded the typed abort
+    let trace = traced.trace.as_ref().expect("tracing was on");
+    assert!(trace.jsonl.contains("\"kind\":\"timeout\""), "timeout event exported");
+}
+
+/// Direct-engine lane-death pin: on a 4-lane pool the armed lane panic
+/// actually kills a worker (pool_lane_deaths counts it), the band is
+/// re-tiled, and every token stream still matches the unfaulted run. A
+/// stall arms the same machinery but must kill nothing.
+#[test]
+fn lane_panic_on_a_pooled_backend_is_isolated_and_bitwise_invisible() {
+    fn engine_with(backend: ReferenceBackend) -> ServingEngine {
+        ServingEngine::new(EngineConfig {
+            preset: ModelPreset::Tiny,
+            hw: HwParams::default(),
+            policy: BatchPolicy::default(),
+            numerics: Numerics::Backend(Box::new(backend)),
+        })
+        .unwrap()
+    }
+    fn workload() -> Vec<(Vec<i32>, GenerationConfig)> {
+        let mut rng = SplitMix64::new(0xFA117);
+        let mut prompt = |len: usize| -> Vec<i32> {
+            (0..len).map(|_| rng.below(50) as i32 + 1).collect()
+        };
+        let sampled =
+            GenerationConfig { temperature: 0.8, top_k: 8, seed: 5, ..GenerationConfig::greedy(8) };
+        vec![
+            (prompt(12), GenerationConfig::greedy(6)),
+            (prompt(6), sampled),
+            (prompt(9), GenerationConfig::greedy(5)),
+        ]
+    }
+    fn run(mut e: ServingEngine) -> (Vec<Vec<i32>>, ServingEngine) {
+        let ids: Vec<_> =
+            workload().into_iter().map(|(p, g)| e.submit_with(p, g).unwrap()).collect();
+        e.run_until_idle().unwrap();
+        let outs = ids
+            .into_iter()
+            .map(|id| {
+                let r = e.take_finished_request(id).expect("session finishes");
+                assert_eq!(r.state, RequestState::Done);
+                r.output
+            })
+            .collect();
+        (outs, e)
+    }
+    let pool4 = || WorkerPool::with_threads(4);
+    let load = |pool: WorkerPool| {
+        ReferenceBackend::load_with_pool(&fixture_dir(), KernelMode::Fast, None, pool)
+    };
+
+    let (want, _) = run(engine_with(ReferenceBackend::load(&fixture_dir()).unwrap()));
+
+    let mut faulted = engine_with(load(pool4()).unwrap());
+    faulted.faults = FaultPlan::parse("site=lane_panic at=1 lane=1").unwrap();
+    let (got, faulted) = run(faulted);
+    assert_eq!(got, want, "a dead lane must not change any token stream");
+    assert!(faulted.metrics.pool_lane_deaths >= 1, "the armed lane must actually die");
+    assert!(faulted.faults.injected_at(FaultSite::LanePanic) >= 1);
+    assert!(faulted.metrics.faults_injected >= 1);
+
+    let mut stalled = engine_with(load(pool4()).unwrap());
+    stalled.faults = FaultPlan::parse("site=lane_stall at=1 lane=2").unwrap();
+    let (got, stalled) = run(stalled);
+    assert_eq!(got, want, "a slow lane must not change any token stream");
+    assert_eq!(stalled.metrics.pool_lane_deaths, 0, "a stall is not a death");
+}

@@ -41,7 +41,7 @@ fn whole_suite_passes() {
         );
         ran += 1;
     }
-    assert!(ran >= 5, "expected the five checked-in stress scenarios, found {ran}");
+    assert!(ran >= 8, "expected the eight checked-in stress scenarios, found {ran}");
 }
 
 #[test]
@@ -143,6 +143,62 @@ fn oversubscribe_spill_restores_instead_of_reprefilling() {
     let json = report.to_json();
     assert!(json.contains("\"kv_spills\":"));
     assert!(json.contains("\"spill_bytes_read\":"));
+}
+
+/// The chaos acceptance (ISSUE 10, persist sites): transient spill-read
+/// and journal-write faults are ridden out by the bounded retry, the
+/// permanent spill-write fault degrades its victims to the re-prefill
+/// fallback — and every session still completes with token streams
+/// bitwise identical to the fault-free run.
+#[test]
+fn chaos_spill_io_rides_out_faults_and_stays_bitwise_identical() {
+    let sc = load("chaos_spill_io.scn");
+    let report = sc.run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    assert_eq!(report.metrics.requests_done, 8);
+    assert!(report.metrics.preemptions >= 1, "the pool must still preempt under faults");
+    assert!(report.metrics.faults_injected >= 1, "the plan must actually fire");
+    assert!(
+        report.metrics.persist_retries >= 1,
+        "transient persist faults must be retried, not fatal"
+    );
+    for s in &report.sessions {
+        assert_eq!(s.outcome, "done", "session {}: I/O faults must not kill requests", s.index);
+        assert_eq!(s.output.len(), 6, "session {}: full budget despite faults", s.index);
+    }
+    // determinism pin: the faulted run's streams equal the fault-free run's
+    let mut clean = sc.clone();
+    clean.fault = None;
+    let baseline = clean.run(Some(&fixture_dir())).unwrap();
+    assert_eq!(baseline.metrics.faults_injected, 0);
+    for (a, b) in report.sessions.iter().zip(&baseline.sessions) {
+        assert_eq!(a.output, b.output, "session {}: faults changed tokens", a.index);
+    }
+}
+
+/// The chaos acceptance (ISSUE 10, worker lanes + SLO): lane panic/stall
+/// injection never changes token streams (re-tiled bands write the same
+/// tiles; on a serial pool injection is a no-op), and the scripted TTFT
+/// deadline times its session out in queue — zero tokens, typed outcome.
+#[test]
+fn chaos_lane_panic_isolates_faults_and_enforces_the_deadline() {
+    let sc = load("chaos_lane_panic.scn");
+    let report = sc.run(Some(&fixture_dir())).unwrap();
+    assert!(report.passed(), "failures: {:?}", report.expect_failures);
+    assert_eq!(report.metrics.requests_done, 3);
+    assert_eq!(report.metrics.requests_timeout, 1);
+    assert_eq!(report.sessions[3].outcome, "timeout");
+    assert!(report.sessions[3].output.is_empty(), "queue timeouts must never decode");
+    // the timed-out session was never prefilled: only the three live
+    // prompts' tokens went through the backend
+    assert_eq!(report.metrics.prefill_tokens, 24 + 16 + 12);
+    let mut clean = sc.clone();
+    clean.fault = None;
+    let baseline = clean.run(Some(&fixture_dir())).unwrap();
+    for (a, b) in report.sessions.iter().zip(&baseline.sessions) {
+        assert_eq!(a.outcome, b.outcome, "session {}: outcome drifted", a.index);
+        assert_eq!(a.output, b.output, "session {}: lane faults changed tokens", a.index);
+    }
 }
 
 #[test]
